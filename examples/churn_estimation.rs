@@ -1,0 +1,73 @@
+//! Churn estimation (Sections 2 + 3.1.1): synthesize the three published
+//! P2P traces, verify the Fig. 2 statistics, and race the failure-rate
+//! estimators on a live overlay — including the Fig. 4(right) regime where
+//! the rate doubles over 20 hours.
+//!
+//! ```bash
+//! cargo run --release --example churn_estimation
+//! ```
+
+use p2pcp::churn::model::{ChurnModel, TimeVarying};
+use p2pcp::churn::trace::{SessionTrace, TraceKind};
+use p2pcp::estimator::count::CountEstimator;
+use p2pcp::estimator::ewma::EwmaEstimator;
+use p2pcp::estimator::mle::MleEstimator;
+use p2pcp::estimator::RateEstimator;
+use p2pcp::util::rng::Pcg64;
+
+fn main() {
+    println!("== Fig. 2: synthesized P2P traces vs published statistics ==\n");
+    for kind in [TraceKind::Gnutella, TraceKind::Overnet, TraceKind::Bittorrent] {
+        let t = SessionTrace::synthesize(kind, 100_000, 1);
+        println!(
+            "{:<11} mean session {:>6.1} min (published {:>5.0})   KS-to-exp {:.4}   hourly-rate CV {:.3}",
+            t.kind_name,
+            t.mean_session() / 60.0,
+            kind.mean_session_secs() / 60.0,
+            t.exponential_fit_ks(),
+            t.rate_variability(3600.0),
+        );
+    }
+
+    println!("\n== Section 3.1.1: estimator race under rate-doubling churn ==");
+    println!("(rate doubles every 20 h — the Fig. 4(right) environment)\n");
+    let churn = TimeVarying::new(7200.0, 20.0 * 3600.0);
+    let mut rng = Pcg64::new(2, 0);
+    let mut mle = MleEstimator::new(64);
+    let mut ewma = EwmaEstimator::new(0.1);
+    let mut count = CountEstimator::new();
+
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>12}",
+        "t (h)", "true rate", "mle(K=64)", "ewma(0.1)", "count(naive)"
+    );
+    let mut now = 0.0;
+    let horizon = 60.0 * 3600.0;
+    let mut next_print = 0.0;
+    while now < horizon {
+        // Observation stream: ~128 watched peers failing at rate(t).
+        let rate = churn.rate(now);
+        now += rng.exp(128.0 * rate);
+        let lifetime = churn.session(now, &mut rng);
+        mle.observe(lifetime);
+        ewma.observe(lifetime);
+        count.observe(lifetime);
+        if now >= next_print {
+            let fmt = |r: Option<f64>| {
+                r.map(|x| format!("{x:.3e}")).unwrap_or_else(|| "--".into())
+            };
+            println!(
+                "{:>8.1} {:>12.3e} {:>12} {:>12} {:>12}",
+                now / 3600.0,
+                churn.rate(now),
+                fmt(mle.rate()),
+                fmt(ewma.rate()),
+                fmt(count.rate()),
+            );
+            next_print += 6.0 * 3600.0;
+        }
+    }
+    println!("\nThe windowed MLE (the paper's Eq. 1 choice) tracks the doubling rate;");
+    println!("the unwindowed count estimator lags behind — exactly why the naive");
+    println!("approach mis-plans the checkpoint interval as conditions drift.");
+}

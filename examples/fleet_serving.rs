@@ -1,0 +1,60 @@
+//! Fleet serving: many volunteer-computing jobs sharing one adaptive
+//! planner — the conclusion's "next generation" deployment sketch.
+//!
+//! Jobs arrive Poisson; the coordinator admits them through the §3.2.3
+//! utilization check, replans every tick, and ALL running jobs' planning
+//! requests execute as one padded batch on the AOT-compiled artifact
+//! (falls back to the native planner when artifacts are absent).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example fleet_serving
+//! ```
+
+use p2pcp::churn::model::Exponential;
+use p2pcp::coordinator::fleet::{run_fleet, FleetConfig};
+use p2pcp::planner::{NativePlanner, XlaPlanner};
+use p2pcp::runtime::PjrtRuntime;
+
+fn main() {
+    let churn = Exponential::new(7200.0);
+    let cfg = FleetConfig {
+        n_jobs: 24,
+        arrival_mean: 120.0, // brisk arrivals => deep batches
+        k: 16,
+        runtime: 3600.0,
+        v: 20.0,
+        td: 50.0,
+        ..FleetConfig::default()
+    };
+
+    println!("== fleet serving: 24 jobs, Poisson arrivals (mean 120 s), MTBF 2 h ==\n");
+
+    let out = match PjrtRuntime::cpu().and_then(|rt| XlaPlanner::new(&rt)) {
+        Ok(planner) => {
+            println!("planner backend  : xla artifact (batch {})", planner.batch_capacity());
+            run_fleet(&cfg, &churn, planner, 42)
+        }
+        Err(e) => {
+            println!("planner backend  : native (artifact unavailable: {e})");
+            run_fleet(&cfg, &churn, NativePlanner::new(), 42)
+        }
+    };
+
+    println!("jobs completed   : {}", out.completed);
+    println!("jobs rejected    : {} (admission: U(lambda*) floor)", out.rejected);
+    println!("mean job wall    : {:.0} s (fault-free runtime 3600 s)", out.mean_wall);
+    println!("mean latency     : {:.0} s (incl. queueing)", out.mean_latency);
+    println!("fleet makespan   : {:.0} s", out.makespan);
+    println!(
+        "planner batching : {:.1} requests/flush over {} flushes",
+        out.mean_batch, out.flushes
+    );
+    let total_failures: u64 = out.jobs.iter().map(|j| j.failures).sum();
+    let total_cps: u64 = out.jobs.iter().map(|j| j.checkpoints).sum();
+    println!(
+        "fleet totals     : {total_failures} rollbacks survived, {total_cps} coordinated checkpoints"
+    );
+    println!("\nEvery replan tick, all in-flight jobs' decisions ride one PJRT");
+    println!("execution of the compiled Lambert-W planner — the router/batcher");
+    println!("pattern applied to checkpoint scheduling.");
+}

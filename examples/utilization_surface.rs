@@ -1,0 +1,108 @@
+//! Utilization surfaces via the compiled `usurface` artifact: U(λ) for a
+//! batch of network conditions in one PJRT execution, cross-checked
+//! against the native model, with the closed-form λ* marked.
+//!
+//! Writes `target/bench-results/utilization_surface.csv` — the analytic
+//! companion to Fig. 3's cycle picture and the source of the §3.2.3
+//! "too many peers" intuition.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example utilization_surface
+//! ```
+
+use p2pcp::model::optimal::optimal_lambda_checked;
+use p2pcp::model::utilization::utilization;
+use p2pcp::runtime::PjrtRuntime;
+use p2pcp::util::csv::Table;
+
+fn main() {
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
+    let module = rt.load("usurface").expect("run `make artifacts` first");
+    let b = module.meta.batch;
+    let g = module.meta.grid;
+    println!("usurface artifact: batch {b}, grid {g} rates/row\n");
+
+    // Conditions: the paper's three departure rates plus two k extremes.
+    let conditions: Vec<(&str, f64, f64, f64, f64)> = vec![
+        ("mtbf4000_k16", 1.0 / 4000.0, 20.0, 50.0, 16.0),
+        ("mtbf7200_k16", 1.0 / 7200.0, 20.0, 50.0, 16.0),
+        ("mtbf14400_k16", 1.0 / 14400.0, 20.0, 50.0, 16.0),
+        ("mtbf7200_k4", 1.0 / 7200.0, 20.0, 50.0, 4.0),
+        ("mtbf7200_k256", 1.0 / 7200.0, 20.0, 50.0, 256.0),
+        ("overloaded_k64", 1.0 / 3600.0, 120.0, 300.0, 64.0),
+    ];
+
+    // Pad the batch.
+    let mut mu = vec![1e-4; b];
+    let mut v = vec![20.0; b];
+    let mut td = vec![50.0; b];
+    let mut k = vec![16.0; b];
+    for (i, &(_, m, vv, t, kk)) in conditions.iter().enumerate() {
+        mu[i] = m;
+        v[i] = vv;
+        td[i] = t;
+        k[i] = kk;
+    }
+    let dims = [b as i64];
+    let out = module
+        .execute_f64(&[(&mu, &dims), (&v, &dims), (&td, &dims), (&k, &dims)])
+        .expect("execute");
+    let (u, lam) = (&out[0], &out[1]);
+
+    let mut table = Table::new(&["condition", "lambda_per_s", "interval_s", "u"]);
+    println!(
+        "{:<16} {:>12} {:>12} {:>8} {:>10}",
+        "condition", "lambda*", "interval", "U(λ*)", "progress?"
+    );
+    for (i, &(name, m, vv, t, kk)) in conditions.iter().enumerate() {
+        let row_u = &u[i * g..(i + 1) * g];
+        let row_l = &lam[i * g..(i + 1) * g];
+        // Cross-check every grid point against the native model.
+        for (j, (&uu, &ll)) in row_u.iter().zip(row_l).enumerate() {
+            let native = utilization(ll.max(1e-300), kk * m, vv, t).u;
+            assert!(
+                (uu - native).abs() < 1e-9,
+                "{name} grid point {j}: artifact {uu} vs native {native}"
+            );
+        }
+        let peak = row_u
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let plan = optimal_lambda_checked(kk * m, vv, t).unwrap();
+        println!(
+            "{name:<16} {:>12.6} {:>12.1} {:>8.3} {:>10}",
+            plan.lambda,
+            plan.interval,
+            plan.stats.u,
+            if plan.progressing { "yes" } else { "NO" }
+        );
+        assert!(
+            !plan.progressing || (plan.lambda / row_l[peak] - 1.0).abs() < 0.08,
+            "{name}: closed form {} vs grid peak {}",
+            plan.lambda,
+            row_l[peak]
+        );
+        for (j, (&uu, &ll)) in row_u.iter().zip(row_l).enumerate() {
+            if j % 8 == 0 {
+                table.push(vec![
+                    name.to_string(),
+                    format!("{ll:.8}"),
+                    format!("{:.2}", 1.0 / ll.max(1e-300)),
+                    format!("{uu:.5}"),
+                ]);
+            }
+        }
+    }
+    let path = std::path::Path::new("target/bench-results/utilization_surface.csv");
+    table.write_to(path).expect("write csv");
+    println!(
+        "\n{} artifact grid points cross-checked against the native model.",
+        conditions.len() * g
+    );
+    println!("surface written to {}", path.display());
+    println!("note the 'overloaded_k64' row: U = 0 at EVERY rate — the §3.2.3");
+    println!("admission signal (no checkpoint interval can make progress).");
+}

@@ -1,0 +1,49 @@
+//! The classic volunteer-computing work pool (Section 1.2.1 baseline):
+//! independent work units under deadline-reassignment with replication
+//! scrutiny — and why that mechanism alone cannot run message-passing
+//! work flows (the gap the paper fills).
+//!
+//! ```bash
+//! cargo run --release --example volunteer_pool
+//! ```
+
+use p2pcp::coordinator::workpool::{run_pool_to_completion, WorkPoolServer, WorkUnit};
+use p2pcp::util::rng::Pcg64;
+
+fn units(n: u64, replicas: u32, cost: f64, deadline: f64) -> Vec<WorkUnit> {
+    let mut out = Vec::new();
+    for id in 0..n {
+        for _ in 0..replicas.max(1) {
+            out.push(WorkUnit { id, cost, deadline, replicas });
+        }
+    }
+    out
+}
+
+fn main() {
+    println!("== BOINC-style work pool: deadlines + scrutiny ==\n");
+    for (label, replicas, faulty) in [
+        ("trusting (1 replica, honest workers)", 1u32, 0.0),
+        ("trusting (1 replica, 20% faulty!)   ", 1, 0.20),
+        ("scrutiny (3 replicas, 20% faulty)   ", 3, 0.20),
+    ] {
+        let mut rng = Pcg64::new(17, 0);
+        let server = WorkPoolServer::new(units(100, replicas, 300.0, 3000.0));
+        let (stats, wall) = run_pool_to_completion(server, 24, faulty, &mut rng);
+        println!("{label}");
+        println!(
+            "  validated {:>4}   reassigned-by-deadline {:>4}   rejected-results {:>3}   wall {:>7.0} s   server msgs {:>5}",
+            stats.validated,
+            stats.reassigned_deadline,
+            stats.rejected,
+            wall,
+            stats.server_messages
+        );
+    }
+
+    println!("\nDeadline reassignment keeps *independent* units alive under churn —");
+    println!("each unit recomputes in isolation. A message-passing work flow has no");
+    println!("such isolation: one peer failure invalidates every rank's progress,");
+    println!("which is why Section 3 adds coordinated checkpointing with an");
+    println!("adaptive interval instead.");
+}

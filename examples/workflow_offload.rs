@@ -1,0 +1,78 @@
+//! Work-flow offload (Fig. 1(a) vs 1(b)): quantifies the paper's
+//! motivation — moving inter-step work-flow I/O from the work-pool server
+//! onto the P2P overlay.
+//!
+//! Three work flows from the introduction's motivating scenarios:
+//! a flat pipeline, an iterative solver (cycles!), and a fan-out/fan-in
+//! parameter study; each deployed both ways over a 512-peer overlay.
+//!
+//! ```bash
+//! cargo run --release --example workflow_offload
+//! ```
+
+use p2pcp::net::overlay::Overlay;
+use p2pcp::util::csv::Table;
+use p2pcp::util::rng::Pcg64;
+use p2pcp::workflow::dag::Workflow;
+use p2pcp::workflow::scheduler::{deploy, DeploymentKind};
+
+fn main() {
+    let mut rng = Pcg64::new(7, 0);
+    let overlay = Overlay::new(512, &mut rng);
+    println!("== work-flow deployment: server-mediated vs P2P-mediated ==");
+    println!("overlay: 512 peers\n");
+
+    let flows: Vec<(&str, Workflow)> = vec![
+        ("pipeline(8 steps)", Workflow::pipeline(8, 300.0, 4e6)),
+        (
+            "iterative(8 steps, 30 iterations over steps 2..5)",
+            Workflow::iterative(8, 2, 5, 30, 300.0, 4e6),
+        ),
+        ("diamond(fan-out 12)", Workflow::diamond(12, 600.0, 1e6)),
+    ];
+
+    let mut table = Table::new(&[
+        "workflow",
+        "step_execs",
+        "server_msgs_fig1a",
+        "server_MB_fig1a",
+        "server_msgs_fig1b",
+        "overlay_hops_fig1b",
+        "offload_factor",
+    ]);
+
+    for (name, wf) in &flows {
+        wf.validate().expect("valid workflow");
+        let server = deploy(wf, DeploymentKind::ServerMediated, &overlay, &mut rng);
+        let p2p = deploy(wf, DeploymentKind::P2pMediated, &overlay, &mut rng);
+        assert_eq!(server.step_executions, p2p.step_executions);
+        let offload = server.server_messages as f64 / p2p.server_messages as f64;
+        println!("{name}");
+        println!(
+            "  server-mediated : {:>6} server msgs, {:>8.1} MB through the server",
+            server.server_messages,
+            server.server_bytes / 1e6
+        );
+        println!(
+            "  p2p-mediated    : {:>6} server msgs, {:>8} overlay hops ({:.1} ms median/transfer)",
+            p2p.server_messages,
+            p2p.overlay_hops,
+            1000.0 * p2p.transfer_latency / (p2p.overlay_hops.max(1) as f64)
+        );
+        println!("  server offload  : {offload:.0}x fewer server messages\n");
+        table.push(vec![
+            name.to_string(),
+            server.step_executions.to_string(),
+            server.server_messages.to_string(),
+            format!("{:.1}", server.server_bytes / 1e6),
+            p2p.server_messages.to_string(),
+            p2p.overlay_hops.to_string(),
+            format!("{offload:.1}"),
+        ]);
+    }
+    print!("{}", table.to_pretty());
+    println!("\nThe iterative flow is the paper's killer case: server traffic grows");
+    println!("with iteration count (Fig. 1(a)) while the P2P deployment keeps the");
+    println!("server at O(1) messages (Fig. 1(b)) — which is what makes the");
+    println!("decentralized checkpointing of Section 3 necessary in the first place.");
+}

@@ -1,0 +1,91 @@
+"""AOT: lower the L2 planner graph to HLO *text* artifacts for the rust
+runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` 0.1.6 crate links) rejects with
+`proto.id() <= INT_MAX`. The text parser reassigns ids and round-trips
+cleanly. Lowered with return_tuple=True; the rust side unwraps the tuple.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Also writes ``<name>.meta.json`` next to each artifact with the compiled
+batch shapes so the rust planner service can size its padding without
+parsing HLO.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.planner import GRID_G
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+ARTIFACTS = {
+    "planner": dict(
+        fn=model.planner,
+        example_args=model.planner_example_args,
+        meta=dict(
+            batch=model.PLANNER_B,
+            window=model.WINDOW_W,
+            inputs=["lifetimes[B,W]", "mask[B,W]", "v[B]", "td[B]", "k[B]"],
+            outputs=["mu[B]", "lam[B]", "u[B]", "cbar[B]", "twc[B]"],
+            dtype="f64",
+        ),
+    ),
+    "usurface": dict(
+        fn=model.usurface,
+        example_args=model.usurface_example_args,
+        meta=dict(
+            batch=model.USURFACE_B,
+            grid=GRID_G,
+            inputs=["mu[B]", "v[B]", "td[B]", "k[B]"],
+            outputs=["u[B,G]", "lam[B,G]"],
+            dtype="f64",
+        ),
+    ),
+}
+
+
+def build(out_dir: str, only=None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    for name, spec in ARTIFACTS.items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(spec["fn"]).lower(*spec["example_args"]())
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        meta_path = os.path.join(out_dir, f"{name}.meta.json")
+        with open(meta_path, "w") as f:
+            json.dump(spec["meta"], f, indent=2)
+        print(f"wrote {path} ({len(text)} chars) + {meta_path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    build(args.out_dir, args.only)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Pallas kernel: batched principal-branch Lambert W0.
+
+The planner's hot spot: every adaptive checkpoint decision evaluates
+
+    lambda* = a / (W0(z) + 1),   z = (v a - td a - 1) / (td a + 1) / e
+
+for a batch of (peer x job) decision points. The kernel is branchless
+(selects only), uses a fixed Halley iteration count, and tiles the batch
+into VMEM-resident lanes via BlockSpec.
+
+TPU mapping (see DESIGN.md section "Hardware adaptation"): this is a pure
+VPU (vector unit) workload — transcendental-heavy, no matmul — so the tile
+shape is chosen for lane occupancy (multiples of 128) rather than MXU
+blocking. interpret=True everywhere: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and numerics are identical by construction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import HALLEY_ITERS, INV_E
+
+#: Lane-aligned tile for the 1-D batch dimension.
+BLOCK = 128
+
+
+def _lambertw0_kernel(z_ref, w_ref):
+    """One VMEM tile: w = W0(max(z, -1/e)) via guess + Halley, branchless."""
+    z = jnp.maximum(z_ref[...], -INV_E)
+
+    # Initial guess, three regimes blended with selects (cf. ref._w0_initial_guess).
+    p = jnp.sqrt(jnp.maximum(2.0 * (jnp.e * z + 1.0), 0.0))
+    w_branch = -1.0 + p * (1.0 + p * (-1.0 / 3.0 + p * (11.0 / 72.0)))
+    w_zero = z * (1.0 - z * (1.0 - 1.5 * z))
+    zs = jnp.maximum(z, 2.0)
+    lz = jnp.log(zs)
+    w_log = lz - jnp.log(lz)
+    w = jnp.where(z < -0.25, w_branch, jnp.where(z < 2.0, w_zero, w_log))
+
+    # Fixed-count Halley refinement (unrolled — no data-dependent control flow).
+    for _ in range(HALLEY_ITERS):
+        ew = jnp.exp(w)
+        f = w * ew - z
+        wp1 = w + 1.0
+        denom = ew * wp1 - (w + 2.0) * f / (2.0 * wp1)
+        denom = jnp.where(jnp.abs(denom) < 1e-300, 1.0, denom)
+        w = w - f / denom
+
+    w = jnp.where(z == 0.0, 0.0, w)
+    w_ref[...] = w
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lambertw0(z):
+    """Batched W0 over a [B] float64 vector; B must be a multiple of BLOCK."""
+    (b,) = z.shape
+    assert b % BLOCK == 0, f"batch {b} must be a multiple of {BLOCK}"
+    return pl.pallas_call(
+        _lambertw0_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), z.dtype),
+        grid=(b // BLOCK,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(z)
+
+
+def lambertw0_any(z):
+    """W0 for arbitrary batch size: pad to BLOCK, run the kernel, slice."""
+    z = jnp.atleast_1d(z)
+    (b,) = z.shape
+    pad = (-b) % BLOCK
+    zp = jnp.pad(z, (0, pad)) if pad else z
+    return lambertw0(zp)[:b]

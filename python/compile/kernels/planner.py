@@ -1,0 +1,113 @@
+"""Pallas kernels: fused planner stages.
+
+Two kernels beyond the Lambert-W core:
+
+* ``mle_rate``         — Eq. (1) masked-MLE failure-rate over a lifetime
+                         window, one VMEM tile of [BLOCK_B, W] per step.
+* ``utilization_grid`` — Eqs. (5)-(10) evaluated over a log-spaced grid of
+                         checkpoint rates relative to the job failure rate;
+                         used for grid-argmax cross-validation of the closed
+                         form and to regenerate utilization surfaces.
+
+Both are branchless and VPU-shaped (lane dim = 128). interpret=True: see
+lambertw.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Rows per MLE tile (batch of decision points).
+BLOCK_B = 8
+#: Grid points for the utilization surface (lane-aligned).
+GRID_G = 256
+#: Log-spaced multipliers r such that lambda = r * a; spans the useful range
+#: from "checkpoint every 100 expected failures" to "100x per failure".
+GRID_LO, GRID_HI = 1e-2, 1e2
+
+
+def _mle_kernel(t_ref, m_ref, mu_ref):
+    """mu = sum(mask) / sum(t * mask) per row; 0 for empty windows."""
+    t = t_ref[...]
+    m = m_ref[...]
+    count = jnp.sum(m, axis=-1)
+    total = jnp.sum(t * m, axis=-1)
+    mu_ref[...] = jnp.where(total > 0.0, count / jnp.maximum(total, 1e-300), 0.0)
+
+
+@jax.jit
+def mle_rate(lifetimes, mask):
+    """Eq. (1) over [B, W] windows; B must be a multiple of BLOCK_B."""
+    b, w = lifetimes.shape
+    assert b % BLOCK_B == 0, f"batch {b} must be a multiple of {BLOCK_B}"
+    return pl.pallas_call(
+        _mle_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), lifetimes.dtype),
+        grid=(b // BLOCK_B,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B, w), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, w), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+        interpret=True,
+    )(lifetimes, mask)
+
+
+def _grid_multipliers(dtype=jnp.float64):
+    """The static log-spaced lambda/a multipliers [GRID_G]."""
+    return jnp.logspace(
+        jnp.log10(GRID_LO), jnp.log10(GRID_HI), GRID_G, dtype=dtype
+    )
+
+
+def _usurface_kernel(a_ref, v_ref, td_ref, r_ref, u_ref, lam_ref):
+    """One batch row x full grid: U(lambda_j) for lambda_j = r_j * a_i."""
+    a = a_ref[...][:, None]      # [BB, 1]
+    v = v_ref[...][:, None]
+    td = td_ref[...][:, None]
+    r = r_ref[...][None, :]      # [1, G]
+    # Floor a to a normal-range value so the a==0 rows (no failures observed
+    # yet) stay finite through the intermediate terms; masked out below.
+    asafe = jnp.maximum(a, 1e-30)
+    lam = r * asafe
+    x = asafe / lam              # = 1/r, but keep the general form
+    em1 = jnp.expm1(x)
+    cbar = 1.0 / jnp.maximum(em1, 1e-300)
+    twc = 1.0 / asafe - cbar / lam
+    c_cycle = v + (twc + td) * em1
+    u = jnp.clip(1.0 - c_cycle * lam, 0.0, 1.0)
+    dead = a <= 0.0
+    u_ref[...] = jnp.where(dead, 1.0, u)   # no failures -> full utilization
+    lam_ref[...] = jnp.where(dead, 0.0, lam)
+
+
+@jax.jit
+def utilization_grid(a, v, td):
+    """U over the static rate grid for each row of (a, v, td) — [B] inputs.
+
+    Returns (u [B, G], lam [B, G]).
+    """
+    (b,) = a.shape
+    assert b % BLOCK_B == 0, f"batch {b} must be a multiple of {BLOCK_B}"
+    r = _grid_multipliers(a.dtype)
+    return pl.pallas_call(
+        _usurface_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((b, GRID_G), a.dtype),
+            jax.ShapeDtypeStruct((b, GRID_G), a.dtype),
+        ),
+        grid=(b // BLOCK_B,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_B,), lambda i: (i,)),
+            pl.BlockSpec((GRID_G,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((BLOCK_B, GRID_G), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_B, GRID_G), lambda i: (i, 0)),
+        ),
+        interpret=True,
+    )(a, v, td, r)

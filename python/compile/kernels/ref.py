@@ -1,0 +1,137 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth for everything in this package:
+
+* ``lambertw0_ref``    — principal-branch Lambert W via Halley iteration
+                         (pure jnp; cross-checked against scipy in tests).
+* ``mle_rate_ref``     — Eq. (1) masked MLE failure-rate estimator.
+* ``utilization_ref``  — Eqs. (5)-(10): T'_wc, c-bar, C and U.
+* ``optimal_lambda_ref`` — the paper's closed form for the optimal
+                         checkpoint rate (Section 3.2.3).
+
+Everything is float64: the planner runs on the CPU PJRT backend where f64
+is native, and the Lambert-W argument lives close to the -1/e branch point
+where f32 cancellation would cost ~4 digits in (W(z) + 1).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+#: Number of Halley iterations. The physical z-range for this paper is
+#: [-1/e, ~0.4]; 4 iterations already reach ~1 ulp except within 1e-6 of
+#: the branch point, 12 covers the tail with margin at trivial cost.
+HALLEY_ITERS = 12
+
+INV_E = float(jnp.exp(-1.0))
+
+
+def _w0_initial_guess(z):
+    """Branchless initial guess for W0(z), z >= -1/e.
+
+    Three regimes, blended with selects so the whole thing vectorizes:
+      near branch point  : series in p = sqrt(2 (e z + 1))
+      moderate |z|       : w = z (1 - z) Pade-flavoured guess around 0
+      large z            : asymptotic log(z) - log(log(z))
+    """
+    z = jnp.asarray(z, jnp.float64)
+    # --- near branch point: W0(z) = -1 + p - p^2/3 + 11 p^3 / 72 ...
+    p = jnp.sqrt(jnp.maximum(2.0 * (jnp.e * z + 1.0), 0.0))
+    w_branch = -1.0 + p * (1.0 + p * (-1.0 / 3.0 + p * (11.0 / 72.0)))
+    # --- around zero: W0(z) ~ z (1 - z + 1.5 z^2) (Taylor w = z - z^2 + ...)
+    w_zero = z * (1.0 - z * (1.0 - 1.5 * z))
+    # --- large z: log(z) - log(log(z)); guard the double log.
+    zs = jnp.maximum(z, 2.0)
+    lz = jnp.log(zs)
+    w_log = lz - jnp.log(lz)
+    w = jnp.where(z < -0.25, w_branch, jnp.where(z < 2.0, w_zero, w_log))
+    return w
+
+
+def lambertw0_ref(z):
+    """Principal branch W0(z) for z >= -1/e (values below are clamped).
+
+    Fixed-iteration Halley refinement of ``_w0_initial_guess``; branchless,
+    so it maps 1:1 onto the Pallas kernel.
+    """
+    z = jnp.asarray(z, jnp.float64)
+    z = jnp.maximum(z, -INV_E)
+    w = _w0_initial_guess(z)
+    for _ in range(HALLEY_ITERS):
+        ew = jnp.exp(w)
+        f = w * ew - z
+        wp1 = w + 1.0
+        # Halley: w -= f / (e^w (w+1) - (w+2) f / (2 (w+1)))
+        denom = ew * wp1 - (w + 2.0) * f / (2.0 * wp1)
+        # At the branch point wp1 -> 0 and f -> 0; keep the division sane.
+        denom = jnp.where(jnp.abs(denom) < 1e-300, 1.0, denom)
+        step = f / denom
+        w = w - step
+    # Exact zero (the only endpoint that is exactly representable; the
+    # float64 -1/e is a hair above the true branch point, where W0 is
+    # ~ -1 + 1.2e-8 — scipy agrees, so we do NOT pin it to -1).
+    w = jnp.where(z == 0.0, 0.0, w)
+    return w
+
+
+def mle_rate_ref(lifetimes, mask):
+    """Eq. (1): mu-hat = K / sum_i t_i over the masked lifetime window.
+
+    lifetimes: [..., W] observed peer lifetimes (seconds)
+    mask:      [..., W] 1.0 where the observation is valid, 0.0 padding
+    Returns the estimated failure rate [...] (0 where the window is empty).
+    """
+    lifetimes = jnp.asarray(lifetimes, jnp.float64)
+    mask = jnp.asarray(mask, jnp.float64)
+    count = jnp.sum(mask, axis=-1)
+    total = jnp.sum(lifetimes * mask, axis=-1)
+    return jnp.where(total > 0.0, count / jnp.maximum(total, 1e-300), 0.0)
+
+
+def utilization_ref(lam, a, v, td):
+    """Eqs. (5)-(10) at checkpoint rate ``lam`` for job failure rate a=k*mu.
+
+    Returns (U, cbar, twc, C):
+      cbar = 1 / (e^{a/lam} - 1)          expected fault-free cycles/failure
+      twc  = 1/a - cbar/lam               expected wasted work per failure
+      C    = v + (twc + td) / cbar        average overhead per cycle
+      U    = max(0, 1 - C lam)            average cycle utilization
+    """
+    lam = jnp.asarray(lam, jnp.float64)
+    a = jnp.asarray(a, jnp.float64)
+    x = a / jnp.maximum(lam, 1e-300)
+    # e^x - 1, stable for small x.
+    em1 = jnp.expm1(x)
+    cbar = 1.0 / jnp.maximum(em1, 1e-300)
+    twc = 1.0 / jnp.maximum(a, 1e-300) - cbar / jnp.maximum(lam, 1e-300)
+    c_cycle = v + (twc + td) * em1
+    u = 1.0 - c_cycle * lam
+    u = jnp.clip(u, 0.0, 1.0)
+    return u, cbar, twc, c_cycle
+
+
+def optimal_lambda_ref(a, v, td):
+    """The paper's closed form (Section 3.2.3):
+
+        lambda* = a / ( W0[ (v a - td a - 1) (td a + 1)^-1 e^-1 ] + 1 )
+
+    a = k * mu. Returns lambda* (same shape as the broadcast inputs).
+    """
+    a = jnp.asarray(a, jnp.float64)
+    z = (v * a - td * a - 1.0) / (td * a + 1.0) * INV_E
+    w = lambertw0_ref(z)
+    wp1 = jnp.maximum(w + 1.0, 1e-12)  # w -> -1 only as v -> 0
+    return a / wp1
+
+
+def planner_ref(lifetimes, mask, v, td, k):
+    """End-to-end planner reference: Eq (1) -> closed-form lambda* -> U.
+
+    Returns (mu, lam, u, cbar, twc), each shaped like the batch dims.
+    """
+    mu = mle_rate_ref(lifetimes, mask)
+    a = jnp.asarray(k, jnp.float64) * mu
+    lam = optimal_lambda_ref(a, v, td)
+    u, cbar, twc, _ = utilization_ref(lam, a, v, td)
+    return mu, lam, u, cbar, twc

@@ -1,0 +1,103 @@
+"""L2: the planner compute graph (build-time JAX, lowered once to HLO).
+
+Two exported entry points, both batched and shape-static so the rust
+coordinator can pad-and-dispatch:
+
+* ``planner(lifetimes [B,W], mask [B,W], v [B], td [B], k [B])``
+    -> (mu [B], lam [B], u [B], cbar [B], twc [B])
+  Eq. (1) MLE (Pallas), the Lambert-W closed form for lambda* (Pallas W0),
+  and the Eqs. (5)-(10) diagnostics at lambda*.
+
+* ``usurface(mu [B], v [B], td [B], k [B])``
+    -> (u [B,G], lam [B,G])
+  Utilization over a log-spaced rate grid (Pallas), used for grid-argmax
+  cross-checks and the utilization-surface figures.
+
+Shapes compiled by aot.py: PLANNER_B=256, WINDOW_W=64, USURFACE_B=32,
+G=kernels.planner.GRID_G. All float64 (CPU PJRT target; the W argument
+lives near the -1/e branch point).
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from .kernels.lambertw import lambertw0
+from .kernels.planner import mle_rate, utilization_grid
+from .kernels.ref import INV_E
+
+#: Compiled batch shapes (the rust planner service pads to these).
+PLANNER_B = 256
+WINDOW_W = 64
+USURFACE_B = 32
+
+
+def optimal_lambda(a, v, td):
+    """Closed form lambda* = a / (W0(z) + 1) with the Pallas W0 kernel.
+
+    a = k * mu, batched [B] with B a multiple of the kernel BLOCK.
+    """
+    z = (v * a - td * a - 1.0) / (td * a + 1.0) * INV_E
+    w = lambertw0(z)
+    wp1 = jnp.maximum(w + 1.0, 1e-12)
+    return a / wp1
+
+
+def utilization_at(lam, a, v, td):
+    """Eqs. (5)-(10) diagnostics at a specific rate (plain jnp — XLA fuses
+    this into the same computation as the kernels around it)."""
+    x = a / jnp.maximum(lam, 1e-300)
+    em1 = jnp.expm1(x)
+    cbar = 1.0 / jnp.maximum(em1, 1e-300)
+    twc = 1.0 / jnp.maximum(a, 1e-300) - cbar / jnp.maximum(lam, 1e-300)
+    c_cycle = v + (twc + td) * em1
+    u = jnp.clip(1.0 - c_cycle * lam, 0.0, 1.0)
+    return u, cbar, twc
+
+
+def planner(lifetimes, mask, v, td, k):
+    """Full adaptive-checkpoint decision for a batch of requests.
+
+    Rows whose window is empty (mask all zero) return mu=0, lam=0, u=0 —
+    the rust side treats those as "no estimate yet, keep current interval".
+    """
+    mu = mle_rate(lifetimes, mask)
+    a = k * mu
+    lam = optimal_lambda(a, v, td)
+    u, cbar, twc = utilization_at(lam, a, v, td)
+    empty = mu <= 0.0
+    lam = jnp.where(empty, 0.0, lam)
+    u = jnp.where(empty, 0.0, u)
+    cbar = jnp.where(empty, 0.0, cbar)
+    twc = jnp.where(empty, 0.0, twc)
+    return mu, lam, u, cbar, twc
+
+
+def usurface(mu, v, td, k):
+    """Utilization surface over the static rate grid for each request."""
+    a = k * mu
+    return utilization_grid(a, v, td)
+
+
+def planner_example_args():
+    s = jax.ShapeDtypeStruct
+    f8 = jnp.float64
+    return (
+        s((PLANNER_B, WINDOW_W), f8),
+        s((PLANNER_B, WINDOW_W), f8),
+        s((PLANNER_B,), f8),
+        s((PLANNER_B,), f8),
+        s((PLANNER_B,), f8),
+    )
+
+
+def usurface_example_args():
+    s = jax.ShapeDtypeStruct
+    f8 = jnp.float64
+    return (
+        s((USURFACE_B,), f8),
+        s((USURFACE_B,), f8),
+        s((USURFACE_B,), f8),
+        s((USURFACE_B,), f8),
+    )

@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas Lambert-W0 kernel vs ref.py vs scipy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.special import lambertw as scipy_lambertw
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.lambertw import BLOCK, lambertw0, lambertw0_any
+from compile.kernels.ref import INV_E, lambertw0_ref
+
+
+def scipy_w0(z):
+    return np.real(scipy_lambertw(np.asarray(z, np.float64), k=0))
+
+
+# ---------------------------------------------------------------- ref oracle
+
+
+@pytest.mark.parametrize(
+    "z",
+    [-INV_E, -INV_E + 1e-12, -0.3, -0.1, -1e-6, 0.0, 1e-6, 0.1, 0.5, 1.0,
+     np.e, 10.0, 1e3, 1e6],
+)
+def test_ref_matches_scipy_pointwise(z):
+    got = float(lambertw0_ref(jnp.float64(z)))
+    want = float(scipy_w0(z))
+    # Within ~1e-7 of the branch point W0' diverges like 1/sqrt(z + 1/e);
+    # 1e-7 abs is the honest comparison there, 1e-10 rel elsewhere.
+    if z < -INV_E + 1e-7:
+        assert got == pytest.approx(want, abs=1e-7)
+    else:
+        assert got == pytest.approx(want, rel=1e-10, abs=1e-12)
+
+
+def test_ref_identity_w_exp_w():
+    z = jnp.logspace(-6, 6, 200, dtype=jnp.float64)
+    w = lambertw0_ref(z)
+    np.testing.assert_allclose(np.asarray(w * jnp.exp(w)), np.asarray(z),
+                               rtol=1e-12)
+
+
+def test_ref_branch_point():
+    # float64 -1/e sits a hair above the true branch point; W0 there is
+    # -1 + ~1.2e-8 (scipy agrees).
+    assert float(lambertw0_ref(jnp.float64(-INV_E))) == pytest.approx(
+        -1.0, abs=1e-7)
+    assert float(lambertw0_ref(jnp.float64(0.0))) == 0.0
+
+
+def test_ref_clamps_below_branch():
+    # Arguments below -1/e are clamped to the branch point (rust mirrors this).
+    assert float(lambertw0_ref(jnp.float64(-1.0))) == pytest.approx(
+        -1.0, abs=1e-7)
+
+
+def test_ref_monotone_increasing():
+    z = jnp.linspace(-INV_E, 5.0, 512, dtype=jnp.float64)
+    w = np.asarray(lambertw0_ref(z))
+    assert np.all(np.diff(w) >= 0)
+
+
+# ------------------------------------------------------------- pallas kernel
+
+
+def test_kernel_matches_ref_grid():
+    z = jnp.concatenate([
+        jnp.linspace(-INV_E, 0.5, 3 * BLOCK, dtype=jnp.float64),
+        jnp.logspace(0, 6, BLOCK, dtype=jnp.float64),
+    ])
+    got = np.asarray(lambertw0_any(z))
+    want = np.asarray(lambertw0_ref(z))
+    # atol 1e-8 covers the Halley convergence plateau at the branch point
+    # (|W0'| -> inf there); everywhere else rtol 1e-12 binds.
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-8)
+
+
+def test_kernel_matches_scipy_physical_range():
+    # The physical z-range for the paper: z = -beta/e with beta in (0, 1],
+    # i.e. z in [-1/e, 0). Dense sweep.
+    z = jnp.linspace(-INV_E + 1e-9, -1e-9, 4 * BLOCK, dtype=jnp.float64)
+    got = np.asarray(lambertw0_any(z))
+    want = scipy_w0(np.asarray(z))
+    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-11)
+
+
+def test_kernel_block_alignment():
+    with pytest.raises(AssertionError):
+        lambertw0(jnp.zeros(BLOCK + 1, jnp.float64))
+
+
+def test_kernel_any_handles_odd_sizes():
+    for n in (1, 7, BLOCK - 1, BLOCK, BLOCK + 1, 3 * BLOCK + 17):
+        z = jnp.linspace(0.01, 2.0, n, dtype=jnp.float64)
+        got = np.asarray(lambertw0_any(z))
+        want = scipy_w0(np.asarray(z))
+        np.testing.assert_allclose(got, want, rtol=1e-10)
+        assert got.shape == (n,)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.floats(min_value=-INV_E, max_value=1e6, allow_nan=False))
+def test_kernel_hypothesis_sweep(z):
+    got = float(lambertw0_any(jnp.float64(z))[0])
+    want = float(scipy_w0(z))
+    # Near the branch point |W'| diverges; compare through the inverse map
+    # w e^w instead of w itself when close.
+    if z < -INV_E + 1e-6:
+        assert got * np.exp(got) == pytest.approx(max(z, -INV_E), abs=1e-9)
+    else:
+        assert got == pytest.approx(want, rel=1e-8, abs=1e-10)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.lists(st.floats(min_value=-INV_E, max_value=100.0, allow_nan=False),
+             min_size=1, max_size=2 * BLOCK)
+)
+def test_kernel_hypothesis_batches(zs):
+    z = jnp.asarray(zs, jnp.float64)
+    got = np.asarray(lambertw0_any(z))
+    want = scipy_w0(np.asarray(zs))
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-9)

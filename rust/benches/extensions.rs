@@ -1,0 +1,136 @@
+//! Extension benches — the paper's future-work features quantified:
+//!
+//! 1. §4.3 replication + checkpointing: rollbacks and wall time vs
+//!    replication factor r;
+//! 2. §5 history+online hybrid estimation: cold-start error vs pure MLE;
+//! 3. fleet serving: shared-batch planner occupancy and job latency under
+//!    Poisson arrivals with §3.2.3 admission control.
+//!
+//! `cargo bench --bench extensions` (add `-- --quick` for a smoke run).
+
+use p2pcp::churn::model::Exponential;
+use p2pcp::coordinator::fleet::{run_fleet, FleetConfig};
+use p2pcp::coordinator::replication::{ReplicatedJobSimulator, ReplicatedParams};
+use p2pcp::estimator::hybrid::HybridEstimator;
+use p2pcp::estimator::mle::MleEstimator;
+use p2pcp::estimator::RateEstimator;
+use p2pcp::experiments::bench_support::{emit_table, is_quick};
+use p2pcp::planner::NativePlanner;
+use p2pcp::policy::AdaptivePolicy;
+use p2pcp::util::csv::Table;
+use p2pcp::util::rng::Pcg64;
+use p2pcp::util::stats::Running;
+
+fn main() {
+    let trials = if is_quick() { 4 } else { 20 };
+
+    // ---- 1. replication ----------------------------------------------------
+    println!("-- §4.3 replication + checkpointing (MTBF 1800 s, k=16, 2 h job) --");
+    let churn = Exponential::new(1800.0);
+    let mut t = Table::new(&[
+        "replicas",
+        "wall_s",
+        "rollbacks",
+        "checkpoints",
+        "mean_interval_s",
+        "peers_used",
+    ]);
+    for r in [1usize, 2, 3] {
+        let params = ReplicatedParams {
+            replicas: r,
+            runtime: 2.0 * 3600.0,
+            ..ReplicatedParams::default()
+        };
+        let sim = ReplicatedJobSimulator::new(params, &churn);
+        let mut wall = Running::new();
+        let mut fails = Running::new();
+        let mut cps = Running::new();
+        let mut iv = Running::new();
+        for s in 0..trials {
+            let mut pol = AdaptivePolicy::new(Box::new(NativePlanner::new()));
+            let o = sim.run(&mut pol, 7_000 + s, s);
+            wall.push(o.wall_time);
+            fails.push(o.failures as f64);
+            cps.push(o.checkpoints as f64);
+            iv.push(o.mean_interval);
+        }
+        println!(
+            "r={r}: wall {:>8.0} s   rollbacks {:>6.1}   checkpoints {:>6.1}   interval {:>5.0} s   ({} peers)",
+            wall.mean(),
+            fails.mean(),
+            cps.mean(),
+            iv.mean(),
+            16 * r
+        );
+        t.push_f64(&[
+            r as f64,
+            wall.mean(),
+            fails.mean(),
+            cps.mean(),
+            iv.mean(),
+            (16 * r) as f64,
+        ]);
+    }
+    emit_table("ext_replication", &t);
+
+    // ---- 2. hybrid estimator cold start -------------------------------------
+    println!("\n-- §5 hybrid (history+online) estimator: cold-start error --");
+    let truth = 1.0 / 7200.0;
+    let mut t = Table::new(&["observations", "mle_mean_abs_err_pct", "hybrid_mean_abs_err_pct"]);
+    let mut rng = Pcg64::new(8_001, 0);
+    for n_obs in [1usize, 2, 4, 8, 16, 32, 64] {
+        let reps = if is_quick() { 200 } else { 1000 };
+        let (mut e_m, mut e_h) = (0.0, 0.0);
+        for _ in 0..reps {
+            let mut m = MleEstimator::new(64).with_min_obs(1);
+            let mut h = HybridEstimator::from_history(truth * 1.1, 16.0, 64);
+            for _ in 0..n_obs {
+                let x = rng.exp(truth);
+                m.observe(x);
+                h.observe(x);
+            }
+            e_m += (m.rate().unwrap() - truth).abs() / truth;
+            e_h += (h.rate().unwrap() - truth).abs() / truth;
+        }
+        let (e_m, e_h) = (e_m / reps as f64 * 100.0, e_h / reps as f64 * 100.0);
+        println!("n={n_obs:<3} mle err {e_m:>6.1}%   hybrid err {e_h:>6.1}%");
+        t.push_f64(&[n_obs as f64, e_m, e_h]);
+    }
+    emit_table("ext_hybrid", &t);
+
+    // ---- 3. fleet serving ----------------------------------------------------
+    println!("\n-- fleet serving: shared planner batching + admission control --");
+    let churn = Exponential::new(7200.0);
+    let mut t = Table::new(&[
+        "arrival_mean_s",
+        "completed",
+        "rejected",
+        "mean_wall_s",
+        "mean_latency_s",
+        "mean_batch",
+        "makespan_s",
+    ]);
+    for arrival in [1200.0, 300.0, 60.0] {
+        let cfg = FleetConfig {
+            n_jobs: if is_quick() { 8 } else { 32 },
+            arrival_mean: arrival,
+            runtime: 3600.0,
+            ..FleetConfig::default()
+        };
+        let out = run_fleet(&cfg, &churn, NativePlanner::new(), 9_001);
+        println!(
+            "arrival 1/{arrival:>5.0}s: {:>3} done, {:>2} rejected   wall {:>6.0} s   latency {:>6.0} s   batch {:>5.1}",
+            out.completed, out.rejected, out.mean_wall, out.mean_latency, out.mean_batch
+        );
+        t.push_f64(&[
+            arrival,
+            out.completed as f64,
+            out.rejected as f64,
+            out.mean_wall,
+            out.mean_latency,
+            out.mean_batch,
+            out.makespan,
+        ]);
+    }
+    emit_table("ext_fleet", &t);
+}

@@ -1,0 +1,42 @@
+//! Fig. 2: peer-failure statistics of the measured P2P networks.
+//!
+//! (a) Gnutella session CCDF vs the exponential fit (loose fit, quantified
+//!     by the KS distance);
+//! (b) Overnet hour-scale failure-rate variability vs a homogeneous
+//!     control.
+//!
+//! `cargo bench --bench fig2` (add `-- --quick` for a smoke run).
+
+use p2pcp::churn::trace::TraceKind;
+use p2pcp::experiments::bench_support::{emit_table, is_quick};
+use p2pcp::experiments::fig2::{fig2a, fig2a_table, fig2b, fig2b_table};
+
+fn main() {
+    let sessions = if is_quick() { 20_000 } else { 200_000 };
+
+    println!("-- Fig 2(a): session distribution vs exponential fit --");
+    for kind in [TraceKind::Gnutella, TraceKind::Overnet, TraceKind::Bittorrent] {
+        let a = fig2a(kind, sessions, 2_001);
+        println!(
+            "{:<11} mean session {:>7.1} min   KS-to-exponential {:.4}",
+            a.kind,
+            a.mean_session_s / 60.0,
+            a.ks_distance
+        );
+        if kind == TraceKind::Gnutella {
+            emit_table("fig2a_gnutella", &fig2a_table(&a));
+        }
+    }
+
+    println!("\n-- Fig 2(b): short-term (hourly) failure-rate variability --");
+    for kind in [TraceKind::Overnet, TraceKind::Gnutella, TraceKind::Bittorrent] {
+        let b = fig2b(kind, sessions, 2_002);
+        println!(
+            "{:<11} hourly-rate CV {:.3}   (homogeneous control {:.3})",
+            b.kind, b.cv, b.control_cv
+        );
+        if kind == TraceKind::Overnet {
+            emit_table("fig2b_overnet", &fig2b_table(&b));
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Fig. 4 (right): same comparison but the departure rate **doubles over
+//! 20 hours** (the dynamism observed in the Overnet trace), for initial
+//! MTBF = 4000 / 7200 / 14400 s.
+//!
+//! The paper's headline here: at MTBF₀ = 7200 s and T = 5 min the fixed
+//! approach needs ≈ 3× the adaptive runtime, and larger fixed T diverges
+//! (jobs "keep rolling back to the same saved status").
+//!
+//! `cargo bench --bench fig4_right` (add `-- --quick` for a smoke run).
+
+use p2pcp::config::ChurnSpec;
+use p2pcp::coordinator::job::JobParams;
+use p2pcp::experiments::bench_support::{emit_table, is_quick};
+use p2pcp::experiments::relative_runtime::{run_comparison, ComparisonConfig};
+use p2pcp::util::csv::Table;
+
+fn main() {
+    let quick = is_quick();
+    let trials = if quick { 6 } else { 40 };
+    let intervals = vec![60.0, 120.0, 300.0, 600.0, 1200.0, 2400.0, 3600.0];
+    let double_time = 20.0 * 3600.0;
+
+    let mut combined = Table::new(&[
+        "mtbf0_s",
+        "fixed_interval_s",
+        "relative_runtime_pct",
+        "fixed_runtime_s",
+        "adaptive_runtime_s",
+        "fixed_aborted_frac",
+    ]);
+
+    for mtbf0 in [4000.0, 7200.0, 14400.0] {
+        let cfg = ComparisonConfig {
+            churn: ChurnSpec::TimeVarying { mtbf0, double_time },
+            job: JobParams {
+                k: 16,
+                runtime: 8.0 * 3600.0, // long enough for the rate to move
+                v: 20.0,
+                td: 50.0,
+                max_sim_time: 30.0 * 24.0 * 3600.0,
+                ..JobParams::default()
+            },
+            fixed_intervals: intervals.clone(),
+            trials,
+            seed: 4_002,
+            with_oracle: false,
+        };
+        let res = run_comparison(&cfg);
+        println!(
+            "MTBF0={mtbf0} (doubling/20 h): adaptive {:.0} s ± {:.0}",
+            res.adaptive_runtime, res.adaptive_ci95
+        );
+        for row in &res.rows {
+            combined.push_f64(&[
+                mtbf0,
+                row.fixed_interval,
+                row.relative_runtime_pct,
+                row.fixed_runtime,
+                res.adaptive_runtime,
+                row.fixed_aborted_frac,
+            ]);
+        }
+    }
+    emit_table("fig4_right", &combined);
+}

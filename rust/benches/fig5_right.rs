@@ -1,0 +1,59 @@
+//! Fig. 5 (right): sensitivity to the image download overhead T_d at fixed
+//! V = 20 s, MTBF = 7200 s — T_d is set by the available download
+//! bandwidth ("the required time for the slowest node used in the job",
+//! Section 4.2).
+//!
+//! `cargo bench --bench fig5_right` (add `-- --quick` for a smoke run).
+
+use p2pcp::config::ChurnSpec;
+use p2pcp::coordinator::job::JobParams;
+use p2pcp::experiments::bench_support::{emit_table, is_quick};
+use p2pcp::experiments::relative_runtime::{run_comparison, ComparisonConfig};
+use p2pcp::util::csv::Table;
+
+fn main() {
+    let quick = is_quick();
+    let trials = if quick { 6 } else { 40 };
+    let intervals = vec![60.0, 120.0, 300.0, 600.0, 1200.0, 2400.0, 3600.0];
+
+    let mut combined = Table::new(&[
+        "td_s",
+        "fixed_interval_s",
+        "relative_runtime_pct",
+        "fixed_runtime_s",
+        "adaptive_runtime_s",
+    ]);
+
+    for td in [10.0, 25.0, 50.0, 100.0, 200.0] {
+        let cfg = ComparisonConfig {
+            churn: ChurnSpec::Exponential { mtbf: 7200.0 },
+            job: JobParams {
+                k: 16,
+                runtime: 4.0 * 3600.0,
+                v: 20.0,
+                td,
+                max_sim_time: 30.0 * 24.0 * 3600.0,
+                ..JobParams::default()
+            },
+            fixed_intervals: intervals.clone(),
+            trials,
+            seed: 5_002,
+            with_oracle: false,
+        };
+        let res = run_comparison(&cfg);
+        println!(
+            "Td={td}: adaptive {:.0} s (mean interval {:.0} s)",
+            res.adaptive_runtime, res.adaptive_mean_interval
+        );
+        for row in &res.rows {
+            combined.push_f64(&[
+                td,
+                row.fixed_interval,
+                row.relative_runtime_pct,
+                row.fixed_runtime,
+                res.adaptive_runtime,
+            ]);
+        }
+    }
+    emit_table("fig5_right", &combined);
+}

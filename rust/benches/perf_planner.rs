@@ -1,0 +1,88 @@
+//! L2/RT perf: planner throughput — native closed form vs the compiled
+//! artifact through PJRT, plus batching-efficiency numbers for the
+//! planner service. §Perf tracks these.
+//!
+//! `cargo bench --bench perf_planner`
+
+use p2pcp::experiments::bench_support::{report_throughput, report_timing, time_it};
+use p2pcp::planner::{NativePlanner, PlanRequest, Planner, PlannerService, XlaPlanner};
+use p2pcp::runtime::PjrtRuntime;
+use p2pcp::util::rng::Pcg64;
+
+fn mk_requests(n: usize, window: usize) -> Vec<PlanRequest> {
+    let mut rng = Pcg64::new(7, 0);
+    (0..n)
+        .map(|_| {
+            let mtbf = 1000.0 + rng.next_f64() * 20_000.0;
+            PlanRequest {
+                lifetimes: (0..window).map(|_| rng.exp(1.0 / mtbf)).collect(),
+                v: 20.0,
+                td: 50.0,
+                k: 16.0,
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let reqs_256 = mk_requests(256, 64);
+    let reqs_4096 = mk_requests(4096, 64);
+
+    // --- native closed form -------------------------------------------------
+    let mut native = NativePlanner::new();
+    let r = time_it(3, 30, || {
+        std::hint::black_box(native.plan_batch(&reqs_4096).unwrap());
+    });
+    report_timing("native: 4096-request batch", &r);
+    report_throughput("native plans", 4096.0, &r);
+
+    // --- XLA artifact over PJRT ----------------------------------------------
+    let rt = match PjrtRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("[skipping XLA benches: {e}]");
+            return;
+        }
+    };
+    let mut xla = match XlaPlanner::new(&rt) {
+        Ok(x) => x,
+        Err(e) => {
+            println!("[skipping XLA benches: {e} — run `make artifacts`]");
+            return;
+        }
+    };
+
+    let r = time_it(3, 30, || {
+        std::hint::black_box(xla.plan_batch(&reqs_256).unwrap());
+    });
+    report_timing("xla: one full 256-request batch", &r);
+    report_throughput("xla plans (full batch)", 256.0, &r);
+
+    let one = mk_requests(1, 64);
+    let r = time_it(3, 30, || {
+        std::hint::black_box(xla.plan_batch(&one).unwrap());
+    });
+    report_timing("xla: single request (padded to 256)", &r);
+
+    let r = time_it(1, 10, || {
+        std::hint::black_box(xla.plan_batch(&reqs_4096).unwrap());
+    });
+    report_timing("xla: 4096 requests (16 batches)", &r);
+    report_throughput("xla plans (16 batches)", 4096.0, &r);
+
+    // --- batching service occupancy ------------------------------------------
+    let xla2 = XlaPlanner::new(&rt).unwrap();
+    let mut svc = PlannerService::new(xla2, 256);
+    let r = time_it(1, 10, || {
+        for req in &reqs_4096 {
+            svc.submit(req.clone()).unwrap();
+        }
+        svc.flush().unwrap();
+    });
+    let stats = svc.stats();
+    report_timing("service: 4096 submits + flush", &r);
+    println!(
+        "service occupancy: mean batch {:.1} / 256 (max {})",
+        stats.mean_batch, stats.max_batch
+    );
+}

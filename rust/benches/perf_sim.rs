@@ -1,0 +1,79 @@
+//! L3 perf: simulator throughput — the fast-path jobs/second, the DES
+//! event rate of the full-stack world, and the overlay routing rate.
+//! §Perf in EXPERIMENTS.md tracks these before/after optimization.
+//!
+//! `cargo bench --bench perf_sim`
+
+use p2pcp::churn::model::Exponential;
+use p2pcp::config::{ChurnSpec, SimConfig};
+use p2pcp::coordinator::job::{JobParams, JobSimulator};
+use p2pcp::coordinator::world::World;
+use p2pcp::experiments::bench_support::{report_throughput, report_timing, time_it};
+use p2pcp::net::overlay::Overlay;
+use p2pcp::net::routing::{route, HopLatency};
+use p2pcp::policy::FixedPolicy;
+use p2pcp::util::rng::Pcg64;
+
+fn main() {
+    // --- fast-path job simulation ----------------------------------------
+    let churn = Exponential::new(7200.0);
+    let params = JobParams { runtime: 4.0 * 3600.0, ..JobParams::default() };
+    let sim = JobSimulator::new(params, &churn);
+    let mut seed = 0u64;
+    let r = time_it(3, 20, || {
+        let mut pol = FixedPolicy::new(300.0);
+        seed += 1;
+        std::hint::black_box(sim.run(&mut pol, seed, 0));
+    });
+    report_timing("fastpath: one 4h job (fixed policy)", &r);
+    report_throughput("fastpath jobs", 1.0, &r);
+
+    let mut seed2 = 1000u64;
+    let r = time_it(3, 20, || {
+        let mut pol = p2pcp::policy::AdaptivePolicy::new(Box::new(
+            p2pcp::planner::NativePlanner::new(),
+        ));
+        seed2 += 1;
+        std::hint::black_box(sim.run(&mut pol, seed2, 0));
+    });
+    report_timing("fastpath: one 4h job (adaptive native)", &r);
+
+    // --- full-stack world event rate ---------------------------------------
+    let r = time_it(1, 5, || {
+        let cfg = SimConfig {
+            n_peers: 512,
+            churn: ChurnSpec::Exponential { mtbf: 3600.0 },
+            seed: 99,
+            ..SimConfig::default()
+        };
+        let mut w = World::new(cfg).unwrap();
+        w.warmup(6.0 * 3600.0);
+        std::hint::black_box(w.events_processed());
+    });
+    // Count events once for the throughput figure.
+    let cfg = SimConfig {
+        n_peers: 512,
+        churn: ChurnSpec::Exponential { mtbf: 3600.0 },
+        seed: 99,
+        ..SimConfig::default()
+    };
+    let mut w = World::new(cfg).unwrap();
+    w.warmup(6.0 * 3600.0);
+    let events = w.events_processed() as f64;
+    report_timing("world: 512 peers x 6h churn+stabilize", &r);
+    report_throughput("world events", events, &r);
+
+    // --- overlay routing ----------------------------------------------------
+    let mut rng = Pcg64::new(5, 0);
+    let overlay = Overlay::new(1024, &mut rng);
+    let n_routes = 10_000u64;
+    let r = time_it(1, 10, || {
+        for i in 0..n_routes {
+            let key = i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let src = (i % 1024) as usize;
+            std::hint::black_box(route(&overlay, src, key, HopLatency::default(), &mut rng));
+        }
+    });
+    report_timing("overlay: 10k greedy routes (n=1024)", &r);
+    report_throughput("routes", n_routes as f64, &r);
+}

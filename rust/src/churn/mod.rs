@@ -1,0 +1,13 @@
+//! Peer churn: session-length models and synthetic P2P traces.
+//!
+//! Section 2 of the paper grounds the failure environment in three measured
+//! networks (Gnutella ~121 min mean session, Overnet ~134 min, BitTorrent
+//! ~104 min) and models peer failure as exponential (Section 3, refs
+//! \[22, 10\]). Fig. 4 (right) additionally needs a **time-varying** rate
+//! that doubles over 20 hours. All of those live here.
+
+pub mod model;
+pub mod trace;
+
+pub use model::{ChurnModel, Exponential, HeavyTail, TimeVarying, TraceReplay};
+pub use trace::{SessionTrace, TraceKind};

@@ -1,0 +1,339 @@
+//! Session-length models.
+//!
+//! A [`ChurnModel`] answers two questions:
+//! * `session(now)` — how long will a peer that joins at `now` stay online?
+//! * `rate(now)`    — the true instantaneous failure rate (used by the
+//!   Oracle policy and by experiment ground truth; estimators never see it).
+
+use crate::util::rng::Pcg64;
+
+/// A model of peer session lengths. Times in seconds.
+pub trait ChurnModel: Send + Sync {
+    /// Sample the online duration for a peer joining at absolute time `now`.
+    fn session(&self, now: f64, rng: &mut Pcg64) -> f64;
+
+    /// True instantaneous per-peer failure rate at time `now`.
+    fn rate(&self, now: f64) -> f64;
+
+    /// Time until the first failure among `k` fresh sessions starting at
+    /// `now`. Default: min of `k` session draws. Memoryless models
+    /// override with a single draw at `k·rate` — exact and ~k× cheaper
+    /// (this is the fast-path simulator's hottest sample).
+    fn group_failure(&self, now: f64, k: usize, rng: &mut Pcg64) -> f64 {
+        let mut m = f64::INFINITY;
+        for _ in 0..k {
+            m = m.min(self.session(now, rng));
+        }
+        m
+    }
+
+    /// Mean downtime before a departed peer (or its replacement) rejoins.
+    fn rejoin_delay(&self, rng: &mut Pcg64) -> f64 {
+        // Default: overlay population is kept constant; replacements join
+        // after a short exponential delay (30 s mean).
+        rng.exp(1.0 / 30.0)
+    }
+
+    /// Human-readable description for logs / experiment metadata.
+    fn describe(&self) -> String;
+}
+
+/// Homogeneous exponential sessions — the paper's base model.
+#[derive(Debug, Clone)]
+pub struct Exponential {
+    /// Mean time before failure (seconds); rate = 1/mtbf.
+    pub mtbf: f64,
+}
+
+impl Exponential {
+    pub fn new(mtbf: f64) -> Self {
+        assert!(mtbf > 0.0);
+        Exponential { mtbf }
+    }
+}
+
+impl ChurnModel for Exponential {
+    fn session(&self, _now: f64, rng: &mut Pcg64) -> f64 {
+        rng.exp(1.0 / self.mtbf)
+    }
+
+    fn rate(&self, _now: f64) -> f64 {
+        1.0 / self.mtbf
+    }
+
+    /// min of k Exp(μ) is exactly Exp(kμ): one draw (Eq. 7).
+    fn group_failure(&self, _now: f64, k: usize, rng: &mut Pcg64) -> f64 {
+        rng.exp(k as f64 / self.mtbf)
+    }
+
+    fn describe(&self) -> String {
+        format!("exponential(mtbf={}s)", self.mtbf)
+    }
+}
+
+/// Exponential with a rate that doubles every `double_time` seconds —
+/// Fig. 4 (right): "departure rates are doubled in 20 hours".
+///
+/// `rate(t) = rate0 · 2^{t/double_time} = rate0 · e^{c t}`, `c = ln2/D`.
+/// Sessions are sampled exactly from the nonhomogeneous survival function
+/// by inversion: with `E = −ln U`,
+/// `x = ln(1 + c·E·e^{−c·t0}/rate0) / c`.
+#[derive(Debug, Clone)]
+pub struct TimeVarying {
+    pub mtbf0: f64,
+    pub double_time: f64,
+    /// Optional cap on the rate growth (e.g. stop doubling after 3 halvings
+    /// of the MTBF) so very long runs stay integrable. `f64::INFINITY`
+    /// means unbounded.
+    pub max_rate_factor: f64,
+}
+
+impl TimeVarying {
+    pub fn new(mtbf0: f64, double_time: f64) -> Self {
+        assert!(mtbf0 > 0.0 && double_time > 0.0);
+        TimeVarying { mtbf0, double_time, max_rate_factor: 64.0 }
+    }
+}
+
+impl TimeVarying {
+    /// Sample the first event of an inhomogeneous Poisson process with
+    /// hazard `scale · rate(t)` starting at `now` (exact inversion).
+    fn sample_scaled(&self, now: f64, scale: f64, rng: &mut Pcg64) -> f64 {
+        let rate0 = 1.0 / self.mtbf0;
+        let c = std::f64::consts::LN_2 / self.double_time;
+        let e = -rng.next_f64_open().ln();
+        // Saturation: beyond the cap the process is homogeneous at max rate.
+        let cap = rate0 * self.max_rate_factor * scale;
+        let r_now = self.rate(now) * scale;
+        if r_now >= cap {
+            return e / cap;
+        }
+        // Integral of rate from now to now+x is (r_now/c)(e^{cx} - 1)
+        // (valid while below cap; the cap correction is applied after).
+        let x = ((1.0 + c * e / r_now).ln()) / c;
+        // If the sampled session crosses the cap time, re-solve the tail at
+        // the capped (constant) rate for exactness.
+        let t_cap = self.double_time * (self.max_rate_factor.log2()) - now;
+        if x <= t_cap || !t_cap.is_finite() {
+            x
+        } else {
+            // Hazard spent up to the cap:
+            let spent = r_now / c * ((c * t_cap).exp() - 1.0);
+            let remaining = (e - spent).max(0.0);
+            t_cap + remaining / cap
+        }
+    }
+}
+
+impl ChurnModel for TimeVarying {
+    fn session(&self, now: f64, rng: &mut Pcg64) -> f64 {
+        self.sample_scaled(now, 1.0, rng)
+    }
+
+    /// Per-peer hazards are memoryless (inhomogeneous exponential), so the
+    /// group minimum is the same process with a k-scaled hazard: one draw.
+    fn group_failure(&self, now: f64, k: usize, rng: &mut Pcg64) -> f64 {
+        self.sample_scaled(now, k as f64, rng)
+    }
+
+    fn rate(&self, now: f64) -> f64 {
+        let r = (1.0 / self.mtbf0) * 2f64.powf(now / self.double_time);
+        r.min(self.max_rate_factor / self.mtbf0)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "time-varying(mtbf0={}s, doubles every {}s)",
+            self.mtbf0, self.double_time
+        )
+    }
+}
+
+/// Heavy-tailed sessions (Weibull shape < 1) — a realism stressor used in
+/// ablations: the MLE assumes exponential, so this quantifies model error.
+#[derive(Debug, Clone)]
+pub struct HeavyTail {
+    /// Weibull scale chosen so the mean equals `mean`.
+    pub mean: f64,
+    pub shape: f64,
+}
+
+impl HeavyTail {
+    pub fn new(mean: f64, shape: f64) -> Self {
+        assert!(mean > 0.0 && shape > 0.0);
+        HeavyTail { mean, shape }
+    }
+
+    fn scale(&self) -> f64 {
+        // mean = scale * Gamma(1 + 1/shape)
+        self.mean / gamma_1p(1.0 / self.shape)
+    }
+}
+
+/// Gamma(1 + x) for x in (0, ~3] via Lanczos — enough for Weibull scales.
+fn gamma_1p(x: f64) -> f64 {
+    // Use the Stirling/Lanczos approximation of ln Gamma(z), z = 1 + x.
+    let z = 1.0 + x;
+    const G: f64 = 7.0;
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_1,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    let z = z - 1.0;
+    let mut a = COEF[0];
+    let t = z + G + 0.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (z + i as f64);
+    }
+    (2.0 * std::f64::consts::PI).sqrt() * t.powf(z + 0.5) * (-t).exp() * a
+}
+
+impl ChurnModel for HeavyTail {
+    fn session(&self, _now: f64, rng: &mut Pcg64) -> f64 {
+        rng.weibull(self.scale(), self.shape)
+    }
+
+    fn rate(&self, _now: f64) -> f64 {
+        // Long-run average failure rate.
+        1.0 / self.mean
+    }
+
+    fn describe(&self) -> String {
+        format!("heavy-tail(weibull mean={}s shape={})", self.mean, self.shape)
+    }
+}
+
+/// Replay sessions from a recorded/synthetic trace (see
+/// [`crate::churn::trace`]); cycles through the trace deterministically
+/// with per-peer offsets.
+pub struct TraceReplay {
+    durations: Vec<f64>,
+    mean: f64,
+}
+
+impl TraceReplay {
+    pub fn new(durations: Vec<f64>) -> Self {
+        assert!(!durations.is_empty());
+        let mean = durations.iter().sum::<f64>() / durations.len() as f64;
+        TraceReplay { durations, mean }
+    }
+}
+
+impl ChurnModel for TraceReplay {
+    fn session(&self, _now: f64, rng: &mut Pcg64) -> f64 {
+        self.durations[rng.next_below(self.durations.len() as u64) as usize]
+    }
+
+    fn rate(&self, _now: f64) -> f64 {
+        1.0 / self.mean
+    }
+
+    fn describe(&self) -> String {
+        format!("trace-replay({} sessions, mean={:.0}s)", self.durations.len(), self.mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponential_mean() {
+        let m = Exponential::new(7200.0);
+        let mut rng = Pcg64::new(1, 0);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| m.session(0.0, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 7200.0).abs() < 100.0, "mean {mean}");
+        assert_eq!(m.rate(0.0), 1.0 / 7200.0);
+        assert_eq!(m.rate(1e6), 1.0 / 7200.0);
+    }
+
+    #[test]
+    fn time_varying_rate_doubles() {
+        let m = TimeVarying::new(7200.0, 72_000.0);
+        let r0 = m.rate(0.0);
+        let r1 = m.rate(72_000.0);
+        let r2 = m.rate(144_000.0);
+        assert!((r1 / r0 - 2.0).abs() < 1e-12);
+        assert!((r2 / r0 - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_varying_sessions_shorten() {
+        let m = TimeVarying::new(7200.0, 72_000.0);
+        let mut rng = Pcg64::new(2, 0);
+        let n = 50_000;
+        let mean_at = |t0: f64, rng: &mut Pcg64| -> f64 {
+            (0..n).map(|_| m.session(t0, rng)).sum::<f64>() / n as f64
+        };
+        let early = mean_at(0.0, &mut rng);
+        let late = mean_at(144_000.0, &mut rng);
+        // At t=144000 the rate is 4x, so sessions should be ~4x shorter
+        // (slightly longer than mtbf/4 because the rate keeps growing).
+        assert!(late < early / 2.5, "early {early} late {late}");
+    }
+
+    #[test]
+    fn time_varying_matches_homogeneous_when_rate_capped() {
+        let mut m = TimeVarying::new(1000.0, 10.0);
+        m.max_rate_factor = 2.0;
+        // Far beyond the cap time the process is exp at rate 2/mtbf0.
+        let mut rng = Pcg64::new(3, 0);
+        let n = 50_000;
+        let mean: f64 =
+            (0..n).map(|_| m.session(1e7, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 500.0).abs() < 15.0, "mean {mean}");
+    }
+
+    #[test]
+    fn time_varying_survival_exactness() {
+        // Empirical P(X > x) must match exp(-∫rate) for the inhomogeneous
+        // process: at t0=0, ∫_0^x = r0/c (e^{cx}-1).
+        let m = TimeVarying::new(7200.0, 72_000.0);
+        let mut rng = Pcg64::new(4, 0);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| m.session(0.0, &mut rng)).collect();
+        let c = std::f64::consts::LN_2 / 72_000.0;
+        let r0 = 1.0 / 7200.0;
+        for probe in [1800.0, 3600.0, 7200.0, 14400.0] {
+            let emp = xs.iter().filter(|&&x| x > probe).count() as f64 / n as f64;
+            let hazard = r0 / c * ((c * probe).exp() - 1.0);
+            let want = (-hazard).exp();
+            assert!((emp - want).abs() < 0.01, "S({probe}) emp {emp} want {want}");
+        }
+    }
+
+    #[test]
+    fn heavy_tail_mean_calibrated() {
+        let m = HeavyTail::new(7260.0, 0.6);
+        let mut rng = Pcg64::new(5, 0);
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| m.session(0.0, &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 7260.0).abs() < 7260.0 * 0.03, "mean {mean}");
+    }
+
+    #[test]
+    fn gamma_1p_known_values() {
+        assert!((gamma_1p(1.0) - 1.0).abs() < 1e-9); // Gamma(2) = 1
+        assert!((gamma_1p(2.0) - 2.0).abs() < 1e-9); // Gamma(3) = 2
+        assert!((gamma_1p(0.5) - 0.886_226_925_452_758).abs() < 1e-9); // Gamma(1.5)
+    }
+
+    #[test]
+    fn trace_replay_samples_from_trace() {
+        let m = TraceReplay::new(vec![10.0, 20.0, 30.0]);
+        let mut rng = Pcg64::new(6, 0);
+        for _ in 0..100 {
+            let s = m.session(0.0, &mut rng);
+            assert!(s == 10.0 || s == 20.0 || s == 30.0);
+        }
+        assert!((m.rate(0.0) - 1.0 / 20.0).abs() < 1e-12);
+    }
+}

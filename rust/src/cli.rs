@@ -1,0 +1,138 @@
+//! Hand-rolled CLI argument parsing (clap is not in the offline cache).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args,
+//! with typed getters and an unknown-flag check.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv\[0\]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                    out.seen.push(k.to_string());
+                } else {
+                    // `--key value` unless the next token is another flag.
+                    let takes_value =
+                        it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    if takes_value {
+                        let v = it.next().unwrap();
+                        out.flags.insert(body.to_string(), v);
+                    } else {
+                        out.flags.insert(body.to_string(), "true".into());
+                    }
+                    out.seen.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: '{v}' is not a number"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u64(key, default as u64)? as usize)
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Error if any provided flag is not in `allowed` — typos must not
+    /// silently run a default experiment.
+    pub fn check_unknown(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown flag --{k}; allowed: {}",
+                    allowed.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        // NB: a bare `--flag` greedily takes the next non-flag token as
+        // its value; boolean flags therefore go last or use `--flag=true`.
+        let a = parse("simulate out.csv --mtbf 7200 --policy=adaptive --quick");
+        assert_eq!(a.positional, vec!["simulate", "out.csv"]);
+        assert_eq!(a.get_f64("mtbf", 0.0).unwrap(), 7200.0);
+        assert_eq!(a.get("policy"), Some("adaptive"));
+        assert!(a.has("quick"));
+        assert_eq!(a.get("quick"), Some("true"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("--mtbf abc");
+        assert!(a.get_f64("mtbf", 0.0).is_err());
+        assert_eq!(a.get_f64("missing", 5.0).unwrap(), 5.0);
+    }
+
+    #[test]
+    fn unknown_flag_check() {
+        let a = parse("--mtbf 7200 --oops 1");
+        assert!(a.check_unknown(&["mtbf"]).is_err());
+        assert!(a.check_unknown(&["mtbf", "oops"]).is_ok());
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse("--offset=-5.5");
+        assert_eq!(a.get_f64("offset", 0.0).unwrap(), -5.5);
+    }
+}

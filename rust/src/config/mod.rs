@@ -1,0 +1,299 @@
+//! Configuration: experiment / simulation / job / policy parameters with a
+//! TOML-lite parser (`key = value` lines + `[section]` headers — the
+//! offline crate cache has no serde/toml).
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Churn specification (resolved to a `ChurnModel` by the coordinator).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChurnSpec {
+    /// Homogeneous exponential with this MTBF (seconds).
+    Exponential { mtbf: f64 },
+    /// Rate doubles every `double_time` seconds (Fig. 4 right).
+    TimeVarying { mtbf0: f64, double_time: f64 },
+    /// Weibull heavy-tail with mean/shape (ablations).
+    HeavyTail { mean: f64, shape: f64 },
+    /// Synthetic published trace.
+    Trace { kind: String },
+}
+
+impl Default for ChurnSpec {
+    fn default() -> Self {
+        ChurnSpec::Exponential { mtbf: 7200.0 }
+    }
+}
+
+/// Checkpoint policy specification.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicySpec {
+    /// Fixed interval T seconds — the paper's baseline.
+    Fixed { interval: f64 },
+    /// The paper's adaptive scheme (estimated mu, V, T_d -> lambda*).
+    Adaptive,
+    /// Adaptive with the *true* failure rate (upper bound on achievable).
+    Oracle,
+    /// Never checkpoint (lower bound / sanity).
+    Never,
+}
+
+impl Default for PolicySpec {
+    fn default() -> Self {
+        PolicySpec::Adaptive
+    }
+}
+
+impl PolicySpec {
+    pub fn name(&self) -> String {
+        match self {
+            PolicySpec::Fixed { interval } => format!("fixed({interval}s)"),
+            PolicySpec::Adaptive => "adaptive".into(),
+            PolicySpec::Oracle => "oracle".into(),
+            PolicySpec::Never => "never".into(),
+        }
+    }
+}
+
+/// Full simulation configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SimConfig {
+    /// Overlay population.
+    pub n_peers: usize,
+    /// RNG seed (trial index is mixed in separately).
+    pub seed: u64,
+    /// Stabilization period (seconds).
+    pub stab_period: f64,
+    /// Churn model.
+    pub churn: ChurnSpec,
+    /// Peers per job.
+    pub k: usize,
+    /// Fault-free job runtime (seconds).
+    pub job_runtime: f64,
+    /// Checkpoint overhead V (seconds). When `None` the full-stack sim
+    /// derives it from image size / bandwidth; experiments reproducing the
+    /// paper set it explicitly (20 s in Fig. 4).
+    pub v: Option<f64>,
+    /// Image download overhead T_d (seconds); `None` -> derived.
+    pub td: Option<f64>,
+    /// Checkpoint policy.
+    pub policy: PolicySpec,
+    /// Estimator window K (observations) for the Eq. 1 MLE.
+    pub estimator_window: usize,
+    /// Re-planning period for the adaptive policy (seconds).
+    pub replan_period: f64,
+    /// Hard wall-clock cap for one simulated job (seconds of sim time);
+    /// guards against non-terminating configurations (U = 0 regimes).
+    pub max_sim_time: f64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            n_peers: 512,
+            seed: 42,
+            stab_period: 30.0,
+            churn: ChurnSpec::default(),
+            k: 16,
+            job_runtime: 4.0 * 3600.0,
+            v: Some(20.0),
+            td: Some(50.0),
+            policy: PolicySpec::default(),
+            estimator_window: 64,
+            replan_period: 300.0,
+            max_sim_time: 60.0 * 24.0 * 3600.0,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Validate invariants; returns self for chaining.
+    pub fn validated(self) -> Result<Self> {
+        if self.k == 0 || self.k > self.n_peers {
+            return Err(Error::Config(format!(
+                "k={} must be in 1..=n_peers={}",
+                self.k, self.n_peers
+            )));
+        }
+        if self.job_runtime <= 0.0 {
+            return Err(Error::Config("job_runtime must be positive".into()));
+        }
+        if let Some(v) = self.v {
+            if v < 0.0 {
+                return Err(Error::Config("v must be >= 0".into()));
+            }
+        }
+        if self.stab_period <= 0.0 {
+            return Err(Error::Config("stab_period must be positive".into()));
+        }
+        if self.estimator_window == 0 {
+            return Err(Error::Config("estimator_window must be >= 1".into()));
+        }
+        Ok(self)
+    }
+
+    /// Parse from TOML-lite text (see module docs). Unknown keys error —
+    /// typos in experiment configs must not silently default.
+    pub fn from_toml_lite(text: &str) -> Result<Self> {
+        let kv = parse_toml_lite(text)?;
+        let mut cfg = SimConfig::default();
+        for (key, val) in &kv {
+            match key.as_str() {
+                "sim.n_peers" => cfg.n_peers = parse_num(key, val)? as usize,
+                "sim.seed" => cfg.seed = parse_num(key, val)? as u64,
+                "sim.stab_period" => cfg.stab_period = parse_num(key, val)?,
+                "sim.max_sim_time" => cfg.max_sim_time = parse_num(key, val)?,
+                "churn.model" => {
+                    cfg.churn = match val.as_str() {
+                        "exponential" => {
+                            ChurnSpec::Exponential { mtbf: get_num(&kv, "churn.mtbf", 7200.0) }
+                        }
+                        "time_varying" => ChurnSpec::TimeVarying {
+                            mtbf0: get_num(&kv, "churn.mtbf", 7200.0),
+                            double_time: get_num(&kv, "churn.double_time", 72_000.0),
+                        },
+                        "heavy_tail" => ChurnSpec::HeavyTail {
+                            mean: get_num(&kv, "churn.mean", 7200.0),
+                            shape: get_num(&kv, "churn.shape", 0.7),
+                        },
+                        "trace" => ChurnSpec::Trace {
+                            kind: kv
+                                .get("churn.kind")
+                                .cloned()
+                                .unwrap_or_else(|| "gnutella".into()),
+                        },
+                        other => {
+                            return Err(Error::Config(format!("unknown churn.model '{other}'")))
+                        }
+                    }
+                }
+                "churn.mtbf" | "churn.double_time" | "churn.mean" | "churn.shape"
+                | "churn.kind" => {} // consumed above
+                "job.k" => cfg.k = parse_num(key, val)? as usize,
+                "job.runtime" => cfg.job_runtime = parse_num(key, val)?,
+                "job.v" => cfg.v = Some(parse_num(key, val)?),
+                "job.td" => cfg.td = Some(parse_num(key, val)?),
+                "policy.kind" => {
+                    cfg.policy = match val.as_str() {
+                        "fixed" => PolicySpec::Fixed {
+                            interval: get_num(&kv, "policy.interval", 300.0),
+                        },
+                        "adaptive" => PolicySpec::Adaptive,
+                        "oracle" => PolicySpec::Oracle,
+                        "never" => PolicySpec::Never,
+                        other => {
+                            return Err(Error::Config(format!("unknown policy.kind '{other}'")))
+                        }
+                    }
+                }
+                "policy.interval" => {} // consumed above
+                "estimator.window" => cfg.estimator_window = parse_num(key, val)? as usize,
+                "estimator.replan_period" => cfg.replan_period = parse_num(key, val)?,
+                other => return Err(Error::Config(format!("unknown config key '{other}'"))),
+            }
+        }
+        cfg.validated()
+    }
+}
+
+/// Parse `[section]` + `key = value` lines into `section.key -> value`.
+fn parse_toml_lite(text: &str) -> Result<BTreeMap<String, String>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') && line.ends_with(']') {
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            return Err(Error::Config(format!("line {}: expected key = value", i + 1)));
+        };
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        out.insert(key, v.trim().trim_matches('"').to_string());
+    }
+    Ok(out)
+}
+
+fn parse_num(key: &str, val: &str) -> Result<f64> {
+    val.parse::<f64>()
+        .map_err(|_| Error::Config(format!("key '{key}': '{val}' is not a number")))
+}
+
+fn get_num(kv: &BTreeMap<String, String>, key: &str, default: f64) -> f64 {
+    kv.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        SimConfig::default().validated().unwrap();
+    }
+
+    #[test]
+    fn parses_full_config() {
+        let text = r#"
+            # Fig 4-left style setup
+            [sim]
+            n_peers = 512
+            seed = 7
+            [churn]
+            model = "time_varying"
+            mtbf = 7200
+            double_time = 72000
+            [job]
+            k = 16
+            runtime = 14400
+            v = 20
+            td = 50
+            [policy]
+            kind = "fixed"
+            interval = 300
+        "#;
+        let cfg = SimConfig::from_toml_lite(text).unwrap();
+        assert_eq!(cfg.n_peers, 512);
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(
+            cfg.churn,
+            ChurnSpec::TimeVarying { mtbf0: 7200.0, double_time: 72_000.0 }
+        );
+        assert_eq!(cfg.policy, PolicySpec::Fixed { interval: 300.0 });
+        assert_eq!(cfg.v, Some(20.0));
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let e = SimConfig::from_toml_lite("[job]\nkk = 3\n").unwrap_err();
+        assert!(e.to_string().contains("unknown config key"));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(SimConfig::from_toml_lite("[job]\nk = banana\n").is_err());
+        assert!(SimConfig::from_toml_lite("[policy]\nkind = \"nope\"\n").is_err());
+        assert!(SimConfig::from_toml_lite("[job]\nk = 0\n").is_err());
+    }
+
+    #[test]
+    fn k_bounds_checked() {
+        let mut cfg = SimConfig { k: 100, n_peers: 10, ..SimConfig::default() };
+        assert!(cfg.clone().validated().is_err());
+        cfg.k = 10;
+        assert!(cfg.validated().is_ok());
+    }
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(PolicySpec::Fixed { interval: 60.0 }.name(), "fixed(60s)");
+        assert_eq!(PolicySpec::Adaptive.name(), "adaptive");
+    }
+}

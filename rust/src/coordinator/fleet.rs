@@ -1,0 +1,394 @@
+//! Fleet coordination: many concurrent jobs over one volunteer network,
+//! with Section 3.2.3 admission control and *shared* planner batching —
+//! all concurrently-running jobs' replan requests at a tick execute as one
+//! padded PJRT batch (the router/batcher deployment shape).
+//!
+//! This is the "next generation of Peer-to-Peer based parallel processing
+//! systems" sketch from the paper's conclusion: the adaptive scheme as a
+//! service shared across the whole work pool, not a per-job gadget.
+
+use crate::churn::model::ChurnModel;
+use crate::coordinator::job::JobOutcome;
+use crate::estimator::mle::MleEstimator;
+use crate::estimator::RateEstimator;
+use crate::model::optimal::optimal_lambda_checked;
+use crate::planner::service::PlannerService;
+use crate::planner::{PlanRequest, Planner};
+use crate::util::rng::Pcg64;
+use crate::util::stats::Running;
+
+/// Fleet configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Mean inter-arrival of job submissions (seconds, Poisson).
+    pub arrival_mean: f64,
+    /// Jobs to submit in total.
+    pub n_jobs: usize,
+    /// Peers requested per job.
+    pub k: usize,
+    /// Fault-free runtime per job.
+    pub runtime: f64,
+    pub v: f64,
+    pub td: f64,
+    /// Replan tick shared by all running jobs (seconds).
+    pub replan_period: f64,
+    /// Estimator window (shared, gossip-style global view).
+    pub estimator_window: usize,
+    /// Admission: reject jobs whose predicted U(λ*) is below this.
+    pub min_utilization: f64,
+    pub max_sim_time: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            arrival_mean: 600.0,
+            n_jobs: 32,
+            k: 16,
+            runtime: 2.0 * 3600.0,
+            v: 20.0,
+            td: 50.0,
+            replan_period: 300.0,
+            estimator_window: 64,
+            min_utilization: 0.05,
+            max_sim_time: 30.0 * 24.0 * 3600.0,
+        }
+    }
+}
+
+/// Aggregate outcome of a fleet run.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    pub completed: usize,
+    pub rejected: usize,
+    pub aborted: usize,
+    /// Mean job wall time (completed jobs).
+    pub mean_wall: f64,
+    /// Mean end-to-end latency including queueing from submission.
+    pub mean_latency: f64,
+    /// Makespan of the whole fleet.
+    pub makespan: f64,
+    /// Planner batching occupancy (requests per flush).
+    pub mean_batch: f64,
+    pub flushes: u64,
+    /// Per-job outcomes (completed jobs only).
+    pub jobs: Vec<JobOutcome>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Computing,
+    Checkpointing,
+    Restarting,
+}
+
+struct FleetJob {
+    submitted: f64,
+    started: f64,
+    progress: f64,
+    committed: f64,
+    work_since_commit: f64,
+    phase: Phase,
+    phase_started: f64,
+    phase_end: f64,
+    next_fail: f64,
+    interval: f64,
+    outcome: JobOutcome,
+}
+
+/// Run a fleet of jobs with a shared planner service. Time advances on a
+/// fixed replan grid (`replan_period`) between which each job's private
+/// events (failures, checkpoints) are processed exactly — a hybrid of the
+/// fast path's renewal simulation and a global batching tick.
+pub fn run_fleet<P: Planner>(
+    cfg: &FleetConfig,
+    churn: &dyn ChurnModel,
+    planner: P,
+    seed: u64,
+) -> FleetOutcome {
+    let mut rng = Pcg64::new(seed, 0xF1EE7);
+    let mut svc = PlannerService::new(planner, usize::MAX.min(1 << 20));
+    let mut est = MleEstimator::new(cfg.estimator_window);
+    // Ambient observation stream (gossiped global view).
+    for _ in 0..32 {
+        est.observe(churn.session(0.0, &mut rng).max(1.0));
+    }
+
+    // Submission times.
+    let mut submissions: Vec<f64> = Vec::with_capacity(cfg.n_jobs);
+    let mut t_sub = 0.0;
+    for _ in 0..cfg.n_jobs {
+        submissions.push(t_sub);
+        t_sub += rng.exp(1.0 / cfg.arrival_mean);
+    }
+
+    let mut pending: Vec<f64> = submissions.clone();
+    pending.reverse(); // pop() takes the earliest
+    let mut running: Vec<FleetJob> = Vec::new();
+    let mut done: Vec<(f64, JobOutcome)> = Vec::new(); // (latency, outcome)
+    let mut rejected = 0usize;
+    let mut aborted = 0usize;
+
+    let mut now = 0.0f64;
+    let bootstrap_interval = 300.0f64;
+
+    while (done.len() + rejected + aborted) < cfg.n_jobs && now < cfg.max_sim_time {
+        let tick_end = now + cfg.replan_period;
+
+        // Admit jobs that arrived before this tick ends.
+        while pending.last().is_some_and(|&s| s <= tick_end) {
+            let submitted = pending.pop().unwrap();
+            let start = submitted.max(now);
+            // Section 3.2.3 admission: predicted U at the current estimate.
+            let mu = est.rate().unwrap_or(0.0);
+            let admit = if mu > 0.0 {
+                optimal_lambda_checked(cfg.k as f64 * mu, cfg.v, cfg.td)
+                    .map(|p| p.stats.u >= cfg.min_utilization)
+                    .unwrap_or(true)
+            } else {
+                true
+            };
+            if !admit {
+                rejected += 1;
+                continue;
+            }
+            let nf = start + churn.group_failure(start, cfg.k, &mut rng).max(1e-9);
+            running.push(FleetJob {
+                submitted,
+                started: start,
+                progress: 0.0,
+                committed: 0.0,
+                work_since_commit: 0.0,
+                phase: Phase::Computing,
+                phase_started: start,
+                phase_end: start + bootstrap_interval.min(cfg.runtime),
+                next_fail: nf,
+                interval: bootstrap_interval,
+                outcome: JobOutcome {
+                    wall_time: 0.0,
+                    completed: false,
+                    failures: 0,
+                    checkpoints: 0,
+                    wasted: 0.0,
+                    overhead_checkpoint: 0.0,
+                    overhead_restart: 0.0,
+                    replans: 0,
+                    mean_interval: 0.0,
+                    efficiency: 0.0,
+                },
+            });
+        }
+
+        // Batched replanning: one request per running job, one flush.
+        if !running.is_empty() {
+            let window: Vec<f64> = est.window().collect();
+            let mut tickets = Vec::with_capacity(running.len());
+            for _ in &running {
+                let ticket = svc
+                    .submit(PlanRequest {
+                        lifetimes: window.clone(),
+                        v: cfg.v,
+                        td: cfg.td,
+                        k: cfg.k as f64,
+                    })
+                    .expect("submit");
+                tickets.push(ticket);
+            }
+            svc.flush().expect("flush");
+            for (job, ticket) in running.iter_mut().zip(tickets) {
+                if let Some(resp) = svc.take(ticket) {
+                    if let Some(iv) = resp.interval() {
+                        job.interval = iv.clamp(5.0, 4.0 * 3600.0);
+                        job.outcome.replans += 1;
+                        if job.phase == Phase::Computing {
+                            let to_done = cfg.runtime - job.progress;
+                            let to_cp = (job.interval - job.work_since_commit).max(0.0);
+                            job.phase_end = now.max(job.phase_started) + to_done.min(to_cp);
+                        }
+                    }
+                }
+            }
+        }
+
+        // Advance each running job privately to tick_end.
+        let mut i = 0;
+        while i < running.len() {
+            let job = &mut running[i];
+            let mut t = now.max(job.started);
+            let mut finished = false;
+            while t < tick_end {
+                let tmin = job.phase_end.min(job.next_fail).min(tick_end);
+                let dt = (tmin - t).max(0.0);
+                if job.phase == Phase::Computing {
+                    job.progress += dt;
+                    job.work_since_commit += dt;
+                }
+                t = tmin;
+                if t >= tick_end {
+                    break;
+                }
+                if t == job.next_fail {
+                    job.outcome.failures += 1;
+                    est.observe(churn.session(t, &mut rng).max(1.0));
+                    match job.phase {
+                        Phase::Checkpointing => {
+                            job.outcome.overhead_checkpoint += t - job.phase_started
+                        }
+                        Phase::Restarting => {
+                            job.outcome.overhead_restart += t - job.phase_started
+                        }
+                        Phase::Computing => {}
+                    }
+                    job.outcome.wasted += job.progress - job.committed;
+                    job.progress = job.committed;
+                    job.work_since_commit = 0.0;
+                    job.phase = Phase::Restarting;
+                    job.phase_started = t;
+                    job.phase_end = t + cfg.td;
+                    job.next_fail = t + churn.group_failure(t, cfg.k, &mut rng).max(1e-9);
+                    continue;
+                }
+                // Phase boundary.
+                match job.phase {
+                    Phase::Computing => {
+                        if job.progress + 1e-6 >= cfg.runtime {
+                            job.outcome.completed = true;
+                            job.outcome.wall_time = t - job.started;
+                            finished = true;
+                            break;
+                        }
+                        job.phase = Phase::Checkpointing;
+                        job.phase_started = t;
+                        job.phase_end = t + cfg.v;
+                    }
+                    Phase::Checkpointing => {
+                        job.committed = job.progress;
+                        job.work_since_commit = 0.0;
+                        job.outcome.checkpoints += 1;
+                        job.outcome.overhead_checkpoint += t - job.phase_started;
+                        job.phase = Phase::Computing;
+                        job.phase_started = t;
+                        let to_done = cfg.runtime - job.progress;
+                        let to_cp = job.interval;
+                        job.phase_end = t + to_done.min(to_cp);
+                    }
+                    Phase::Restarting => {
+                        job.outcome.overhead_restart += t - job.phase_started;
+                        job.phase = Phase::Computing;
+                        job.phase_started = t;
+                        let to_done = cfg.runtime - job.progress;
+                        let to_cp = (job.interval - job.work_since_commit).max(0.0);
+                        job.phase_end = t + to_done.min(to_cp);
+                    }
+                }
+            }
+            if finished {
+                let job = running.swap_remove(i);
+                let latency = job.started - job.submitted + job.outcome.wall_time;
+                done.push((latency, job.outcome));
+            } else {
+                i += 1;
+            }
+        }
+
+        // Ambient observations during the tick.
+        let obs_rate = 8.0 * cfg.k as f64 * churn.rate(now).max(1e-12);
+        let expected = obs_rate * cfg.replan_period;
+        let n_obs = expected.floor() as usize
+            + usize::from(rng.next_f64() < expected.fract());
+        for _ in 0..n_obs {
+            est.observe(churn.session(now, &mut rng).max(1.0));
+        }
+
+        now = tick_end;
+    }
+
+    aborted += running.len();
+    let mut wall = Running::new();
+    let mut lat = Running::new();
+    for (l, o) in &done {
+        wall.push(o.wall_time);
+        lat.push(*l);
+    }
+    let stats = svc.stats();
+    FleetOutcome {
+        completed: done.len(),
+        rejected,
+        aborted,
+        mean_wall: wall.mean(),
+        mean_latency: lat.mean(),
+        makespan: now,
+        mean_batch: stats.mean_batch,
+        flushes: stats.flushes,
+        jobs: done.into_iter().map(|(_, o)| o).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::churn::model::Exponential;
+    use crate::planner::NativePlanner;
+
+    #[test]
+    fn fleet_completes_all_jobs() {
+        let churn = Exponential::new(7200.0);
+        let cfg = FleetConfig { n_jobs: 12, ..FleetConfig::default() };
+        let out = run_fleet(&cfg, &churn, NativePlanner::new(), 1);
+        assert_eq!(out.completed, 12);
+        assert_eq!(out.rejected, 0);
+        assert!(out.mean_wall > cfg.runtime, "churn must inflate wall time");
+        assert!(out.mean_latency >= out.mean_wall);
+        assert!(out.flushes > 0);
+    }
+
+    #[test]
+    fn planner_batches_across_concurrent_jobs() {
+        // Fast arrivals => many jobs in flight => batch occupancy > 3.
+        let churn = Exponential::new(7200.0);
+        let cfg = FleetConfig {
+            n_jobs: 24,
+            arrival_mean: 60.0,
+            runtime: 3600.0,
+            ..FleetConfig::default()
+        };
+        let out = run_fleet(&cfg, &churn, NativePlanner::new(), 2);
+        assert_eq!(out.completed, 24);
+        assert!(
+            out.mean_batch > 3.0,
+            "expected multi-job batches, got {:.1}",
+            out.mean_batch
+        );
+    }
+
+    #[test]
+    fn admission_control_rejects_hopeless_conditions() {
+        // Brutal churn + big k: U(lambda*) = 0 => jobs are rejected, not
+        // left to burn the network (Section 3.2.3 as an admission policy).
+        let churn = Exponential::new(300.0);
+        let cfg = FleetConfig {
+            n_jobs: 10,
+            k: 32,
+            v: 60.0,
+            td: 120.0,
+            min_utilization: 0.05,
+            max_sim_time: 5.0 * 24.0 * 3600.0,
+            ..FleetConfig::default()
+        };
+        let out = run_fleet(&cfg, &churn, NativePlanner::new(), 3);
+        assert!(
+            out.rejected >= 8,
+            "overloaded fleet should reject most jobs: {out:?}"
+        );
+    }
+
+    #[test]
+    fn fleet_deterministic() {
+        let churn = Exponential::new(7200.0);
+        let cfg = FleetConfig { n_jobs: 6, ..FleetConfig::default() };
+        let a = run_fleet(&cfg, &churn, NativePlanner::new(), 9);
+        let b = run_fleet(&cfg, &churn, NativePlanner::new(), 9);
+        assert_eq!(a.completed, b.completed);
+        assert_eq!(a.mean_wall, b.mean_wall);
+    }
+}

@@ -1,0 +1,120 @@
+//! Checkpoint-initiator (leader) election among job members.
+//!
+//! The scheme is fully decentralized (Section 3.1: "any centralized
+//! monitoring component should be strictly avoided"): the member with the
+//! lowest ring id among the *live* members initiates checkpoints; when it
+//! fails, leadership passes deterministically to the next-lowest — every
+//! member computes the same answer locally from its member list, no
+//! election messages beyond the failure notifications they already get.
+
+use crate::net::overlay::{Overlay, PeerId};
+
+/// Deterministic leader election over a member set.
+#[derive(Debug, Clone)]
+pub struct LeaderElection {
+    members: Vec<PeerId>,
+    /// Leadership changes seen (diagnostics).
+    pub handovers: u64,
+    last_leader: Option<PeerId>,
+}
+
+impl LeaderElection {
+    pub fn new(members: Vec<PeerId>) -> Self {
+        assert!(!members.is_empty());
+        LeaderElection { members, handovers: 0, last_leader: None }
+    }
+
+    /// Replace a failed member with its substitute.
+    pub fn replace(&mut self, old: PeerId, new: PeerId) {
+        if let Some(slot) = self.members.iter_mut().find(|m| **m == old) {
+            *slot = new;
+        }
+    }
+
+    pub fn members(&self) -> &[PeerId] {
+        &self.members
+    }
+
+    /// The current leader: lowest ring id among live members.
+    pub fn leader(&mut self, overlay: &Overlay) -> Option<PeerId> {
+        let l = self
+            .members
+            .iter()
+            .copied()
+            .filter(|&m| overlay.is_online(m))
+            .min_by_key(|&m| overlay.peer(m).ring_id);
+        if l != self.last_leader {
+            if self.last_leader.is_some() && l.is_some() {
+                self.handovers += 1;
+            }
+            self.last_leader = l;
+        }
+        l
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn stable_leader_while_alive() {
+        let mut rng = Pcg64::new(50, 0);
+        let o = Overlay::new(20, &mut rng);
+        let mut le = LeaderElection::new(vec![3, 7, 11, 15]);
+        let l1 = le.leader(&o).unwrap();
+        let l2 = le.leader(&o).unwrap();
+        assert_eq!(l1, l2);
+        assert_eq!(le.handovers, 0);
+    }
+
+    #[test]
+    fn handover_on_leader_failure() {
+        let mut rng = Pcg64::new(51, 0);
+        let mut o = Overlay::new(20, &mut rng);
+        let mut le = LeaderElection::new(vec![3, 7, 11, 15]);
+        let l1 = le.leader(&o).unwrap();
+        o.depart(l1, 100.0);
+        let l2 = le.leader(&o).unwrap();
+        assert_ne!(l1, l2);
+        assert!(le.members().contains(&l2));
+        assert_eq!(le.handovers, 1);
+    }
+
+    #[test]
+    fn all_members_agree() {
+        // Determinism: every member computing leader() from the same
+        // overlay state gets the same answer.
+        let mut rng = Pcg64::new(52, 0);
+        let o = Overlay::new(30, &mut rng);
+        let members = vec![1, 5, 9, 13, 17];
+        let answers: Vec<_> = (0..5)
+            .map(|_| LeaderElection::new(members.clone()).leader(&o).unwrap())
+            .collect();
+        assert!(answers.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn replace_keeps_leadership_valid() {
+        let mut rng = Pcg64::new(53, 0);
+        let mut o = Overlay::new(20, &mut rng);
+        let mut le = LeaderElection::new(vec![2, 4]);
+        let l = le.leader(&o).unwrap();
+        o.depart(l, 1.0);
+        le.replace(l, 9);
+        let l2 = le.leader(&o).unwrap();
+        assert!(l2 == 9 || le.members().contains(&l2));
+        assert!(o.is_online(l2));
+    }
+
+    #[test]
+    fn none_when_all_dead() {
+        let mut rng = Pcg64::new(54, 0);
+        let mut o = Overlay::new(10, &mut rng);
+        let mut le = LeaderElection::new(vec![0, 1]);
+        o.depart(0, 1.0);
+        o.depart(1, 1.0);
+        assert!(le.leader(&o).is_none());
+    }
+}

@@ -1,0 +1,32 @@
+//! The L3 coordinator: job lifecycle under churn.
+//!
+//! Two execution paths, cross-validated against each other
+//! (`rust/tests/cross_validation.rs`):
+//!
+//! * [`job`]   — the *fast path*: a renewal-process simulation of one job
+//!   (compute → checkpoint → fail → rollback → restart) driven directly by
+//!   sampled failure times. This is what the paper's own simulator does
+//!   (Section 4.1) and what the figure benches run thousands of times.
+//! * [`world`] — the *full stack*: the same lifecycle over the real
+//!   substrates — DHT overlay, stabilization-based failure detection,
+//!   Chandy–Lamport markers with routed latency, replicated image store,
+//!   per-peer bandwidth. Slower, used by the end-to-end example and
+//!   integration tests.
+//!
+//! Plus [`leader`] (initiator election among job members) and
+//! [`workpool`] (the BOINC-style work-pool server baseline of Fig. 1(a),
+//! with deadline reassignment and result scrutiny).
+
+pub mod fleet;
+pub mod job;
+pub mod leader;
+pub mod replication;
+pub mod workpool;
+pub mod world;
+
+pub use fleet::{run_fleet, FleetConfig, FleetOutcome};
+pub use job::{JobOutcome, JobParams, JobSimulator};
+pub use replication::{ReplicatedJobSimulator, ReplicatedParams};
+pub use leader::LeaderElection;
+pub use workpool::{WorkPoolServer, WorkUnit};
+pub use world::World;

@@ -1,0 +1,351 @@
+//! Process replication + checkpointing — the paper's §4.3 future-work
+//! upgrade: *"jobs will only need to rollback to the previous known status
+//! only if all replicas of a process have failed, which can be less
+//! frequently and will increase the MTBF of the job."*
+//!
+//! Model: each of the `k` ranks runs on `r` peers simultaneously. A peer
+//! failure degrades its rank; the coordinator immediately recruits a
+//! replacement which becomes a live replica again after `repair` seconds
+//! (state transfer from the surviving replica). Only if the *last* live
+//! replica of a rank dies before a replacement comes up does the job roll
+//! back. The effective job failure rate drops from `k·μ` to roughly
+//! `k·r·μ · (μ·repair)^{r−1} · r^{r-2}` for small `μ·repair` — hours of
+//! group MTBF instead of minutes.
+//!
+//! The replicated job also pays for replication: `r×` the peers and an
+//! `alpha`-factor slowdown for replica synchronization.
+
+use crate::churn::model::ChurnModel;
+use crate::coordinator::job::JobOutcome;
+use crate::policy::{CheckpointPolicy, PolicyCtx};
+use crate::util::rng::Pcg64;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Parameters for a replicated job.
+#[derive(Debug, Clone)]
+pub struct ReplicatedParams {
+    pub k: usize,
+    /// Replicas per rank (r = 1 degenerates to the plain job).
+    pub replicas: usize,
+    pub runtime: f64,
+    pub v: f64,
+    pub td: f64,
+    /// Seconds to bring a replacement replica online (state transfer).
+    pub repair: f64,
+    /// Throughput factor for replica synchronization (1.0 = free).
+    pub sync_slowdown: f64,
+    pub replan_period: f64,
+    pub max_sim_time: f64,
+}
+
+impl Default for ReplicatedParams {
+    fn default() -> Self {
+        ReplicatedParams {
+            k: 16,
+            replicas: 2,
+            runtime: 4.0 * 3600.0,
+            v: 20.0,
+            td: 50.0,
+            repair: 120.0,
+            sync_slowdown: 1.05,
+            replan_period: 300.0,
+            max_sim_time: 120.0 * 24.0 * 3600.0,
+        }
+    }
+}
+
+/// Event-driven simulation of the replicated job.
+///
+/// Peer failures arrive per live replica; rank-loss (all replicas of one
+/// rank dead simultaneously) triggers the usual rollback+restart. The
+/// checkpoint policy sees the *effective* (rank-loss) failure process via
+/// its observed window, so the adaptive interval stretches automatically —
+/// the §4.3 payoff.
+pub struct ReplicatedJobSimulator<'a> {
+    pub params: ReplicatedParams,
+    churn: &'a dyn ChurnModel,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    Computing,
+    Checkpointing,
+    Restarting,
+}
+
+impl<'a> ReplicatedJobSimulator<'a> {
+    pub fn new(params: ReplicatedParams, churn: &'a dyn ChurnModel) -> Self {
+        assert!(params.k > 0 && params.replicas > 0);
+        ReplicatedJobSimulator { params, churn }
+    }
+
+    /// Run under `policy`; rank-loss lifetimes feed the policy's window.
+    pub fn run(&self, policy: &mut dyn CheckpointPolicy, seed: u64, stream: u64) -> JobOutcome {
+        let p = &self.params;
+        let mut rng = Pcg64::new(seed, stream.wrapping_add(0x5EED));
+        let speed = 1.0 / p.sync_slowdown; // progress per wall second
+
+        // Per-replica failure clocks: min-heap of (time, rank).
+        let mut clocks: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        let us = |t: f64| (t * 1e6) as u64;
+        let mut live = vec![p.replicas; p.k];
+        let mut repairs: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
+        for rank in 0..p.k {
+            for _ in 0..p.replicas {
+                let t = self.churn.session(0.0, &mut rng);
+                clocks.push(Reverse((us(t), rank)));
+            }
+        }
+
+        // Effective rank-loss observations for the adaptive window.
+        let mut loss_window: Vec<f64> = Vec::new();
+        let mut last_loss = 0.0f64;
+
+        let mut t = 0.0f64;
+        let mut progress = 0.0;
+        let mut committed = 0.0;
+        let mut work_since_commit = 0.0;
+        let mut phase = Phase::Computing;
+        let mut phase_started = t;
+
+        let mut out = JobOutcome {
+            wall_time: 0.0,
+            completed: false,
+            failures: 0,
+            checkpoints: 0,
+            wasted: 0.0,
+            overhead_checkpoint: 0.0,
+            overhead_restart: 0.0,
+            replans: 0,
+            mean_interval: 0.0,
+            efficiency: 0.0,
+        };
+
+        let decide = |policy: &mut dyn CheckpointPolicy,
+                      now: f64,
+                      window: &[f64],
+                      churn: &dyn ChurnModel,
+                      p: &ReplicatedParams| {
+            let ctx = PolicyCtx {
+                now,
+                // The policy plans against the *effective* single-failure
+                // process: k_eff = 1 (the window already holds group
+                // rank-loss lifetimes, not per-peer ones).
+                k: 1.0,
+                v: p.v,
+                td: p.td,
+                lifetimes: window,
+                true_rate: Some(churn.rate(now) * p.k as f64 * p.replicas as f64),
+            };
+            policy.decide(&ctx).ok().and_then(|d| d.interval)
+        };
+        let mut interval = decide(policy, t, &loss_window, self.churn, p).or(Some(300.0));
+        let mut next_replan = if policy.wants_replanning() { p.replan_period } else { f64::INFINITY };
+        let mut interval_weighted = 0.0;
+
+        loop {
+            if t >= p.max_sim_time {
+                break;
+            }
+            // Next relevant timestamps.
+            let next_peer_fail = clocks.peek().map(|Reverse((u, _))| *u as f64 / 1e6).unwrap_or(f64::INFINITY);
+            let next_repair = repairs.peek().map(|Reverse((u, _))| *u as f64 / 1e6).unwrap_or(f64::INFINITY);
+            let phase_end = match phase {
+                Phase::Computing => {
+                    let to_done = (p.runtime - progress).max(0.0) / speed;
+                    let to_cp = interval
+                        .map(|iv| ((iv - work_since_commit).max(0.0)) / speed)
+                        .unwrap_or(f64::INFINITY);
+                    t + to_done.min(to_cp)
+                }
+                Phase::Checkpointing => phase_started + p.v,
+                Phase::Restarting => phase_started + p.td,
+            };
+            let tmin = phase_end.min(next_peer_fail).min(next_repair).min(next_replan);
+            let dt = (tmin - t).max(0.0);
+            if phase == Phase::Computing {
+                progress += dt * speed;
+                work_since_commit += dt * speed;
+            }
+            if let Some(iv) = interval {
+                if iv.is_finite() {
+                    interval_weighted += iv * dt;
+                }
+            }
+            t = tmin;
+
+            if t == next_repair {
+                let Reverse((_, rank)) = repairs.pop().unwrap();
+                live[rank] += 1;
+                // The refreshed replica gets its own failure clock.
+                let s = self.churn.session(t, &mut rng);
+                clocks.push(Reverse((us(t + s), rank)));
+                continue;
+            }
+
+            if t == next_peer_fail {
+                let Reverse((_, rank)) = clocks.pop().unwrap();
+                live[rank] -= 1;
+                if live[rank] == 0 {
+                    // Rank loss: rollback.
+                    out.failures += 1;
+                    loss_window.push((t - last_loss).max(1.0));
+                    if loss_window.len() > 64 {
+                        loss_window.remove(0);
+                    }
+                    last_loss = t;
+                    match phase {
+                        Phase::Checkpointing => out.overhead_checkpoint += t - phase_started,
+                        Phase::Restarting => out.overhead_restart += t - phase_started,
+                        Phase::Computing => {}
+                    }
+                    out.wasted += progress - committed;
+                    progress = committed;
+                    work_since_commit = 0.0;
+                    phase = Phase::Restarting;
+                    phase_started = t;
+                    // Restart also re-provisions the lost rank fully.
+                    live[rank] = p.replicas;
+                    for _ in 0..p.replicas {
+                        let s = self.churn.session(t, &mut rng);
+                        clocks.push(Reverse((us(t + s), rank)));
+                    }
+                } else {
+                    // Degraded but alive: recruit a replacement.
+                    repairs.push(Reverse((us(t + p.repair), rank)));
+                }
+                continue;
+            }
+
+            if t == next_replan {
+                if let Some(iv) = decide(policy, t, &loss_window, self.churn, p) {
+                    interval = Some(iv);
+                    out.replans += 1;
+                }
+                next_replan = t + p.replan_period;
+                continue;
+            }
+
+            // Phase boundary.
+            match phase {
+                Phase::Computing => {
+                    if progress + 1e-6 >= p.runtime {
+                        out.completed = true;
+                        break;
+                    }
+                    phase = Phase::Checkpointing;
+                    phase_started = t;
+                }
+                Phase::Checkpointing => {
+                    committed = progress;
+                    work_since_commit = 0.0;
+                    out.checkpoints += 1;
+                    out.overhead_checkpoint += t - phase_started;
+                    phase = Phase::Computing;
+                    phase_started = t;
+                }
+                Phase::Restarting => {
+                    out.overhead_restart += t - phase_started;
+                    phase = Phase::Computing;
+                    phase_started = t;
+                }
+            }
+        }
+
+        out.wall_time = t;
+        out.mean_interval = if t > 0.0 { interval_weighted / t } else { 0.0 };
+        out.efficiency = if t > 0.0 { progress.min(p.runtime) / t } else { 0.0 };
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::churn::model::Exponential;
+    use crate::planner::NativePlanner;
+    use crate::policy::AdaptivePolicy;
+
+    fn run_r(replicas: usize, seed: u64) -> JobOutcome {
+        let churn = Exponential::new(7200.0);
+        let params = ReplicatedParams { replicas, ..ReplicatedParams::default() };
+        let sim = ReplicatedJobSimulator::new(params, &churn);
+        let mut pol = AdaptivePolicy::new(Box::new(NativePlanner::new()));
+        sim.run(&mut pol, seed, 0)
+    }
+
+    #[test]
+    fn replication_slashes_rollbacks() {
+        let mut f1 = 0u64;
+        let mut f2 = 0u64;
+        for s in 0..5 {
+            f1 += run_r(1, 100 + s).failures;
+            f2 += run_r(2, 100 + s).failures;
+        }
+        assert!(
+            f2 * 10 < f1,
+            "r=2 rollbacks {f2} should be <10% of r=1 rollbacks {f1}"
+        );
+    }
+
+    #[test]
+    fn replication_reduces_wall_time_under_heavy_churn() {
+        // Where rollbacks dominate (fast churn), paying the sync slowdown
+        // is worth it — the §4.3 claim.
+        let churn = Exponential::new(1800.0); // 30-min sessions
+        let mk = |replicas| ReplicatedParams {
+            replicas,
+            runtime: 2.0 * 3600.0,
+            ..ReplicatedParams::default()
+        };
+        let mut w1 = 0.0;
+        let mut w2 = 0.0;
+        for s in 0..5 {
+            let sim = ReplicatedJobSimulator::new(mk(1), &churn);
+            let mut pol = AdaptivePolicy::new(Box::new(NativePlanner::new()));
+            w1 += sim.run(&mut pol, 200 + s, 0).wall_time;
+            let sim = ReplicatedJobSimulator::new(mk(2), &churn);
+            let mut pol = AdaptivePolicy::new(Box::new(NativePlanner::new()));
+            w2 += sim.run(&mut pol, 200 + s, 0).wall_time;
+        }
+        assert!(
+            w2 < w1 * 0.8,
+            "replicated {w2} should beat unreplicated {w1} under heavy churn"
+        );
+    }
+
+    #[test]
+    fn adaptive_interval_stretches_with_replication() {
+        // Higher effective MTBF ⇒ the planner picks longer intervals.
+        let o1 = run_r(1, 7);
+        let o3 = run_r(3, 7);
+        assert!(o1.completed && o3.completed);
+        assert!(
+            o3.mean_interval > 1.5 * o1.mean_interval,
+            "r=3 interval {} vs r=1 interval {}",
+            o3.mean_interval,
+            o1.mean_interval
+        );
+        assert!(o3.checkpoints < o1.checkpoints);
+    }
+
+    #[test]
+    fn r1_behaves_like_plain_job_statistically() {
+        // r = 1: rollback on every peer failure, group rate ~ k mu.
+        let o = run_r(1, 3);
+        assert!(o.completed);
+        let expected_failures = o.wall_time / (7200.0 / 16.0);
+        assert!(
+            (o.failures as f64) > expected_failures * 0.6
+                && (o.failures as f64) < expected_failures * 1.4,
+            "failures {} vs expected ~{expected_failures}",
+            o.failures
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(run_r(2, 42), run_r(2, 42));
+    }
+}

@@ -1,0 +1,333 @@
+//! The BOINC-style work-pool server (Fig. 1(a)) — the baseline
+//! architecture the paper extends.
+//!
+//! Workers pull independent work units and push results; failures are
+//! handled by the classic *deadline* scheme (Section 1.2.1): a unit not
+//! reported by its deadline is reassigned. Malicious/faulty volunteers are
+//! handled by replication + quorum ("scrutiny", Section 1.1 point (ii)).
+//! The work-flow experiments compare this server-mediated path against the
+//! P2P-mediated path for multi-step flows.
+
+use crate::util::rng::Pcg64;
+use std::collections::HashMap;
+
+/// One independent unit of work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkUnit {
+    pub id: u64,
+    /// Compute seconds needed.
+    pub cost: f64,
+    /// Result deadline (seconds after assignment).
+    pub deadline: f64,
+    /// Replication factor for scrutiny (1 = trust first result).
+    pub replicas: u32,
+}
+
+/// Assignment state per (unit, replica).
+#[derive(Debug, Clone)]
+struct Assignment {
+    unit: u64,
+    worker: u64,
+    /// When the unit was handed out (kept for reporting/latency metrics).
+    #[allow(dead_code)]
+    assigned_at: f64,
+    deadline_at: f64,
+}
+
+/// Completed result for scrutiny.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UnitResult {
+    pub unit: u64,
+    pub worker: u64,
+    /// Result payload hash (faulty workers return wrong hashes).
+    pub value: u64,
+}
+
+/// Server statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PoolStats {
+    pub assigned: u64,
+    pub completed: u64,
+    pub reassigned_deadline: u64,
+    pub validated: u64,
+    pub rejected: u64,
+    /// Extra replicas issued when the initial set couldn't reach quorum
+    /// (split results) — BOINC's "adaptive replication" behaviour.
+    pub extra_replicas: u64,
+    /// Messages through the server (the Fig. 1(a) bottleneck metric).
+    pub server_messages: u64,
+}
+
+/// The work-pool server.
+#[derive(Debug)]
+pub struct WorkPoolServer {
+    pending: Vec<WorkUnit>,
+    units: HashMap<u64, WorkUnit>,
+    active: Vec<Assignment>,
+    results: HashMap<u64, Vec<UnitResult>>,
+    validated: HashMap<u64, u64>,
+    pub stats: PoolStats,
+}
+
+impl WorkPoolServer {
+    pub fn new(units: Vec<WorkUnit>) -> Self {
+        let map = units.iter().map(|u| (u.id, u.clone())).collect();
+        WorkPoolServer {
+            pending: units,
+            units: map,
+            active: Vec::new(),
+            results: HashMap::new(),
+            validated: HashMap::new(),
+            stats: PoolStats::default(),
+        }
+    }
+
+    /// Worker pulls a unit (server chooses the next one needing work).
+    pub fn pull(&mut self, worker: u64, now: f64) -> Option<WorkUnit> {
+        self.stats.server_messages += 2; // request + reply
+        // Prefer units still needing replicas (pending holds one entry per
+        // outstanding replica need).
+        let unit = self.pending.pop()?;
+        self.active.push(Assignment {
+            unit: unit.id,
+            worker,
+            assigned_at: now,
+            deadline_at: now + unit.deadline,
+        });
+        self.stats.assigned += 1;
+        Some(unit)
+    }
+
+    /// Worker pushes a result.
+    pub fn push(&mut self, result: UnitResult, now: f64) {
+        self.stats.server_messages += 1;
+        let _ = now;
+        // Drop if no matching active assignment (e.g. reassigned already).
+        let Some(pos) = self
+            .active
+            .iter()
+            .position(|a| a.unit == result.unit && a.worker == result.worker)
+        else {
+            return;
+        };
+        self.active.swap_remove(pos);
+        self.stats.completed += 1;
+        let unit = self.units[&result.unit].clone();
+        let entry = self.results.entry(result.unit).or_default();
+        entry.push(result);
+        self.try_validate(&unit);
+        // Quorum stalled with nothing outstanding (e.g. replicas=2 split
+        // 1-vs-1): issue an extra replica so the unit can still converge.
+        if !self.validated.contains_key(&unit.id) && self.outstanding_for(unit.id) == 0 {
+            self.pending.push(unit);
+            self.stats.extra_replicas += 1;
+        }
+    }
+
+    /// Pending entries + active assignments for one unit.
+    fn outstanding_for(&self, unit: u64) -> usize {
+        self.pending.iter().filter(|u| u.id == unit).count()
+            + self.active.iter().filter(|a| a.unit == unit).count()
+    }
+
+    /// Quorum scrutiny: a value wins once a majority of `replicas` agree.
+    fn try_validate(&mut self, unit: &WorkUnit) {
+        if self.validated.contains_key(&unit.id) {
+            return;
+        }
+        let results = &self.results[&unit.id];
+        let need = (unit.replicas / 2 + 1).max(1) as usize;
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for r in results {
+            *counts.entry(r.value).or_insert(0) += 1;
+        }
+        if let Some((&value, _)) = counts.iter().find(|&(_, &c)| c >= need) {
+            self.validated.insert(unit.id, value);
+            self.stats.validated += 1;
+            // Reject disagreeing results.
+            self.stats.rejected +=
+                results.iter().filter(|r| r.value != value).count() as u64;
+        }
+    }
+
+    /// Expire overdue assignments, requeueing their units.
+    pub fn enforce_deadlines(&mut self, now: f64) -> usize {
+        let mut requeued = 0;
+        let mut keep = Vec::with_capacity(self.active.len());
+        for a in self.active.drain(..) {
+            if a.deadline_at <= now && !self.validated.contains_key(&a.unit) {
+                self.pending.push(self.units[&a.unit].clone());
+                self.stats.reassigned_deadline += 1;
+                requeued += 1;
+            } else if a.deadline_at > now {
+                keep.push(a);
+            }
+            // overdue-but-validated assignments just vanish
+        }
+        self.active = keep;
+        requeued
+    }
+
+    pub fn validated_value(&self, unit: u64) -> Option<u64> {
+        self.validated.get(&unit).copied()
+    }
+
+    pub fn all_validated(&self) -> bool {
+        self.validated.len() == self.units.len()
+    }
+
+    pub fn outstanding(&self) -> usize {
+        self.pending.len() + self.active.len()
+    }
+}
+
+/// Drive a pool with `n_workers` simulated volunteers until all units
+/// validate; `faulty_fraction` of workers return corrupt values. Returns
+/// (stats, wall_time). Used by the work-pool example and tests.
+pub fn run_pool_to_completion(
+    mut server: WorkPoolServer,
+    n_workers: usize,
+    faulty_fraction: f64,
+    rng: &mut Pcg64,
+) -> (PoolStats, f64) {
+    // Worker i is faulty if i < faulty * n.
+    let n_faulty = (n_workers as f64 * faulty_fraction).round() as usize;
+    let mut now = 0.0f64;
+    let mut worker_busy_until = vec![0.0f64; n_workers];
+    let mut guard = 0;
+    while !server.all_validated() {
+        guard += 1;
+        if guard > 1_000_000 {
+            break;
+        }
+        // Earliest-free worker pulls.
+        let (w, &free_at) = worker_busy_until
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        now = now.max(free_at);
+        server.enforce_deadlines(now);
+        let Some(unit) = server.pull(w as u64, now) else {
+            // Nothing pending: jump to the next deadline to trigger
+            // reassignment (workers holding units may have died silently).
+            let next_deadline = server
+                .active
+                .iter()
+                .map(|a| a.deadline_at)
+                .fold(f64::INFINITY, f64::min);
+            if !next_deadline.is_finite() {
+                break;
+            }
+            now = next_deadline;
+            server.enforce_deadlines(now);
+            continue;
+        };
+        let compute = unit.cost * (0.8 + 0.4 * rng.next_f64());
+        let finish = now + compute;
+        // 10% of workers die mid-unit (silent — deadline catches them);
+        // faulty ones return wrong values.
+        if rng.next_f64() < 0.1 {
+            worker_busy_until[w] = finish;
+            continue; // never pushes; deadline will requeue
+        }
+        let value = if w < n_faulty { 0xBAD ^ unit.id } else { unit.id.wrapping_mul(31) };
+        worker_busy_until[w] = finish;
+        server.push(UnitResult { unit: unit.id, worker: w as u64, value }, finish);
+        now = now.max(finish);
+    }
+    (server.stats, now)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn units(n: u64, replicas: u32) -> Vec<WorkUnit> {
+        (0..n)
+            .map(|id| WorkUnit { id, cost: 100.0, deadline: 1000.0, replicas })
+            .collect()
+    }
+
+    /// Pending entries must cover the replica count for scrutiny.
+    fn with_replica_entries(mut base: Vec<WorkUnit>) -> Vec<WorkUnit> {
+        let mut out = Vec::new();
+        for u in base.drain(..) {
+            for _ in 0..u.replicas.max(1) {
+                out.push(u.clone());
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn pull_push_validate_single_replica() {
+        let mut s = WorkPoolServer::new(units(3, 1));
+        let u = s.pull(0, 0.0).unwrap();
+        s.push(UnitResult { unit: u.id, worker: 0, value: 42 }, 50.0);
+        assert_eq!(s.validated_value(u.id), Some(42));
+        assert_eq!(s.stats.validated, 1);
+    }
+
+    #[test]
+    fn deadline_reassignment() {
+        let mut s = WorkPoolServer::new(units(1, 1));
+        let u = s.pull(0, 0.0).unwrap();
+        assert_eq!(s.outstanding(), 1);
+        // Worker dies silently; deadline passes.
+        let requeued = s.enforce_deadlines(u.deadline + 1.0);
+        assert_eq!(requeued, 1);
+        assert_eq!(s.stats.reassigned_deadline, 1);
+        // Another worker picks it up and completes.
+        let u2 = s.pull(1, 1100.0).unwrap();
+        assert_eq!(u2.id, u.id);
+        s.push(UnitResult { unit: u2.id, worker: 1, value: 7 }, 1200.0);
+        assert!(s.all_validated());
+    }
+
+    #[test]
+    fn late_result_after_reassignment_ignored() {
+        let mut s = WorkPoolServer::new(units(1, 1));
+        let u = s.pull(0, 0.0).unwrap();
+        s.enforce_deadlines(u.deadline + 1.0);
+        // Original worker's tardy push: no active assignment -> dropped.
+        s.push(UnitResult { unit: u.id, worker: 0, value: 9 }, 2000.0);
+        assert!(!s.all_validated());
+    }
+
+    #[test]
+    fn quorum_scrutiny_rejects_minority() {
+        let mut s = WorkPoolServer::new(with_replica_entries(units(1, 3)));
+        let a = s.pull(10, 0.0).unwrap();
+        let b = s.pull(11, 0.0).unwrap();
+        let c = s.pull(12, 0.0).unwrap();
+        assert_eq!((a.id, b.id, c.id), (0, 0, 0));
+        s.push(UnitResult { unit: 0, worker: 10, value: 5 }, 10.0);
+        assert!(s.validated_value(0).is_none());
+        s.push(UnitResult { unit: 0, worker: 11, value: 666 }, 11.0); // faulty
+        s.push(UnitResult { unit: 0, worker: 12, value: 5 }, 12.0);
+        assert_eq!(s.validated_value(0), Some(5));
+        assert_eq!(s.stats.rejected, 1);
+    }
+
+    #[test]
+    fn end_to_end_pool_with_faults() {
+        let mut rng = Pcg64::new(60, 0);
+        let s = WorkPoolServer::new(with_replica_entries(units(20, 3)));
+        let (stats, wall) = run_pool_to_completion(s, 8, 0.2, &mut rng);
+        assert_eq!(stats.validated, 20, "all units must validate");
+        assert!(wall > 0.0);
+        assert!(stats.server_messages > 0);
+    }
+
+    #[test]
+    fn server_message_count_scales_with_pulls() {
+        let mut s = WorkPoolServer::new(units(5, 1));
+        for w in 0..5 {
+            let u = s.pull(w, 0.0).unwrap();
+            s.push(UnitResult { unit: u.id, worker: w, value: 1 }, 1.0);
+        }
+        // 2 per pull + 1 per push.
+        assert_eq!(s.stats.server_messages, 5 * 3);
+    }
+}

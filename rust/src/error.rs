@@ -1,0 +1,42 @@
+//! Crate-wide error type.
+
+/// Unified error for everything in `p2pcp`.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Configuration parse / validation problems.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Simulation-level invariant violations (bugs or impossible setups).
+    #[error("simulation: {0}")]
+    Sim(String),
+
+    /// Planner / analytic-model domain errors.
+    #[error("planner: {0}")]
+    Planner(String),
+
+    /// PJRT runtime errors (artifact loading, compile, execute).
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Work-pool / coordinator protocol errors.
+    #[error("coordinator: {0}")]
+    Coordinator(String),
+
+    /// I/O wrapper.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Errors surfaced from the `xla` crate.
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,78 @@
+//! Count-based estimator — the naive baseline: cumulative failures over
+//! cumulative observed lifetime since the start (no window). Converges to
+//! the true rate on stationary churn but never adapts afterwards — the
+//! ablation shows exactly where that breaks (Fig. 4 right conditions).
+
+use super::RateEstimator;
+
+/// Cumulative failures / cumulative lifetime.
+#[derive(Debug, Clone, Default)]
+pub struct CountEstimator {
+    n: u64,
+    total: f64,
+    min_obs: u64,
+}
+
+impl CountEstimator {
+    pub fn new() -> Self {
+        CountEstimator { n: 0, total: 0.0, min_obs: 8 }
+    }
+
+    pub fn with_min_obs(mut self, min_obs: u64) -> Self {
+        self.min_obs = min_obs.max(1);
+        self
+    }
+}
+
+impl RateEstimator for CountEstimator {
+    fn observe(&mut self, lifetime: f64) {
+        self.n += 1;
+        self.total += lifetime.max(1e-6);
+    }
+
+    fn rate(&self) -> Option<f64> {
+        if self.n < self.min_obs || self.total <= 0.0 {
+            None
+        } else {
+            Some(self.n as f64 / self.total)
+        }
+    }
+
+    fn n_observed(&self) -> u64 {
+        self.n
+    }
+
+    fn name(&self) -> &'static str {
+        "count"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn equals_mle_without_window() {
+        let mut e = CountEstimator::new();
+        for _ in 0..100 {
+            e.observe(100.0);
+        }
+        assert!((e.rate().unwrap() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sluggish_after_rate_change() {
+        let mut rng = Pcg64::new(30, 0);
+        let mut e = CountEstimator::new();
+        for _ in 0..1000 {
+            e.observe(rng.exp(1e-3));
+        }
+        for _ in 0..100 {
+            e.observe(rng.exp(4e-3));
+        }
+        // True current rate 4e-3, but the unwindowed estimate barely moved.
+        let got = e.rate().unwrap();
+        assert!(got < 2e-3, "unwindowed estimator should lag, got {got}");
+    }
+}

@@ -1,0 +1,106 @@
+//! EWMA rate estimator — comparison baseline from the companion study \[15\].
+//!
+//! Smooths the inverse of each observed lifetime. Reacts faster than the
+//! windowed MLE on rate jumps but is noisier (1/t of a single short session
+//! is a high-variance sample); the ablation bench quantifies the trade.
+
+use super::RateEstimator;
+
+/// Exponentially-weighted moving average over per-observation rates.
+#[derive(Debug, Clone)]
+pub struct EwmaEstimator {
+    alpha: f64,
+    /// EWMA of observed lifetimes (smoothing the *lifetime* and inverting
+    /// is far less noisy than smoothing the inverse).
+    mean_lifetime: Option<f64>,
+    n: u64,
+    min_obs: u64,
+}
+
+impl EwmaEstimator {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha) && alpha > 0.0);
+        EwmaEstimator { alpha, mean_lifetime: None, n: 0, min_obs: 8 }
+    }
+
+    pub fn with_min_obs(mut self, min_obs: u64) -> Self {
+        self.min_obs = min_obs.max(1);
+        self
+    }
+}
+
+impl RateEstimator for EwmaEstimator {
+    fn observe(&mut self, lifetime: f64) {
+        let lifetime = lifetime.max(1e-6);
+        self.mean_lifetime = Some(match self.mean_lifetime {
+            None => lifetime,
+            Some(m) => m + self.alpha * (lifetime - m),
+        });
+        self.n += 1;
+    }
+
+    fn rate(&self) -> Option<f64> {
+        if self.n < self.min_obs {
+            return None;
+        }
+        self.mean_lifetime.map(|m| 1.0 / m)
+    }
+
+    fn n_observed(&self) -> u64 {
+        self.n
+    }
+
+    fn name(&self) -> &'static str {
+        "ewma"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn constant_input_exact() {
+        let mut e = EwmaEstimator::new(0.1);
+        for _ in 0..50 {
+            e.observe(200.0);
+        }
+        assert!((e.rate().unwrap() - 0.005).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracks_rate_doubling_faster_than_wide_mle() {
+        use crate::estimator::mle::MleEstimator;
+        let mut rng = Pcg64::new(20, 0);
+        let mut ewma = EwmaEstimator::new(0.2);
+        let mut mle = MleEstimator::new(256);
+        // Long phase at rate r, then switch to 2r for only 32 observations.
+        let r = 1e-3;
+        for _ in 0..256 {
+            let x = rng.exp(r);
+            ewma.observe(x);
+            mle.observe(x);
+        }
+        for _ in 0..32 {
+            let x = rng.exp(2.0 * r);
+            ewma.observe(x);
+            mle.observe(x);
+        }
+        let e_err = (ewma.rate().unwrap() - 2.0 * r).abs();
+        let m_err = (mle.rate().unwrap() - 2.0 * r).abs();
+        assert!(e_err < m_err, "ewma {e_err} should beat wide-window mle {m_err}");
+    }
+
+    #[test]
+    fn unbiased_enough_on_stationary_data() {
+        let mut rng = Pcg64::new(21, 0);
+        let mut e = EwmaEstimator::new(0.05);
+        let r = 1.0 / 7200.0;
+        for _ in 0..2000 {
+            e.observe(rng.exp(r));
+        }
+        let got = e.rate().unwrap();
+        assert!((got - r).abs() < r * 0.3, "got {got} want {r}");
+    }
+}

@@ -1,0 +1,160 @@
+//! Section 3.1.4 — global vs local estimation.
+//!
+//! Every peer periodically piggybacks its most recent local estimates of
+//! (μ, V, T_d) onto the computation messages it already sends; receivers
+//! fold the values into a decayed average. No extra messages — only a few
+//! bytes on existing ones — and the coordinated checkpoint rate stops
+//! being hostage to the single most pessimistic local μ estimate.
+
+use crate::net::overlay::PeerId;
+
+/// One peer's piggybacked estimate triple.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Piggyback {
+    pub from: PeerId,
+    pub mu: f64,
+    pub v: f64,
+    pub td: f64,
+}
+
+/// Per-peer aggregation state: keeps the freshest sample from each source
+/// (bounded) and serves the global average.
+#[derive(Debug, Clone)]
+pub struct GossipAggregator {
+    /// (source, sample, received_at). Bounded ring by `capacity`.
+    samples: Vec<(PeerId, Piggyback, f64)>,
+    capacity: usize,
+    /// Samples older than this (seconds) are ignored in the average.
+    pub freshness: f64,
+}
+
+impl GossipAggregator {
+    pub fn new(capacity: usize, freshness: f64) -> Self {
+        assert!(capacity > 0 && freshness > 0.0);
+        GossipAggregator { samples: Vec::with_capacity(capacity), capacity, freshness }
+    }
+
+    /// Fold in a piggybacked sample received at time `now`.
+    pub fn receive(&mut self, pb: Piggyback, now: f64) {
+        if let Some(slot) = self.samples.iter_mut().find(|(src, _, _)| *src == pb.from) {
+            *slot = (pb.from, pb, now);
+            return;
+        }
+        if self.samples.len() == self.capacity {
+            // Evict the stalest entry.
+            let (idx, _) = self
+                .samples
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1 .2.partial_cmp(&b.1 .2).unwrap())
+                .unwrap();
+            self.samples.swap_remove(idx);
+        }
+        self.samples.push((pb.from, pb, now));
+    }
+
+    /// Global averages over fresh samples, *including* the local estimate
+    /// passed in (the local peer always counts). Returns (mu, v, td).
+    pub fn global(&self, local: Piggyback, now: f64) -> (f64, f64, f64) {
+        let mut n = 1.0;
+        let (mut mu, mut v, mut td) = (local.mu, local.v, local.td);
+        for &(src, pb, at) in &self.samples {
+            if src == local.from || now - at > self.freshness {
+                continue;
+            }
+            mu += pb.mu;
+            v += pb.v;
+            td += pb.td;
+            n += 1.0;
+        }
+        (mu / n, v / n, td / n)
+    }
+
+    /// How many fresh remote samples contribute right now.
+    pub fn fresh_count(&self, now: f64) -> usize {
+        self.samples.iter().filter(|(_, _, at)| now - at <= self.freshness).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pb(from: PeerId, mu: f64) -> Piggyback {
+        Piggyback { from, mu, v: 20.0, td: 50.0 }
+    }
+
+    #[test]
+    fn averages_fresh_samples() {
+        let mut g = GossipAggregator::new(8, 600.0);
+        g.receive(pb(1, 2e-4), 10.0);
+        g.receive(pb(2, 4e-4), 20.0);
+        let (mu, v, td) = g.global(pb(0, 3e-4), 30.0);
+        assert!((mu - 3e-4).abs() < 1e-12);
+        assert!((v - 20.0).abs() < 1e-12);
+        assert!((td - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stale_samples_ignored() {
+        let mut g = GossipAggregator::new(8, 100.0);
+        g.receive(pb(1, 100.0), 0.0);
+        let (mu, _, _) = g.global(pb(0, 2.0), 500.0);
+        assert!((mu - 2.0).abs() < 1e-12);
+        assert_eq!(g.fresh_count(500.0), 0);
+    }
+
+    #[test]
+    fn newer_sample_replaces_same_source() {
+        let mut g = GossipAggregator::new(8, 600.0);
+        g.receive(pb(1, 1.0), 0.0);
+        g.receive(pb(1, 5.0), 10.0);
+        let (mu, _, _) = g.global(pb(0, 5.0), 20.0);
+        assert!((mu - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn capacity_evicts_stalest() {
+        let mut g = GossipAggregator::new(2, 1e9);
+        g.receive(pb(1, 1.0), 0.0);
+        g.receive(pb(2, 2.0), 10.0);
+        g.receive(pb(3, 3.0), 20.0); // evicts source 1
+        let (mu, _, _) = g.global(pb(0, 2.5), 30.0);
+        assert!((mu - (2.5 + 2.0 + 3.0) / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn local_never_double_counted() {
+        let mut g = GossipAggregator::new(8, 600.0);
+        g.receive(pb(0, 100.0), 0.0); // our own echo
+        let (mu, _, _) = g.global(pb(0, 2.0), 1.0);
+        assert!((mu - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn global_tighter_than_local() {
+        // Averaging k noisy local estimates cuts the spread ~ sqrt(k):
+        // the Section 3.1.4 motivation, checked end-to-end.
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::new(40, 0);
+        let true_mu = 1.0 / 7200.0;
+        let noisy = |rng: &mut Pcg64| true_mu * (1.0 + 0.15 * rng.gaussian());
+        let mut local_errs = 0.0;
+        let mut global_errs = 0.0;
+        let trials = 500;
+        for _ in 0..trials {
+            let mut g = GossipAggregator::new(16, 600.0);
+            for src in 1..=9 {
+                g.receive(Piggyback { from: src, mu: noisy(&mut rng), v: 20.0, td: 50.0 }, 0.0);
+            }
+            let local = Piggyback { from: 0, mu: noisy(&mut rng), v: 20.0, td: 50.0 };
+            let (gmu, _, _) = g.global(local, 1.0);
+            local_errs += (local.mu - true_mu).abs();
+            global_errs += (gmu - true_mu).abs();
+        }
+        assert!(
+            global_errs < local_errs * 0.5,
+            "global {global_errs} vs local {local_errs}"
+        );
+    }
+}

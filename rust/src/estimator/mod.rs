@@ -1,0 +1,37 @@
+//! Online parameter estimation (paper Section 3.1).
+//!
+//! * [`mle`] — the Eq. 1 Maximum-Likelihood failure-rate estimator over a
+//!   window of K observed lifetimes (the paper's choice, from its
+//!   companion study \[15\]).
+//! * [`ewma`], [`window`], [`count`] — the comparison estimators from that
+//!   study, implemented for the ablation benches.
+//! * [`gossip`] — Section 3.1.4's piggyback scheme: peers attach their
+//!   local (μ, V, T_d) estimates to computation messages; receivers average
+//!   them into a global view at zero extra message cost.
+//! * [`overhead`] — Section 3.1.2/3.1.3: the Eq. 2 checkpoint-overhead
+//!   calibration and the online T_d measurement.
+
+pub mod categorized;
+pub mod count;
+pub mod ewma;
+pub mod hybrid;
+pub mod gossip;
+pub mod mle;
+pub mod overhead;
+pub mod window;
+
+/// Common interface: feed observed lifetimes, read the current rate.
+pub trait RateEstimator: Send {
+    /// Record one observed peer lifetime (seconds).
+    fn observe(&mut self, lifetime: f64);
+
+    /// Current estimate of the failure rate μ (per second), or `None`
+    /// before enough observations have arrived.
+    fn rate(&self) -> Option<f64>;
+
+    /// Number of observations consumed.
+    fn n_observed(&self) -> u64;
+
+    /// Estimator name for reports.
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,217 @@
+//! Section 3.1.2 / 3.1.3: online estimation of the checkpoint overhead V
+//! (Eq. 2) and the image download time T_d.
+//!
+//! Eq. 2 calibration: run the job for `t` minutes with checkpointing off,
+//! recording mean CPU share `P₁` and message count `M₁`; then `t` minutes
+//! with a small interval (y checkpoints), recording `P₂`, `M₂`:
+//!
+//! ```text
+//! V = (P₁ − P₂)(M₁ − M₂) t / (2 P₁ M₁ y)
+//! ```
+//!
+//! T_d starts at V (Section 3.1.3), is replaced by the measured background
+//! download of the first image, and thereafter by the most recent actual
+//! restart download.
+
+/// State machine for the Eq. 2 two-phase calibration.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Calibration {
+    /// Phase 1 (checkpointing off) in progress since `started`.
+    BaselineRunning { started: f64 },
+    /// Phase 1 done; phase 2 (checkpointing on) since `started`.
+    ProbeRunning { started: f64, p1: f64, m1: f64 },
+    /// Both phases done.
+    Done { v: f64 },
+}
+
+/// Collects the phase statistics and produces V.
+#[derive(Debug, Clone)]
+pub struct VEstimator {
+    pub phase_len: f64,
+    pub state: Calibration,
+}
+
+impl VEstimator {
+    /// `phase_len`: the t in Eq. 2 (seconds per phase).
+    pub fn new(phase_len: f64, now: f64) -> Self {
+        assert!(phase_len > 0.0);
+        VEstimator { phase_len, state: Calibration::BaselineRunning { started: now } }
+    }
+
+    /// Finish phase 1 with its measurements.
+    pub fn finish_baseline(&mut self, now: f64, p1: f64, m1: f64) {
+        debug_assert!(matches!(self.state, Calibration::BaselineRunning { .. }));
+        self.state = Calibration::ProbeRunning { started: now, p1, m1 };
+    }
+
+    /// Finish phase 2; `y` = checkpoints taken during the probe phase.
+    /// Uses the two-channel mean form (see [`eq2_v_mean`] for why).
+    pub fn finish_probe(&mut self, p2: f64, m2: f64, y: u64) -> f64 {
+        let Calibration::ProbeRunning { p1, m1, .. } = self.state else {
+            panic!("finish_probe before finish_baseline");
+        };
+        let v = eq2_v_mean(p1, p2, m1, m2, self.phase_len, y);
+        self.state = Calibration::Done { v };
+        v
+    }
+
+    pub fn value(&self) -> Option<f64> {
+        match self.state {
+            Calibration::Done { v } => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Eq. 2 exactly as printed in the paper (product form):
+/// `V = (P₁−P₂)(M₁−M₂) t / (2 P₁ M₁ y)`.
+///
+/// NOTE (reproduction finding, see DESIGN.md §Substitutions): under the
+/// natural linear slowdown model (checkpointing for a fraction
+/// `f = V/(T+V)` of the probe phase scales both P and M by `1−f`) this
+/// evaluates to `V²/(2(T+V))`, NOT `V`. The surrounding text — "we
+/// estimate two separate V based on both the CPU usage and network IO
+/// statistics" — indicates the intended estimator is the *mean* of the
+/// two single-channel estimates ([`eq2_v_mean`]), which does recover `V`.
+/// We keep the literal form for fidelity and use the mean form in the
+/// calibration pipeline.
+pub fn eq2_v(p1: f64, p2: f64, m1: f64, m2: f64, t: f64, y: u64) -> f64 {
+    ((p1 - p2) * (m1 - m2) * t / (2.0 * p1 * m1 * y.max(1) as f64)).max(0.0)
+}
+
+/// The two-channel *mean* estimator the paper's prose describes:
+/// `V = [ (P₁−P₂)/P₁ + (M₁−M₂)/M₁ ] · t / (2 y)` — the average of the
+/// CPU-based and message-based single-channel estimates. Recovers the true
+/// V exactly under the linear slowdown model (verified in
+/// `rust/tests/estimation_pipeline.rs`).
+pub fn eq2_v_mean(p1: f64, p2: f64, m1: f64, m2: f64, t: f64, y: u64) -> f64 {
+    let y = y.max(1) as f64;
+    let dp = ((p1 - p2) / p1.max(1e-12)).max(0.0);
+    let dm = ((m1 - m2) / m1.max(1e-12)).max(0.0);
+    ((dp + dm) * t / (2.0 * y)).max(0.0)
+}
+
+/// T_d tracking per Section 3.1.3.
+#[derive(Debug, Clone)]
+pub struct TdEstimator {
+    current: f64,
+    source: TdSource,
+}
+
+/// Provenance of the current T_d estimate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TdSource {
+    /// Initialized from V (no download observed yet).
+    SeededFromV,
+    /// Background probe download of the first checkpoint image.
+    BackgroundProbe,
+    /// An actual restart's measured download.
+    Restart,
+}
+
+impl TdEstimator {
+    /// Seed with the V estimate (Section 3.1.3: "we set T_d to be same as
+    /// V as its initial value").
+    pub fn seeded_from_v(v: f64) -> Self {
+        TdEstimator { current: v.max(0.0), source: TdSource::SeededFromV }
+    }
+
+    /// First image captured: a background download measures T_d properly.
+    pub fn record_probe(&mut self, measured: f64) {
+        if self.source != TdSource::Restart {
+            self.current = measured.max(0.0);
+            self.source = TdSource::BackgroundProbe;
+        }
+    }
+
+    /// A restart happened: its download time is the freshest truth and
+    /// always wins (recency priority, Section 3.1.3).
+    pub fn record_restart(&mut self, measured: f64) {
+        self.current = measured.max(0.0);
+        self.source = TdSource::Restart;
+    }
+
+    pub fn value(&self) -> f64 {
+        self.current
+    }
+
+    pub fn source(&self) -> TdSource {
+        self.source
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq2_basic() {
+        // Checkpointing halves CPU share and message throughput over a
+        // t=600 s probe with y=10 checkpoints:
+        // V = (0.5 * M1/2 * 600) / (2 * 1.0 * M1 * 10) = 7.5 s
+        let v = eq2_v(1.0, 0.5, 1000.0, 500.0, 600.0, 10);
+        assert!((v - 7.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq2_no_slowdown_gives_zero() {
+        assert_eq!(eq2_v(0.9, 0.9, 800.0, 800.0, 600.0, 10), 0.0);
+        // Noise making P2 > P1 must not go negative.
+        assert_eq!(eq2_v(0.9, 0.95, 800.0, 790.0, 600.0, 10), 0.0);
+    }
+
+    #[test]
+    fn calibration_state_machine() {
+        let mut c = VEstimator::new(600.0, 0.0);
+        assert!(c.value().is_none());
+        c.finish_baseline(600.0, 1.0, 1000.0);
+        assert!(c.value().is_none());
+        // Both channels halved with y=10 checkpoints in 600 s: the cycle
+        // is 60 s and half of it is checkpointing, so V = 30 s — which the
+        // mean form recovers exactly.
+        let v = c.finish_probe(0.5, 500.0, 10);
+        assert!((v - 30.0).abs() < 1e-12);
+        assert_eq!(c.value(), Some(v));
+    }
+
+    #[test]
+    fn mean_form_recovers_v_product_form_does_not() {
+        // Linear slowdown model: probe interval T=160, V=20 => f = 1/9.
+        let (t, iv, true_v) = (1800.0f64, 160.0f64, 20.0f64);
+        let f = true_v / (iv + true_v);
+        let y = (t / (iv + true_v)).floor() as u64;
+        let (p1, m1) = (1.0, 1000.0);
+        let (p2, m2) = (p1 * (1.0 - f), m1 * (1.0 - f));
+        let mean = eq2_v_mean(p1, p2, m1, m2, t, y);
+        assert!((mean - true_v).abs() < true_v * 0.01, "mean {mean}");
+        let product = eq2_v(p1, p2, m1, m2, t, y);
+        // The literal printed form lands at ~V^2/(2(T+V)) ≈ 1.1 s.
+        assert!(product < true_v * 0.2, "product {product}");
+    }
+
+    #[test]
+    #[should_panic(expected = "finish_probe before finish_baseline")]
+    fn calibration_order_enforced() {
+        let mut c = VEstimator::new(600.0, 0.0);
+        c.finish_probe(0.5, 500.0, 10);
+    }
+
+    #[test]
+    fn td_lifecycle() {
+        let mut td = TdEstimator::seeded_from_v(20.0);
+        assert_eq!(td.value(), 20.0);
+        assert_eq!(td.source(), TdSource::SeededFromV);
+        td.record_probe(47.0);
+        assert_eq!(td.value(), 47.0);
+        assert_eq!(td.source(), TdSource::BackgroundProbe);
+        td.record_restart(61.0);
+        assert_eq!(td.value(), 61.0);
+        // A later probe must NOT override restart truth.
+        td.record_probe(10.0);
+        assert_eq!(td.value(), 61.0);
+        assert_eq!(td.source(), TdSource::Restart);
+        // But a newer restart does.
+        td.record_restart(55.0);
+        assert_eq!(td.value(), 55.0);
+    }
+}

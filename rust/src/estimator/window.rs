@@ -1,0 +1,110 @@
+//! Time-windowed rate estimator — comparison baseline: failures observed
+//! per unit of *watched peer-time* in the last `horizon` seconds.
+//!
+//! Unlike the MLE over completed lifetimes, this is an exposure-based
+//! (actuarial) estimator: robust to censoring but needs explicit exposure
+//! bookkeeping from the failure detector.
+
+use super::RateEstimator;
+use std::collections::VecDeque;
+
+/// Failures / exposure over a sliding time horizon.
+#[derive(Debug, Clone)]
+pub struct TimeWindowEstimator {
+    horizon: f64,
+    /// (time, lifetime) of observed failures.
+    failures: VecDeque<(f64, f64)>,
+    /// (time, peer_seconds) exposure records.
+    exposure: VecDeque<(f64, f64)>,
+    now: f64,
+    n: u64,
+}
+
+impl TimeWindowEstimator {
+    pub fn new(horizon: f64) -> Self {
+        assert!(horizon > 0.0);
+        TimeWindowEstimator {
+            horizon,
+            failures: VecDeque::new(),
+            exposure: VecDeque::new(),
+            now: 0.0,
+            n: 0,
+        }
+    }
+
+    /// Record watched peer-seconds (call from each stabilization tick).
+    pub fn add_exposure(&mut self, now: f64, peer_seconds: f64) {
+        self.now = self.now.max(now);
+        self.exposure.push_back((now, peer_seconds));
+        self.evict();
+    }
+
+    fn evict(&mut self) {
+        let cut = self.now - self.horizon;
+        while self.failures.front().is_some_and(|&(t, _)| t < cut) {
+            self.failures.pop_front();
+        }
+        while self.exposure.front().is_some_and(|&(t, _)| t < cut) {
+            self.exposure.pop_front();
+        }
+    }
+}
+
+impl RateEstimator for TimeWindowEstimator {
+    fn observe(&mut self, lifetime: f64) {
+        // Interpreted as: a failure observed "now" with this lifetime.
+        self.failures.push_back((self.now, lifetime));
+        self.n += 1;
+        self.evict();
+    }
+
+    fn rate(&self) -> Option<f64> {
+        let expo: f64 = self.exposure.iter().map(|&(_, e)| e).sum();
+        if expo <= 0.0 || self.failures.len() < 2 {
+            return None;
+        }
+        Some(self.failures.len() as f64 / expo)
+    }
+
+    fn n_observed(&self) -> u64 {
+        self.n
+    }
+
+    fn name(&self) -> &'static str {
+        "time_window"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_is_failures_over_exposure() {
+        let mut e = TimeWindowEstimator::new(1000.0);
+        e.add_exposure(100.0, 500.0);
+        e.observe(50.0);
+        e.observe(70.0);
+        // 2 failures / 500 peer-seconds
+        assert!((e.rate().unwrap() - 2.0 / 500.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn old_data_evicted() {
+        let mut e = TimeWindowEstimator::new(100.0);
+        e.add_exposure(0.0, 1000.0);
+        e.observe(10.0);
+        e.observe(10.0);
+        assert!(e.rate().is_some());
+        // Much later: old failures and exposure are both gone.
+        e.add_exposure(1000.0, 50.0);
+        assert!(e.rate().is_none());
+    }
+
+    #[test]
+    fn needs_some_failures() {
+        let mut e = TimeWindowEstimator::new(100.0);
+        e.add_exposure(0.0, 100.0);
+        assert!(e.rate().is_none());
+    }
+}

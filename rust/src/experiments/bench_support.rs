@@ -1,0 +1,84 @@
+//! Timing + reporting for the harness-less benches.
+//!
+//! Criterion is not in the offline crate cache; this gives the benches the
+//! pieces they actually need: wall-clock measurement with warmup, mean ±
+//! CI over repeats, and a uniform way to print paper-figure tables and
+//! write their CSVs under `target/bench-results/`.
+
+use crate::util::csv::Table;
+use crate::util::stats::Running;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Measure `f` `repeats` times after `warmup` unmeasured calls.
+pub fn time_it<F: FnMut()>(warmup: usize, repeats: usize, mut f: F) -> Running {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut r = Running::new();
+    for _ in 0..repeats {
+        let t0 = Instant::now();
+        f();
+        r.push(t0.elapsed().as_secs_f64());
+    }
+    r
+}
+
+/// Print a one-line timing report (criterion-flavoured).
+pub fn report_timing(name: &str, r: &Running) {
+    println!(
+        "{name:<40} {:>12.3} ms ± {:>8.3} ms   (n={}, min {:.3} ms)",
+        r.mean() * 1e3,
+        r.ci95() * 1e3,
+        r.count(),
+        r.min() * 1e3,
+    );
+}
+
+/// Throughput report: items/second from total items and a timing.
+pub fn report_throughput(name: &str, items: f64, r: &Running) {
+    println!(
+        "{name:<40} {:>14.0} items/s   ({} items in {:.3} ms)",
+        items / r.mean(),
+        items,
+        r.mean() * 1e3,
+    );
+}
+
+/// Where bench CSVs go.
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("target/bench-results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Write a figure table to `target/bench-results/<name>.csv` and print it.
+pub fn emit_table(name: &str, table: &Table) {
+    println!("\n== {name} ==");
+    print!("{}", table.to_pretty());
+    let path = results_dir().join(format!("{name}.csv"));
+    match table.write_to(&path) {
+        Ok(()) => println!("[written {}]", path.display()),
+        Err(e) => println!("[write failed: {e}]"),
+    }
+}
+
+/// Bench arg helper: `--quick` shrinks trial counts for smoke runs.
+pub fn is_quick() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("P2PCP_BENCH_QUICK").is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_measures() {
+        let r = time_it(1, 5, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert_eq!(r.count(), 5);
+        assert!(r.mean() >= 0.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! The experiment harness: everything needed to regenerate the paper's
+//! figures (DESIGN.md carries the per-experiment index).
+//!
+//! * [`relative_runtime`] — the Eq. 11 metric and the Fig. 4 / Fig. 5
+//!   comparison sweeps.
+//! * [`fig2`] — trace synthesis + exponential-fit / rate-variability
+//!   analysis (Fig. 2(a)/(b)).
+//! * [`bench_support`] — timing + reporting helpers for the harness-less
+//!   benches (criterion is not in the offline crate cache).
+
+pub mod bench_support;
+pub mod fig2;
+pub mod relative_runtime;
+
+pub use relative_runtime::{run_comparison, ComparisonConfig, ComparisonRow};

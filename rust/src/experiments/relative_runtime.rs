@@ -1,0 +1,246 @@
+//! The paper's evaluation harness (Section 4): relative runtime of fixed
+//! checkpoint intervals vs the adaptive scheme.
+//!
+//! ```text
+//! RelativeRuntime(T) = runtime(fixed T) / runtime(adaptive) × 100%   (Eq. 11)
+//! ```
+//!
+//! `> 100%` ⇒ the adaptive scheme wins at that fixed interval.
+
+use crate::churn::model::{ChurnModel, Exponential, HeavyTail, TimeVarying};
+use crate::config::ChurnSpec;
+use crate::coordinator::job::{JobParams, JobSimulator};
+use crate::planner::{NativePlanner, Planner};
+use crate::policy::{AdaptivePolicy, CheckpointPolicy, FixedPolicy, OraclePolicy};
+use crate::util::stats::Running;
+
+/// One comparison sweep configuration.
+#[derive(Debug, Clone)]
+pub struct ComparisonConfig {
+    pub churn: ChurnSpec,
+    pub job: JobParams,
+    /// The fixed intervals (seconds) on the x-axis.
+    pub fixed_intervals: Vec<f64>,
+    /// Independent trials per point.
+    pub trials: u64,
+    /// Base seed (trial index mixed in as the RNG stream).
+    pub seed: u64,
+    /// Also run the oracle policy (ablation).
+    pub with_oracle: bool,
+}
+
+impl Default for ComparisonConfig {
+    fn default() -> Self {
+        ComparisonConfig {
+            churn: ChurnSpec::Exponential { mtbf: 7200.0 },
+            job: JobParams::default(),
+            // 1, 2, 5, 10, 20, 40, 60 minutes — the paper's style of axis.
+            fixed_intervals: vec![60.0, 120.0, 300.0, 600.0, 1200.0, 2400.0, 3600.0],
+            trials: 40,
+            seed: 42,
+            with_oracle: false,
+        }
+    }
+}
+
+/// One row of the output table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ComparisonRow {
+    pub fixed_interval: f64,
+    /// Mean wall time with the fixed policy.
+    pub fixed_runtime: f64,
+    pub fixed_ci95: f64,
+    /// Eq. 11, in percent.
+    pub relative_runtime_pct: f64,
+    /// Fraction of fixed-policy runs that hit the sim-time cap.
+    pub fixed_aborted_frac: f64,
+}
+
+/// Result of one sweep.
+#[derive(Debug, Clone)]
+pub struct ComparisonResult {
+    pub adaptive_runtime: f64,
+    pub adaptive_ci95: f64,
+    pub adaptive_mean_interval: f64,
+    pub oracle_runtime: Option<f64>,
+    pub rows: Vec<ComparisonRow>,
+}
+
+fn build_churn(spec: &ChurnSpec) -> Box<dyn ChurnModel> {
+    match spec {
+        ChurnSpec::Exponential { mtbf } => Box::new(Exponential::new(*mtbf)),
+        ChurnSpec::TimeVarying { mtbf0, double_time } => {
+            Box::new(TimeVarying::new(*mtbf0, *double_time))
+        }
+        ChurnSpec::HeavyTail { mean, shape } => Box::new(HeavyTail::new(*mean, *shape)),
+        ChurnSpec::Trace { .. } => {
+            unimplemented!("trace churn: synthesize durations and use TraceReplay")
+        }
+    }
+}
+
+/// Average wall time of `trials` runs under a freshly-built policy.
+fn mean_runtime(
+    sim: &JobSimulator,
+    mk_policy: &dyn Fn() -> Box<dyn CheckpointPolicy>,
+    trials: u64,
+    seed: u64,
+) -> (Running, f64, f64) {
+    let mut r = Running::new();
+    let mut aborted = 0u64;
+    let mut mean_interval = Running::new();
+    for trial in 0..trials {
+        let mut pol = mk_policy();
+        let o = sim.run(pol.as_mut(), seed.wrapping_add(trial), trial);
+        r.push(o.wall_time);
+        if !o.completed {
+            aborted += 1;
+        }
+        if o.mean_interval > 0.0 {
+            mean_interval.push(o.mean_interval);
+        }
+    }
+    let frac = aborted as f64 / trials as f64;
+    (r, frac, mean_interval.mean())
+}
+
+/// Run the full comparison: adaptive once, then each fixed interval.
+pub fn run_comparison(cfg: &ComparisonConfig) -> ComparisonResult {
+    run_comparison_with(cfg, &|| Box::new(NativePlanner::new()))
+}
+
+/// Same, but with an injected planner factory (XlaPlanner for the
+/// artifact-backed path; the benches use this).
+pub fn run_comparison_with(
+    cfg: &ComparisonConfig,
+    planner_factory: &dyn Fn() -> Box<dyn Planner>,
+) -> ComparisonResult {
+    let churn = build_churn(&cfg.churn);
+    let sim = JobSimulator::new(cfg.job.clone(), churn.as_ref());
+
+    let (adaptive, _, adaptive_iv) = mean_runtime(
+        &sim,
+        &|| Box::new(AdaptivePolicy::new(planner_factory())),
+        cfg.trials,
+        cfg.seed,
+    );
+
+    let oracle_runtime = cfg.with_oracle.then(|| {
+        let (r, _, _) = mean_runtime(
+            &sim,
+            &|| Box::new(OraclePolicy::default()),
+            cfg.trials,
+            cfg.seed,
+        );
+        r.mean()
+    });
+
+    let mut rows = Vec::with_capacity(cfg.fixed_intervals.len());
+    for &iv in &cfg.fixed_intervals {
+        let (fixed, aborted_frac, _) = mean_runtime(
+            &sim,
+            &|| Box::new(FixedPolicy::new(iv)),
+            cfg.trials,
+            cfg.seed,
+        );
+        rows.push(ComparisonRow {
+            fixed_interval: iv,
+            fixed_runtime: fixed.mean(),
+            fixed_ci95: fixed.ci95(),
+            relative_runtime_pct: fixed.mean() / adaptive.mean() * 100.0,
+            fixed_aborted_frac: aborted_frac,
+        });
+    }
+
+    ComparisonResult {
+        adaptive_runtime: adaptive.mean(),
+        adaptive_ci95: adaptive.ci95(),
+        adaptive_mean_interval: adaptive_iv,
+        oracle_runtime,
+        rows,
+    }
+}
+
+/// Render a result as the CSV table the benches emit.
+pub fn to_table(res: &ComparisonResult) -> crate::util::csv::Table {
+    let mut t = crate::util::csv::Table::new(&[
+        "fixed_interval_s",
+        "fixed_runtime_s",
+        "fixed_ci95_s",
+        "adaptive_runtime_s",
+        "relative_runtime_pct",
+        "fixed_aborted_frac",
+    ]);
+    for row in &res.rows {
+        t.push_f64(&[
+            row.fixed_interval,
+            row.fixed_runtime,
+            row.fixed_ci95,
+            res.adaptive_runtime,
+            row.relative_runtime_pct,
+            row.fixed_aborted_frac,
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> ComparisonConfig {
+        ComparisonConfig {
+            churn: ChurnSpec::Exponential { mtbf: 7200.0 },
+            job: JobParams { runtime: 2.0 * 3600.0, ..JobParams::default() },
+            fixed_intervals: vec![90.0, 1800.0],
+            trials: 10,
+            seed: 7,
+            with_oracle: true,
+        }
+    }
+
+    #[test]
+    fn adaptive_wins_against_bad_interval() {
+        let res = run_comparison(&quick_cfg());
+        // 30-minute interval under group-MTBF 450 s is terrible:
+        let bad = res.rows.iter().find(|r| r.fixed_interval == 1800.0).unwrap();
+        assert!(
+            bad.relative_runtime_pct > 110.0,
+            "relative runtime {} should be >> 100%",
+            bad.relative_runtime_pct
+        );
+        // A fixed interval equal to the adaptive optimum (~90 s) should be
+        // close to parity (within noise).
+        let good = res.rows.iter().find(|r| r.fixed_interval == 90.0).unwrap();
+        assert!(
+            (85.0..130.0).contains(&good.relative_runtime_pct),
+            "near-optimal fixed should be near parity, got {}",
+            good.relative_runtime_pct
+        );
+    }
+
+    #[test]
+    fn oracle_at_least_as_good_as_adaptive() {
+        let res = run_comparison(&quick_cfg());
+        let oracle = res.oracle_runtime.unwrap();
+        // The oracle knows the true rate: it can't be much worse.
+        assert!(
+            oracle <= res.adaptive_runtime * 1.10,
+            "oracle {oracle} vs adaptive {}",
+            res.adaptive_runtime
+        );
+    }
+
+    #[test]
+    fn table_rendering() {
+        let res = run_comparison(&ComparisonConfig {
+            trials: 3,
+            fixed_intervals: vec![300.0],
+            job: JobParams { runtime: 1800.0, ..JobParams::default() },
+            ..quick_cfg()
+        });
+        let t = to_table(&res);
+        assert_eq!(t.n_rows(), 1);
+        assert!(t.to_csv().contains("relative_runtime_pct"));
+    }
+}

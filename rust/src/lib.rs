@@ -1,0 +1,53 @@
+//! # p2pcp — Adaptive Checkpointing for P2P Volunteer-Computing Work Flows
+//!
+//! A framework for running message-passing work-flow jobs over a churning
+//! peer-to-peer volunteer-computing substrate, reproducing
+//! *Ni & Harwood, "An Adaptive Checkpointing Scheme for Peer-to-Peer Based
+//! Volunteer Computing Work Flows"* (2007).
+//!
+//! The paper's contribution — a fully decentralized **adaptive checkpoint
+//! interval** computed from online estimates of the peer failure rate `μ`
+//! (Eq. 1, MLE), the checkpoint overhead `V` (Eq. 2) and the image download
+//! overhead `T_d`, through the closed form
+//!
+//! ```text
+//! λ* = kμ / ( W0[ (Vkμ − T_d·kμ − 1)·(T_d·kμ + 1)⁻¹·e⁻¹ ] + 1 )
+//! ```
+//!
+//! — is integrated as a first-class [`policy::CheckpointPolicy`].
+//!
+//! ## Layering
+//!
+//! * **L3 (this crate)** — discrete-event simulation core ([`sim`]), P2P
+//!   overlay with churn and stabilization ([`net`], [`churn`]), replicated
+//!   checkpoint storage ([`storage`]), failure-rate / overhead estimators
+//!   ([`estimator`]), the analytic utilization model ([`model`]),
+//!   checkpoint policies ([`policy`]), a message-passing substrate with
+//!   Chandy–Lamport snapshots ([`mpi`]), the job coordinator and BOINC-style
+//!   work pool ([`coordinator`], [`workflow`]), and the experiment harness
+//!   ([`experiments`]).
+//! * **L2/L1 (build-time python)** — the planner compute graph and Pallas
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt` and executed from
+//!   [`runtime`] / [`planner::XlaPlanner`] via the PJRT C API. Python never
+//!   runs on the request path.
+
+pub mod churn;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod estimator;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod mpi;
+pub mod net;
+pub mod planner;
+pub mod policy;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod util;
+pub mod workflow;
+
+pub use error::{Error, Result};

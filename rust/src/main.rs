@@ -1,0 +1,335 @@
+//! `p2pcp` — the launcher.
+//!
+//! ```text
+//! p2pcp simulate  [--mtbf S] [--k N] [--runtime S] [--v S] [--td S]
+//!                 [--policy adaptive|oracle|never|fixed] [--interval S]
+//!                 [--trials N] [--seed N] [--planner native|xla]
+//! p2pcp sweep     [--mtbf S] [--v S] [--td S] [--trials N] [--intervals csv]
+//!                 [--double-time S] [--out file.csv]
+//! p2pcp plan      [--mtbf S] [--k N] [--v S] [--td S] [--sweep-k]
+//!                 [--planner native|xla]
+//! p2pcp trace     [--network gnutella|overnet|bittorrent] [--sessions N]
+//! p2pcp world     [--mtbf S] [--k N] [--runtime S] [--peers N]
+//! ```
+
+use p2pcp::churn::trace::TraceKind;
+use p2pcp::cli::Args;
+use p2pcp::config::{ChurnSpec, PolicySpec, SimConfig};
+use p2pcp::coordinator::job::JobParams;
+use p2pcp::coordinator::world::World;
+use p2pcp::error::{Error, Result};
+use p2pcp::experiments::fig2;
+use p2pcp::experiments::relative_runtime::{run_comparison_with, to_table, ComparisonConfig};
+use p2pcp::model::optimal::optimal_lambda_checked;
+use p2pcp::mpi::program::{CommPattern, Program};
+use p2pcp::planner::{NativePlanner, PlanRequest, Planner, XlaPlanner};
+use p2pcp::policy;
+use p2pcp::runtime::PjrtRuntime;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().cloned().unwrap_or_else(|| "help".into());
+    let code = match run(&cmd, &args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "simulate" => cmd_simulate(args),
+        "sweep" => cmd_sweep(args),
+        "plan" => cmd_plan(args),
+        "trace" => cmd_trace(args),
+        "world" => cmd_world(args),
+        "fleet" => cmd_fleet(args),
+        "help" | "--help" | "-h" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => Err(Error::Config(format!("unknown command '{other}' (try `p2pcp help`)"))),
+    }
+}
+
+const HELP: &str = "\
+p2pcp — adaptive checkpointing for P2P volunteer-computing work flows
+
+USAGE: p2pcp <command> [flags]
+
+COMMANDS:
+  simulate   run one policy on one churn setting, print the outcome
+  sweep      adaptive-vs-fixed relative-runtime sweep (Fig. 4/5 harness)
+  plan       evaluate the closed-form planner (lambda*, U) once or over k
+  trace      synthesize a P2P session trace and analyze it (Fig. 2)
+  world      run the full-stack world (overlay + Chandy-Lamport + DHT store)
+  fleet      serve many concurrent jobs with shared batched planning
+  help       this text
+
+Run a command with wrong flags to see its allowed flag list.
+";
+
+fn mk_planner(kind: &str) -> Result<Box<dyn Planner>> {
+    match kind {
+        "native" => Ok(Box::new(NativePlanner::new())),
+        "xla" => {
+            let rt = PjrtRuntime::cpu()?;
+            Ok(Box::new(XlaPlanner::new(&rt)?))
+        }
+        other => Err(Error::Config(format!("unknown planner '{other}'"))),
+    }
+}
+
+fn parse_policy(args: &Args) -> Result<PolicySpec> {
+    Ok(match args.get_str("policy", "adaptive").as_str() {
+        "adaptive" => PolicySpec::Adaptive,
+        "oracle" => PolicySpec::Oracle,
+        "never" => PolicySpec::Never,
+        "fixed" => PolicySpec::Fixed { interval: args.get_f64("interval", 300.0)? },
+        other => return Err(Error::Config(format!("unknown policy '{other}'"))),
+    })
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    args.check_unknown(&[
+        "mtbf", "k", "runtime", "v", "td", "policy", "interval", "trials", "seed",
+        "planner", "double-time",
+    ])?;
+    let mtbf = args.get_f64("mtbf", 7200.0)?;
+    let params = JobParams {
+        k: args.get_usize("k", 16)?,
+        runtime: args.get_f64("runtime", 4.0 * 3600.0)?,
+        v: args.get_f64("v", 20.0)?,
+        td: args.get_f64("td", 50.0)?,
+        ..JobParams::default()
+    };
+    let trials = args.get_u64("trials", 20)?;
+    let seed = args.get_u64("seed", 42)?;
+    let spec = parse_policy(args)?;
+    let planner_kind = args.get_str("planner", "native");
+
+    let churn: Box<dyn p2pcp::churn::model::ChurnModel> =
+        if let Some(dt) = args.get("double-time") {
+            let dt: f64 = dt
+                .parse()
+                .map_err(|_| Error::Config("--double-time must be a number".into()))?;
+            Box::new(p2pcp::churn::model::TimeVarying::new(mtbf, dt))
+        } else {
+            Box::new(p2pcp::churn::model::Exponential::new(mtbf))
+        };
+    let sim = p2pcp::coordinator::job::JobSimulator::new(params.clone(), churn.as_ref());
+
+    let mut wall = p2pcp::util::stats::Running::new();
+    let mut failures = 0u64;
+    let mut checkpoints = 0u64;
+    let mut completed = 0u64;
+    for trial in 0..trials {
+        let mut pol = policy::from_spec(&spec, || {
+            mk_planner(&planner_kind).expect("planner backend")
+        });
+        let o = sim.run(pol.as_mut(), seed + trial, trial);
+        wall.push(o.wall_time);
+        failures += o.failures;
+        checkpoints += o.checkpoints;
+        completed += o.completed as u64;
+    }
+    println!("policy           : {}", spec.name());
+    println!("churn            : {}", churn.describe());
+    println!("k / runtime      : {} peers / {:.0} s", params.k, params.runtime);
+    println!("V / Td           : {:.0} s / {:.0} s", params.v, params.td);
+    println!("trials           : {trials} ({completed} completed)");
+    println!("mean wall time   : {:.0} s ± {:.0} s", wall.mean(), wall.ci95());
+    println!("mean efficiency  : {:.3}", params.runtime / wall.mean());
+    println!("failures/run     : {:.1}", failures as f64 / trials as f64);
+    println!("checkpoints/run  : {:.1}", checkpoints as f64 / trials as f64);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    args.check_unknown(&[
+        "mtbf", "k", "runtime", "v", "td", "trials", "seed", "intervals",
+        "double-time", "out", "planner", "oracle",
+    ])?;
+    let mtbf = args.get_f64("mtbf", 7200.0)?;
+    let churn = if let Some(dt) = args.get("double-time") {
+        let dt: f64 =
+            dt.parse().map_err(|_| Error::Config("--double-time must be a number".into()))?;
+        ChurnSpec::TimeVarying { mtbf0: mtbf, double_time: dt }
+    } else {
+        ChurnSpec::Exponential { mtbf }
+    };
+    let fixed_intervals: Vec<f64> = match args.get("intervals") {
+        Some(csv) => csv
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| Error::Config("--intervals must be comma-separated seconds".into()))?,
+        None => vec![60.0, 120.0, 300.0, 600.0, 1200.0, 2400.0, 3600.0],
+    };
+    let cfg = ComparisonConfig {
+        churn,
+        job: JobParams {
+            k: args.get_usize("k", 16)?,
+            runtime: args.get_f64("runtime", 4.0 * 3600.0)?,
+            v: args.get_f64("v", 20.0)?,
+            td: args.get_f64("td", 50.0)?,
+            ..JobParams::default()
+        },
+        fixed_intervals,
+        trials: args.get_u64("trials", 40)?,
+        seed: args.get_u64("seed", 42)?,
+        with_oracle: args.has("oracle"),
+    };
+    let planner_kind = args.get_str("planner", "native");
+    let res = run_comparison_with(&cfg, &|| mk_planner(&planner_kind).expect("planner"));
+    println!(
+        "adaptive: {:.0} s ± {:.0} s (mean interval {:.0} s)",
+        res.adaptive_runtime, res.adaptive_ci95, res.adaptive_mean_interval
+    );
+    if let Some(o) = res.oracle_runtime {
+        println!("oracle  : {o:.0} s");
+    }
+    let table = to_table(&res);
+    print!("{}", table.to_pretty());
+    if let Some(out) = args.get("out") {
+        table.write_to(std::path::Path::new(out))?;
+        println!("[written {out}]");
+    }
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> Result<()> {
+    args.check_unknown(&["mtbf", "k", "v", "td", "sweep-k", "planner"])?;
+    let mtbf = args.get_f64("mtbf", 7200.0)?;
+    let v = args.get_f64("v", 20.0)?;
+    let td = args.get_f64("td", 50.0)?;
+    let planner_kind = args.get_str("planner", "native");
+
+    if args.has("sweep-k") {
+        println!("{:>6} {:>12} {:>12} {:>8} {:>12}", "k", "lambda*", "interval_s", "U", "progress");
+        for k in [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512] {
+            let plan = optimal_lambda_checked(k as f64 / mtbf, v, td)
+                .ok_or_else(|| Error::Planner("no plan".into()))?;
+            println!(
+                "{k:>6} {:>12.6} {:>12.1} {:>8.3} {:>12}",
+                plan.lambda,
+                plan.interval,
+                plan.stats.u,
+                if plan.progressing { "yes" } else { "NO (k too large)" }
+            );
+        }
+        return Ok(());
+    }
+
+    let k = args.get_f64("k", 16.0)?;
+    let mut planner = mk_planner(&planner_kind)?;
+    let resp = planner.plan_one(&PlanRequest {
+        lifetimes: vec![mtbf; 64],
+        v,
+        td,
+        k,
+    })?;
+    println!("planner          : {}", planner.name());
+    println!("mu (per s)       : {:.8}", resp.mu);
+    println!("lambda* (per s)  : {:.8}", resp.lambda);
+    println!("interval (s)     : {:.1}", 1.0 / resp.lambda);
+    println!("U(lambda*)       : {:.4}", resp.u);
+    println!("cbar             : {:.3}", resp.cbar);
+    println!("Twc (s)          : {:.2}", resp.twc);
+    println!("progressing      : {}", resp.progressing());
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.check_unknown(&["network", "sessions", "seed"])?;
+    let kind = match args.get_str("network", "gnutella").as_str() {
+        "gnutella" => TraceKind::Gnutella,
+        "overnet" => TraceKind::Overnet,
+        "bittorrent" => TraceKind::Bittorrent,
+        other => return Err(Error::Config(format!("unknown network '{other}'"))),
+    };
+    let sessions = args.get_usize("sessions", 50_000)?;
+    let seed = args.get_u64("seed", 1)?;
+    let a = fig2::fig2a(kind, sessions, seed);
+    println!("network          : {}", a.kind);
+    println!("sessions         : {sessions}");
+    println!("mean session     : {:.1} min", a.mean_session_s / 60.0);
+    println!("exp-fit KS dist  : {:.4}  (Fig 2(a): loose fit)", a.ks_distance);
+    let b = fig2::fig2b(kind, sessions, seed);
+    println!(
+        "hourly-rate CV   : {:.3}  (homogeneous control: {:.3})",
+        b.cv, b.control_cv
+    );
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    args.check_unknown(&[
+        "mtbf", "jobs", "arrival", "k", "runtime", "v", "td", "planner", "seed",
+        "min-utilization",
+    ])?;
+    use p2pcp::coordinator::fleet::{run_fleet, FleetConfig};
+    let cfg = FleetConfig {
+        n_jobs: args.get_usize("jobs", 32)?,
+        arrival_mean: args.get_f64("arrival", 300.0)?,
+        k: args.get_usize("k", 16)?,
+        runtime: args.get_f64("runtime", 3600.0)?,
+        v: args.get_f64("v", 20.0)?,
+        td: args.get_f64("td", 50.0)?,
+        min_utilization: args.get_f64("min-utilization", 0.05)?,
+        ..FleetConfig::default()
+    };
+    let churn = p2pcp::churn::model::Exponential::new(args.get_f64("mtbf", 7200.0)?);
+    let seed = args.get_u64("seed", 42)?;
+    let out = match args.get_str("planner", "native").as_str() {
+        "xla" => {
+            let rt = PjrtRuntime::cpu()?;
+            run_fleet(&cfg, &churn, XlaPlanner::new(&rt)?, seed)
+        }
+        "native" => run_fleet(&cfg, &churn, NativePlanner::new(), seed),
+        other => return Err(Error::Config(format!("unknown planner '{other}'"))),
+    };
+    println!("completed        : {}", out.completed);
+    println!("rejected         : {} (admission U floor)", out.rejected);
+    println!("aborted          : {}", out.aborted);
+    println!("mean wall        : {:.0} s", out.mean_wall);
+    println!("mean latency     : {:.0} s", out.mean_latency);
+    println!("makespan         : {:.0} s", out.makespan);
+    println!("planner batching : {:.1} req/flush over {} flushes", out.mean_batch, out.flushes);
+    Ok(())
+}
+
+fn cmd_world(args: &Args) -> Result<()> {
+    args.check_unknown(&["mtbf", "k", "runtime", "peers", "seed", "policy", "interval"])?;
+    let cfg = SimConfig {
+        n_peers: args.get_usize("peers", 256)?,
+        k: args.get_usize("k", 16)?,
+        job_runtime: args.get_f64("runtime", 3600.0)?,
+        churn: ChurnSpec::Exponential { mtbf: args.get_f64("mtbf", 7200.0)? },
+        seed: args.get_u64("seed", 42)?,
+        ..SimConfig::default()
+    };
+    let spec = parse_policy(args)?;
+    let mut world = World::new(cfg)?;
+    println!("warming up the overlay (4 h of churn)...");
+    world.warmup(4.0 * 3600.0);
+    println!(
+        "online peers: {}, estimated rate: {:?}",
+        world.online_count(),
+        world.estimated_rate()
+    );
+    let program = Program::new(CommPattern::Ring, 16);
+    let pol = policy::from_spec(&spec, || Box::new(NativePlanner::new()));
+    let o = world.run_job(program, pol)?;
+    println!("completed        : {}", o.completed);
+    println!("wall time        : {:.0} s", o.wall_time);
+    println!("failures         : {}", o.failures);
+    println!("checkpoints      : {}", o.checkpoints);
+    println!("wasted work      : {:.0} s", o.wasted);
+    println!("efficiency       : {:.3}", o.efficiency);
+    println!("events processed : {}", world.events_processed());
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! Metrics: counters + a recorder the simulator and coordinator write to,
+//! with JSON export for experiment post-processing.
+
+use crate::util::json::Json;
+use crate::util::stats::Running;
+use std::collections::BTreeMap;
+
+/// A metrics registry (string-keyed counters and distributions).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    dists: BTreeMap<String, Running>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, key: &str) {
+        self.add(key, 1);
+    }
+
+    pub fn add(&mut self, key: &str, n: u64) {
+        *self.counters.entry(key.to_string()).or_insert(0) += n;
+    }
+
+    pub fn set(&mut self, key: &str, v: f64) {
+        self.gauges.insert(key.to_string(), v);
+    }
+
+    pub fn observe(&mut self, key: &str, v: f64) {
+        self.dists.entry(key.to_string()).or_insert_with(Running::new).push(v);
+    }
+
+    pub fn counter(&self, key: &str) -> u64 {
+        self.counters.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, key: &str) -> Option<f64> {
+        self.gauges.get(key).copied()
+    }
+
+    pub fn dist(&self, key: &str) -> Option<&Running> {
+        self.dists.get(key)
+    }
+
+    /// Export everything as JSON.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (k, v) in &self.counters {
+            obj.insert(format!("counter.{k}"), Json::Num(*v as f64));
+        }
+        for (k, v) in &self.gauges {
+            obj.insert(format!("gauge.{k}"), Json::Num(*v));
+        }
+        for (k, d) in &self.dists {
+            obj.insert(
+                format!("dist.{k}"),
+                Json::obj(vec![
+                    ("count", Json::Num(d.count() as f64)),
+                    ("mean", Json::Num(d.mean())),
+                    ("stddev", Json::Num(d.stddev())),
+                    ("min", Json::Num(d.min())),
+                    ("max", Json::Num(d.max())),
+                ]),
+            );
+        }
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_dists() {
+        let mut m = Metrics::new();
+        m.inc("restarts");
+        m.add("restarts", 2);
+        m.observe("interval", 90.0);
+        m.observe("interval", 110.0);
+        m.set("u", 0.55);
+        assert_eq!(m.counter("restarts"), 3);
+        assert_eq!(m.counter("missing"), 0);
+        assert!((m.dist("interval").unwrap().mean() - 100.0).abs() < 1e-12);
+        assert_eq!(m.gauge("u"), Some(0.55));
+    }
+
+    #[test]
+    fn json_export_parses() {
+        let mut m = Metrics::new();
+        m.inc("x");
+        m.observe("d", 1.0);
+        let j = m.to_json();
+        let s = j.to_string();
+        let back = crate::util::json::parse(&s).unwrap();
+        assert_eq!(back.get("counter.x").and_then(Json::as_f64), Some(1.0));
+    }
+}

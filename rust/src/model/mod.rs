@@ -1,0 +1,9 @@
+//! The paper's analytic model (Section 3.2): cycle utilization, wasted
+//! work, expected fault-free cycles, and the Lambert-W closed form for the
+//! optimal checkpoint rate.
+
+pub mod optimal;
+pub mod utilization;
+
+pub use optimal::{optimal_lambda, optimal_lambda_checked, PlanOutcome};
+pub use utilization::{cycle_overhead, utilization, CycleStats};

@@ -1,0 +1,200 @@
+//! The paper's closed form for the optimal checkpoint rate:
+//!
+//! ```text
+//! λ* = kμ / ( W0[ (Vkμ − T_d·kμ − 1)·(T_d·kμ + 1)⁻¹·e⁻¹ ] + 1 )
+//! ```
+//!
+//! Derivation sketch (verified independently, matches the paper): maximize
+//! U(λ) ⇔ solve e^x(1−x) = β with x = a/λ, β = (1 + aT_d − aV)/(1 + aT_d);
+//! substituting u = x−1 gives u·e^u = −β/e, i.e. x = 1 + W0(−β/e). The
+//! argument lies in [−1/e, ∞), so the principal branch always applies.
+
+use super::utilization::{utilization, CycleStats};
+use crate::util::lambertw::lambert_w0;
+
+/// A planning decision: the optimal rate and the model's diagnostics there.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanOutcome {
+    /// Optimal checkpoint rate λ* (per second).
+    pub lambda: f64,
+    /// Checkpoint interval 1/λ* (seconds).
+    pub interval: f64,
+    /// Model diagnostics at λ*.
+    pub stats: CycleStats,
+    /// Section 3.2.3 admission signal: U(λ*) == 0 means the job cannot
+    /// make progress under current conditions — k is too large.
+    pub progressing: bool,
+}
+
+/// Closed-form λ* for job failure rate `a = k·μ`, checkpoint overhead `v`,
+/// download overhead `td` (all positive; a may be 0 when no failures have
+/// been observed — then there is nothing to optimize and we return `None`).
+pub fn optimal_lambda(a: f64, v: f64, td: f64) -> Option<f64> {
+    if !(a.is_finite() && v.is_finite() && td.is_finite()) {
+        return None;
+    }
+    if a <= 0.0 || v < 0.0 || td < 0.0 {
+        return None;
+    }
+    if v == 0.0 {
+        // Free checkpoints: checkpoint continuously (λ -> ∞). Callers treat
+        // this as "checkpoint as often as mechanically possible".
+        return Some(f64::INFINITY);
+    }
+    let z = (v * a - td * a - 1.0) / (td * a + 1.0) * crate::util::lambertw::INV_E;
+    let w = lambert_w0(z);
+    let wp1 = (w + 1.0).max(1e-12);
+    Some(a / wp1)
+}
+
+/// λ* plus diagnostics + the admission check.
+pub fn optimal_lambda_checked(a: f64, v: f64, td: f64) -> Option<PlanOutcome> {
+    let lambda = optimal_lambda(a, v, td)?;
+    if !lambda.is_finite() {
+        return Some(PlanOutcome {
+            lambda,
+            interval: 0.0,
+            stats: CycleStats { u: 1.0, cbar: f64::INFINITY, twc: 0.0, c_cycle: 0.0 },
+            progressing: true,
+        });
+    }
+    let stats = utilization(lambda, a, v, td);
+    Some(PlanOutcome { lambda, interval: 1.0 / lambda, stats, progressing: stats.u > 0.0 })
+}
+
+/// Brute-force verifier: grid-argmax of U over `n` log-spaced rates in
+/// `[a/span, a*span]`. Test/diagnostic use only (the closed form is the
+/// production path).
+pub fn grid_argmax_lambda(a: f64, v: f64, td: f64, span: f64, n: usize) -> f64 {
+    let lo = (a / span).ln();
+    let hi = (a * span).ln();
+    let mut best = (f64::NEG_INFINITY, a);
+    for i in 0..n {
+        let lam = (lo + (hi - lo) * i as f64 / (n - 1) as f64).exp();
+        let u = utilization(lam, a, v, td).u;
+        if u > best.0 {
+            best = (u, lam);
+        }
+    }
+    best.1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closed_form_matches_grid_argmax() {
+        for (mtbf, k, v, td) in [
+            (4000.0, 16.0, 20.0, 50.0),
+            (7200.0, 16.0, 20.0, 50.0),
+            (14400.0, 16.0, 20.0, 50.0),
+            (7200.0, 4.0, 5.0, 10.0),
+            (450.0, 1.0, 20.0, 50.0),
+            (7200.0, 16.0, 80.0, 200.0),
+        ] {
+            let a = k / mtbf;
+            let lam = optimal_lambda(a, v, td).unwrap();
+            let grid = grid_argmax_lambda(a, v, td, 100.0, 40_001);
+            let u_star = utilization(lam, a, v, td).u;
+            let u_grid = utilization(grid, a, v, td).u;
+            assert!(
+                u_star >= u_grid - 1e-9,
+                "closed form U {u_star} below grid U {u_grid} at mtbf={mtbf} k={k} v={v} td={td}"
+            );
+            if u_star > 0.0 {
+                assert!(
+                    (lam - grid).abs() < grid * 5e-3,
+                    "lam {lam} vs grid {grid} at mtbf={mtbf} k={k} v={v} td={td}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn paper_typical_point() {
+        // MTBF=7200 s, k=16, V=20 s, Td=50 s: group failure rate a=1/450.
+        // Small-x expansion of e^x(1-x)=beta gives x ~ sqrt(2Va/(1+a td))
+        // = sqrt(0.08) ~ 0.283; the exact solution is x = 0.2592, i.e.
+        // interval = x/a = 116.6 s (cross-checked against the grid argmax
+        // and scipy in the python suite).
+        let a = 16.0 / 7200.0;
+        let plan = optimal_lambda_checked(a, 20.0, 50.0).unwrap();
+        assert!(
+            (plan.interval - 116.6).abs() < 1.0,
+            "interval {} expected ~116.6 s",
+            plan.interval
+        );
+        assert!(plan.progressing);
+        assert!(plan.stats.u > 0.5 && plan.stats.u < 0.6, "u {}", plan.stats.u);
+    }
+
+    #[test]
+    fn interval_shrinks_with_failure_rate() {
+        let mut prev = f64::INFINITY;
+        for mtbf in [14400.0, 7200.0, 4000.0, 2000.0, 1000.0] {
+            let a = 16.0 / mtbf;
+            let plan = optimal_lambda_checked(a, 20.0, 50.0).unwrap();
+            assert!(
+                plan.interval < prev,
+                "interval {} should shrink as MTBF drops to {mtbf}",
+                plan.interval
+            );
+            prev = plan.interval;
+        }
+    }
+
+    #[test]
+    fn interval_grows_with_overhead() {
+        let a = 16.0 / 7200.0;
+        let mut prev = 0.0;
+        for v in [5.0, 10.0, 20.0, 40.0, 80.0] {
+            let plan = optimal_lambda_checked(a, v, 50.0).unwrap();
+            assert!(
+                plan.interval > prev,
+                "interval {} should grow with V={v}",
+                plan.interval
+            );
+            prev = plan.interval;
+        }
+    }
+
+    #[test]
+    fn admission_signal_too_many_peers() {
+        // Section 3.2.3: grow k until U(λ*) hits 0.
+        let mtbf = 3600.0;
+        let mut saw_progressing = false;
+        let mut saw_stuck = false;
+        for k in [1.0, 4.0, 16.0, 64.0, 256.0, 1024.0, 4096.0] {
+            let plan = optimal_lambda_checked(k / mtbf, 120.0, 300.0).unwrap();
+            if plan.progressing {
+                saw_progressing = true;
+                assert!(!saw_stuck, "U must be monotone non-increasing in k");
+            } else {
+                saw_stuck = true;
+            }
+        }
+        assert!(saw_progressing && saw_stuck);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(optimal_lambda(0.0, 20.0, 50.0).is_none());
+        assert!(optimal_lambda(-1.0, 20.0, 50.0).is_none());
+        assert!(optimal_lambda(f64::NAN, 20.0, 50.0).is_none());
+        assert_eq!(optimal_lambda(0.01, 0.0, 50.0), Some(f64::INFINITY));
+        let plan = optimal_lambda_checked(0.01, 0.0, 50.0).unwrap();
+        assert!(plan.progressing);
+    }
+
+    #[test]
+    fn lambda_at_least_group_failure_rate_in_physical_regime() {
+        // For aV < 1 + aTd the optimum checkpoints at least once per
+        // expected failure (x = a/λ ≤ 1).
+        for mtbf in [1000.0, 7200.0, 100_000.0] {
+            let a = 16.0 / mtbf;
+            let lam = optimal_lambda(a, 20.0, 50.0).unwrap();
+            assert!(lam >= a - 1e-15, "lam {lam} < a {a}");
+        }
+    }
+}

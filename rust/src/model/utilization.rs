@@ -1,0 +1,123 @@
+//! Eqs. (3)–(10): the cycle-utilization model.
+//!
+//! With job failure rate `a = kμ` (Eq. 7 reduces the k-peer coordinated
+//! job to a single exponential clock) and checkpoint rate `λ`:
+//!
+//! ```text
+//! c̄'   = 1 / (e^{a/λ} − 1)                 (Eq. 6/8) cycles per failure
+//! T'wc = 1/a − c̄'/λ                        (Eq. 5/8) wasted work / failure
+//! C    = V + (T'wc + T_d) / c̄'             (Eq. 9)   overhead per cycle
+//! U    = max(0, 1 − Cλ)                    (Eq. 10)
+//! ```
+
+/// Diagnostics of the model at a specific rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CycleStats {
+    /// Average cycle utilization U ∈ \[0, 1\].
+    pub u: f64,
+    /// Expected fault-free cycles per failure c̄'.
+    pub cbar: f64,
+    /// Expected wasted computation per failure T'wc (seconds).
+    pub twc: f64,
+    /// Average overhead + failure cost per cycle C (seconds).
+    pub c_cycle: f64,
+}
+
+/// Evaluate Eqs. (5)–(10) at checkpoint rate `lam` for a job with failure
+/// rate `a = k·μ`, checkpoint overhead `v` and download overhead `td`.
+pub fn utilization(lam: f64, a: f64, v: f64, td: f64) -> CycleStats {
+    debug_assert!(lam > 0.0, "rate must be positive");
+    let a = a.max(1e-30);
+    let x = a / lam;
+    let em1 = x.exp_m1();
+    let cbar = 1.0 / em1.max(1e-300);
+    let twc = 1.0 / a - cbar / lam;
+    let c_cycle = v + (twc + td) * em1;
+    let u = (1.0 - c_cycle * lam).clamp(0.0, 1.0);
+    CycleStats { u, cbar, twc, c_cycle }
+}
+
+/// Eq. (9) alone (used in reports).
+pub fn cycle_overhead(lam: f64, a: f64, v: f64, td: f64) -> f64 {
+    utilization(lam, a, v, td).c_cycle
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MTBF: f64 = 7200.0;
+    const K: f64 = 16.0;
+
+    #[test]
+    fn twc_half_interval_for_frequent_checkpoints() {
+        // For λ >> a, the expected wasted work per failure approaches half
+        // the checkpoint interval: T'wc -> 1/(2λ).
+        let a = K / MTBF;
+        let lam = a * 100.0;
+        let s = utilization(lam, a, 20.0, 50.0);
+        let half_interval = 1.0 / (2.0 * lam);
+        assert!(
+            (s.twc - half_interval).abs() < half_interval * 0.01,
+            "twc {} vs {}",
+            s.twc,
+            half_interval
+        );
+    }
+
+    #[test]
+    fn twc_approaches_full_mtbf_for_rare_checkpoints() {
+        // For λ << a almost all work since the last checkpoint is lost:
+        // T'wc -> 1/a.
+        let a = K / MTBF;
+        let lam = a / 50.0;
+        let s = utilization(lam, a, 20.0, 50.0);
+        assert!((s.twc - 1.0 / a).abs() < 0.05 / a, "twc {}", s.twc);
+    }
+
+    #[test]
+    fn cbar_expected_cycles() {
+        // c̄' = 1/(e^{a/λ}-1); at λ = a it's 1/(e-1) ≈ 0.582.
+        let a = K / MTBF;
+        let s = utilization(a, a, 20.0, 50.0);
+        assert!((s.cbar - 1.0 / (std::f64::consts::E - 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn u_zero_when_overhead_swallows_cycle() {
+        // Huge V: overhead exceeds cycle time, U clamps to 0 (Eq. 10).
+        let a = K / MTBF;
+        let s = utilization(a * 5.0, a, 1e6, 50.0);
+        assert_eq!(s.u, 0.0);
+    }
+
+    #[test]
+    fn u_in_unit_interval_everywhere() {
+        let a = K / MTBF;
+        let mut lam = a / 100.0;
+        while lam < a * 1000.0 {
+            let s = utilization(lam, a, 20.0, 50.0);
+            assert!((0.0..=1.0).contains(&s.u), "U({lam}) = {}", s.u);
+            assert!(s.cbar > 0.0);
+            assert!(s.twc >= -1e-12);
+            lam *= 1.5;
+        }
+    }
+
+    #[test]
+    fn matches_python_ref_values() {
+        // Cross-language pin: python ref.utilization_ref at the paper's
+        // typical point (a = 16/7200, lam = 1/90, v = 20, td = 50).
+        let a = 16.0 / 7200.0;
+        let s = utilization(1.0 / 90.0, a, 20.0, 50.0);
+        // From the analytic forms: x = 0.2, e^x-1 = 0.221402758...
+        let em1 = 0.2f64.exp_m1();
+        let cbar = 1.0 / em1;
+        let twc = 450.0 - cbar * 90.0;
+        let c = 20.0 + (twc + 50.0) * em1;
+        assert!((s.cbar - cbar).abs() < 1e-12);
+        assert!((s.twc - twc).abs() < 1e-9);
+        assert!((s.c_cycle - c).abs() < 1e-9);
+        assert!((s.u - (1.0 - c / 90.0)).abs() < 1e-12);
+    }
+}

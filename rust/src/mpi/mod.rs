@@ -1,0 +1,22 @@
+//! The message-passing substrate: simulated ranks, program communication
+//! shapes, and the Chandy–Lamport coordinated snapshot protocol.
+//!
+//! The paper's jobs are "message passing parallel programs" run over the
+//! P2P overlay (their P2P-DVM middleware \[16\]); checkpoints are coordinated
+//! global snapshots per Chandy–Lamport \[7\]. This module provides:
+//!
+//! * [`process`] — rank state: compute/communicate steps, message counters
+//!   (the `M₁/M₂` inputs of the Eq. 2 overhead estimator).
+//! * [`program`] — canonical communication shapes (pipeline work flow,
+//!   ring, stencil, all-reduce, master–worker) with per-step message
+//!   matrices.
+//! * [`chandy_lamport`] — the marker protocol over FIFO channels, with the
+//!   snapshot-consistency invariants tested directly.
+
+pub mod chandy_lamport;
+pub mod process;
+pub mod program;
+
+pub use chandy_lamport::{ChandyLamport, SnapshotState};
+pub use process::{Rank, RankState};
+pub use program::{CommPattern, Program};

@@ -1,0 +1,98 @@
+//! Rank state: the per-process bookkeeping the overhead estimator and the
+//! snapshot protocol need.
+
+/// Rank index within a job.
+pub type Rank = usize;
+
+/// What a rank is currently doing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RankPhase {
+    Computing,
+    /// Blocked in communication.
+    Communicating,
+    /// Dumping/uploading checkpoint state.
+    Checkpointing,
+    /// Downloading an image during restart.
+    Restarting,
+    /// Host peer is offline.
+    Dead,
+}
+
+/// Per-rank state.
+#[derive(Debug, Clone)]
+pub struct RankState {
+    pub rank: Rank,
+    pub phase: RankPhase,
+    /// Messages sent (computation traffic, not markers).
+    pub msgs_sent: u64,
+    /// Messages received.
+    pub msgs_recv: u64,
+    /// Accumulated busy (CPU) seconds.
+    pub cpu_busy: f64,
+    /// Accumulated wall seconds observed.
+    pub wall: f64,
+    /// Working-set bytes (checkpoint image contribution).
+    pub state_bytes: f64,
+}
+
+impl RankState {
+    pub fn new(rank: Rank, state_bytes: f64) -> Self {
+        RankState {
+            rank,
+            phase: RankPhase::Computing,
+            msgs_sent: 0,
+            msgs_recv: 0,
+            cpu_busy: 0.0,
+            wall: 0.0,
+            state_bytes,
+        }
+    }
+
+    /// Advance `dt` wall seconds; CPU accrues only while computing.
+    pub fn advance(&mut self, dt: f64) {
+        self.wall += dt;
+        if self.phase == RankPhase::Computing {
+            self.cpu_busy += dt;
+        }
+    }
+
+    /// Mean CPU share so far (the P of Eq. 2).
+    pub fn cpu_share(&self) -> f64 {
+        if self.wall <= 0.0 {
+            0.0
+        } else {
+            self.cpu_busy / self.wall
+        }
+    }
+
+    /// Total message count (the M of Eq. 2).
+    pub fn msg_count(&self) -> u64 {
+        self.msgs_sent + self.msgs_recv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_share_tracks_phases() {
+        let mut r = RankState::new(0, 1e6);
+        r.advance(60.0);
+        assert!((r.cpu_share() - 1.0).abs() < 1e-12);
+        r.phase = RankPhase::Checkpointing;
+        r.advance(60.0);
+        assert!((r.cpu_share() - 0.5).abs() < 1e-12);
+        r.phase = RankPhase::Computing;
+        r.advance(120.0);
+        assert!((r.cpu_share() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn message_accounting() {
+        let mut r = RankState::new(1, 0.0);
+        r.msgs_sent += 10;
+        r.msgs_recv += 5;
+        assert_eq!(r.msg_count(), 15);
+    }
+}

@@ -1,0 +1,210 @@
+//! Program communication shapes.
+//!
+//! The paper motivates work flows as message-passing programs ("a simple
+//! work flow is like a pipeline of tasks", Section 1.1) and notes that
+//! communication-heavy programs suffer larger checkpoint overheads
+//! (Section 4.2). Each pattern defines which (src, dst) rank pairs
+//! exchange messages per compute step; the counts drive (a) the Eq. 2
+//! estimator inputs and (b) the server-vs-P2P I/O accounting of the
+//! work-flow experiments.
+
+use super::process::Rank;
+
+/// Canonical communication patterns.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommPattern {
+    /// Work-flow pipeline: rank i -> i+1 each step.
+    Pipeline,
+    /// Ring: i -> (i+1) mod k.
+    Ring,
+    /// 1-D stencil: i <-> i±1.
+    Stencil1D,
+    /// All-reduce (tree): 2·(k−1) messages per step.
+    AllReduce,
+    /// Master–worker: 0 <-> i for all i.
+    MasterWorker,
+}
+
+impl CommPattern {
+    pub fn name(self) -> &'static str {
+        match self {
+            CommPattern::Pipeline => "pipeline",
+            CommPattern::Ring => "ring",
+            CommPattern::Stencil1D => "stencil1d",
+            CommPattern::AllReduce => "allreduce",
+            CommPattern::MasterWorker => "master_worker",
+        }
+    }
+
+    /// (src, dst) pairs exchanged in one compute step for `k` ranks.
+    pub fn edges(self, k: usize) -> Vec<(Rank, Rank)> {
+        let mut e = Vec::new();
+        match self {
+            CommPattern::Pipeline => {
+                for i in 0..k.saturating_sub(1) {
+                    e.push((i, i + 1));
+                }
+            }
+            CommPattern::Ring => {
+                if k >= 2 {
+                    for i in 0..k {
+                        e.push((i, (i + 1) % k));
+                    }
+                }
+            }
+            CommPattern::Stencil1D => {
+                for i in 0..k.saturating_sub(1) {
+                    e.push((i, i + 1));
+                    e.push((i + 1, i));
+                }
+            }
+            CommPattern::AllReduce => {
+                // Reduce up a binomial tree then broadcast down.
+                let mut stride = 1;
+                while stride < k {
+                    let mut i = 0;
+                    while i + stride < k {
+                        e.push((i + stride, i)); // reduce
+                        i += 2 * stride;
+                    }
+                    stride *= 2;
+                }
+                let mut stride = k.next_power_of_two() / 2;
+                while stride >= 1 {
+                    let mut i = 0;
+                    while i + stride < k {
+                        e.push((i, i + stride)); // broadcast
+                        i += 2 * stride;
+                    }
+                    if stride == 1 {
+                        break;
+                    }
+                    stride /= 2;
+                }
+            }
+            CommPattern::MasterWorker => {
+                for i in 1..k {
+                    e.push((0, i));
+                    e.push((i, 0));
+                }
+            }
+        }
+        e
+    }
+
+    /// Messages per compute step.
+    pub fn msgs_per_step(self, k: usize) -> usize {
+        self.edges(k).len()
+    }
+}
+
+/// A message-passing program: pattern + step cadence + working set.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub pattern: CommPattern,
+    pub ranks: usize,
+    /// Seconds of compute between communication steps.
+    pub step_seconds: f64,
+    /// Bytes per message.
+    pub msg_bytes: f64,
+    /// Working-set bytes per rank (checkpoint image contribution).
+    pub rank_state_bytes: f64,
+}
+
+impl Program {
+    pub fn new(pattern: CommPattern, ranks: usize) -> Self {
+        Program {
+            pattern,
+            ranks,
+            step_seconds: 10.0,
+            msg_bytes: 64e3,
+            rank_state_bytes: 64e6 / 3.0,
+        }
+    }
+
+    /// Computation messages per second, whole job.
+    pub fn msg_rate(&self) -> f64 {
+        self.pattern.msgs_per_step(self.ranks) as f64 / self.step_seconds
+    }
+
+    /// Communication bytes per second, whole job.
+    pub fn byte_rate(&self) -> f64 {
+        self.msg_rate() * self.msg_bytes
+    }
+
+    /// Total checkpoint image size.
+    pub fn image_bytes(&self) -> f64 {
+        self.rank_state_bytes * self.ranks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_edge_count() {
+        assert_eq!(CommPattern::Pipeline.msgs_per_step(8), 7);
+        assert_eq!(CommPattern::Pipeline.edges(1), vec![]);
+    }
+
+    #[test]
+    fn ring_wraps() {
+        let e = CommPattern::Ring.edges(4);
+        assert_eq!(e.len(), 4);
+        assert!(e.contains(&(3, 0)));
+    }
+
+    #[test]
+    fn stencil_bidirectional() {
+        let e = CommPattern::Stencil1D.edges(4);
+        assert_eq!(e.len(), 6);
+        assert!(e.contains(&(1, 0)) && e.contains(&(0, 1)));
+    }
+
+    #[test]
+    fn allreduce_message_count() {
+        // Tree all-reduce: 2(k-1) messages for power-of-two k.
+        for k in [2usize, 4, 8, 16] {
+            assert_eq!(
+                CommPattern::AllReduce.msgs_per_step(k),
+                2 * (k - 1),
+                "k={k}"
+            );
+        }
+    }
+
+    #[test]
+    fn master_worker_star() {
+        let e = CommPattern::MasterWorker.edges(5);
+        assert_eq!(e.len(), 8);
+        assert!(e.iter().all(|&(s, d)| s == 0 || d == 0));
+    }
+
+    #[test]
+    fn edges_in_range() {
+        for p in [
+            CommPattern::Pipeline,
+            CommPattern::Ring,
+            CommPattern::Stencil1D,
+            CommPattern::AllReduce,
+            CommPattern::MasterWorker,
+        ] {
+            for k in [1usize, 2, 3, 7, 16, 33] {
+                for (s, d) in p.edges(k) {
+                    assert!(s < k && d < k, "{p:?} k={k} edge ({s},{d})");
+                    assert_ne!(s, d, "{p:?} self-loop");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rates_scale() {
+        let mut p = Program::new(CommPattern::Ring, 16);
+        p.step_seconds = 10.0;
+        assert!((p.msg_rate() - 1.6).abs() < 1e-12);
+        assert!((p.byte_rate() - 1.6 * 64e3).abs() < 1e-6);
+        assert!((p.image_bytes() - 16.0 * 64e6 / 3.0).abs() < 1.0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Per-peer asymmetric bandwidth model.
+//!
+//! Checkpoint images are uploaded to (and downloaded from) the DHT store;
+//! volunteer peers are consumer DSL/cable-like links, so upstream is the
+//! scarce resource (the paper's Section 3.1.2 point that uploads slow the
+//! message passing down). Speeds are sampled log-normally per peer so a
+//! job's effective V / T_d is set by its slowest member — exactly the
+//! "approximated as the required time for the slowest node" remark in
+//! Section 4.2.
+
+use crate::util::rng::Pcg64;
+
+/// A peer's link capacity in bytes/second.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpeed {
+    pub up_bps: f64,
+    pub down_bps: f64,
+}
+
+/// Population model for link speeds.
+#[derive(Debug, Clone, Copy)]
+pub struct BandwidthModel {
+    /// Median upstream (bytes/s). Default ~= 1 Mbit/s up.
+    pub up_median: f64,
+    /// Median downstream (bytes/s). Default ~= 8 Mbit/s down.
+    pub down_median: f64,
+    /// Log-normal sigma of the spread across peers.
+    pub sigma: f64,
+}
+
+impl Default for BandwidthModel {
+    fn default() -> Self {
+        BandwidthModel {
+            up_median: 1_000_000.0 / 8.0 * 1.0,  // 1 Mbit/s
+            down_median: 1_000_000.0 / 8.0 * 8.0, // 8 Mbit/s
+            sigma: 0.5,
+        }
+    }
+}
+
+impl BandwidthModel {
+    /// Sample one peer's link.
+    pub fn sample(&self, rng: &mut Pcg64) -> LinkSpeed {
+        LinkSpeed {
+            up_bps: rng.lognormal(self.up_median, self.sigma),
+            down_bps: rng.lognormal(self.down_median, self.sigma),
+        }
+    }
+
+    /// Sample a whole population.
+    pub fn sample_population(&self, n: usize, rng: &mut Pcg64) -> Vec<LinkSpeed> {
+        (0..n).map(|_| self.sample(rng)).collect()
+    }
+}
+
+impl LinkSpeed {
+    /// Seconds to upload `bytes`.
+    pub fn upload_time(&self, bytes: f64) -> f64 {
+        bytes / self.up_bps.max(1.0)
+    }
+
+    /// Seconds to download `bytes`.
+    pub fn download_time(&self, bytes: f64) -> f64 {
+        bytes / self.down_bps.max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn medians_roughly_match() {
+        let m = BandwidthModel::default();
+        let mut rng = Pcg64::new(8, 0);
+        let pop = m.sample_population(20_001, &mut rng);
+        let mut ups: Vec<f64> = pop.iter().map(|l| l.up_bps).collect();
+        ups.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let med = ups[ups.len() / 2];
+        assert!(
+            (med - m.up_median).abs() < m.up_median * 0.05,
+            "median {med} vs {}",
+            m.up_median
+        );
+    }
+
+    #[test]
+    fn asymmetric() {
+        let m = BandwidthModel::default();
+        let mut rng = Pcg64::new(9, 0);
+        let pop = m.sample_population(1000, &mut rng);
+        let up: f64 = pop.iter().map(|l| l.up_bps).sum();
+        let down: f64 = pop.iter().map(|l| l.down_bps).sum();
+        assert!(down > 4.0 * up, "down {down} vs up {up}");
+    }
+
+    #[test]
+    fn transfer_times() {
+        let l = LinkSpeed { up_bps: 125_000.0, down_bps: 1_000_000.0 };
+        assert!((l.upload_time(1_250_000.0) - 10.0).abs() < 1e-9);
+        assert!((l.download_time(1_000_000.0) - 1.0).abs() < 1e-9);
+    }
+}

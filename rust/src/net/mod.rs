@@ -1,0 +1,17 @@
+//! The P2P substrate: a Chord-style DHT overlay with churn-aware
+//! stabilization, greedy multi-hop routing, and a latency/bandwidth model.
+//!
+//! This is the substrate the paper assumes from its companion systems
+//! (P2P-DVM \[16\], MPI-over-P2P \[14\]): peers indexed in a DHT, neighbour
+//! failures detected during stabilization (the observations feeding the
+//! Eq. 1 estimator), messages routed in multiple decentralized hops.
+
+pub mod bandwidth;
+pub mod overlay;
+pub mod routing;
+pub mod stabilize;
+
+pub use bandwidth::{BandwidthModel, LinkSpeed};
+pub use overlay::{Overlay, PeerId, PeerState};
+pub use routing::RouteOutcome;
+pub use stabilize::{FailureObservation, Stabilizer};

@@ -1,0 +1,269 @@
+//! Chord-style ring overlay with successor lists and finger tables.
+//!
+//! Peers own random 64-bit ids on a ring. Each live peer keeps
+//! `SUCCESSORS` immediate successors (its "neighbours" — the peers whose
+//! failures it can observe during stabilization) and `log2(n)`-ish fingers
+//! for greedy routing. The overlay tracks join/leave and exposes the
+//! neighbour sets the failure detector watches.
+
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+
+/// Index into the overlay's peer table (stable across sessions).
+pub type PeerId = usize;
+
+/// Number of successor links each peer maintains (its neighbour set).
+pub const SUCCESSORS: usize = 4;
+
+/// Per-peer state.
+#[derive(Debug, Clone)]
+pub struct PeerState {
+    /// Position on the 64-bit ring.
+    pub ring_id: u64,
+    /// Online?
+    pub online: bool,
+    /// Start of the current session (secs), if online.
+    pub session_start: f64,
+    /// Sessions completed so far (diagnostics).
+    pub sessions: u64,
+}
+
+/// The overlay: peer table plus a ring index of the online peers.
+#[derive(Debug)]
+pub struct Overlay {
+    peers: Vec<PeerState>,
+    /// ring_id -> peer, online peers only.
+    ring: BTreeMap<u64, PeerId>,
+}
+
+impl Overlay {
+    /// Create an overlay of `n` peers, all initially online with random
+    /// ring positions, sessions starting at time 0.
+    pub fn new(n: usize, rng: &mut Pcg64) -> Overlay {
+        let mut peers = Vec::with_capacity(n);
+        let mut ring = BTreeMap::new();
+        for i in 0..n {
+            // Distinct ring ids (collisions are ~impossible but be strict).
+            let mut rid = rng.next_u64();
+            while ring.contains_key(&rid) {
+                rid = rng.next_u64();
+            }
+            ring.insert(rid, i);
+            peers.push(PeerState {
+                ring_id: rid,
+                online: true,
+                session_start: 0.0,
+                sessions: 1,
+            });
+        }
+        Overlay { peers, ring }
+    }
+
+    pub fn len(&self) -> usize {
+        self.peers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.peers.is_empty()
+    }
+
+    pub fn online_count(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn peer(&self, p: PeerId) -> &PeerState {
+        &self.peers[p]
+    }
+
+    pub fn is_online(&self, p: PeerId) -> bool {
+        self.peers[p].online
+    }
+
+    /// Mark `p` offline (session end). Returns the session length.
+    pub fn depart(&mut self, p: PeerId, now: f64) -> f64 {
+        let st = &mut self.peers[p];
+        debug_assert!(st.online, "departing an offline peer");
+        st.online = false;
+        self.ring.remove(&st.ring_id);
+        now - st.session_start
+    }
+
+    /// Bring `p` back online at `now` with a fresh session.
+    pub fn join(&mut self, p: PeerId, now: f64) {
+        let st = &mut self.peers[p];
+        debug_assert!(!st.online, "joining an online peer");
+        st.online = true;
+        st.session_start = now;
+        st.sessions += 1;
+        self.ring.insert(st.ring_id, p);
+    }
+
+    /// The `k` online successors of `p` on the ring (p's neighbour set).
+    pub fn successors(&self, p: PeerId, k: usize) -> Vec<PeerId> {
+        let start = self.peers[p].ring_id;
+        let mut out = Vec::with_capacity(k);
+        for (_, &q) in self.ring.range((start + 1)..).chain(self.ring.range(..=start)) {
+            if q == p {
+                continue;
+            }
+            out.push(q);
+            if out.len() == k {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Neighbour set used by the failure detector: successor list.
+    pub fn neighbours(&self, p: PeerId) -> Vec<PeerId> {
+        self.successors(p, SUCCESSORS)
+    }
+
+    /// Allocation-free iterator over the first `SUCCESSORS` online
+    /// successors of `p` (hot-path twin of [`Overlay::neighbours`]).
+    pub fn successors_iter(&self, p: PeerId) -> impl Iterator<Item = PeerId> + '_ {
+        let start = self.peers[p].ring_id;
+        self.ring
+            .range((start + 1)..)
+            .chain(self.ring.range(..=start))
+            .map(|(_, &q)| q)
+            .filter(move |&q| q != p)
+            .take(SUCCESSORS)
+    }
+
+    /// The online peer owning ring key `key` (first peer clockwise).
+    pub fn owner_of(&self, key: u64) -> Option<PeerId> {
+        self.ring
+            .range(key..)
+            .next()
+            .or_else(|| self.ring.iter().next())
+            .map(|(_, &p)| p)
+    }
+
+    /// Sample `k` distinct online peers (for job placement).
+    pub fn sample_online(&self, k: usize, rng: &mut Pcg64) -> Option<Vec<PeerId>> {
+        let online: Vec<PeerId> = self.online_ids().collect();
+        if online.len() < k {
+            return None;
+        }
+        let idx = rng.sample_indices(online.len(), k);
+        Some(idx.into_iter().map(|i| online[i]).collect())
+    }
+
+    pub fn online_ids(&self) -> impl Iterator<Item = PeerId> + '_ {
+        self.ring.values().copied()
+    }
+
+    /// Finger targets for routing: the owners of ring_id + 2^i.
+    pub fn fingers(&self, p: PeerId) -> Vec<PeerId> {
+        let base = self.peers[p].ring_id;
+        let mut out = Vec::with_capacity(64);
+        for i in 0..64 {
+            let key = base.wrapping_add(1u64 << i);
+            if let Some(q) = self.owner_of(key) {
+                if q != p && out.last() != Some(&q) {
+                    out.push(q);
+                }
+            }
+        }
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize) -> (Overlay, Pcg64) {
+        let mut rng = Pcg64::new(42, 0);
+        let o = Overlay::new(n, &mut rng);
+        (o, rng)
+    }
+
+    #[test]
+    fn all_online_initially() {
+        let (o, _) = mk(100);
+        assert_eq!(o.online_count(), 100);
+        assert_eq!(o.len(), 100);
+    }
+
+    #[test]
+    fn depart_join_cycle() {
+        let (mut o, _) = mk(10);
+        let len = o.depart(3, 1234.5);
+        assert!((len - 1234.5).abs() < 1e-9);
+        assert!(!o.is_online(3));
+        assert_eq!(o.online_count(), 9);
+        o.join(3, 2000.0);
+        assert!(o.is_online(3));
+        assert_eq!(o.peer(3).sessions, 2);
+        assert_eq!(o.peer(3).session_start, 2000.0);
+    }
+
+    #[test]
+    fn successors_wrap_and_skip_offline() {
+        let (mut o, _) = mk(6);
+        // Take one peer offline; successor sets must never contain it.
+        o.depart(2, 1.0);
+        for p in 0..6 {
+            if p == 2 {
+                continue;
+            }
+            let succ = o.successors(p, 3);
+            assert_eq!(succ.len(), 3);
+            assert!(!succ.contains(&2));
+            assert!(!succ.contains(&p));
+        }
+    }
+
+    #[test]
+    fn owner_of_covers_whole_ring() {
+        let (o, mut rng) = mk(50);
+        for _ in 0..1000 {
+            let key = rng.next_u64();
+            let owner = o.owner_of(key).unwrap();
+            assert!(o.is_online(owner));
+        }
+    }
+
+    #[test]
+    fn owner_is_clockwise_successor() {
+        let (o, _) = mk(20);
+        for key in [0u64, 1, u64::MAX / 2, u64::MAX - 1] {
+            let owner = o.owner_of(key).unwrap();
+            let oid = o.peer(owner).ring_id;
+            // No online peer sits strictly between key and owner (clockwise).
+            for p in o.online_ids() {
+                let rid = o.peer(p).ring_id;
+                if rid >= key {
+                    assert!(oid >= key && oid <= rid || oid == rid, "closer peer exists");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sample_online_distinct_and_online() {
+        let (mut o, mut rng) = mk(30);
+        for p in 0..10 {
+            o.depart(p, 1.0);
+        }
+        let s = o.sample_online(16, &mut rng).unwrap();
+        assert_eq!(s.len(), 16);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 16);
+        assert!(s.iter().all(|&p| o.is_online(p)));
+        assert!(o.sample_online(25, &mut rng).is_none());
+    }
+
+    #[test]
+    fn fingers_nonempty_and_online() {
+        let (o, _) = mk(64);
+        let f = o.fingers(0);
+        assert!(f.len() >= 4, "fingers {len}", len = f.len());
+        assert!(f.iter().all(|&q| o.is_online(q)));
+    }
+}

@@ -1,0 +1,181 @@
+//! Greedy DHT routing: hop-by-hop towards the key owner, counting hops and
+//! accumulating latency. The simulator uses the outcome to time message
+//! delivery; the workflow experiments use the hop counts to account
+//! server-mediated vs P2P-mediated I/O (Fig. 1(a) vs 1(b)).
+
+use super::overlay::{Overlay, PeerId};
+use crate::util::rng::Pcg64;
+
+/// Result of routing one message through the overlay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RouteOutcome {
+    pub src: PeerId,
+    pub dst: PeerId,
+    pub hops: u32,
+    /// End-to-end latency (seconds).
+    pub latency: f64,
+    /// Every peer the message transited (including src and dst).
+    pub path: Vec<PeerId>,
+}
+
+/// Per-hop latency model: base + exponential jitter (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct HopLatency {
+    pub base: f64,
+    pub jitter_mean: f64,
+}
+
+impl Default for HopLatency {
+    fn default() -> Self {
+        // Internet-ish: 40 ms base + 20 ms mean jitter per hop.
+        HopLatency { base: 0.040, jitter_mean: 0.020 }
+    }
+}
+
+impl HopLatency {
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        self.base + rng.exp(1.0 / self.jitter_mean.max(1e-9))
+    }
+}
+
+/// Route greedily from `src` towards the owner of `key`.
+///
+/// Each hop jumps to the routing-table entry (finger or successor) that is
+/// closest to the key without overshooting — the Chord invariant that
+/// guarantees O(log n) hops. Returns `None` if the overlay has no online
+/// peers or `src` is offline.
+pub fn route(
+    overlay: &Overlay,
+    src: PeerId,
+    key: u64,
+    lat: HopLatency,
+    rng: &mut Pcg64,
+) -> Option<RouteOutcome> {
+    if !overlay.is_online(src) {
+        return None;
+    }
+    let dst = overlay.owner_of(key)?;
+    let mut cur = src;
+    let mut path = vec![src];
+    let mut latency = 0.0;
+    let mut hops = 0u32;
+    // Distance clockwise from a ring id to the key.
+    let dist = |rid: u64| key.wrapping_sub(rid);
+    while cur != dst {
+        // Candidates: the fingers that can actually help are the owners of
+        // `base + 2^j` for the top few j with `2^j <= clockwise gap` (any
+        // larger overshoots, any smaller is dominated) — so 4 ring lookups
+        // replace the naive 64-finger scan — plus the successor list.
+        let mut best = cur;
+        let mut best_d = dist(overlay.peer(cur).ring_id);
+        let base = overlay.peer(cur).ring_id;
+        let gap = best_d;
+        let consider = |q: PeerId, best: &mut PeerId, best_d: &mut u64| {
+            if q != cur {
+                let d = dist(overlay.peer(q).ring_id);
+                if d < *best_d {
+                    *best = q;
+                    *best_d = d;
+                }
+            }
+        };
+        if gap > 1 {
+            let top = 63 - gap.leading_zeros();
+            for j in (top.saturating_sub(3)..=top).rev() {
+                if let Some(q) = overlay.owner_of(base.wrapping_add(1u64 << j)) {
+                    consider(q, &mut best, &mut best_d);
+                }
+            }
+        }
+        for q in overlay.successors_iter(cur) {
+            consider(q, &mut best, &mut best_d);
+        }
+        if best == cur {
+            // No progress possible (tiny overlays): jump straight to owner,
+            // which the successor ring can always reach in one more hop.
+            best = dst;
+        }
+        cur = best;
+        hops += 1;
+        latency += lat.sample(rng);
+        path.push(cur);
+        if hops > 2 * 64 {
+            // Routing loop would be an overlay invariant violation.
+            return None;
+        }
+    }
+    if hops == 0 {
+        // src already owns the key: model a local delivery with zero hops.
+        latency = 0.0;
+    }
+    Some(RouteOutcome { src, dst, hops, latency, path })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(n: usize) -> (Overlay, Pcg64) {
+        let mut rng = Pcg64::new(7, 0);
+        let o = Overlay::new(n, &mut rng);
+        (o, rng)
+    }
+
+    #[test]
+    fn routes_reach_owner() {
+        let (o, mut rng) = mk(256);
+        for _ in 0..200 {
+            let key = rng.next_u64();
+            let src = rng.next_below(256) as usize;
+            let r = route(&o, src, key, HopLatency::default(), &mut rng).unwrap();
+            assert_eq!(r.dst, o.owner_of(key).unwrap());
+            assert_eq!(*r.path.last().unwrap(), r.dst);
+            assert_eq!(r.path[0], src);
+        }
+    }
+
+    #[test]
+    fn hops_logarithmic() {
+        let (o, mut rng) = mk(1024);
+        let mut total = 0u32;
+        let n = 300;
+        for _ in 0..n {
+            let key = rng.next_u64();
+            let src = rng.next_below(1024) as usize;
+            let r = route(&o, src, key, HopLatency::default(), &mut rng).unwrap();
+            total += r.hops;
+        }
+        let avg = total as f64 / n as f64;
+        // Chord: ~0.5 log2(n) = 5; greedy with fingers+successors stays
+        // within a small factor.
+        assert!(avg < 12.0, "avg hops {avg}");
+        assert!(avg > 1.0, "avg hops {avg} suspiciously low");
+    }
+
+    #[test]
+    fn latency_positive_and_scales_with_hops() {
+        let (o, mut rng) = mk(512);
+        let key = rng.next_u64();
+        let r = route(&o, 0, key, HopLatency::default(), &mut rng).unwrap();
+        if r.hops > 0 {
+            assert!(r.latency >= 0.040 * r.hops as f64);
+        }
+    }
+
+    #[test]
+    fn offline_src_fails() {
+        let (mut o, mut rng) = mk(16);
+        o.depart(3, 1.0);
+        assert!(route(&o, 3, 42, HopLatency::default(), &mut rng).is_none());
+    }
+
+    #[test]
+    fn self_owned_key_zero_hops() {
+        let (o, mut rng) = mk(8);
+        // Key exactly at peer 0's ring id is owned by peer 0.
+        let key = o.peer(0).ring_id;
+        let r = route(&o, 0, key, HopLatency::default(), &mut rng).unwrap();
+        assert_eq!(r.hops, 0);
+        assert_eq!(r.latency, 0.0);
+    }
+}

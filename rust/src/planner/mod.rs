@@ -1,0 +1,80 @@
+//! The planner service: adaptive checkpoint decisions as a batched request
+//! path (the vLLM-router-shaped piece of the coordinator).
+//!
+//! Two interchangeable backends behind [`Planner`]:
+//! * [`NativePlanner`] — pure rust (Eq. 1 MLE + closed-form λ*); always
+//!   available, used as fallback and cross-validation oracle.
+//! * [`XlaPlanner`] — the compiled L2/L1 artifact (`planner.hlo.txt`)
+//!   executed via PJRT; requests are padded to the compiled batch shape.
+//!
+//! [`service::PlannerService`] adds dynamic batching on top of either.
+
+pub mod native;
+pub mod service;
+pub mod xla_planner;
+
+pub use native::NativePlanner;
+pub use service::PlannerService;
+pub use xla_planner::XlaPlanner;
+
+use crate::error::Result;
+
+/// One adaptive-checkpoint planning request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlanRequest {
+    /// Observed peer lifetimes feeding the Eq. 1 MLE (seconds). May be
+    /// empty (no observations yet) — planners answer `mu = 0, lam = None`.
+    pub lifetimes: Vec<f64>,
+    /// Checkpoint overhead V (seconds).
+    pub v: f64,
+    /// Image download overhead T_d (seconds).
+    pub td: f64,
+    /// Peers in the job.
+    pub k: f64,
+}
+
+/// The planner's answer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanResponse {
+    /// Estimated per-peer failure rate μ̂ (Eq. 1).
+    pub mu: f64,
+    /// Optimal checkpoint rate λ* (0 when no estimate is possible).
+    pub lambda: f64,
+    /// Utilization U(λ*).
+    pub u: f64,
+    /// Expected fault-free cycles per failure at λ*.
+    pub cbar: f64,
+    /// Expected wasted work per failure at λ*.
+    pub twc: f64,
+}
+
+impl PlanResponse {
+    /// No-estimate sentinel (empty lifetime window).
+    pub const EMPTY: PlanResponse =
+        PlanResponse { mu: 0.0, lambda: 0.0, u: 0.0, cbar: 0.0, twc: 0.0 };
+
+    /// The Section 3.2.3 admission check.
+    pub fn progressing(&self) -> bool {
+        self.lambda > 0.0 && self.u > 0.0
+    }
+
+    /// Optimal interval, if planable.
+    pub fn interval(&self) -> Option<f64> {
+        (self.lambda > 0.0).then(|| 1.0 / self.lambda)
+    }
+}
+
+/// A batch planner backend.
+pub trait Planner {
+    /// Answer a batch of requests (any length — backends pad/split as
+    /// needed, responses align 1:1 with requests).
+    fn plan_batch(&mut self, reqs: &[PlanRequest]) -> Result<Vec<PlanResponse>>;
+
+    /// Backend name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Convenience single-request path.
+    fn plan_one(&mut self, req: &PlanRequest) -> Result<PlanResponse> {
+        Ok(self.plan_batch(std::slice::from_ref(req))?[0])
+    }
+}

@@ -1,0 +1,107 @@
+//! Pure-rust planner backend — the algorithmic twin of the compiled
+//! artifact (Eq. 1 MLE → closed-form λ* → Eqs. 5–10 diagnostics).
+
+use super::{PlanRequest, PlanResponse, Planner};
+use crate::error::Result;
+use crate::model::optimal::optimal_lambda;
+use crate::model::utilization::utilization;
+
+/// Always-available planner; also the cross-validation oracle for
+/// [`super::XlaPlanner`].
+#[derive(Debug, Default, Clone)]
+pub struct NativePlanner {
+    planned: u64,
+}
+
+impl NativePlanner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn planned(&self) -> u64 {
+        self.planned
+    }
+
+    fn plan(&self, req: &PlanRequest) -> PlanResponse {
+        if req.lifetimes.is_empty() {
+            return PlanResponse::EMPTY;
+        }
+        let sum: f64 = req.lifetimes.iter().sum();
+        if sum <= 0.0 {
+            return PlanResponse::EMPTY;
+        }
+        let mu = req.lifetimes.len() as f64 / sum;
+        let a = req.k * mu;
+        let Some(lambda) = optimal_lambda(a, req.v, req.td) else {
+            return PlanResponse::EMPTY;
+        };
+        if !lambda.is_finite() {
+            // V == 0 edge: checkpoint continuously; report the limit values.
+            return PlanResponse { mu, lambda: f64::INFINITY, u: 1.0, cbar: f64::INFINITY, twc: 0.0 };
+        }
+        let s = utilization(lambda, a, req.v, req.td);
+        PlanResponse { mu, lambda, u: s.u, cbar: s.cbar, twc: s.twc }
+    }
+}
+
+impl Planner for NativePlanner {
+    fn plan_batch(&mut self, reqs: &[PlanRequest]) -> Result<Vec<PlanResponse>> {
+        self.planned += reqs.len() as u64;
+        Ok(reqs.iter().map(|r| self.plan(r)).collect())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(lifetimes: Vec<f64>) -> PlanRequest {
+        PlanRequest { lifetimes, v: 20.0, td: 50.0, k: 16.0 }
+    }
+
+    #[test]
+    fn paper_point() {
+        let mut p = NativePlanner::new();
+        let r = p.plan_one(&req(vec![7200.0; 32])).unwrap();
+        assert!((r.mu - 1.0 / 7200.0).abs() < 1e-15);
+        let interval = r.interval().unwrap();
+        assert!((interval - 116.6).abs() < 1.0, "interval {interval}");
+        assert!(r.progressing());
+    }
+
+    #[test]
+    fn empty_window_is_sentinel() {
+        let mut p = NativePlanner::new();
+        let r = p.plan_one(&req(vec![])).unwrap();
+        assert_eq!(r, PlanResponse::EMPTY);
+        assert!(!r.progressing());
+        assert!(r.interval().is_none());
+    }
+
+    #[test]
+    fn batch_aligns_with_requests() {
+        let mut p = NativePlanner::new();
+        let reqs = vec![req(vec![7200.0; 8]), req(vec![]), req(vec![3600.0; 8])];
+        let out = p.plan_batch(&reqs).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!(out[0].progressing());
+        assert_eq!(out[1], PlanResponse::EMPTY);
+        // Twice the failure rate -> higher lambda.
+        assert!(out[2].lambda > out[0].lambda);
+        assert_eq!(p.planned(), 3);
+    }
+
+    #[test]
+    fn zero_v_means_continuous_checkpointing() {
+        let mut p = NativePlanner::new();
+        let r = p
+            .plan_one(&PlanRequest { lifetimes: vec![7200.0; 8], v: 0.0, td: 50.0, k: 16.0 })
+            .unwrap();
+        assert!(r.lambda.is_infinite());
+        assert!(r.progressing());
+    }
+}

@@ -1,0 +1,177 @@
+//! Dynamic batching for planner requests — the router/batcher pattern:
+//! requests queue up with tickets; a flush (triggered by hitting the batch
+//! capacity or by the caller's deadline) executes one padded batch and
+//! routes answers back by ticket.
+//!
+//! In the simulator the coordinator flushes once per replan period, so all
+//! concurrently-running jobs' decisions share one PJRT execution — batch
+//! occupancy is reported by [`PlannerService::stats`].
+
+use super::{PlanRequest, PlanResponse, Planner};
+use crate::error::Result;
+use std::collections::HashMap;
+
+/// Ticket identifying a queued request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Ticket(pub u64);
+
+/// Batching statistics.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ServiceStats {
+    pub submitted: u64,
+    pub flushes: u64,
+    pub max_batch: usize,
+    /// Mean requests per flush.
+    pub mean_batch: f64,
+}
+
+/// Queue + flush wrapper over any [`Planner`] backend.
+pub struct PlannerService<P: Planner> {
+    backend: P,
+    queue: Vec<(Ticket, PlanRequest)>,
+    ready: HashMap<Ticket, PlanResponse>,
+    next_ticket: u64,
+    /// Flush automatically when the queue reaches this size.
+    pub auto_flush_at: usize,
+    stats: ServiceStats,
+}
+
+impl<P: Planner> PlannerService<P> {
+    pub fn new(backend: P, auto_flush_at: usize) -> Self {
+        PlannerService {
+            backend,
+            queue: Vec::new(),
+            ready: HashMap::new(),
+            next_ticket: 0,
+            auto_flush_at: auto_flush_at.max(1),
+            stats: ServiceStats::default(),
+        }
+    }
+
+    /// Queue a request; flushes automatically at capacity.
+    pub fn submit(&mut self, req: PlanRequest) -> Result<Ticket> {
+        let t = Ticket(self.next_ticket);
+        self.next_ticket += 1;
+        self.queue.push((t, req));
+        self.stats.submitted += 1;
+        if self.queue.len() >= self.auto_flush_at {
+            self.flush()?;
+        }
+        Ok(t)
+    }
+
+    /// Execute everything queued.
+    pub fn flush(&mut self) -> Result<()> {
+        if self.queue.is_empty() {
+            return Ok(());
+        }
+        let (tickets, reqs): (Vec<Ticket>, Vec<PlanRequest>) =
+            self.queue.drain(..).unzip();
+        let n = reqs.len();
+        let responses = self.backend.plan_batch(&reqs)?;
+        for (t, r) in tickets.into_iter().zip(responses) {
+            self.ready.insert(t, r);
+        }
+        self.stats.flushes += 1;
+        self.stats.max_batch = self.stats.max_batch.max(n);
+        let f = self.stats.flushes as f64;
+        self.stats.mean_batch = self.stats.mean_batch * ((f - 1.0) / f) + n as f64 / f;
+        Ok(())
+    }
+
+    /// Take a completed response (None if still queued / unknown).
+    pub fn take(&mut self, t: Ticket) -> Option<PlanResponse> {
+        self.ready.remove(&t)
+    }
+
+    /// Submit-and-wait convenience: flushes the queue to answer now.
+    pub fn plan_now(&mut self, req: PlanRequest) -> Result<PlanResponse> {
+        let t = self.submit(req)?;
+        if !self.ready.contains_key(&t) {
+            self.flush()?;
+        }
+        Ok(self.ready.remove(&t).expect("flush must answer the ticket"))
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        self.stats
+    }
+
+    pub fn backend(&self) -> &P {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut P {
+        &mut self.backend
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::NativePlanner;
+
+    fn req(mtbf: f64) -> PlanRequest {
+        PlanRequest { lifetimes: vec![mtbf; 16], v: 20.0, td: 50.0, k: 16.0 }
+    }
+
+    #[test]
+    fn tickets_route_answers_back() {
+        let mut s = PlannerService::new(NativePlanner::new(), 64);
+        let t1 = s.submit(req(7200.0)).unwrap();
+        let t2 = s.submit(req(3600.0)).unwrap();
+        assert_eq!(s.pending(), 2);
+        s.flush().unwrap();
+        let r1 = s.take(t1).unwrap();
+        let r2 = s.take(t2).unwrap();
+        assert!(r2.lambda > r1.lambda);
+        assert!(s.take(t1).is_none(), "answers are taken once");
+    }
+
+    #[test]
+    fn auto_flush_at_capacity() {
+        let mut s = PlannerService::new(NativePlanner::new(), 4);
+        let mut tickets = Vec::new();
+        for _ in 0..4 {
+            tickets.push(s.submit(req(7200.0)).unwrap());
+        }
+        assert_eq!(s.pending(), 0); // flushed automatically
+        assert!(tickets.iter().all(|&t| s.ready.contains_key(&t)));
+        assert_eq!(s.stats().flushes, 1);
+        assert_eq!(s.stats().max_batch, 4);
+    }
+
+    #[test]
+    fn plan_now_round_trips() {
+        let mut s = PlannerService::new(NativePlanner::new(), 64);
+        let r = s.plan_now(req(7200.0)).unwrap();
+        assert!((r.interval().unwrap() - 116.6).abs() < 1.0);
+        assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn mean_batch_tracks_occupancy() {
+        let mut s = PlannerService::new(NativePlanner::new(), 100);
+        for _ in 0..3 {
+            s.submit(req(7200.0)).unwrap();
+        }
+        s.flush().unwrap();
+        s.submit(req(7200.0)).unwrap();
+        s.flush().unwrap();
+        let st = s.stats();
+        assert_eq!(st.flushes, 2);
+        assert!((st.mean_batch - 2.0).abs() < 1e-12);
+        assert_eq!(st.max_batch, 3);
+    }
+
+    #[test]
+    fn empty_flush_is_noop() {
+        let mut s = PlannerService::new(NativePlanner::new(), 4);
+        s.flush().unwrap();
+        assert_eq!(s.stats().flushes, 0);
+    }
+}

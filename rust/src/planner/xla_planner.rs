@@ -1,0 +1,137 @@
+//! PJRT-backed planner: executes the AOT-compiled L2 graph
+//! (`artifacts/planner.hlo.txt`, lowered from `python/compile/model.py`
+//! with the Pallas Lambert-W / MLE kernels inside).
+//!
+//! The artifact has static shapes `[B, W]` (B=256 requests, W=64 lifetime
+//! window); arbitrary batch sizes are padded to B and windows clipped to
+//! the most recent W observations (matching the Eq. 1 windowed MLE).
+
+use super::{PlanRequest, PlanResponse, Planner};
+use crate::error::{Error, Result};
+use crate::runtime::{LoadedModule, PjrtRuntime};
+
+/// Planner backed by the compiled artifact.
+pub struct XlaPlanner {
+    module: LoadedModule,
+    b: usize,
+    w: usize,
+    /// Reused input staging buffers (hot path: no per-call allocation).
+    lifetimes: Vec<f64>,
+    mask: Vec<f64>,
+    v: Vec<f64>,
+    td: Vec<f64>,
+    k: Vec<f64>,
+    planned: u64,
+    batches: u64,
+}
+
+impl XlaPlanner {
+    /// Load `planner.hlo.txt` from the runtime's artifact dir and compile.
+    pub fn new(rt: &PjrtRuntime) -> Result<Self> {
+        let module = rt.load("planner")?;
+        let (b, w) = (module.meta.batch, module.meta.window);
+        if b == 0 || w == 0 {
+            return Err(Error::Runtime("planner meta missing batch/window".into()));
+        }
+        Ok(XlaPlanner {
+            module,
+            b,
+            w,
+            lifetimes: vec![0.0; b * w],
+            mask: vec![0.0; b * w],
+            v: vec![0.0; b],
+            td: vec![0.0; b],
+            k: vec![0.0; b],
+            planned: 0,
+            batches: 0,
+        })
+    }
+
+    /// Compiled batch capacity.
+    pub fn batch_capacity(&self) -> usize {
+        self.b
+    }
+
+    /// Lifetime-window capacity.
+    pub fn window_capacity(&self) -> usize {
+        self.w
+    }
+
+    pub fn planned(&self) -> u64 {
+        self.planned
+    }
+
+    /// PJRT executions performed (each handles up to `b` requests).
+    pub fn batches_executed(&self) -> u64 {
+        self.batches
+    }
+
+    fn run_chunk(&mut self, chunk: &[PlanRequest], out: &mut Vec<PlanResponse>) -> Result<()> {
+        debug_assert!(chunk.len() <= self.b);
+        self.lifetimes.iter_mut().for_each(|x| *x = 0.0);
+        self.mask.iter_mut().for_each(|x| *x = 0.0);
+        for (i, req) in chunk.iter().enumerate() {
+            // Most recent W observations (the Eq. 1 window).
+            let take = req.lifetimes.len().min(self.w);
+            let src = &req.lifetimes[req.lifetimes.len() - take..];
+            let row = &mut self.lifetimes[i * self.w..i * self.w + take];
+            row.copy_from_slice(src);
+            self.mask[i * self.w..i * self.w + take].iter_mut().for_each(|m| *m = 1.0);
+            self.v[i] = req.v;
+            self.td[i] = req.td;
+            self.k[i] = req.k;
+        }
+        // Padding rows: harmless defaults (mask all-zero -> EMPTY sentinel).
+        for i in chunk.len()..self.b {
+            self.v[i] = 1.0;
+            self.td[i] = 1.0;
+            self.k[i] = 1.0;
+        }
+        let bw = [self.b as i64, self.w as i64];
+        let b1 = [self.b as i64];
+        let outputs = self.module.execute_f64(&[
+            (&self.lifetimes, &bw),
+            (&self.mask, &bw),
+            (&self.v, &b1),
+            (&self.td, &b1),
+            (&self.k, &b1),
+        ])?;
+        if outputs.len() != 5 {
+            return Err(Error::Runtime(format!(
+                "planner artifact returned {} outputs, want 5",
+                outputs.len()
+            )));
+        }
+        let (mu, lam, u, cbar, twc) =
+            (&outputs[0], &outputs[1], &outputs[2], &outputs[3], &outputs[4]);
+        for i in 0..chunk.len() {
+            out.push(PlanResponse {
+                mu: mu[i],
+                lambda: lam[i],
+                u: u[i],
+                cbar: cbar[i],
+                twc: twc[i],
+            });
+        }
+        self.batches += 1;
+        Ok(())
+    }
+}
+
+impl Planner for XlaPlanner {
+    fn plan_batch(&mut self, reqs: &[PlanRequest]) -> Result<Vec<PlanResponse>> {
+        let mut out = Vec::with_capacity(reqs.len());
+        for chunk in reqs.chunks(self.b) {
+            self.run_chunk(chunk, &mut out)?;
+        }
+        self.planned += reqs.len() as u64;
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+// Execution tests live in rust/tests/planner_runtime.rs and
+// rust/tests/cross_validation.rs (they need `make artifacts` + PJRT).

@@ -1,0 +1,299 @@
+//! Checkpoint policies: the paper's adaptive scheme plus the baselines it
+//! is evaluated against.
+//!
+//! A policy answers one question whenever the coordinator (re)plans:
+//! *what checkpoint interval should this job use right now?*
+//!
+//! * [`FixedPolicy`]    — the naive fixed interval T (the paper's baseline,
+//!   what P2P-DVM \[16\] shipped).
+//! * [`AdaptivePolicy`] — the contribution: Eq. 1 estimates + closed-form
+//!   λ*, through any [`crate::planner::Planner`] backend.
+//! * [`OraclePolicy`]   — adaptive with the *true* failure rate (upper
+//!   bound on what estimation quality can buy).
+//! * [`NeverPolicy`]    — no checkpoints (sanity lower bound).
+
+use crate::error::Result;
+use crate::planner::{PlanRequest, Planner};
+
+/// Everything a policy may look at when deciding.
+#[derive(Debug, Clone)]
+pub struct PolicyCtx<'a> {
+    /// Current sim time (seconds).
+    pub now: f64,
+    /// Peers in the job.
+    pub k: f64,
+    /// Current checkpoint-overhead estimate V̂ (seconds).
+    pub v: f64,
+    /// Current download-overhead estimate T̂_d (seconds).
+    pub td: f64,
+    /// The estimator's lifetime window (most recent last).
+    pub lifetimes: &'a [f64],
+    /// True per-peer failure rate — ONLY the oracle may read this.
+    pub true_rate: Option<f64>,
+}
+
+/// A decision: checkpoint every `interval` seconds (None = never).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    pub interval: Option<f64>,
+    /// Planner diagnostics if the policy ran the model.
+    pub u: Option<f64>,
+    /// Admission signal (Section 3.2.3): false = U hit 0, k too large.
+    pub progressing: bool,
+}
+
+impl Decision {
+    pub fn fixed(interval: f64) -> Self {
+        Decision { interval: Some(interval), u: None, progressing: true }
+    }
+
+    pub fn never() -> Self {
+        Decision { interval: None, u: None, progressing: true }
+    }
+}
+
+/// The policy interface.
+pub trait CheckpointPolicy {
+    /// (Re)compute the checkpoint interval.
+    fn decide(&mut self, ctx: &PolicyCtx) -> Result<Decision>;
+
+    /// Name for reports.
+    fn name(&self) -> String;
+
+    /// Whether the policy benefits from periodic re-planning (adaptive
+    /// ones do; fixed does not).
+    fn wants_replanning(&self) -> bool {
+        false
+    }
+}
+
+// --------------------------------------------------------------- baselines
+
+/// Checkpoint every `interval` seconds, forever.
+#[derive(Debug, Clone)]
+pub struct FixedPolicy {
+    pub interval: f64,
+}
+
+impl FixedPolicy {
+    pub fn new(interval: f64) -> Self {
+        assert!(interval > 0.0);
+        FixedPolicy { interval }
+    }
+}
+
+impl CheckpointPolicy for FixedPolicy {
+    fn decide(&mut self, _ctx: &PolicyCtx) -> Result<Decision> {
+        Ok(Decision::fixed(self.interval))
+    }
+
+    fn name(&self) -> String {
+        format!("fixed({}s)", self.interval)
+    }
+}
+
+/// Never checkpoint.
+#[derive(Debug, Clone, Default)]
+pub struct NeverPolicy;
+
+impl CheckpointPolicy for NeverPolicy {
+    fn decide(&mut self, _ctx: &PolicyCtx) -> Result<Decision> {
+        Ok(Decision::never())
+    }
+
+    fn name(&self) -> String {
+        "never".into()
+    }
+}
+
+// ------------------------------------------------------------ the scheme
+
+/// The paper's adaptive policy over any planner backend.
+pub struct AdaptivePolicy {
+    planner: Box<dyn Planner>,
+    /// Fallback interval while no failure observations exist yet.
+    pub bootstrap_interval: f64,
+    /// Clamp for the planned interval (guards absurd estimates early on).
+    pub min_interval: f64,
+    pub max_interval: f64,
+    last_u: Option<f64>,
+}
+
+impl AdaptivePolicy {
+    pub fn new(planner: Box<dyn Planner>) -> Self {
+        AdaptivePolicy {
+            planner,
+            bootstrap_interval: 300.0,
+            min_interval: 5.0,
+            max_interval: 4.0 * 3600.0,
+            last_u: None,
+        }
+    }
+
+    /// Most recent U(λ*) the policy computed.
+    pub fn last_utilization(&self) -> Option<f64> {
+        self.last_u
+    }
+}
+
+impl CheckpointPolicy for AdaptivePolicy {
+    fn decide(&mut self, ctx: &PolicyCtx) -> Result<Decision> {
+        if ctx.lifetimes.is_empty() {
+            // Section 3.1.3 spirit: before any estimate exists, run a
+            // conservative bootstrap interval.
+            return Ok(Decision::fixed(self.bootstrap_interval));
+        }
+        let resp = self.planner.plan_one(&PlanRequest {
+            lifetimes: ctx.lifetimes.to_vec(),
+            v: ctx.v,
+            td: ctx.td,
+            k: ctx.k,
+        })?;
+        self.last_u = Some(resp.u);
+        if resp.lambda <= 0.0 {
+            return Ok(Decision::fixed(self.bootstrap_interval));
+        }
+        let interval = if resp.lambda.is_finite() {
+            (1.0 / resp.lambda).clamp(self.min_interval, self.max_interval)
+        } else {
+            self.min_interval
+        };
+        Ok(Decision {
+            interval: Some(interval),
+            u: Some(resp.u),
+            progressing: resp.progressing(),
+        })
+    }
+
+    fn name(&self) -> String {
+        format!("adaptive[{}]", self.planner.name())
+    }
+
+    fn wants_replanning(&self) -> bool {
+        true
+    }
+}
+
+/// Adaptive with the true rate — skips estimation entirely.
+pub struct OraclePolicy {
+    pub min_interval: f64,
+    pub max_interval: f64,
+}
+
+impl Default for OraclePolicy {
+    fn default() -> Self {
+        OraclePolicy { min_interval: 5.0, max_interval: 4.0 * 3600.0 }
+    }
+}
+
+impl CheckpointPolicy for OraclePolicy {
+    fn decide(&mut self, ctx: &PolicyCtx) -> Result<Decision> {
+        let mu = ctx
+            .true_rate
+            .ok_or_else(|| crate::error::Error::Planner("oracle needs true_rate".into()))?;
+        let a = ctx.k * mu;
+        match crate::model::optimal::optimal_lambda_checked(a, ctx.v, ctx.td) {
+            Some(plan) if plan.lambda.is_finite() => Ok(Decision {
+                interval: Some(plan.interval.clamp(self.min_interval, self.max_interval)),
+                u: Some(plan.stats.u),
+                progressing: plan.progressing,
+            }),
+            Some(_) => Ok(Decision {
+                interval: Some(self.min_interval),
+                u: Some(1.0),
+                progressing: true,
+            }),
+            None => Ok(Decision::never()),
+        }
+    }
+
+    fn name(&self) -> String {
+        "oracle".into()
+    }
+
+    fn wants_replanning(&self) -> bool {
+        true
+    }
+}
+
+/// Build a policy from its config spec (planner backend injected for the
+/// adaptive case).
+pub fn from_spec(
+    spec: &crate::config::PolicySpec,
+    planner: impl FnOnce() -> Box<dyn Planner>,
+) -> Box<dyn CheckpointPolicy> {
+    match spec {
+        crate::config::PolicySpec::Fixed { interval } => Box::new(FixedPolicy::new(*interval)),
+        crate::config::PolicySpec::Adaptive => Box::new(AdaptivePolicy::new(planner())),
+        crate::config::PolicySpec::Oracle => Box::new(OraclePolicy::default()),
+        crate::config::PolicySpec::Never => Box::new(NeverPolicy),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::NativePlanner;
+
+    fn ctx<'a>(lifetimes: &'a [f64], true_rate: Option<f64>) -> PolicyCtx<'a> {
+        PolicyCtx { now: 0.0, k: 16.0, v: 20.0, td: 50.0, lifetimes, true_rate }
+    }
+
+    #[test]
+    fn fixed_always_same() {
+        let mut p = FixedPolicy::new(300.0);
+        let d = p.decide(&ctx(&[1.0], None)).unwrap();
+        assert_eq!(d.interval, Some(300.0));
+        assert!(!p.wants_replanning());
+    }
+
+    #[test]
+    fn never_never() {
+        let mut p = NeverPolicy;
+        assert_eq!(p.decide(&ctx(&[], None)).unwrap().interval, None);
+    }
+
+    #[test]
+    fn adaptive_bootstraps_then_plans() {
+        let mut p = AdaptivePolicy::new(Box::new(NativePlanner::new()));
+        let d0 = p.decide(&ctx(&[], None)).unwrap();
+        assert_eq!(d0.interval, Some(300.0));
+        let window = [7200.0; 32];
+        let d1 = p.decide(&ctx(&window, None)).unwrap();
+        let i1 = d1.interval.unwrap();
+        assert!((i1 - 116.6).abs() < 1.0, "interval {i1}");
+        assert!(d1.progressing);
+        assert!(p.last_utilization().unwrap() > 0.5);
+        assert!(p.wants_replanning());
+    }
+
+    #[test]
+    fn adaptive_clamps_insane_estimates() {
+        let mut p = AdaptivePolicy::new(Box::new(NativePlanner::new()));
+        // Absurdly short lifetimes -> tiny interval, clamped at min.
+        let window = [0.001; 32];
+        let d = p.decide(&ctx(&window, None)).unwrap();
+        assert_eq!(d.interval, Some(p.min_interval));
+    }
+
+    #[test]
+    fn oracle_matches_closed_form() {
+        let mut p = OraclePolicy::default();
+        let d = p.decide(&ctx(&[], Some(1.0 / 7200.0))).unwrap();
+        assert!((d.interval.unwrap() - 116.6).abs() < 1.0);
+        assert!(p.decide(&ctx(&[], None)).is_err());
+    }
+
+    #[test]
+    fn from_spec_builds_right_kinds() {
+        use crate::config::PolicySpec;
+        let mk = || -> Box<dyn Planner> { Box::new(NativePlanner::new()) };
+        assert_eq!(from_spec(&PolicySpec::Fixed { interval: 60.0 }, mk).name(), "fixed(60s)");
+        let mk = || -> Box<dyn Planner> { Box::new(NativePlanner::new()) };
+        assert_eq!(from_spec(&PolicySpec::Adaptive, mk).name(), "adaptive[native]");
+        let mk = || -> Box<dyn Planner> { Box::new(NativePlanner::new()) };
+        assert_eq!(from_spec(&PolicySpec::Oracle, mk).name(), "oracle");
+        let mk = || -> Box<dyn Planner> { Box::new(NativePlanner::new()) };
+        assert_eq!(from_spec(&PolicySpec::Never, mk).name(), "never");
+    }
+}

@@ -1,0 +1,174 @@
+//! PJRT runtime: load AOT artifacts (HLO text lowered by
+//! `python/compile/aot.py`), compile them once on the CPU PJRT client, and
+//! execute them from the coordinator's hot path.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 emits HloModuleProtos with 64-bit
+//! instruction ids which the crate's xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see DESIGN.md and python/compile/aot.py).
+
+use crate::error::{Error, Result};
+use crate::util::json::{parse as json_parse, Json};
+use std::path::{Path, PathBuf};
+
+/// Metadata written next to each artifact by aot.py.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    /// Compiled batch dimension B.
+    pub batch: usize,
+    /// Lifetime-window dimension W (planner artifact only).
+    pub window: usize,
+    /// Rate-grid dimension G (usurface artifact only).
+    pub grid: usize,
+    pub dtype: String,
+}
+
+impl ArtifactMeta {
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = json_parse(&text).map_err(Error::Runtime)?;
+        let get = |k: &str| j.get(k).and_then(Json::as_usize).unwrap_or(0);
+        Ok(ArtifactMeta {
+            batch: get("batch"),
+            window: get("window"),
+            grid: get("grid"),
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .unwrap_or("f64")
+                .to_string(),
+        })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct LoadedModule {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+    pub name: String,
+    /// Executions performed (perf accounting).
+    pub executions: std::cell::Cell<u64>,
+}
+
+impl LoadedModule {
+    /// Execute with f64 inputs given as (flat data, dims) pairs; returns
+    /// the flattened f64 outputs of the result tuple.
+    pub fn execute_f64(&self, inputs: &[(&[f64], &[i64])]) -> Result<Vec<Vec<f64>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let expect: i64 = dims.iter().product();
+            if expect as usize != data.len() {
+                return Err(Error::Runtime(format!(
+                    "input shape {dims:?} wants {expect} elements, got {}",
+                    data.len()
+                )));
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = if dims.len() == 1 { lit } else { lit.reshape(dims)? };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.executions.set(self.executions.get() + 1);
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f64>()?);
+        }
+        Ok(out)
+    }
+}
+
+/// The PJRT client + artifact loader (compile cache keyed by path).
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// CPU client over the default artifacts directory (`artifacts/` next
+    /// to the workspace root, overridable with `P2PCP_ARTIFACTS`).
+    pub fn cpu() -> Result<Self> {
+        Self::cpu_with_dir(default_artifacts_dir())
+    }
+
+    pub fn cpu_with_dir<P: Into<PathBuf>>(dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(PjrtRuntime { client, artifacts_dir: dir.into() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<name>.hlo.txt` + `<name>.meta.json` and compile.
+    pub fn load(&self, name: &str) -> Result<LoadedModule> {
+        let hlo = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let meta_path = self.artifacts_dir.join(format!("{name}.meta.json"));
+        if !hlo.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {} not found — run `make artifacts`",
+                hlo.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&hlo)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let meta = ArtifactMeta::from_json_file(&meta_path)?;
+        Ok(LoadedModule {
+            exe,
+            meta,
+            name: name.to_string(),
+            executions: std::cell::Cell::new(0),
+        })
+    }
+}
+
+/// Locate `artifacts/`: env override, else walk up from cwd.
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("P2PCP_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("planner.hlo.txt").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses() {
+        let dir = std::env::temp_dir().join("p2pcp_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.json");
+        std::fs::write(&p, r#"{"batch": 256, "window": 64, "dtype": "f64"}"#).unwrap();
+        let m = ArtifactMeta::from_json_file(&p).unwrap();
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.window, 64);
+        assert_eq!(m.grid, 0);
+        assert_eq!(m.dtype, "f64");
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clear_error() {
+        let rt = match PjrtRuntime::cpu_with_dir("/nonexistent-dir") {
+            Ok(rt) => rt,
+            Err(_) => return, // no PJRT on this host: nothing to check
+        };
+        let err = match rt.load("planner") {
+            Err(e) => e,
+            Ok(_) => panic!("load from /nonexistent-dir must fail"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    // Execution against the real artifact is covered by
+    // rust/tests/planner_runtime.rs (integration; requires `make artifacts`).
+}

@@ -1,0 +1,89 @@
+//! Event queue primitives: scheduled entries, stable ordering, cancellation
+//! tokens.
+
+use super::time::SimTime;
+use std::cmp::Ordering;
+
+/// Handle for a scheduled event; used to cancel it before it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EventId(pub u64);
+
+/// Heap entry. Ordered by `(time, seq)` so same-time events fire in
+/// scheduling order — deterministic across runs.
+#[derive(Debug, Clone)]
+pub struct Event<E> {
+    pub time: SimTime,
+    pub id: EventId,
+    pub payload: E,
+}
+
+/// The domain payload for the integrated volunteer-computing world.
+/// Subsystems that need their own loop (unit tests, micro-benches) can use
+/// `SimEngine` with any payload type instead.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// A new peer arrives in the overlay.
+    PeerJoin { peer: usize },
+    /// Peer departs / fails (session end). In this paper departure == failure.
+    PeerFail { peer: usize },
+    /// Periodic overlay stabilization tick on a peer.
+    Stabilize { peer: usize },
+    /// A routed message arrives at `dst`.
+    Deliver { dst: usize, msg_id: u64 },
+    /// Job-level timer (checkpoint due, calibration window end, ...).
+    JobTimer { job: usize, what: JobTimerKind },
+    /// The coordinator detected (via stabilization) that a job member died.
+    MemberFailDetected { job: usize, peer: usize },
+    /// A checkpoint image upload finished for `job`.
+    UploadDone { job: usize, seq: u64 },
+    /// A checkpoint image download (restart) finished for `job`.
+    DownloadDone { job: usize, seq: u64 },
+    /// Job completed all its fault-free work.
+    JobDone { job: usize },
+}
+
+/// What a job timer means when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobTimerKind {
+    /// Time to take the next coordinated checkpoint.
+    CheckpointDue,
+    /// End of the V-estimation calibration phase (Eq. 2).
+    CalibrationEnd,
+    /// Periodic re-planning (adaptive policy re-evaluates lambda*).
+    Replan,
+}
+
+impl<E> PartialEq for Event<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.id == other.id
+    }
+}
+
+impl<E> Eq for Event<E> {}
+
+impl<E> PartialOrd for Event<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Event<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; engine wraps in Reverse for min-order.
+        (self.time, self.id).cmp(&(other.time, other.id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_time_then_seq() {
+        let a = Event { time: SimTime(5), id: EventId(1), payload: () };
+        let b = Event { time: SimTime(5), id: EventId(2), payload: () };
+        let c = Event { time: SimTime(4), id: EventId(9), payload: () };
+        assert!(a < b);
+        assert!(c < a);
+    }
+}

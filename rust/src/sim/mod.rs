@@ -1,0 +1,15 @@
+//! Discrete-event simulation core.
+//!
+//! The engine is a classic calendar loop over a binary heap keyed by
+//! [`time::SimTime`] (integer microseconds — deterministic ordering, no
+//! float drift). Everything in the framework — churn, overlay maintenance,
+//! message delivery, checkpoint uploads, job progress — is an [`event`]
+//! processed by a handler registered with the [`engine::SimEngine`].
+
+pub mod engine;
+pub mod event;
+pub mod time;
+
+pub use engine::SimEngine;
+pub use event::{Event, EventId, EventKind};
+pub use time::{SimDuration, SimTime};

@@ -1,0 +1,129 @@
+//! Simulated time: integer microseconds.
+//!
+//! Integer ticks keep the event heap totally ordered across platforms and
+//! make seed-for-seed reproducibility exact — float time accumulates
+//! representation drift when intervals are summed in different orders.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Sub};
+
+/// A point in simulated time (microseconds since simulation start).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    /// Far-future sentinel (~584 thousand years).
+    pub const NEVER: SimTime = SimTime(u64::MAX);
+
+    /// Construct from seconds (saturating; negative clamps to zero).
+    pub fn from_secs_f64(s: f64) -> SimTime {
+        if s <= 0.0 {
+            SimTime(0)
+        } else {
+            SimTime((s * 1e6).round().min(u64::MAX as f64 - 1.0) as u64)
+        }
+    }
+
+    pub fn from_micros(us: u64) -> SimTime {
+        SimTime(us)
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+
+    pub fn as_micros(self) -> u64 {
+        self.0
+    }
+
+    /// Saturating difference in seconds.
+    pub fn secs_since(self, earlier: SimTime) -> f64 {
+        (self.0.saturating_sub(earlier.0)) as f64 / 1e6
+    }
+}
+
+/// A span of simulated time (microseconds).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimDuration(pub u64);
+
+impl SimDuration {
+    pub const ZERO: SimDuration = SimDuration(0);
+
+    pub fn from_secs_f64(s: f64) -> SimDuration {
+        if s <= 0.0 {
+            SimDuration(0)
+        } else {
+            SimDuration((s * 1e6).round().min(u64::MAX as f64 - 1.0) as u64)
+        }
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / 1e6
+    }
+}
+
+impl Add<SimDuration> for SimTime {
+    type Output = SimTime;
+    fn add(self, d: SimDuration) -> SimTime {
+        SimTime(self.0.saturating_add(d.0))
+    }
+}
+
+impl AddAssign<SimDuration> for SimTime {
+    fn add_assign(&mut self, d: SimDuration) {
+        self.0 = self.0.saturating_add(d.0);
+    }
+}
+
+impl Sub<SimTime> for SimTime {
+    type Output = SimDuration;
+    fn sub(self, rhs: SimTime) -> SimDuration {
+        SimDuration(self.0.saturating_sub(rhs.0))
+    }
+}
+
+impl Add<SimDuration> for SimDuration {
+    type Output = SimDuration;
+    fn add(self, d: SimDuration) -> SimDuration {
+        SimDuration(self.0.saturating_add(d.0))
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:.3}s", self.as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_secs() {
+        let t = SimTime::from_secs_f64(7200.5);
+        assert!((t.as_secs_f64() - 7200.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ordering_and_arith() {
+        let a = SimTime::from_secs_f64(1.0);
+        let b = a + SimDuration::from_secs_f64(2.0);
+        assert!(b > a);
+        assert!((b.secs_since(a) - 2.0).abs() < 1e-9);
+        assert_eq!((a - b).0, 0); // saturating
+    }
+
+    #[test]
+    fn negative_clamps() {
+        assert_eq!(SimTime::from_secs_f64(-5.0), SimTime::ZERO);
+        assert_eq!(SimDuration::from_secs_f64(f64::NEG_INFINITY), SimDuration::ZERO);
+    }
+
+    #[test]
+    fn never_is_max() {
+        assert!(SimTime::NEVER > SimTime::from_secs_f64(1e12));
+        assert_eq!(SimTime::NEVER + SimDuration(1), SimTime::NEVER); // saturates
+    }
+}

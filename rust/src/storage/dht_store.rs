@@ -1,0 +1,254 @@
+//! The replicated image store: placement on ring successors, upload /
+//! download timing, replica loss under churn, garbage collection.
+
+use super::image::CheckpointImage;
+use crate::net::bandwidth::LinkSpeed;
+use crate::net::overlay::{Overlay, PeerId};
+use std::collections::HashMap;
+
+/// Replication degree for checkpoint images.
+pub const REPLICAS: usize = 3;
+
+/// Where an image's replicas live.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub holders: Vec<PeerId>,
+}
+
+/// Distributed store state: images + their current holders.
+#[derive(Debug, Default)]
+pub struct DhtStore {
+    /// (job, seq) -> (image, placement)
+    images: HashMap<(usize, u64), (CheckpointImage, Placement)>,
+    /// Bytes stored per peer (diagnostics / GC pressure).
+    stored_bytes: HashMap<PeerId, f64>,
+}
+
+impl DhtStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Place an image on the `REPLICAS` online successors of its key.
+    /// Returns the placement, or `None` if the overlay is too empty.
+    pub fn put(&mut self, overlay: &Overlay, img: CheckpointImage) -> Option<Placement> {
+        let owner = overlay.owner_of(img.key())?;
+        let mut holders = vec![owner];
+        holders.extend(overlay.successors(owner, REPLICAS - 1));
+        holders.truncate(REPLICAS);
+        if holders.is_empty() {
+            return None;
+        }
+        for &h in &holders {
+            *self.stored_bytes.entry(h).or_insert(0.0) += img.bytes;
+        }
+        let placement = Placement { holders };
+        self.images.insert((img.job, img.seq), (img, placement.clone()));
+        Some(placement)
+    }
+
+    /// Fetch an image if at least one replica holder is still online and
+    /// the integrity tag verifies.
+    pub fn get(&self, overlay: &Overlay, job: usize, seq: u64) -> Option<&CheckpointImage> {
+        let (img, placement) = self.images.get(&(job, seq))?;
+        let alive = placement.holders.iter().any(|&h| overlay.is_online(h));
+        if alive && img.verify() {
+            Some(img)
+        } else {
+            None
+        }
+    }
+
+    /// Latest retrievable checkpoint for a job (highest seq with a live,
+    /// verifying replica).
+    pub fn latest(&self, overlay: &Overlay, job: usize) -> Option<&CheckpointImage> {
+        self.images
+            .iter()
+            .filter(|&(&(j, seq), _)| j == job && self.get(overlay, j, seq).is_some())
+            .max_by_key(|&(&(_, seq), _)| seq)
+            .map(|(_, (img, _))| img)
+    }
+
+    /// Number of currently-online replicas of an image.
+    pub fn live_replicas(&self, overlay: &Overlay, job: usize, seq: u64) -> usize {
+        self.images
+            .get(&(job, seq))
+            .map(|(_, p)| p.holders.iter().filter(|&&h| overlay.is_online(h)).count())
+            .unwrap_or(0)
+    }
+
+    /// Re-replicate an image whose holder set decayed (maintenance task).
+    /// Returns how many new holders were added.
+    pub fn repair(&mut self, overlay: &Overlay, job: usize, seq: u64) -> usize {
+        let Some((img, placement)) = self.images.get(&(job, seq)) else {
+            return 0;
+        };
+        let live: Vec<PeerId> =
+            placement.holders.iter().copied().filter(|&h| overlay.is_online(h)).collect();
+        if live.len() >= REPLICAS || live.is_empty() {
+            return 0;
+        }
+        let bytes = img.bytes;
+        let owner = match overlay.owner_of(img.key()) {
+            Some(o) => o,
+            None => return 0,
+        };
+        let mut holders = live.clone();
+        for cand in std::iter::once(owner).chain(overlay.successors(owner, REPLICAS * 2)) {
+            if holders.len() >= REPLICAS {
+                break;
+            }
+            if !holders.contains(&cand) {
+                holders.push(cand);
+            }
+        }
+        let added = holders.len() - live.len();
+        for &h in &holders {
+            if !live.contains(&h) {
+                *self.stored_bytes.entry(h).or_insert(0.0) += bytes;
+            }
+        }
+        self.images.get_mut(&(job, seq)).unwrap().1 = Placement { holders };
+        added
+    }
+
+    /// Drop all checkpoints of `job` with `seq < keep_from` (GC after a
+    /// newer checkpoint commits).
+    pub fn gc(&mut self, job: usize, keep_from: u64) -> usize {
+        let victims: Vec<(usize, u64)> = self
+            .images
+            .keys()
+            .filter(|&&(j, s)| j == job && s < keep_from)
+            .copied()
+            .collect();
+        for key in &victims {
+            if let Some((img, placement)) = self.images.remove(key) {
+                for h in placement.holders {
+                    if let Some(b) = self.stored_bytes.get_mut(&h) {
+                        *b = (*b - img.bytes).max(0.0);
+                    }
+                }
+            }
+        }
+        victims.len()
+    }
+
+    pub fn stored_bytes(&self, p: PeerId) -> f64 {
+        self.stored_bytes.get(&p).copied().unwrap_or(0.0)
+    }
+
+    pub fn image_count(&self) -> usize {
+        self.images.len()
+    }
+}
+
+/// Upload timing: the image is pushed by the checkpointing peer over its
+/// upstream link to each replica holder sequentially-pipelined — the
+/// dominant term is `bytes / up_bps` (pipelining overlaps replica pushes).
+pub fn upload_time(img_bytes: f64, uploader: LinkSpeed) -> f64 {
+    uploader.upload_time(img_bytes)
+}
+
+/// Download timing on restart: every surviving rank pulls the image over
+/// its downstream link; the job resumes when the **slowest** rank is done
+/// (Section 4.2's T_d definition).
+pub fn download_time(img_bytes: f64, downloaders: &[LinkSpeed]) -> f64 {
+    downloaders
+        .iter()
+        .map(|l| l.download_time(img_bytes))
+        .fold(0.0f64, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn mk(n: usize) -> (Overlay, DhtStore, Pcg64) {
+        let mut rng = Pcg64::new(33, 0);
+        let o = Overlay::new(n, &mut rng);
+        (o, DhtStore::new(), rng)
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let (o, mut s, _) = mk(20);
+        let img = CheckpointImage::new(1, 1, 100.0, 5e6);
+        let p = s.put(&o, img.clone()).unwrap();
+        assert_eq!(p.holders.len(), REPLICAS);
+        let got = s.get(&o, 1, 1).unwrap();
+        assert_eq!(got, &img);
+    }
+
+    #[test]
+    fn survives_partial_holder_loss() {
+        let (mut o, mut s, _) = mk(20);
+        let img = CheckpointImage::new(1, 1, 100.0, 5e6);
+        let p = s.put(&o, img).unwrap();
+        o.depart(p.holders[0], 1.0);
+        o.depart(p.holders[1], 2.0);
+        assert!(s.get(&o, 1, 1).is_some());
+        assert_eq!(s.live_replicas(&o, 1, 1), 1);
+    }
+
+    #[test]
+    fn lost_when_all_holders_die() {
+        let (mut o, mut s, _) = mk(20);
+        let p = s.put(&o, CheckpointImage::new(1, 1, 100.0, 5e6)).unwrap();
+        for &h in &p.holders {
+            o.depart(h, 1.0);
+        }
+        assert!(s.get(&o, 1, 1).is_none());
+        assert!(s.latest(&o, 1).is_none());
+    }
+
+    #[test]
+    fn latest_prefers_highest_live_seq() {
+        let (mut o, mut s, _) = mk(30);
+        s.put(&o, CheckpointImage::new(1, 1, 100.0, 5e6)).unwrap();
+        s.put(&o, CheckpointImage::new(1, 2, 200.0, 5e6)).unwrap();
+        let p3 = s.put(&o, CheckpointImage::new(1, 3, 300.0, 5e6)).unwrap();
+        for &h in &p3.holders {
+            o.depart(h, 1.0);
+        }
+        // seq 3 unreachable -> latest is seq 2 (unless it shared holders).
+        let latest = s.latest(&o, 1).unwrap();
+        assert!(latest.seq <= 2 || s.live_replicas(&o, 1, 3) > 0);
+        assert!(latest.progress > 0.0);
+    }
+
+    #[test]
+    fn repair_restores_replication() {
+        let (mut o, mut s, _) = mk(30);
+        let p = s.put(&o, CheckpointImage::new(2, 5, 1.0, 1e6)).unwrap();
+        o.depart(p.holders[0], 1.0);
+        let before = s.live_replicas(&o, 2, 5);
+        let added = s.repair(&o, 2, 5);
+        assert!(added > 0);
+        assert!(s.live_replicas(&o, 2, 5) > before);
+        assert_eq!(s.live_replicas(&o, 2, 5), REPLICAS);
+    }
+
+    #[test]
+    fn gc_reclaims_space() {
+        let (o, mut s, _) = mk(30);
+        for seq in 1..=5 {
+            s.put(&o, CheckpointImage::new(1, seq, seq as f64, 1e6)).unwrap();
+        }
+        assert_eq!(s.image_count(), 5);
+        let dropped = s.gc(1, 4);
+        assert_eq!(dropped, 3);
+        assert_eq!(s.image_count(), 2);
+        assert!(s.get(&o, 1, 4).is_some());
+        assert!(s.get(&o, 1, 2).is_none());
+    }
+
+    #[test]
+    fn timing_uses_slowest_downloader() {
+        let fast = LinkSpeed { up_bps: 1e6, down_bps: 1e7 };
+        let slow = LinkSpeed { up_bps: 1e5, down_bps: 1e5 };
+        let t = download_time(1e6, &[fast, slow]);
+        assert!((t - 10.0).abs() < 1e-9);
+        assert!((upload_time(1e6, fast) - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,110 @@
+//! Checkpoint images: identity, size model, integrity.
+
+/// A captured global checkpoint of a job.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointImage {
+    /// Owning job.
+    pub job: usize,
+    /// Monotone checkpoint sequence number within the job.
+    pub seq: u64,
+    /// Simulated time the snapshot captured (job progress point, seconds
+    /// of fault-free work completed).
+    pub progress: f64,
+    /// Compressed image size in bytes (sum over ranks).
+    pub bytes: f64,
+    /// Simple integrity tag (fletcher over the logical fields) — restarts
+    /// verify it, failure-injection tests corrupt it.
+    pub tag: u64,
+}
+
+impl CheckpointImage {
+    pub fn new(job: usize, seq: u64, progress: f64, bytes: f64) -> Self {
+        let mut img = CheckpointImage { job, seq, progress, bytes, tag: 0 };
+        img.tag = img.compute_tag();
+        img
+    }
+
+    /// Integrity tag over the logical content.
+    pub fn compute_tag(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        };
+        mix(self.job as u64);
+        mix(self.seq);
+        mix(self.progress.to_bits());
+        mix(self.bytes.to_bits());
+        h
+    }
+
+    pub fn verify(&self) -> bool {
+        self.tag == self.compute_tag()
+    }
+
+    /// DHT key for this image.
+    pub fn key(&self) -> u64 {
+        let mut h: u64 = 0x9e37_79b9_7f4a_7c15;
+        h ^= (self.job as u64).wrapping_mul(0xff51_afd7_ed55_8ccd);
+        h = h.rotate_left(31);
+        h ^= self.seq.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+        h.rotate_left(27)
+    }
+}
+
+/// Size model: image bytes per rank as a function of the program's working
+/// set, used by the full-stack sim to derive V and T_d from bandwidth.
+#[derive(Debug, Clone, Copy)]
+pub struct ImageSizeModel {
+    /// Memory footprint per rank (bytes) before compression.
+    pub rank_bytes: f64,
+    /// Compression ratio (compressed/raw).
+    pub compression: f64,
+}
+
+impl Default for ImageSizeModel {
+    fn default() -> Self {
+        // ~64 MB per rank, 3:1 compression — a mid-size MPI solver.
+        ImageSizeModel { rank_bytes: 64e6, compression: 1.0 / 3.0 }
+    }
+}
+
+impl ImageSizeModel {
+    pub fn image_bytes(&self, ranks: usize) -> f64 {
+        self.rank_bytes * self.compression * ranks as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tag_roundtrip() {
+        let img = CheckpointImage::new(3, 7, 1234.5, 1e6);
+        assert!(img.verify());
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut img = CheckpointImage::new(3, 7, 1234.5, 1e6);
+        img.progress = 9999.0;
+        assert!(!img.verify());
+    }
+
+    #[test]
+    fn keys_disperse() {
+        let a = CheckpointImage::new(1, 1, 0.0, 0.0).key();
+        let b = CheckpointImage::new(1, 2, 0.0, 0.0).key();
+        let c = CheckpointImage::new(2, 1, 0.0, 0.0).key();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn size_model_scales_with_ranks() {
+        let m = ImageSizeModel::default();
+        assert!((m.image_bytes(16) / m.image_bytes(1) - 16.0).abs() < 1e-9);
+    }
+}

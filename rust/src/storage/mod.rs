@@ -1,0 +1,13 @@
+//! Replicated checkpoint-image storage over the DHT.
+//!
+//! Section 1.2.2: checkpoints are "saved on a P2P based distributed storage
+//! system". Images are placed on the `R` clockwise successors of
+//! `hash(job, seq)`; upload time is governed by the uploader's upstream
+//! link (the scarce resource), download by the restarting peer's
+//! downstream link — matching the paper's V / T_d decomposition.
+
+pub mod dht_store;
+pub mod image;
+
+pub use dht_store::{DhtStore, Placement, REPLICAS};
+pub use image::CheckpointImage;

@@ -1,0 +1,129 @@
+//! Tiny CSV writer for experiment outputs (one table per figure panel).
+
+use std::io::Write;
+use std::path::Path;
+
+/// A CSV table with a fixed header, rows appended as f64 or strings.
+#[derive(Debug, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.header.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn push_f64(&mut self, row: &[f64]) {
+        self.push(row.iter().map(|x| format!("{x:.6}")).collect());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    /// Render to a CSV string (quotes fields containing separators).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let quote = |f: &str| -> String {
+            if f.contains(',') || f.contains('"') || f.contains('\n') {
+                format!("\"{}\"", f.replace('"', "\"\""))
+            } else {
+                f.to_string()
+            }
+        };
+        out.push_str(&self.header.iter().map(|h| quote(h)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|f| quote(f)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    /// Render as an aligned text table for terminal output.
+    pub fn to_pretty(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, f) in row.iter().enumerate() {
+                widths[i] = widths[i].max(f.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_csv() {
+        let mut t = Table::new(&["interval_s", "relative_runtime_pct"]);
+        t.push_f64(&[60.0, 112.5]);
+        t.push_f64(&[300.0, 141.0]);
+        let s = t.to_csv();
+        assert!(s.starts_with("interval_s,relative_runtime_pct\n"));
+        assert_eq!(s.lines().count(), 3);
+    }
+
+    #[test]
+    fn quoting() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["x,y".into(), "q\"z".into()]);
+        let s = t.to_csv();
+        assert!(s.contains("\"x,y\""));
+        assert!(s.contains("\"q\"\"z\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.push(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn pretty_aligns() {
+        let mut t = Table::new(&["x", "longheader"]);
+        t.push_f64(&[1.0, 2.0]);
+        let p = t.to_pretty();
+        assert!(p.contains("longheader"));
+        assert!(p.lines().count() >= 3);
+    }
+}

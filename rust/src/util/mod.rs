@@ -1,0 +1,10 @@
+//! Shared utilities: deterministic RNG + distributions, statistics,
+//! Lambert W, minimal JSON/CSV emitters, and an in-repo property-testing
+//! mini-framework (the offline crate cache has no `proptest`).
+
+pub mod csv;
+pub mod json;
+pub mod lambertw;
+pub mod prop;
+pub mod rng;
+pub mod stats;

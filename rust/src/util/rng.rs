@@ -1,0 +1,254 @@
+//! Deterministic PRNG + the distributions the simulator needs.
+//!
+//! PCG64 (XSL-RR 128/64) — small, fast, seedable, with independent streams
+//! so every simulated peer / trial can own a decorrelated generator.
+//! No `rand` crate offline; the implementation follows the published PCG
+//! reference constants.
+
+/// PCG64 XSL-RR generator with explicit stream selection.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    /// Create a generator from a seed and a stream id. Different streams
+    /// from the same seed are statistically independent.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let initseq = ((stream as u128) << 64) | (stream as u128 ^ 0xda3e_39cb_94b9_5bdb);
+        let mut rng = Pcg64 { state: 0, inc: (initseq << 1) | 1 };
+        rng.step();
+        rng.state = rng.state.wrapping_add(seed as u128);
+        rng.step();
+        rng
+    }
+
+    #[inline]
+    fn step(&mut self) {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+    }
+
+    /// Next uniform `u64`.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.step();
+        let s = self.state;
+        let xored = ((s >> 64) as u64) ^ (s as u64);
+        let rot = (s >> 122) as u32;
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `(0, 1]` — safe as a log() argument.
+    #[inline]
+    pub fn next_f64_open(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's method, bias-free for our n).
+    #[inline]
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        // 128-bit multiply rejection sampling.
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (n as u128);
+            let l = m as u64;
+            if l >= n {
+                return (m >> 64) as u64;
+            }
+            // threshold = (2^64 - n) mod n == u64::MAX - n + 1 mod n
+            let t = n.wrapping_neg() % n;
+            if l >= t {
+                return (m >> 64) as u64;
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `m` distinct indices from `0..n` (m <= n).
+    pub fn sample_indices(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n, "cannot sample {m} from {n}");
+        // Partial Fisher-Yates over an index vector; fine for sim-scale n.
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..m {
+            let j = i + self.next_below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(m);
+        idx
+    }
+
+    // ------------------------------------------------------ distributions
+
+    /// Exponential with rate `rate` (mean `1/rate`).
+    #[inline]
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        debug_assert!(rate > 0.0);
+        -self.next_f64_open().ln() / rate
+    }
+
+    /// Pareto (Lomax-style, `x_m` scale, `alpha` shape) — heavy-tailed
+    /// session times for trace realism checks.
+    #[inline]
+    pub fn pareto(&mut self, x_m: f64, alpha: f64) -> f64 {
+        x_m / self.next_f64_open().powf(1.0 / alpha)
+    }
+
+    /// Weibull with scale `lambda` and shape `kshape`.
+    #[inline]
+    pub fn weibull(&mut self, lambda: f64, kshape: f64) -> f64 {
+        lambda * (-self.next_f64_open().ln()).powf(1.0 / kshape)
+    }
+
+    /// Standard normal via Marsaglia polar method.
+    pub fn gaussian(&mut self) -> f64 {
+        loop {
+            let u = 2.0 * self.next_f64() - 1.0;
+            let v = 2.0 * self.next_f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Log-normal with the given median and sigma (of the underlying normal).
+    #[inline]
+    pub fn lognormal(&mut self, median: f64, sigma: f64) -> f64 {
+        median * (sigma * self.gaussian()).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 1);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Pcg64::new(42, 1);
+        let mut b = Pcg64::new(42, 2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Pcg64::new(7, 0);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn exponential_mean_matches_rate() {
+        let mut r = Pcg64::new(1, 0);
+        let rate = 1.0 / 7200.0;
+        let n = 200_000;
+        let mean: f64 = (0..n).map(|_| r.exp(rate)).sum::<f64>() / n as f64;
+        assert!(
+            (mean - 7200.0).abs() < 7200.0 * 0.02,
+            "exp mean {mean} vs 7200"
+        );
+    }
+
+    #[test]
+    fn exponential_memoryless_quartiles() {
+        // P(X > t) = e^{-rate t}: check the empirical CCDF at 3 points.
+        let mut r = Pcg64::new(3, 9);
+        let rate = 1e-3;
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.exp(rate)).collect();
+        for t in [500.0, 1000.0, 2000.0] {
+            let emp = xs.iter().filter(|&&x| x > t).count() as f64 / n as f64;
+            let want = (-rate * t).exp();
+            assert!((emp - want).abs() < 0.01, "ccdf({t}) {emp} vs {want}");
+        }
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = Pcg64::new(5, 5);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.next_below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Pcg64::new(9, 2);
+        for _ in 0..100 {
+            let s = r.sample_indices(50, 16);
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 16);
+            assert!(s.iter().all(|&i| i < 50));
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::new(11, 0);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg64::new(2, 7);
+        let mut v: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..100).collect::<Vec<u32>>());
+        assert_ne!(v, (0..100).collect::<Vec<u32>>()); // astronomically unlikely
+    }
+
+    #[test]
+    fn pareto_and_weibull_positive() {
+        let mut r = Pcg64::new(13, 0);
+        for _ in 0..1000 {
+            assert!(r.pareto(10.0, 1.5) >= 10.0);
+            assert!(r.weibull(100.0, 0.7) > 0.0);
+        }
+    }
+}

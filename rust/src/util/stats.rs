@@ -1,0 +1,245 @@
+//! Lightweight statistics: running moments, percentiles, histograms,
+//! confidence intervals, and an exponential-fit goodness check used by the
+//! Fig. 2 trace experiments.
+
+/// Running mean / variance (Welford) without storing samples.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Half-width of the ~95% CI for the mean (normal approximation).
+    pub fn ci95(&self) -> f64 {
+        if self.n < 2 {
+            return f64::INFINITY;
+        }
+        1.96 * self.stddev() / (self.n as f64).sqrt()
+    }
+}
+
+/// Percentile over a *sorted* slice (linear interpolation, p in \[0,100\]).
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    let p = p.clamp(0.0, 100.0);
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Sort a copy and take percentiles.
+pub fn percentiles(xs: &[f64], ps: &[f64]) -> Vec<f64> {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ps.iter().map(|&p| percentile_sorted(&v, p)).collect()
+}
+
+/// Fixed-width histogram.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    bins: Vec<u64>,
+    underflow: u64,
+    overflow: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Self {
+        assert!(hi > lo && nbins > 0);
+        Histogram { lo, hi, bins: vec![0; nbins], underflow: 0, overflow: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            self.overflow += 1;
+        } else {
+            let idx = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64) as usize;
+            let idx = idx.min(self.bins.len() - 1);
+            self.bins[idx] += 1;
+        }
+    }
+
+    pub fn bins(&self) -> &[u64] {
+        &self.bins
+    }
+
+    pub fn total(&self) -> u64 {
+        self.bins.iter().sum::<u64>() + self.underflow + self.overflow
+    }
+
+    /// Bin centers (for plotting/CSV).
+    pub fn centers(&self) -> Vec<f64> {
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        (0..self.bins.len()).map(|i| self.lo + (i as f64 + 0.5) * w).collect()
+    }
+
+    /// Empirical density per bin (normalized by total in-range count).
+    pub fn density(&self) -> Vec<f64> {
+        let inrange: u64 = self.bins.iter().sum();
+        let w = (self.hi - self.lo) / self.bins.len() as f64;
+        if inrange == 0 {
+            return vec![0.0; self.bins.len()];
+        }
+        self.bins.iter().map(|&c| c as f64 / inrange as f64 / w).collect()
+    }
+}
+
+/// Kolmogorov–Smirnov distance between an empirical sample and the
+/// exponential CDF with the given rate. Used by the Fig. 2(a) "loosely
+/// fits the exponential distribution" reproduction.
+pub fn ks_distance_exponential(samples: &[f64], rate: f64) -> f64 {
+    let mut v = samples.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in v.iter().enumerate() {
+        let cdf = 1.0 - (-rate * x).exp();
+        let emp_hi = (i + 1) as f64 / n;
+        let emp_lo = i as f64 / n;
+        d = d.max((cdf - emp_lo).abs()).max((emp_hi - cdf).abs());
+    }
+    d
+}
+
+/// Simple linear regression: returns (slope, intercept, r2).
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (&x, &y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+        syy += (y - my) * (y - my);
+    }
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let r2 = if syy == 0.0 { 1.0 } else { sxy * sxy / (sxx * syy) };
+    (slope, intercept, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn running_moments() {
+        let mut r = Running::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            r.push(x);
+        }
+        assert_eq!(r.count(), 8);
+        assert!((r.mean() - 5.0).abs() < 1e-12);
+        assert!((r.variance() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(r.min(), 2.0);
+        assert_eq!(r.max(), 9.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile_sorted(&v, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&v, 100.0), 4.0);
+        assert!((percentile_sorted(&v, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_and_density() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        for i in 0..100 {
+            h.push(i as f64 / 10.0);
+        }
+        assert_eq!(h.total(), 100);
+        assert_eq!(h.bins().iter().sum::<u64>(), 100);
+        let d = h.density();
+        let integral: f64 = d.iter().sum::<f64>() * 1.0;
+        assert!((integral - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ks_accepts_true_exponential() {
+        let mut rng = Pcg64::new(17, 0);
+        let rate = 1.0 / 7260.0;
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.exp(rate)).collect();
+        let d = ks_distance_exponential(&xs, rate);
+        // Critical value at alpha=0.01 is ~1.63/sqrt(n) ~ 0.0115.
+        assert!(d < 0.0115, "ks = {d}");
+    }
+
+    #[test]
+    fn ks_rejects_wrong_rate() {
+        let mut rng = Pcg64::new(17, 1);
+        let xs: Vec<f64> = (0..20_000).map(|_| rng.exp(1e-3)).collect();
+        let d = ks_distance_exponential(&xs, 2e-3);
+        assert!(d > 0.1, "ks = {d}");
+    }
+
+    #[test]
+    fn linear_fit_exact() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let (m, b, r2) = linear_fit(&xs, &ys);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((b - 1.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+}

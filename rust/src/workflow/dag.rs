@@ -1,0 +1,233 @@
+//! Work-flow graphs: steps, data edges, and bounded cycles ("the work flow
+//! contains iterative elements, i.e. cycles" — Section 1.1).
+
+/// Step index.
+pub type StepId = usize;
+
+/// One step of a work flow.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkflowStep {
+    pub id: StepId,
+    /// Compute seconds.
+    pub cost: f64,
+    /// Output bytes shipped to each dependent.
+    pub output_bytes: f64,
+}
+
+/// A work flow: steps + edges (`from -> to`), where back-edges carry an
+/// iteration count (the cycle is unrolled `iterations` times at execution).
+#[derive(Debug, Clone)]
+pub struct Workflow {
+    pub steps: Vec<WorkflowStep>,
+    /// Forward data dependencies.
+    pub edges: Vec<(StepId, StepId)>,
+    /// Back edges: (from, to, iterations). `to` must precede `from`.
+    pub back_edges: Vec<(StepId, StepId, u32)>,
+}
+
+impl Workflow {
+    /// A linear pipeline of `n` steps (the Section 1.1 motivating shape).
+    pub fn pipeline(n: usize, cost: f64, bytes: f64) -> Workflow {
+        let steps = (0..n)
+            .map(|id| WorkflowStep { id, cost, output_bytes: bytes })
+            .collect();
+        let edges = (0..n.saturating_sub(1)).map(|i| (i, i + 1)).collect();
+        Workflow { steps, edges, back_edges: Vec::new() }
+    }
+
+    /// A pipeline with an iterative block: steps `[lo, hi]` repeat
+    /// `iterations` times before the flow continues.
+    pub fn iterative(
+        n: usize,
+        lo: StepId,
+        hi: StepId,
+        iterations: u32,
+        cost: f64,
+        bytes: f64,
+    ) -> Workflow {
+        assert!(lo < hi && hi < n);
+        let mut wf = Workflow::pipeline(n, cost, bytes);
+        wf.back_edges.push((hi, lo, iterations));
+        wf
+    }
+
+    /// Fan-out/fan-in diamond: src -> n parallel steps -> sink.
+    pub fn diamond(width: usize, cost: f64, bytes: f64) -> Workflow {
+        let n = width + 2;
+        let steps = (0..n)
+            .map(|id| WorkflowStep { id, cost, output_bytes: bytes })
+            .collect();
+        let mut edges = Vec::new();
+        for i in 1..=width {
+            edges.push((0, i));
+            edges.push((i, n - 1));
+        }
+        Workflow { steps, edges, back_edges: Vec::new() }
+    }
+
+    /// Validate: edges in range, forward edges acyclic, back edges point
+    /// backwards.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.steps.len();
+        for &(a, b) in &self.edges {
+            if a >= n || b >= n {
+                return Err(format!("edge ({a},{b}) out of range"));
+            }
+        }
+        for &(a, b, it) in &self.back_edges {
+            if a >= n || b >= n {
+                return Err(format!("back edge ({a},{b}) out of range"));
+            }
+            if b >= a {
+                return Err(format!("back edge ({a},{b}) must point backwards"));
+            }
+            if it == 0 {
+                return Err("zero-iteration back edge".into());
+            }
+        }
+        // Kahn's algorithm on forward edges.
+        let mut indeg = vec![0usize; n];
+        for &(_, b) in &self.edges {
+            indeg[b] += 1;
+        }
+        let mut queue: Vec<StepId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut seen = 0;
+        while let Some(u) = queue.pop() {
+            seen += 1;
+            for &(a, b) in &self.edges {
+                if a == u {
+                    indeg[b] -= 1;
+                    if indeg[b] == 0 {
+                        queue.push(b);
+                    }
+                }
+            }
+        }
+        if seen != n {
+            return Err("forward edges contain a cycle".into());
+        }
+        Ok(())
+    }
+
+    /// Topological order of the forward DAG.
+    pub fn topo_order(&self) -> Vec<StepId> {
+        let n = self.steps.len();
+        let mut indeg = vec![0usize; n];
+        for &(_, b) in &self.edges {
+            indeg[b] += 1;
+        }
+        let mut queue: std::collections::VecDeque<StepId> =
+            (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            for &(a, b) in &self.edges {
+                if a == u {
+                    indeg[b] -= 1;
+                    if indeg[b] == 0 {
+                        queue.push_back(b);
+                    }
+                }
+            }
+        }
+        order
+    }
+
+    /// The executed step sequence with cycles unrolled. For each back edge
+    /// (hi, lo, iters), the block [lo..=hi] runs `iters` times total.
+    pub fn unrolled(&self) -> Vec<StepId> {
+        let topo = self.topo_order();
+        let mut seq = Vec::new();
+        for &s in &topo {
+            seq.push(s);
+            // Close any iterative block ending at s.
+            for &(hi, lo, iters) in &self.back_edges {
+                if hi == s {
+                    let block: Vec<StepId> =
+                        topo.iter().copied().filter(|&x| x >= lo && x <= hi).collect();
+                    for _ in 1..iters {
+                        seq.extend(block.iter().copied());
+                    }
+                }
+            }
+        }
+        seq
+    }
+
+    /// Total data transfers (step executions that ship output to a
+    /// dependent) in the unrolled execution.
+    pub fn total_transfers(&self) -> usize {
+        let execs = self.unrolled();
+        let out_degree = |s: StepId| self.edges.iter().filter(|&&(a, _)| a == s).count();
+        // Every executed instance ships to its dependents; back-edge
+        // iterations also ship along the back edge itself.
+        let fwd: usize = execs.iter().map(|&s| out_degree(s)).sum();
+        let back: usize = self
+            .back_edges
+            .iter()
+            .map(|&(_, _, iters)| (iters as usize).saturating_sub(1))
+            .sum();
+        fwd + back
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_shape() {
+        let wf = Workflow::pipeline(5, 100.0, 1e6);
+        wf.validate().unwrap();
+        assert_eq!(wf.edges.len(), 4);
+        assert_eq!(wf.topo_order(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(wf.unrolled(), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn iterative_unrolls() {
+        let wf = Workflow::iterative(5, 1, 3, 4, 100.0, 1e6);
+        wf.validate().unwrap();
+        let seq = wf.unrolled();
+        // 0, then [1,2,3] x4, then 4.
+        assert_eq!(seq.len(), 1 + 3 * 4 + 1);
+        assert_eq!(seq[0], 0);
+        assert_eq!(*seq.last().unwrap(), 4);
+        let ones = seq.iter().filter(|&&s| s == 2).count();
+        assert_eq!(ones, 4);
+    }
+
+    #[test]
+    fn diamond_valid() {
+        let wf = Workflow::diamond(4, 50.0, 1e5);
+        wf.validate().unwrap();
+        let topo = wf.topo_order();
+        assert_eq!(topo[0], 0);
+        assert_eq!(*topo.last().unwrap(), 5);
+    }
+
+    #[test]
+    fn validation_catches_bad_graphs() {
+        let mut wf = Workflow::pipeline(3, 1.0, 1.0);
+        wf.edges.push((2, 0)); // forward cycle
+        assert!(wf.validate().is_err());
+
+        let mut wf = Workflow::pipeline(3, 1.0, 1.0);
+        wf.back_edges.push((0, 2, 3)); // back edge pointing forward
+        assert!(wf.validate().is_err());
+
+        let mut wf = Workflow::pipeline(3, 1.0, 1.0);
+        wf.edges.push((0, 99));
+        assert!(wf.validate().is_err());
+    }
+
+    #[test]
+    fn transfers_grow_with_iterations() {
+        let flat = Workflow::pipeline(5, 1.0, 1.0).total_transfers();
+        let looped = Workflow::iterative(5, 1, 3, 10, 1.0, 1.0).total_transfers();
+        assert!(
+            looped > 3 * flat,
+            "iterations must multiply transfer count: {flat} vs {looped}"
+        );
+    }
+}

@@ -1,0 +1,9 @@
+//! Work flows (Section 1.1): DAGs of steps — with cycles for iterative
+//! flows — deployed either through the work-pool server (Fig. 1(a)) or
+//! over the P2P overlay (Fig. 1(b)).
+
+pub mod dag;
+pub mod scheduler;
+
+pub use dag::{StepId, Workflow, WorkflowStep};
+pub use scheduler::{deploy, DeploymentKind, DeploymentReport};

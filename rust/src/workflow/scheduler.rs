@@ -1,0 +1,160 @@
+//! Work-flow deployment: server-mediated (Fig. 1(a)) vs P2P-mediated
+//! (Fig. 1(b)) inter-step I/O, with the message/byte accounting the
+//! paper's introduction argues from.
+//!
+//! Server-mediated: every inter-step transfer is worker → server → worker
+//! (2 WAN messages through the central pool server, which also scrutinizes
+//! and checkpoints every step). P2P-mediated: workers route the data
+//! directly over the overlay (multi-hop, but no server involvement); only
+//! inter-*work-flow* coordination (submit/final result) touches the server.
+
+use super::dag::Workflow;
+use crate::net::overlay::Overlay;
+use crate::net::routing::{route, HopLatency};
+use crate::util::rng::Pcg64;
+
+/// Which coordination architecture to account.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeploymentKind {
+    /// Fig. 1(a): all inter-step I/O through the work-pool server.
+    ServerMediated,
+    /// Fig. 1(b): inter-step I/O over the P2P overlay.
+    P2pMediated,
+}
+
+/// Accounting of one deployment.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeploymentReport {
+    pub kind_is_p2p: bool,
+    /// Messages that transited the central server.
+    pub server_messages: u64,
+    /// Bytes that transited the central server.
+    pub server_bytes: f64,
+    /// Total overlay hops consumed (P2P path only).
+    pub overlay_hops: u64,
+    /// End-to-end critical-path latency estimate for the data movement
+    /// (seconds; compute excluded).
+    pub transfer_latency: f64,
+    /// Total step executions (same for both kinds — sanity anchor).
+    pub step_executions: u64,
+}
+
+/// Deploy `wf` on `k`-ish workers drawn from the overlay and account the
+/// data movement of its unrolled execution.
+pub fn deploy(
+    wf: &Workflow,
+    kind: DeploymentKind,
+    overlay: &Overlay,
+    rng: &mut Pcg64,
+) -> DeploymentReport {
+    wf.validate().expect("invalid workflow");
+    let lat = HopLatency::default();
+    // Steps are placed round-robin on sampled workers.
+    let workers = overlay
+        .sample_online(wf.steps.len().min(overlay.online_count()), rng)
+        .expect("overlay too small");
+    let place = |s: usize| workers[s % workers.len()];
+
+    let exec = wf.unrolled();
+    let mut report = DeploymentReport {
+        kind_is_p2p: kind == DeploymentKind::P2pMediated,
+        server_messages: 0,
+        server_bytes: 0.0,
+        overlay_hops: 0,
+        transfer_latency: 0.0,
+        step_executions: exec.len() as u64,
+    };
+
+    // Submit + final-result messages touch the server in both designs.
+    report.server_messages += 2;
+
+    // Per executed step instance: ship outputs to each forward dependent;
+    // back-edge iterations ship back to the loop head.
+    let mut ship = |from: usize, to: usize, bytes: f64, report: &mut DeploymentReport| {
+        match kind {
+            DeploymentKind::ServerMediated => {
+                // worker -> server -> worker; the server also stores a
+                // step checkpoint (1 more message) per transfer.
+                report.server_messages += 3;
+                report.server_bytes += 2.0 * bytes;
+                // Two WAN legs of ~latency each.
+                report.transfer_latency += 2.0 * (lat.base + lat.jitter_mean);
+            }
+            DeploymentKind::P2pMediated => {
+                let src = place(from);
+                let key = overlay.peer(place(to)).ring_id;
+                if let Some(r) = route(overlay, src, key, lat, rng) {
+                    report.overlay_hops += r.hops as u64;
+                    report.transfer_latency += r.latency;
+                }
+            }
+        }
+    };
+
+    for &s in &exec {
+        for &(a, b) in &wf.edges {
+            if a == s {
+                ship(a, b, wf.steps[a].output_bytes, &mut report);
+            }
+        }
+    }
+    for &(hi, lo, iters) in &wf.back_edges {
+        for _ in 1..iters {
+            ship(hi, lo, wf.steps[hi].output_bytes, &mut report);
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::dag::Workflow;
+
+    fn overlay() -> (Overlay, Pcg64) {
+        let mut rng = Pcg64::new(70, 0);
+        let o = Overlay::new(128, &mut rng);
+        (o, rng)
+    }
+
+    #[test]
+    fn p2p_offloads_the_server() {
+        let (o, mut rng) = overlay();
+        let wf = Workflow::iterative(8, 2, 5, 20, 60.0, 1e6);
+        let server = deploy(&wf, DeploymentKind::ServerMediated, &o, &mut rng);
+        let p2p = deploy(&wf, DeploymentKind::P2pMediated, &o, &mut rng);
+        assert_eq!(server.step_executions, p2p.step_executions);
+        // The paper's headline motivation: server traffic collapses from
+        // O(transfers) to O(1).
+        assert!(server.server_messages > 100, "{}", server.server_messages);
+        assert_eq!(p2p.server_messages, 2);
+        assert_eq!(p2p.server_bytes, 0.0);
+        assert!(p2p.overlay_hops > 0);
+    }
+
+    #[test]
+    fn server_traffic_scales_with_iterations() {
+        let (o, mut rng) = overlay();
+        let wf_small = Workflow::iterative(8, 2, 5, 2, 60.0, 1e6);
+        let wf_big = Workflow::iterative(8, 2, 5, 40, 60.0, 1e6);
+        let small = deploy(&wf_small, DeploymentKind::ServerMediated, &o, &mut rng);
+        let big = deploy(&wf_big, DeploymentKind::ServerMediated, &o, &mut rng);
+        assert!(
+            big.server_messages > 10 * small.server_messages / 2,
+            "small {} big {}",
+            small.server_messages,
+            big.server_messages
+        );
+    }
+
+    #[test]
+    fn flat_pipeline_both_paths_work() {
+        let (o, mut rng) = overlay();
+        let wf = Workflow::pipeline(6, 60.0, 1e6);
+        let server = deploy(&wf, DeploymentKind::ServerMediated, &o, &mut rng);
+        let p2p = deploy(&wf, DeploymentKind::P2pMediated, &o, &mut rng);
+        assert_eq!(server.step_executions, 6);
+        assert_eq!(server.server_messages, 2 + 5 * 3);
+        assert!(p2p.transfer_latency > 0.0);
+    }
+}

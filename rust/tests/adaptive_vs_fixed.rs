@@ -1,0 +1,155 @@
+//! Integration: the paper's headline claims on the fast path (Section 4.2).
+//! Each test pins one qualitative result of Fig. 4 / Fig. 5 with enough
+//! trials to be stable but few enough to stay fast; the benches run the
+//! full-size versions.
+
+use p2pcp::config::ChurnSpec;
+use p2pcp::coordinator::job::JobParams;
+use p2pcp::experiments::relative_runtime::{run_comparison, ComparisonConfig};
+
+fn base(churn: ChurnSpec, v: f64, td: f64) -> ComparisonConfig {
+    ComparisonConfig {
+        churn,
+        job: JobParams {
+            runtime: 2.0 * 3600.0,
+            v,
+            td,
+            max_sim_time: 20.0 * 24.0 * 3600.0,
+            ..JobParams::default()
+        },
+        fixed_intervals: vec![60.0, 300.0, 1200.0, 3600.0],
+        trials: 15,
+        seed: 2024,
+        with_oracle: false,
+    }
+}
+
+/// Fig. 4 (left): adaptive wins for all fixed intervals across the three
+/// departure-rate settings.
+#[test]
+fn fig4_left_shape_adaptive_wins() {
+    for mtbf in [4000.0, 7200.0, 14400.0] {
+        let res = run_comparison(&base(ChurnSpec::Exponential { mtbf }, 20.0, 50.0));
+        for row in &res.rows {
+            // Small intervals: modest penalty; far-off intervals: large.
+            // Allow parity noise near the optimum but never a big loss.
+            assert!(
+                row.relative_runtime_pct > 90.0,
+                "mtbf={mtbf} T={} rel={}% — adaptive should not lose badly",
+                row.fixed_interval,
+                row.relative_runtime_pct
+            );
+        }
+        // At least the extremes must clearly favour adaptive.
+        let worst = res
+            .rows
+            .iter()
+            .map(|r| r.relative_runtime_pct)
+            .fold(0.0f64, f64::max);
+        assert!(
+            worst > 115.0,
+            "mtbf={mtbf}: some fixed interval should lose clearly, max rel {worst}%"
+        );
+    }
+}
+
+/// Fig. 4 (left) fine structure: the fixed-T curve is U-shaped — both very
+/// small and very large T lose to adaptive.
+#[test]
+fn fixed_interval_curve_is_u_shaped() {
+    let mut cfg = base(ChurnSpec::Exponential { mtbf: 7200.0 }, 20.0, 50.0);
+    cfg.fixed_intervals = vec![10.0, 116.0, 3600.0];
+    cfg.trials = 20;
+    let res = run_comparison(&cfg);
+    let tiny = res.rows[0].relative_runtime_pct;
+    let near_opt = res.rows[1].relative_runtime_pct;
+    let huge = res.rows[2].relative_runtime_pct;
+    assert!(
+        tiny > near_opt && huge > near_opt,
+        "U-shape violated: {tiny}% / {near_opt}% / {huge}%"
+    );
+    // Near-optimal fixed should be close to parity with adaptive.
+    assert!(
+        (88.0..125.0).contains(&near_opt),
+        "near-optimal fixed at {near_opt}%"
+    );
+}
+
+/// Fig. 4 (right): with the departure rate doubling over 20 h, a large
+/// fixed interval diverges (the paper reports ~3x at T = 5 min from
+/// MTBF0 = 7200 with a longer job; we pin the qualitative blow-up).
+#[test]
+fn fig4_right_time_varying_blows_up_fixed() {
+    let mut cfg = base(
+        ChurnSpec::TimeVarying { mtbf0: 7200.0, double_time: 20.0 * 3600.0 },
+        20.0,
+        50.0,
+    );
+    cfg.job.runtime = 6.0 * 3600.0; // long enough for the rate to move
+    cfg.fixed_intervals = vec![1200.0, 3600.0];
+    cfg.trials = 12;
+    let res = run_comparison(&cfg);
+    for row in &res.rows {
+        assert!(
+            row.relative_runtime_pct > 140.0,
+            "time-varying churn: fixed T={} should lose big, got {}%",
+            row.fixed_interval,
+            row.relative_runtime_pct
+        );
+    }
+}
+
+/// Fig. 5 (left): higher checkpoint overhead V still leaves adaptive ahead
+/// (it stretches its interval; a small fixed interval pays V every time).
+#[test]
+fn fig5_left_v_sensitivity() {
+    for v in [5.0, 40.0, 80.0] {
+        let mut cfg = base(ChurnSpec::Exponential { mtbf: 7200.0 }, v, 50.0);
+        cfg.fixed_intervals = vec![60.0, 3600.0];
+        let res = run_comparison(&cfg);
+        for row in &res.rows {
+            assert!(
+                row.relative_runtime_pct > 95.0,
+                "V={v} T={}: rel {}%",
+                row.fixed_interval,
+                row.relative_runtime_pct
+            );
+        }
+    }
+}
+
+/// Fig. 5 (right): same across download overheads T_d.
+#[test]
+fn fig5_right_td_sensitivity() {
+    for td in [10.0, 100.0, 200.0] {
+        let mut cfg = base(ChurnSpec::Exponential { mtbf: 7200.0 }, 20.0, td);
+        cfg.fixed_intervals = vec![60.0, 3600.0];
+        let res = run_comparison(&cfg);
+        for row in &res.rows {
+            assert!(
+                row.relative_runtime_pct > 95.0,
+                "Td={td} T={}: rel {}%",
+                row.fixed_interval,
+                row.relative_runtime_pct
+            );
+        }
+    }
+}
+
+/// The adaptive interval actually tracks conditions: lower MTBF ⇒ shorter
+/// mean interval in force.
+#[test]
+fn adaptive_interval_tracks_mtbf() {
+    let mut intervals = Vec::new();
+    for mtbf in [14400.0, 7200.0, 3600.0] {
+        let mut cfg = base(ChurnSpec::Exponential { mtbf }, 20.0, 50.0);
+        cfg.fixed_intervals = vec![];
+        cfg.trials = 10;
+        let res = run_comparison(&cfg);
+        intervals.push(res.adaptive_mean_interval);
+    }
+    assert!(
+        intervals[0] > intervals[1] && intervals[1] > intervals[2],
+        "adaptive intervals must shrink with MTBF: {intervals:?}"
+    );
+}

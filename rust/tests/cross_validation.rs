@@ -1,0 +1,204 @@
+//! Cross-validation between independent implementations of the same
+//! semantics:
+//!
+//! 1. fast path (renewal sim) vs full-stack world — no-churn exactness and
+//!    churn-inflation agreement;
+//! 2. native planner vs compiled XLA artifact — identical *decisions*
+//!    produce statistically identical *runs*;
+//! 3. measured failure statistics vs the analytic model (Eqs. 5–8).
+
+use p2pcp::churn::model::Exponential;
+use p2pcp::config::{ChurnSpec, PolicySpec, SimConfig};
+use p2pcp::coordinator::job::{JobParams, JobSimulator};
+use p2pcp::coordinator::world::World;
+use p2pcp::model::utilization::utilization;
+use p2pcp::mpi::program::{CommPattern, Program};
+use p2pcp::planner::{NativePlanner, XlaPlanner};
+use p2pcp::policy::{self, AdaptivePolicy, FixedPolicy};
+use p2pcp::runtime::PjrtRuntime;
+use p2pcp::util::stats::Running;
+
+#[test]
+fn no_churn_fast_path_and_world_agree_exactly() {
+    // R=1800, T=600, V=20: wall = 1800 + 2*20 (checkpoint at 600, 1200;
+    // the 1800 boundary completes before the 3rd).
+    let churn = Exponential::new(1e13);
+    let params = JobParams {
+        k: 8,
+        runtime: 1800.0,
+        v: 20.0,
+        td: 50.0,
+        ..JobParams::default()
+    };
+    let sim = JobSimulator::new(params, &churn);
+    let mut pol = FixedPolicy::new(600.0);
+    let fast = sim.run(&mut pol, 1, 0);
+
+    let cfg = SimConfig {
+        n_peers: 64,
+        k: 8,
+        job_runtime: 1800.0,
+        v: Some(20.0),
+        td: Some(50.0),
+        churn: ChurnSpec::Exponential { mtbf: 1e13 },
+        seed: 1,
+        ..SimConfig::default()
+    };
+    let mut w = World::new(cfg).unwrap();
+    let o = w
+        .run_job(
+            Program::new(CommPattern::Ring, 8),
+            Box::new(FixedPolicy::new(600.0)),
+        )
+        .unwrap();
+    assert!(fast.completed && o.completed);
+    assert!(
+        (fast.wall_time - o.wall_time).abs() < 1.0,
+        "fast {} vs world {}",
+        fast.wall_time,
+        o.wall_time
+    );
+    assert_eq!(fast.checkpoints, o.checkpoints);
+}
+
+#[test]
+fn churn_inflation_agrees_between_paths() {
+    // Same (mtbf, k, V, Td, T): mean wall-time inflation factors should
+    // agree within the modelling differences (detection delay, replacement
+    // sampling) — generous band, but both far from 1.0.
+    let mtbf = 3600.0;
+    let trials = 6;
+
+    let churn = Exponential::new(mtbf);
+    let params = JobParams { k: 8, runtime: 3600.0, v: 20.0, td: 50.0, ..JobParams::default() };
+    let sim = JobSimulator::new(params, &churn);
+    let mut fast = Running::new();
+    for t in 0..trials {
+        let mut pol = FixedPolicy::new(300.0);
+        fast.push(sim.run(&mut pol, 100 + t, t).wall_time);
+    }
+
+    let mut world = Running::new();
+    for t in 0..trials {
+        let cfg = SimConfig {
+            n_peers: 128,
+            k: 8,
+            job_runtime: 3600.0,
+            v: Some(20.0),
+            td: Some(50.0),
+            churn: ChurnSpec::Exponential { mtbf },
+            seed: 200 + t,
+            ..SimConfig::default()
+        };
+        let mut w = World::new(cfg).unwrap();
+        w.warmup(3600.0);
+        let o = w
+            .run_job(
+                Program::new(CommPattern::Ring, 8),
+                Box::new(FixedPolicy::new(300.0)),
+            )
+            .unwrap();
+        assert!(o.completed);
+        world.push(o.wall_time);
+    }
+    let f_infl = fast.mean() / 3600.0;
+    let w_infl = world.mean() / 3600.0;
+    assert!(f_infl > 1.1 && w_infl > 1.1, "both must inflate: {f_infl} vs {w_infl}");
+    let ratio = f_infl / w_infl;
+    assert!(
+        (0.6..1.6).contains(&ratio),
+        "inflation mismatch: fast {f_infl} vs world {w_infl}"
+    );
+}
+
+#[test]
+fn xla_and_native_planners_produce_equivalent_runs() {
+    let rt = PjrtRuntime::cpu().expect("PJRT CPU");
+    let churn = Exponential::new(7200.0);
+    let params = JobParams { runtime: 2.0 * 3600.0, ..JobParams::default() };
+    let sim = JobSimulator::new(params, &churn);
+    for seed in [1u64, 7, 42] {
+        let mut native_pol = AdaptivePolicy::new(Box::new(NativePlanner::new()));
+        let a = sim.run(&mut native_pol, seed, 0);
+        let mut xla_pol =
+            AdaptivePolicy::new(Box::new(XlaPlanner::new(&rt).expect("artifact")));
+        let b = sim.run(&mut xla_pol, seed, 0);
+        // Same seed + numerically identical decisions ⇒ same trajectory.
+        assert_eq!(a.failures, b.failures, "seed {seed}");
+        assert_eq!(a.checkpoints, b.checkpoints, "seed {seed}");
+        assert!(
+            (a.wall_time - b.wall_time).abs() < 1.0,
+            "seed {seed}: {} vs {}",
+            a.wall_time,
+            b.wall_time
+        );
+    }
+}
+
+#[test]
+fn measured_waste_matches_eq5_prediction() {
+    // Run many failures with a fixed interval and compare the mean wasted
+    // work per failure against T'wc (Eq. 8) at that rate.
+    let mtbf = 3600.0;
+    let k = 8.0;
+    let a = k / mtbf;
+    let interval: f64 = 300.0;
+    let churn = Exponential::new(mtbf);
+    let params = JobParams {
+        k: 8,
+        runtime: 20.0 * 3600.0, // long job => many failures
+        v: 20.0,
+        td: 50.0,
+        max_sim_time: 400.0 * 24.0 * 3600.0,
+        ..JobParams::default()
+    };
+    let sim = JobSimulator::new(params, &churn);
+    let mut wasted = 0.0;
+    let mut failures = 0u64;
+    for t in 0..4 {
+        let mut pol = FixedPolicy::new(interval);
+        let o = sim.run(&mut pol, 900 + t, t);
+        wasted += o.wasted;
+        failures += o.failures;
+    }
+    let measured = wasted / failures as f64;
+    let predicted = utilization(1.0 / interval, a, 20.0, 50.0).twc;
+    // The sim wastes slightly less than Eq. 5 predicts because failures
+    // during checkpoint/restart phases lose no *computed* progress;
+    // accept 25%.
+    assert!(
+        (measured - predicted).abs() < predicted * 0.25,
+        "measured waste/failure {measured} vs Eq.5 {predicted}"
+    );
+}
+
+#[test]
+fn measured_cycles_per_failure_match_eq6() {
+    let mtbf = 3600.0;
+    let a = 8.0 / mtbf;
+    let interval: f64 = 300.0;
+    let churn = Exponential::new(mtbf);
+    let params = JobParams {
+        k: 8,
+        runtime: 20.0 * 3600.0,
+        v: 20.0,
+        td: 50.0,
+        max_sim_time: 400.0 * 24.0 * 3600.0,
+        ..JobParams::default()
+    };
+    let sim = JobSimulator::new(params, &churn);
+    let mut cps = 0u64;
+    let mut failures = 0u64;
+    for t in 0..4 {
+        let mut pol = FixedPolicy::new(interval);
+        let o = sim.run(&mut pol, 500 + t, t);
+        cps += o.checkpoints;
+        failures += o.failures;
+    }
+    let measured = cps as f64 / failures as f64;
+    let predicted = utilization(1.0 / interval, a, 20.0, 50.0).cbar;
+    assert!(
+        (measured - predicted).abs() < predicted * 0.30,
+        "measured cbar {measured} vs Eq.6 {predicted}"
+    );
+}

@@ -1,0 +1,109 @@
+//! Integration: the full-stack world (overlay + stabilization + markers +
+//! DHT store + bandwidth) running jobs end to end under both policies.
+
+use p2pcp::config::{ChurnSpec, PolicySpec, SimConfig};
+use p2pcp::coordinator::world::World;
+use p2pcp::mpi::program::{CommPattern, Program};
+use p2pcp::planner::NativePlanner;
+use p2pcp::policy;
+
+fn cfg(mtbf: f64, seed: u64) -> SimConfig {
+    SimConfig {
+        n_peers: 192,
+        k: 8,
+        job_runtime: 3600.0,
+        v: Some(20.0),
+        td: Some(50.0),
+        churn: ChurnSpec::Exponential { mtbf },
+        seed,
+        max_sim_time: 30.0 * 24.0 * 3600.0,
+        ..SimConfig::default()
+    }
+}
+
+fn run_one(mtbf: f64, seed: u64, spec: &PolicySpec) -> p2pcp::coordinator::job::JobOutcome {
+    let mut w = World::new(cfg(mtbf, seed)).unwrap();
+    w.warmup(6.0 * 3600.0);
+    let program = Program::new(CommPattern::Ring, 8);
+    let pol = policy::from_spec(spec, || Box::new(NativePlanner::new()));
+    w.run_job(program, pol).unwrap()
+}
+
+#[test]
+fn full_stack_adaptive_completes_under_churn() {
+    let o = run_one(3600.0, 1, &PolicySpec::Adaptive);
+    assert!(o.completed);
+    assert!(o.failures > 0, "group MTBF 450 s over an hour ⇒ failures");
+    assert!(o.checkpoints > 0);
+    assert!(o.replans > 0);
+    assert!(o.efficiency > 0.2 && o.efficiency < 1.0, "eff {}", o.efficiency);
+}
+
+#[test]
+fn full_stack_adaptive_beats_bad_fixed() {
+    let trials = 4;
+    let mut adaptive = 0.0;
+    let mut fixed = 0.0;
+    for s in 0..trials {
+        adaptive += run_one(3600.0, 100 + s, &PolicySpec::Adaptive).wall_time;
+        fixed += run_one(3600.0, 100 + s, &PolicySpec::Fixed { interval: 2400.0 }).wall_time;
+    }
+    assert!(
+        fixed > adaptive * 1.15,
+        "full stack: fixed(2400) {fixed} should lose to adaptive {adaptive}"
+    );
+}
+
+#[test]
+fn full_stack_derives_overheads_from_bandwidth_when_unset() {
+    // v/td None: the world derives them from image size / link speeds.
+    let mut c = cfg(7200.0, 7);
+    c.v = None;
+    c.td = None;
+    let mut w = World::new(c).unwrap();
+    w.warmup(2.0 * 3600.0);
+    let mut program = Program::new(CommPattern::Ring, 8);
+    program.rank_state_bytes = 2e6; // small image so V is seconds-scale
+    let pol = policy::from_spec(&PolicySpec::Adaptive, || Box::new(NativePlanner::new()));
+    let o = w.run_job(program, pol).unwrap();
+    assert!(o.completed);
+    assert!(o.checkpoints > 0);
+}
+
+#[test]
+fn full_stack_never_policy_eventually_completes_or_caps() {
+    // Without checkpoints, a failure loses everything; with an hour-long
+    // job at group MTBF 900 s completion is astronomically unlikely before
+    // the cap; the run must terminate at the cap, not hang.
+    let mut c = cfg(7200.0, 3);
+    c.k = 8;
+    c.job_runtime = 2.0 * 3600.0;
+    c.max_sim_time = 2.0 * 24.0 * 3600.0;
+    let mut w = World::new(c).unwrap();
+    let program = Program::new(CommPattern::Ring, 8);
+    let pol = policy::from_spec(&PolicySpec::Never, || Box::new(NativePlanner::new()));
+    let o = w.run_job(program, pol).unwrap();
+    assert_eq!(o.checkpoints, 0);
+    // Either lucky completion or the cap — both are acceptable, hanging is not.
+    assert!(o.wall_time <= 2.0 * 24.0 * 3600.0 + 1.0);
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = run_one(3600.0, 42, &PolicySpec::Adaptive);
+    let b = run_one(3600.0, 42, &PolicySpec::Adaptive);
+    assert_eq!(a, b);
+}
+
+#[test]
+fn trace_churn_worlds_run() {
+    let mut c = cfg(7200.0, 9);
+    c.churn = ChurnSpec::Trace { kind: "gnutella".into() };
+    c.job_runtime = 1800.0;
+    let mut w = World::new(c).unwrap();
+    w.warmup(3.0 * 3600.0);
+    let program = Program::new(CommPattern::Pipeline, 8);
+    let pol = policy::from_spec(&PolicySpec::Adaptive, || Box::new(NativePlanner::new()));
+    let o = w.run_job(program, pol).unwrap();
+    assert!(o.completed, "gnutella-trace world must complete");
+}

@@ -1,0 +1,145 @@
+//! Failure injection: corrupted images, total replica loss, estimator
+//! starvation, leader churn, and degenerate planner inputs — the system
+//! must degrade, never hang or panic.
+
+use p2pcp::config::{ChurnSpec, PolicySpec, SimConfig};
+use p2pcp::coordinator::world::World;
+use p2pcp::mpi::program::{CommPattern, Program};
+use p2pcp::net::overlay::Overlay;
+use p2pcp::planner::{NativePlanner, PlanRequest, Planner};
+use p2pcp::policy::{self, AdaptivePolicy, CheckpointPolicy, PolicyCtx};
+use p2pcp::storage::dht_store::DhtStore;
+use p2pcp::storage::image::CheckpointImage;
+use p2pcp::util::rng::Pcg64;
+
+#[test]
+fn corrupted_image_is_never_served() {
+    let mut rng = Pcg64::new(1, 0);
+    let o = Overlay::new(20, &mut rng);
+    let mut store = DhtStore::new();
+    let mut img = CheckpointImage::new(1, 1, 500.0, 1e6);
+    img.progress = 999.0; // bit-rot after tag computation
+    store.put(&o, img);
+    assert!(store.get(&o, 1, 1).is_none(), "corrupt image must not verify");
+    assert!(store.latest(&o, 1).is_none());
+}
+
+#[test]
+fn total_replica_loss_forces_scratch_restart() {
+    // A world where every checkpoint holder dies: the job restarts from
+    // scratch (progress 0) instead of hanging.
+    let mut rng = Pcg64::new(2, 0);
+    let mut o = Overlay::new(12, &mut rng);
+    let mut store = DhtStore::new();
+    let p = store.put(&o, CheckpointImage::new(0, 1, 800.0, 1e6)).unwrap();
+    for &h in &p.holders {
+        o.depart(h, 1.0);
+    }
+    assert!(store.latest(&o, 0).is_none());
+    // Older checkpoint survives? It should be preferred when live.
+    o.join(p.holders[0], 2.0); // holder returns with the replica intact
+    assert!(store.latest(&o, 0).is_some(), "returning holder restores access");
+}
+
+#[test]
+fn estimator_starvation_falls_back_to_bootstrap() {
+    let mut pol = AdaptivePolicy::new(Box::new(NativePlanner::new()));
+    let ctx = PolicyCtx {
+        now: 0.0,
+        k: 16.0,
+        v: 20.0,
+        td: 50.0,
+        lifetimes: &[], // nothing observed
+        true_rate: None,
+    };
+    let d = pol.decide(&ctx).unwrap();
+    assert_eq!(d.interval, Some(300.0), "bootstrap interval expected");
+}
+
+#[test]
+fn degenerate_planner_inputs_never_panic() {
+    let mut p = NativePlanner::new();
+    for req in [
+        PlanRequest { lifetimes: vec![], v: 20.0, td: 50.0, k: 16.0 },
+        PlanRequest { lifetimes: vec![0.0; 8], v: 20.0, td: 50.0, k: 16.0 },
+        PlanRequest { lifetimes: vec![f64::MAX; 4], v: 20.0, td: 50.0, k: 16.0 },
+        PlanRequest { lifetimes: vec![1e-12; 8], v: 1e-9, td: 1e-9, k: 1.0 },
+        PlanRequest { lifetimes: vec![7200.0; 8], v: 1e9, td: 1e9, k: 4096.0 },
+    ] {
+        let r = p.plan_one(&req).unwrap();
+        assert!(!r.lambda.is_nan(), "NaN lambda for {req:?}");
+        assert!(!r.u.is_nan());
+    }
+}
+
+#[test]
+fn extreme_churn_world_terminates_at_cap() {
+    // MTBF 120 s with k=8 (group MTBF 15 s) and V=20 s: essentially no
+    // progress is possible; the run must stop at max_sim_time.
+    let cfg = SimConfig {
+        n_peers: 64,
+        k: 8,
+        job_runtime: 3600.0,
+        v: Some(20.0),
+        td: Some(50.0),
+        churn: ChurnSpec::Exponential { mtbf: 120.0 },
+        seed: 3,
+        max_sim_time: 12.0 * 3600.0,
+        ..SimConfig::default()
+    };
+    let mut w = World::new(cfg).unwrap();
+    let program = Program::new(CommPattern::Ring, 8);
+    let pol = policy::from_spec(&PolicySpec::Adaptive, || Box::new(NativePlanner::new()));
+    let o = w.run_job(program, pol).unwrap();
+    assert!(!o.completed, "no progress should be possible");
+    assert!(o.wall_time <= 12.0 * 3600.0 + 60.0);
+    assert!(o.failures > 10);
+}
+
+#[test]
+fn admission_check_flags_overload() {
+    // The Section 3.2.3 signal: under the extreme conditions above, the
+    // planner itself reports U = 0 (k too large for the network).
+    let mut p = NativePlanner::new();
+    let r = p
+        .plan_one(&PlanRequest { lifetimes: vec![120.0; 32], v: 20.0, td: 50.0, k: 8.0 })
+        .unwrap();
+    assert!(!r.progressing(), "U must be 0: overhead swallows the cycle");
+}
+
+#[test]
+fn leader_survives_cascading_member_failures() {
+    use p2pcp::coordinator::leader::LeaderElection;
+    let mut rng = Pcg64::new(4, 0);
+    let mut o = Overlay::new(32, &mut rng);
+    let members: Vec<usize> = (0..8).collect();
+    let mut le = LeaderElection::new(members.clone());
+    let mut alive = 8;
+    while alive > 1 {
+        let l = le.leader(&o).expect("leader while members alive");
+        assert!(o.is_online(l));
+        o.depart(l, 1.0);
+        alive -= 1;
+    }
+    let last = le.leader(&o).expect("one member left");
+    assert!(o.is_online(last));
+    o.depart(last, 2.0);
+    assert!(le.leader(&o).is_none(), "no leader once all are dead");
+}
+
+#[test]
+fn dht_store_repair_after_churn_burst() {
+    let mut rng = Pcg64::new(5, 0);
+    let mut o = Overlay::new(40, &mut rng);
+    let mut store = DhtStore::new();
+    let placement = store.put(&o, CheckpointImage::new(7, 1, 100.0, 1e6)).unwrap();
+    // Kill two of three holders.
+    o.depart(placement.holders[0], 1.0);
+    o.depart(placement.holders[1], 1.0);
+    assert_eq!(store.live_replicas(&o, 7, 1), 1);
+    let added = store.repair(&o, 7, 1);
+    assert!(added >= 2);
+    assert_eq!(store.live_replicas(&o, 7, 1), 3);
+    // And the image still verifies end to end.
+    assert!(store.get(&o, 7, 1).is_some());
+}

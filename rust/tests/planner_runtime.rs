@@ -1,0 +1,173 @@
+//! Integration: the compiled planner artifact through the PJRT runtime.
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use p2pcp::planner::{NativePlanner, PlanRequest, Planner, PlannerService, XlaPlanner};
+use p2pcp::runtime::PjrtRuntime;
+use p2pcp::util::rng::Pcg64;
+
+fn runtime() -> PjrtRuntime {
+    PjrtRuntime::cpu().expect("PJRT CPU client")
+}
+
+fn req(lifetimes: Vec<f64>, v: f64, td: f64, k: f64) -> PlanRequest {
+    PlanRequest { lifetimes, v, td, k }
+}
+
+#[test]
+fn artifact_loads_and_reports_meta() {
+    let rt = runtime();
+    let planner = XlaPlanner::new(&rt).expect("run `make artifacts` first");
+    assert_eq!(planner.batch_capacity(), 256);
+    assert_eq!(planner.window_capacity(), 64);
+}
+
+#[test]
+fn xla_matches_native_on_paper_points() {
+    let rt = runtime();
+    let mut xla = XlaPlanner::new(&rt).unwrap();
+    let mut native = NativePlanner::new();
+    for (mtbf, k, v, td) in [
+        (7200.0, 16.0, 20.0, 50.0),
+        (4000.0, 16.0, 20.0, 50.0),
+        (14400.0, 16.0, 20.0, 50.0),
+        (7200.0, 4.0, 80.0, 200.0),
+        (450.0, 1.0, 20.0, 50.0),
+    ] {
+        let r = req(vec![mtbf; 32], v, td, k);
+        let a = xla.plan_one(&r).unwrap();
+        let b = native.plan_one(&r).unwrap();
+        assert!((a.mu - b.mu).abs() < 1e-12 * b.mu.max(1.0), "mu {} vs {}", a.mu, b.mu);
+        assert!(
+            (a.lambda - b.lambda).abs() < 1e-9 * b.lambda.max(1e-12),
+            "lambda {} vs {} at mtbf={mtbf}",
+            a.lambda,
+            b.lambda
+        );
+        assert!((a.u - b.u).abs() < 1e-9, "u {} vs {}", a.u, b.u);
+        assert!((a.cbar - b.cbar).abs() < 1e-6 * b.cbar.max(1.0));
+        assert!((a.twc - b.twc).abs() < 1e-6 * b.twc.abs().max(1.0));
+    }
+}
+
+#[test]
+fn xla_matches_native_on_random_inputs() {
+    let rt = runtime();
+    let mut xla = XlaPlanner::new(&rt).unwrap();
+    let mut native = NativePlanner::new();
+    let mut rng = Pcg64::new(99, 0);
+    let mut reqs = Vec::new();
+    for _ in 0..300 {
+        let n = 1 + rng.next_below(64) as usize;
+        let mtbf = 300.0 * (1.0 + rng.next_f64() * 100.0);
+        let lifetimes: Vec<f64> =
+            (0..n).map(|_| rng.exp(1.0 / mtbf).max(1.0)).collect();
+        reqs.push(req(
+            lifetimes,
+            0.5 + rng.next_f64() * 200.0,
+            0.5 + rng.next_f64() * 500.0,
+            1.0 + rng.next_below(128) as f64,
+        ));
+    }
+    let a = xla.plan_batch(&reqs).unwrap();
+    let b = native.plan_batch(&reqs).unwrap();
+    assert_eq!(a.len(), b.len());
+    for (i, (x, n)) in a.iter().zip(&b).enumerate() {
+        assert!(
+            (x.lambda - n.lambda).abs() <= 1e-8 * n.lambda.abs().max(1e-9),
+            "row {i}: lambda {} vs {}",
+            x.lambda,
+            n.lambda
+        );
+        assert!((x.u - n.u).abs() < 1e-8, "row {i}: u {} vs {}", x.u, n.u);
+    }
+    // 300 requests at capacity 256 -> 2 PJRT executions.
+    assert_eq!(xla.batches_executed(), 2);
+}
+
+#[test]
+fn empty_windows_come_back_as_sentinels() {
+    let rt = runtime();
+    let mut xla = XlaPlanner::new(&rt).unwrap();
+    let out = xla
+        .plan_batch(&[req(vec![], 20.0, 50.0, 16.0), req(vec![7200.0; 8], 20.0, 50.0, 16.0)])
+        .unwrap();
+    assert_eq!(out[0].mu, 0.0);
+    assert_eq!(out[0].lambda, 0.0);
+    assert!(!out[0].progressing());
+    assert!(out[1].progressing());
+}
+
+#[test]
+fn windows_longer_than_capacity_use_most_recent() {
+    let rt = runtime();
+    let mut xla = XlaPlanner::new(&rt).unwrap();
+    let mut native = NativePlanner::new();
+    // 200 observations, capacity 64: the xla backend clips to the last 64.
+    let mut lifetimes = vec![100.0; 136];
+    lifetimes.extend(vec![7200.0; 64]);
+    let clipped = req(lifetimes.clone(), 20.0, 50.0, 16.0);
+    let manual = req(vec![7200.0; 64], 20.0, 50.0, 16.0);
+    let a = xla.plan_one(&clipped).unwrap();
+    let b = native.plan_one(&manual).unwrap();
+    assert!((a.mu - b.mu).abs() < 1e-12, "clipping must keep the newest window");
+}
+
+#[test]
+fn service_over_xla_batches() {
+    let rt = runtime();
+    let xla = XlaPlanner::new(&rt).unwrap();
+    let mut svc = PlannerService::new(xla, 256);
+    let mut tickets = Vec::new();
+    for i in 0..100 {
+        let mtbf = 1000.0 + 100.0 * i as f64;
+        tickets.push(svc.submit(req(vec![mtbf; 16], 20.0, 50.0, 16.0)).unwrap());
+    }
+    svc.flush().unwrap();
+    // Higher MTBF -> lower failure rate -> lower lambda: monotone answers.
+    let mut prev = f64::INFINITY;
+    for t in tickets {
+        let r = svc.take(t).unwrap();
+        assert!(r.lambda < prev);
+        prev = r.lambda;
+    }
+    assert_eq!(svc.stats().flushes, 1);
+    assert_eq!(svc.backend().batches_executed(), 1);
+}
+
+#[test]
+fn usurface_artifact_loads_and_peaks_interior() {
+    let rt = runtime();
+    let module = rt.load("usurface").expect("usurface artifact");
+    let b = module.meta.batch;
+    let g = module.meta.grid;
+    assert!(b > 0 && g > 0);
+    let mu = vec![1.0 / 7200.0; b];
+    let v = vec![20.0; b];
+    let td = vec![50.0; b];
+    let k = vec![16.0; b];
+    let dims = [b as i64];
+    let out = module
+        .execute_f64(&[(&mu, &dims), (&v, &dims), (&td, &dims), (&k, &dims)])
+        .unwrap();
+    assert_eq!(out.len(), 2);
+    let u = &out[0];
+    assert_eq!(u.len(), b * g);
+    // Row 0: interior peak (the Fig-style utilization surface).
+    let row = &u[0..g];
+    let peak = row
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0;
+    assert!(peak > 0 && peak < g - 1, "peak at edge: {peak}");
+    assert!(row[peak] > 0.5);
+    // Peak lambda close to the closed form.
+    let lam_row = &out[1][0..g];
+    let closed = p2pcp::model::optimal::optimal_lambda(16.0 / 7200.0, 20.0, 50.0).unwrap();
+    assert!(
+        (lam_row[peak] - closed).abs() < closed * 0.06,
+        "grid peak {} vs closed form {closed}",
+        lam_row[peak]
+    );
+}
