@@ -1,7 +1,9 @@
 //! Churn estimation (Sections 2 + 3.1.1): synthesize the three published
 //! P2P traces, verify the Fig. 2 statistics, and race the failure-rate
 //! estimators on a live overlay — including the Fig. 4(right) regime where
-//! the rate doubles over 20 hours.
+//! the rate doubles over 20 hours. The estimators come out of the scenario
+//! registry, so the same `"mle"` / `"ewma:0.1"` / `"count"` keys the CLI
+//! accepts are raced here.
 //!
 //! ```bash
 //! cargo run --release --example churn_estimation
@@ -9,10 +11,8 @@
 
 use p2pcp::churn::model::{ChurnModel, TimeVarying};
 use p2pcp::churn::trace::{SessionTrace, TraceKind};
-use p2pcp::estimator::count::CountEstimator;
-use p2pcp::estimator::ewma::EwmaEstimator;
-use p2pcp::estimator::mle::MleEstimator;
-use p2pcp::estimator::RateEstimator;
+use p2pcp::estimator::build_window_estimator;
+use p2pcp::scenario::registry;
 use p2pcp::util::rng::Pcg64;
 
 fn main() {
@@ -33,9 +33,14 @@ fn main() {
     println!("(rate doubles every 20 h — the Fig. 4(right) environment)\n");
     let churn = TimeVarying::new(7200.0, 20.0 * 3600.0);
     let mut rng = Pcg64::new(2, 0);
-    let mut mle = MleEstimator::new(64);
-    let mut ewma = EwmaEstimator::new(0.1);
-    let mut count = CountEstimator::new();
+    let keys = ["mle", "ewma:0.1", "count"];
+    let mut racers: Vec<_> = keys
+        .iter()
+        .map(|k| {
+            let spec = registry::parse_estimator(k).expect("registered key");
+            build_window_estimator(&spec, 64)
+        })
+        .collect();
 
     println!(
         "{:>8} {:>12} {:>12} {:>12} {:>12}",
@@ -49,9 +54,9 @@ fn main() {
         let rate = churn.rate(now);
         now += rng.exp(128.0 * rate);
         let lifetime = churn.session(now, &mut rng);
-        mle.observe(lifetime);
-        ewma.observe(lifetime);
-        count.observe(lifetime);
+        for e in racers.iter_mut() {
+            e.observe(lifetime);
+        }
         if now >= next_print {
             let fmt = |r: Option<f64>| {
                 r.map(|x| format!("{x:.3e}")).unwrap_or_else(|| "--".into())
@@ -60,9 +65,9 @@ fn main() {
                 "{:>8.1} {:>12.3e} {:>12} {:>12} {:>12}",
                 now / 3600.0,
                 churn.rate(now),
-                fmt(mle.rate()),
-                fmt(ewma.rate()),
-                fmt(count.rate()),
+                fmt(racers[0].rate()),
+                fmt(racers[1].rate()),
+                fmt(racers[2].rate()),
             );
             next_print += 6.0 * 3600.0;
         }

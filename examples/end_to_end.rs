@@ -8,45 +8,62 @@
 //!   L3     the full-stack world: 256-peer DHT overlay under Gnutella-
 //!          calibrated churn, stabilization-based failure detection
 //!          feeding the Eq. 1 MLE, Chandy–Lamport coordinated snapshots,
-//!          replicated DHT image storage, per-peer bandwidth.
+//!          replicated DHT image storage, per-peer bandwidth — all
+//!          composed through `Scenario::builder()`.
 //!
 //! Workload: a 2-hour iterative work-flow (ring-structured message-passing
 //! job, the Fig. 1(b) deployment) on 16 volunteers; the paper's headline
 //! metric (Eq. 11 relative runtime, adaptive vs fixed) is reported at the
-//! end and recorded in EXPERIMENTS.md.
+//! end. Without PJRT/artifacts the adaptive side falls back to the native
+//! closed-form planner (same decisions, see cross_validation.rs).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example end_to_end
 //! ```
 
-use p2pcp::config::{ChurnSpec, SimConfig};
-use p2pcp::coordinator::world::World;
-use p2pcp::mpi::program::{CommPattern, Program};
-use p2pcp::planner::XlaPlanner;
-use p2pcp::policy::{AdaptivePolicy, FixedPolicy};
+use p2pcp::config::{ChurnSpec, PolicySpec};
+use p2pcp::planner::{NativePlanner, Planner, XlaPlanner};
 use p2pcp::runtime::PjrtRuntime;
+use p2pcp::scenario::Scenario;
 use p2pcp::util::stats::Running;
 
-fn cfg(seed: u64) -> SimConfig {
-    SimConfig {
-        n_peers: 256,
-        k: 16,
-        job_runtime: 2.0 * 3600.0,
-        v: Some(20.0),
-        td: Some(50.0),
+fn scenario(seed: u64) -> Scenario {
+    Scenario::builder()
+        .peers(256)
+        .k(16)
+        .runtime(2.0 * 3600.0)
+        .v(20.0)
+        .td(50.0)
         // Gnutella-calibrated churn (mean session 121 min, Section 2).
-        churn: ChurnSpec::Exponential { mtbf: 121.0 * 60.0 },
-        seed,
-        max_sim_time: 40.0 * 24.0 * 3600.0,
-        ..SimConfig::default()
-    }
+        .churn(ChurnSpec::Exponential { mtbf: 121.0 * 60.0 })
+        .seed(seed)
+        .max_sim_time(40.0 * 24.0 * 3600.0)
+        .build()
+        .expect("valid scenario")
 }
 
 fn main() {
     println!("== p2pcp end-to-end driver ==");
-    let rt = PjrtRuntime::cpu().expect("PJRT CPU client");
-    println!("PJRT platform       : {}", rt.platform());
-    println!("artifacts dir       : {}", rt.artifacts_dir.display());
+    let rt = PjrtRuntime::cpu().ok();
+    let mk_planner = |rt: &Option<PjrtRuntime>| -> Box<dyn Planner> {
+        match rt {
+            Some(rt) => match XlaPlanner::new(rt) {
+                Ok(p) => Box::new(p),
+                Err(e) => {
+                    println!("[xla artifact unavailable ({e}); using native planner]");
+                    Box::new(NativePlanner::new())
+                }
+            },
+            None => Box::new(NativePlanner::new()),
+        }
+    };
+    match &rt {
+        Some(rt) => {
+            println!("PJRT platform       : {}", rt.platform());
+            println!("artifacts dir       : {}", rt.artifacts_dir.display());
+        }
+        None => println!("PJRT platform       : unavailable (native fallback)"),
+    }
 
     let trials = 5u64;
     let mut adaptive = Running::new();
@@ -54,8 +71,9 @@ fn main() {
     let mut totals = (0u64, 0u64, 0u64); // failures, checkpoints, replans
 
     for t in 0..trials {
-        // --- adaptive, planner = compiled XLA artifact ------------------
-        let mut w = World::new(cfg(1000 + t)).expect("world");
+        // --- adaptive, planner = compiled XLA artifact (or native) -------
+        let s = scenario(1000 + t);
+        let mut w = s.build_world().expect("world");
         w.warmup(4.0 * 3600.0); // overlay churns, estimator fills
         if t == 0 {
             println!(
@@ -68,10 +86,8 @@ fn main() {
                 1.0 / (121.0 * 60.0)
             );
         }
-        let planner = XlaPlanner::new(&rt).expect("run `make artifacts` first");
-        let policy = Box::new(AdaptivePolicy::new(Box::new(planner)));
-        let program = Program::new(CommPattern::Ring, 16);
-        let o = w.run_job(program, policy).expect("job");
+        let policy = s.policy_with_planner(mk_planner(&rt));
+        let o = w.run_job(s.program(), policy).expect("job");
         assert!(o.completed, "adaptive run must complete");
         adaptive.push(o.wall_time);
         totals.0 += o.failures;
@@ -79,18 +95,19 @@ fn main() {
         totals.2 += o.replans;
 
         // --- baseline: fixed 10-minute interval --------------------------
-        let mut w = World::new(cfg(1000 + t)).expect("world");
+        let mut s = scenario(1000 + t);
+        s.policy = PolicySpec::Fixed { interval: 600.0 };
+        let mut w = s.build_world().expect("world");
         w.warmup(4.0 * 3600.0);
-        let program = Program::new(CommPattern::Ring, 16);
         let o = w
-            .run_job(program, Box::new(FixedPolicy::new(600.0)))
+            .run_job(s.program(), s.build_policy().expect("policy"))
             .expect("job");
         fixed.push(o.wall_time);
     }
 
     println!("\n-- workload: 2 h ring job on 16 peers, Gnutella churn --");
     println!(
-        "adaptive[xla]       : {:>8.0} s ± {:>5.0}   ({:.1} failures, {:.1} checkpoints, {:.1} replans per run)",
+        "adaptive            : {:>8.0} s ± {:>5.0}   ({:.1} failures, {:.1} checkpoints, {:.1} replans per run)",
         adaptive.mean(),
         adaptive.ci95(),
         totals.0 as f64 / trials as f64,
@@ -104,6 +121,6 @@ fn main() {
         rel > 100.0,
         "headline check failed: adaptive should beat fixed(600) under this churn"
     );
-    println!("\nOK — all three layers composed: Pallas kernels -> JAX graph -> HLO\n\
-              artifact -> PJRT runtime -> adaptive policy -> full P2P world.");
+    println!("\nOK — all layers composed: scenario builder -> P2P world ->\n\
+              adaptive policy -> planner backend (XLA artifact when present).");
 }

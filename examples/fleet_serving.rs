@@ -4,39 +4,50 @@
 //! Jobs arrive Poisson; the coordinator admits them through the §3.2.3
 //! utilization check, replans every tick, and ALL running jobs' planning
 //! requests execute as one padded batch on the AOT-compiled artifact
-//! (falls back to the native planner when artifacts are absent).
+//! (falls back to the native planner when artifacts are absent). The
+//! network/workload side comes from the `Scenario` builder.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example fleet_serving
 //! ```
 
-use p2pcp::churn::model::Exponential;
 use p2pcp::coordinator::fleet::{run_fleet, FleetConfig};
 use p2pcp::planner::{NativePlanner, XlaPlanner};
 use p2pcp::runtime::PjrtRuntime;
+use p2pcp::scenario::Scenario;
 
 fn main() {
-    let churn = Exponential::new(7200.0);
+    let s = Scenario::builder()
+        .mtbf(7200.0)
+        .k(16)
+        .runtime(3600.0)
+        .v(20.0)
+        .td(50.0)
+        .seed(42)
+        .build()
+        .expect("valid scenario");
+    let job = s.job_params();
     let cfg = FleetConfig {
         n_jobs: 24,
         arrival_mean: 120.0, // brisk arrivals => deep batches
-        k: 16,
-        runtime: 3600.0,
-        v: 20.0,
-        td: 50.0,
+        k: job.k,
+        runtime: job.runtime,
+        v: job.v,
+        td: job.td,
         ..FleetConfig::default()
     };
+    let churn = s.build_churn().expect("churn model");
 
     println!("== fleet serving: 24 jobs, Poisson arrivals (mean 120 s), MTBF 2 h ==\n");
 
     let out = match PjrtRuntime::cpu().and_then(|rt| XlaPlanner::new(&rt)) {
         Ok(planner) => {
             println!("planner backend  : xla artifact (batch {})", planner.batch_capacity());
-            run_fleet(&cfg, &churn, planner, 42)
+            run_fleet(&cfg, churn.as_ref(), planner, s.seed)
         }
         Err(e) => {
             println!("planner backend  : native (artifact unavailable: {e})");
-            run_fleet(&cfg, &churn, NativePlanner::new(), 42)
+            run_fleet(&cfg, churn.as_ref(), NativePlanner::new(), s.seed)
         }
     };
 

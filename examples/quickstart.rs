@@ -2,52 +2,55 @@
 //!
 //! Simulates one 4-hour message-passing job on 16 volunteer peers
 //! (MTBF = 2 h, the Gnutella-scale churn of Section 2) under three
-//! checkpoint policies and prints the Eq. 11 relative runtimes.
+//! checkpoint policies and prints the Eq. 11 relative runtimes. The whole
+//! stack is assembled through the `Scenario` builder — swap any component
+//! (`.churn(..)`, `.estimator(..)`, `.policy(..)`) to explore.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 
-use p2pcp::churn::model::Exponential;
-use p2pcp::coordinator::job::{JobParams, JobSimulator};
-use p2pcp::planner::NativePlanner;
-use p2pcp::policy::{AdaptivePolicy, CheckpointPolicy, FixedPolicy};
+use p2pcp::config::PolicySpec;
+use p2pcp::scenario::Scenario;
 use p2pcp::util::stats::Running;
 
 fn main() {
-    let churn = Exponential::new(7200.0);
-    let params = JobParams {
-        k: 16,
-        runtime: 4.0 * 3600.0,
-        v: 20.0,
-        td: 50.0,
-        ..JobParams::default()
-    };
+    let base = Scenario::builder()
+        .mtbf(7200.0)
+        .k(16)
+        .runtime(4.0 * 3600.0)
+        .v(20.0)
+        .td(50.0)
+        .build()
+        .expect("valid scenario");
     println!("p2pcp quickstart — 16 peers, MTBF 2 h, V=20 s, Td=50 s, 4 h job");
-    println!("(group MTBF is 7200/16 = 450 s: expect ~{} failures per run)\n",
-        (params.runtime / 450.0 * 1.5) as u64);
+    println!(
+        "(group MTBF is 7200/16 = 450 s: expect ~{} failures per run)\n",
+        (base.runtime / 450.0 * 1.5) as u64
+    );
 
-    let sim = JobSimulator::new(params, &churn);
     let trials = 25;
-    let run_policy = |mk: &dyn Fn() -> Box<dyn CheckpointPolicy>| -> (f64, f64, f64) {
+    let run_policy = |policy: PolicySpec| -> (f64, f64, f64) {
+        let mut s = base.clone();
+        s.policy = policy;
         let mut wall = Running::new();
         let mut fails = 0u64;
-        for t in 0..trials {
-            let mut pol = mk();
-            let o = sim.run(pol.as_mut(), 42 + t, t);
+        for o in s.run_trials(trials).expect("runnable scenario") {
             wall.push(o.wall_time);
             fails += o.failures;
         }
         (wall.mean(), wall.ci95(), fails as f64 / trials as f64)
     };
 
-    let (adaptive, aci, af) =
-        run_policy(&|| Box::new(AdaptivePolicy::new(Box::new(NativePlanner::new()))));
-    println!("{:<22} {:>9.0} s ± {:>5.0}   ({af:.1} failures/run)", "adaptive (the paper)", adaptive, aci);
+    let (adaptive, aci, af) = run_policy(PolicySpec::Adaptive);
+    println!(
+        "{:<22} {:>9.0} s ± {:>5.0}   ({af:.1} failures/run)",
+        "adaptive (the paper)", adaptive, aci
+    );
 
     println!("{:<22} {:>9} {:>22} {:>10}", "", "wall", "", "rel. runtime");
     for t_fixed in [60.0, 300.0, 900.0, 1800.0, 3600.0] {
-        let (fixed, ci, _) = run_policy(&|| Box::new(FixedPolicy::new(t_fixed)));
+        let (fixed, ci, _) = run_policy(PolicySpec::Fixed { interval: t_fixed });
         println!(
             "{:<22} {:>9.0} s ± {:>5.0}          {:>9.1}%",
             format!("fixed T={}s", t_fixed),

@@ -10,7 +10,7 @@
 //! cargo run --release --example workflow_offload
 //! ```
 
-use p2pcp::net::overlay::Overlay;
+use p2pcp::scenario::Scenario;
 use p2pcp::util::csv::Table;
 use p2pcp::util::rng::Pcg64;
 use p2pcp::workflow::dag::Workflow;
@@ -18,7 +18,8 @@ use p2pcp::workflow::scheduler::{deploy, DeploymentKind};
 
 fn main() {
     let mut rng = Pcg64::new(7, 0);
-    let overlay = Overlay::new(512, &mut rng);
+    let scenario = Scenario::builder().peers(512).seed(7).build().expect("valid scenario");
+    let overlay = scenario.build_overlay(&mut rng);
     println!("== work-flow deployment: server-mediated vs P2P-mediated ==");
     println!("overlay: 512 peers\n");
 

@@ -11,32 +11,40 @@
 //! `cargo bench --bench ablation` (add `-- --quick` for a smoke run).
 
 use p2pcp::config::ChurnSpec;
-use p2pcp::coordinator::job::JobParams;
+use p2pcp::estimator::EstimatorSpec;
 use p2pcp::experiments::bench_support::{emit_table, is_quick};
-use p2pcp::experiments::relative_runtime::{run_comparison, ComparisonConfig};
+use p2pcp::scenario::{ComparisonSweep, Scenario, SweepRunner};
 use p2pcp::util::csv::Table;
 
-fn cfg(churn: ChurnSpec, window: usize, trials: u64) -> ComparisonConfig {
-    ComparisonConfig {
-        churn,
-        job: JobParams {
-            k: 16,
-            runtime: 4.0 * 3600.0,
-            v: 20.0,
-            td: 50.0,
-            estimator_window: window,
-            max_sim_time: 30.0 * 24.0 * 3600.0,
-            ..JobParams::default()
-        },
-        fixed_intervals: vec![],
-        trials,
-        seed: 6_001,
-        with_oracle: true,
-    }
+fn base(churn: ChurnSpec, window: usize, estimator: EstimatorSpec) -> Scenario {
+    Scenario::builder()
+        .churn(churn)
+        .k(16)
+        .runtime(4.0 * 3600.0)
+        .v(20.0)
+        .td(50.0)
+        .estimator(estimator)
+        .estimator_window(window)
+        .max_sim_time(30.0 * 24.0 * 3600.0)
+        .seed(6_001)
+        .build()
+        .expect("valid scenario")
+}
+
+fn oracle_gap(s: Scenario, trials: u64, threads: usize) -> (f64, f64) {
+    let res = ComparisonSweep::new(s)
+        .intervals(vec![])
+        .trials(trials)
+        .with_oracle(true)
+        .threads(threads)
+        .run()
+        .expect("sweep");
+    (res.adaptive_runtime, res.oracle_runtime.expect("oracle requested"))
 }
 
 fn main() {
     let trials = if is_quick() { 6 } else { 40 };
+    let threads = SweepRunner::auto().threads;
 
     // --- window-size ablation (stationary + time-varying) ----------------
     let mut t = Table::new(&[
@@ -54,17 +62,16 @@ fn main() {
         ),
     ] {
         for window in [8usize, 16, 32, 64, 128, 256] {
-            let res = run_comparison(&cfg(churn.clone(), window, trials));
-            let oracle = res.oracle_runtime.unwrap();
-            let cost = (res.adaptive_runtime / oracle - 1.0) * 100.0;
+            let (adaptive, oracle) =
+                oracle_gap(base(churn.clone(), window, EstimatorSpec::Mle), trials, threads);
+            let cost = (adaptive / oracle - 1.0) * 100.0;
             println!(
-                "{label:<13} K={window:<4} adaptive {:>8.0} s   oracle {:>8.0} s   estimation cost {:+.1}%",
-                res.adaptive_runtime, oracle, cost
+                "{label:<13} K={window:<4} adaptive {adaptive:>8.0} s   oracle {oracle:>8.0} s   estimation cost {cost:+.1}%"
             );
             t.push(vec![
                 label.to_string(),
                 format!("{window}"),
-                format!("{:.1}", res.adaptive_runtime),
+                format!("{adaptive:.1}"),
                 format!("{oracle:.1}"),
                 format!("{cost:.2}"),
             ]);
@@ -72,20 +79,48 @@ fn main() {
     }
     emit_table("ablation_window", &t);
 
+    // --- estimator-kind ablation (the registry's estimators racing) ------
+    let mut t3 = Table::new(&["churn", "estimator", "adaptive_runtime_s", "oracle_runtime_s"]);
+    for (label, churn) in [
+        ("stationary", ChurnSpec::Exponential { mtbf: 7200.0 }),
+        (
+            "doubling_20h",
+            ChurnSpec::TimeVarying { mtbf0: 7200.0, double_time: 20.0 * 3600.0 },
+        ),
+    ] {
+        for estimator in [
+            EstimatorSpec::Mle,
+            EstimatorSpec::Ewma { alpha: 0.1 },
+            EstimatorSpec::Count,
+        ] {
+            let name = p2pcp::scenario::registry::estimator_key(&estimator);
+            let (adaptive, oracle) =
+                oracle_gap(base(churn.clone(), 64, estimator), trials, threads);
+            println!(
+                "{label:<13} {name:<10} adaptive {adaptive:>8.0} s   oracle {oracle:>8.0} s"
+            );
+            t3.push(vec![
+                label.to_string(),
+                name,
+                format!("{adaptive:.1}"),
+                format!("{oracle:.1}"),
+            ]);
+        }
+    }
+    emit_table("ablation_estimator", &t3);
+
     // --- heavy-tail misfit ------------------------------------------------
     let mut t2 = Table::new(&["shape", "adaptive_runtime_s", "oracle_runtime_s"]);
     for shape in [0.5, 0.7, 1.0, 1.5] {
-        let res = run_comparison(&cfg(
-            ChurnSpec::HeavyTail { mean: 7200.0, shape },
-            64,
+        let (adaptive, oracle) = oracle_gap(
+            base(ChurnSpec::HeavyTail { mean: 7200.0, shape }, 64, EstimatorSpec::Mle),
             trials,
-        ));
-        let oracle = res.oracle_runtime.unwrap();
-        println!(
-            "weibull shape={shape}: adaptive {:>8.0} s   oracle {:>8.0} s",
-            res.adaptive_runtime, oracle
+            threads,
         );
-        t2.push_f64(&[shape, res.adaptive_runtime, oracle]);
+        println!(
+            "weibull shape={shape}: adaptive {adaptive:>8.0} s   oracle {oracle:>8.0} s"
+        );
+        t2.push_f64(&[shape, adaptive, oracle]);
     }
     emit_table("ablation_heavytail", &t2);
 }

@@ -8,7 +8,6 @@
 //!
 //! `cargo bench --bench extensions` (add `-- --quick` for a smoke run).
 
-use p2pcp::churn::model::Exponential;
 use p2pcp::coordinator::fleet::{run_fleet, FleetConfig};
 use p2pcp::coordinator::replication::{ReplicatedJobSimulator, ReplicatedParams};
 use p2pcp::estimator::hybrid::HybridEstimator;
@@ -16,7 +15,7 @@ use p2pcp::estimator::mle::MleEstimator;
 use p2pcp::estimator::RateEstimator;
 use p2pcp::experiments::bench_support::{emit_table, is_quick};
 use p2pcp::planner::NativePlanner;
-use p2pcp::policy::AdaptivePolicy;
+use p2pcp::scenario::Scenario;
 use p2pcp::util::csv::Table;
 use p2pcp::util::rng::Pcg64;
 use p2pcp::util::stats::Running;
@@ -26,7 +25,13 @@ fn main() {
 
     // ---- 1. replication ----------------------------------------------------
     println!("-- §4.3 replication + checkpointing (MTBF 1800 s, k=16, 2 h job) --");
-    let churn = Exponential::new(1800.0);
+    let repl_scenario = Scenario::builder()
+        .mtbf(1800.0)
+        .k(16)
+        .runtime(2.0 * 3600.0)
+        .build()
+        .expect("valid scenario");
+    let churn = repl_scenario.build_churn().expect("churn model");
     let mut t = Table::new(&[
         "replicas",
         "wall_s",
@@ -38,17 +43,17 @@ fn main() {
     for r in [1usize, 2, 3] {
         let params = ReplicatedParams {
             replicas: r,
-            runtime: 2.0 * 3600.0,
+            runtime: repl_scenario.runtime,
             ..ReplicatedParams::default()
         };
-        let sim = ReplicatedJobSimulator::new(params, &churn);
+        let sim = ReplicatedJobSimulator::new(params, churn.as_ref());
         let mut wall = Running::new();
         let mut fails = Running::new();
         let mut cps = Running::new();
         let mut iv = Running::new();
         for s in 0..trials {
-            let mut pol = AdaptivePolicy::new(Box::new(NativePlanner::new()));
-            let o = sim.run(&mut pol, 7_000 + s, s);
+            let mut pol = repl_scenario.build_policy().expect("policy");
+            let o = sim.run(pol.as_mut(), 7_000 + s, s);
             wall.push(o.wall_time);
             fails.push(o.failures as f64);
             cps.push(o.checkpoints as f64);
@@ -100,7 +105,14 @@ fn main() {
 
     // ---- 3. fleet serving ----------------------------------------------------
     println!("\n-- fleet serving: shared planner batching + admission control --");
-    let churn = Exponential::new(7200.0);
+    let fleet_scenario = Scenario::builder()
+        .mtbf(7200.0)
+        .k(16)
+        .runtime(3600.0)
+        .seed(9_001)
+        .build()
+        .expect("valid scenario");
+    let churn = fleet_scenario.build_churn().expect("churn model");
     let mut t = Table::new(&[
         "arrival_mean_s",
         "completed",
@@ -114,10 +126,10 @@ fn main() {
         let cfg = FleetConfig {
             n_jobs: if is_quick() { 8 } else { 32 },
             arrival_mean: arrival,
-            runtime: 3600.0,
+            runtime: fleet_scenario.runtime,
             ..FleetConfig::default()
         };
-        let out = run_fleet(&cfg, &churn, NativePlanner::new(), 9_001);
+        let out = run_fleet(&cfg, churn.as_ref(), NativePlanner::new(), fleet_scenario.seed);
         println!(
             "arrival 1/{arrival:>5.0}s: {:>3} done, {:>2} rejected   wall {:>6.0} s   latency {:>6.0} s   batch {:>5.1}",
             out.completed, out.rejected, out.mean_wall, out.mean_latency, out.mean_batch

@@ -3,20 +3,21 @@
 //! 14400 s), V = 20 s, T_d = 50 s, k = 16 peers, 4 h fault-free job.
 //!
 //! Regenerates the left chart's series; expect relative runtime > 100%
-//! across the fixed-T axis (U-shaped, diverging for large T).
+//! across the fixed-T axis (U-shaped, diverging for large T). The grid
+//! fans across all cores via the scenario SweepRunner — output is
+//! byte-identical to a single-threaded run.
 //!
 //! `cargo bench --bench fig4_left` (add `-- --quick` for a smoke run).
 
-use p2pcp::config::ChurnSpec;
-use p2pcp::coordinator::job::JobParams;
 use p2pcp::experiments::bench_support::{emit_table, is_quick};
-use p2pcp::experiments::relative_runtime::{run_comparison, ComparisonConfig};
+use p2pcp::scenario::{ComparisonSweep, Scenario, SweepRunner};
 use p2pcp::util::csv::Table;
 
 fn main() {
     let quick = is_quick();
     let trials = if quick { 8 } else { 60 };
     let intervals = vec![60.0, 120.0, 300.0, 600.0, 1200.0, 2400.0, 3600.0];
+    let threads = SweepRunner::auto().threads;
 
     let mut combined = Table::new(&[
         "mtbf_s",
@@ -28,22 +29,22 @@ fn main() {
     ]);
 
     for mtbf in [4000.0, 7200.0, 14400.0] {
-        let cfg = ComparisonConfig {
-            churn: ChurnSpec::Exponential { mtbf },
-            job: JobParams {
-                k: 16,
-                runtime: 4.0 * 3600.0,
-                v: 20.0,
-                td: 50.0,
-                max_sim_time: 30.0 * 24.0 * 3600.0,
-                ..JobParams::default()
-            },
-            fixed_intervals: intervals.clone(),
-            trials,
-            seed: 4_001,
-            with_oracle: false,
-        };
-        let res = run_comparison(&cfg);
+        let base = Scenario::builder()
+            .mtbf(mtbf)
+            .k(16)
+            .runtime(4.0 * 3600.0)
+            .v(20.0)
+            .td(50.0)
+            .max_sim_time(30.0 * 24.0 * 3600.0)
+            .seed(4_001)
+            .build()
+            .expect("valid scenario");
+        let res = ComparisonSweep::new(base)
+            .intervals(intervals.clone())
+            .trials(trials)
+            .threads(threads)
+            .run()
+            .expect("sweep");
         println!(
             "MTBF={mtbf}: adaptive {:.0} s ± {:.0} (mean interval {:.0} s)",
             res.adaptive_runtime, res.adaptive_ci95, res.adaptive_mean_interval

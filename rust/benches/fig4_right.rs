@@ -9,9 +9,8 @@
 //! `cargo bench --bench fig4_right` (add `-- --quick` for a smoke run).
 
 use p2pcp::config::ChurnSpec;
-use p2pcp::coordinator::job::JobParams;
 use p2pcp::experiments::bench_support::{emit_table, is_quick};
-use p2pcp::experiments::relative_runtime::{run_comparison, ComparisonConfig};
+use p2pcp::scenario::{ComparisonSweep, Scenario, SweepRunner};
 use p2pcp::util::csv::Table;
 
 fn main() {
@@ -19,6 +18,7 @@ fn main() {
     let trials = if quick { 6 } else { 40 };
     let intervals = vec![60.0, 120.0, 300.0, 600.0, 1200.0, 2400.0, 3600.0];
     let double_time = 20.0 * 3600.0;
+    let threads = SweepRunner::auto().threads;
 
     let mut combined = Table::new(&[
         "mtbf0_s",
@@ -30,22 +30,22 @@ fn main() {
     ]);
 
     for mtbf0 in [4000.0, 7200.0, 14400.0] {
-        let cfg = ComparisonConfig {
-            churn: ChurnSpec::TimeVarying { mtbf0, double_time },
-            job: JobParams {
-                k: 16,
-                runtime: 8.0 * 3600.0, // long enough for the rate to move
-                v: 20.0,
-                td: 50.0,
-                max_sim_time: 30.0 * 24.0 * 3600.0,
-                ..JobParams::default()
-            },
-            fixed_intervals: intervals.clone(),
-            trials,
-            seed: 4_002,
-            with_oracle: false,
-        };
-        let res = run_comparison(&cfg);
+        let base = Scenario::builder()
+            .churn(ChurnSpec::TimeVarying { mtbf0, double_time })
+            .k(16)
+            .runtime(8.0 * 3600.0) // long enough for the rate to move
+            .v(20.0)
+            .td(50.0)
+            .max_sim_time(30.0 * 24.0 * 3600.0)
+            .seed(4_002)
+            .build()
+            .expect("valid scenario");
+        let res = ComparisonSweep::new(base)
+            .intervals(intervals.clone())
+            .trials(trials)
+            .threads(threads)
+            .run()
+            .expect("sweep");
         println!(
             "MTBF0={mtbf0} (doubling/20 h): adaptive {:.0} s ± {:.0}",
             res.adaptive_runtime, res.adaptive_ci95

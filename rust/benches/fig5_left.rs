@@ -5,16 +5,15 @@
 //!
 //! `cargo bench --bench fig5_left` (add `-- --quick` for a smoke run).
 
-use p2pcp::config::ChurnSpec;
-use p2pcp::coordinator::job::JobParams;
 use p2pcp::experiments::bench_support::{emit_table, is_quick};
-use p2pcp::experiments::relative_runtime::{run_comparison, ComparisonConfig};
+use p2pcp::scenario::{ComparisonSweep, Scenario, SweepRunner};
 use p2pcp::util::csv::Table;
 
 fn main() {
     let quick = is_quick();
     let trials = if quick { 6 } else { 40 };
     let intervals = vec![60.0, 120.0, 300.0, 600.0, 1200.0, 2400.0, 3600.0];
+    let threads = SweepRunner::auto().threads;
 
     let mut combined = Table::new(&[
         "v_s",
@@ -25,22 +24,22 @@ fn main() {
     ]);
 
     for v in [5.0, 10.0, 20.0, 40.0, 80.0] {
-        let cfg = ComparisonConfig {
-            churn: ChurnSpec::Exponential { mtbf: 7200.0 },
-            job: JobParams {
-                k: 16,
-                runtime: 4.0 * 3600.0,
-                v,
-                td: 50.0,
-                max_sim_time: 30.0 * 24.0 * 3600.0,
-                ..JobParams::default()
-            },
-            fixed_intervals: intervals.clone(),
-            trials,
-            seed: 5_001,
-            with_oracle: false,
-        };
-        let res = run_comparison(&cfg);
+        let base = Scenario::builder()
+            .mtbf(7200.0)
+            .k(16)
+            .runtime(4.0 * 3600.0)
+            .v(v)
+            .td(50.0)
+            .max_sim_time(30.0 * 24.0 * 3600.0)
+            .seed(5_001)
+            .build()
+            .expect("valid scenario");
+        let res = ComparisonSweep::new(base)
+            .intervals(intervals.clone())
+            .trials(trials)
+            .threads(threads)
+            .run()
+            .expect("sweep");
         println!(
             "V={v}: adaptive {:.0} s (mean interval {:.0} s)",
             res.adaptive_runtime, res.adaptive_mean_interval

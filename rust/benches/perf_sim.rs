@@ -1,24 +1,25 @@
 //! L3 perf: simulator throughput — the fast-path jobs/second, the DES
 //! event rate of the full-stack world, and the overlay routing rate.
-//! §Perf in EXPERIMENTS.md tracks these before/after optimization.
+//! §Perf in DESIGN.md tracks these before/after optimization.
 //!
 //! `cargo bench --bench perf_sim`
 
-use p2pcp::churn::model::Exponential;
-use p2pcp::config::{ChurnSpec, SimConfig};
-use p2pcp::coordinator::job::{JobParams, JobSimulator};
-use p2pcp::coordinator::world::World;
+use p2pcp::coordinator::job::JobSimulator;
 use p2pcp::experiments::bench_support::{report_throughput, report_timing, time_it};
-use p2pcp::net::overlay::Overlay;
 use p2pcp::net::routing::{route, HopLatency};
 use p2pcp::policy::FixedPolicy;
+use p2pcp::scenario::Scenario;
 use p2pcp::util::rng::Pcg64;
 
 fn main() {
     // --- fast-path job simulation ----------------------------------------
-    let churn = Exponential::new(7200.0);
-    let params = JobParams { runtime: 4.0 * 3600.0, ..JobParams::default() };
-    let sim = JobSimulator::new(params, &churn);
+    let fast = Scenario::builder()
+        .mtbf(7200.0)
+        .runtime(4.0 * 3600.0)
+        .build()
+        .expect("valid scenario");
+    let churn = fast.build_churn().expect("churn model");
+    let sim = JobSimulator::new(fast.job_params(), churn.as_ref());
     let mut seed = 0u64;
     let r = time_it(3, 20, || {
         let mut pol = FixedPolicy::new(300.0);
@@ -30,34 +31,26 @@ fn main() {
 
     let mut seed2 = 1000u64;
     let r = time_it(3, 20, || {
-        let mut pol = p2pcp::policy::AdaptivePolicy::new(Box::new(
-            p2pcp::planner::NativePlanner::new(),
-        ));
+        let mut pol = fast.build_policy().expect("adaptive policy");
         seed2 += 1;
-        std::hint::black_box(sim.run(&mut pol, seed2, 0));
+        std::hint::black_box(sim.run(pol.as_mut(), seed2, 0));
     });
     report_timing("fastpath: one 4h job (adaptive native)", &r);
 
     // --- full-stack world event rate ---------------------------------------
+    let world_scenario = Scenario::builder()
+        .peers(512)
+        .mtbf(3600.0)
+        .seed(99)
+        .build()
+        .expect("valid scenario");
     let r = time_it(1, 5, || {
-        let cfg = SimConfig {
-            n_peers: 512,
-            churn: ChurnSpec::Exponential { mtbf: 3600.0 },
-            seed: 99,
-            ..SimConfig::default()
-        };
-        let mut w = World::new(cfg).unwrap();
+        let mut w = world_scenario.build_world().unwrap();
         w.warmup(6.0 * 3600.0);
         std::hint::black_box(w.events_processed());
     });
     // Count events once for the throughput figure.
-    let cfg = SimConfig {
-        n_peers: 512,
-        churn: ChurnSpec::Exponential { mtbf: 3600.0 },
-        seed: 99,
-        ..SimConfig::default()
-    };
-    let mut w = World::new(cfg).unwrap();
+    let mut w = world_scenario.build_world().unwrap();
     w.warmup(6.0 * 3600.0);
     let events = w.events_processed() as f64;
     report_timing("world: 512 peers x 6h churn+stabilize", &r);
@@ -65,7 +58,11 @@ fn main() {
 
     // --- overlay routing ----------------------------------------------------
     let mut rng = Pcg64::new(5, 0);
-    let overlay = Overlay::new(1024, &mut rng);
+    let overlay = Scenario::builder()
+        .peers(1024)
+        .build()
+        .expect("valid scenario")
+        .build_overlay(&mut rng);
     let n_routes = 10_000u64;
     let r = time_it(1, 10, || {
         for i in 0..n_routes {

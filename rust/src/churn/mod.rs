@@ -11,3 +11,59 @@ pub mod trace;
 
 pub use model::{ChurnModel, Exponential, HeavyTail, TimeVarying, TraceReplay};
 pub use trace::{SessionTrace, TraceKind};
+
+use crate::config::ChurnSpec;
+use crate::error::{Error, Result};
+
+/// Sessions synthesized when a trace-backed model is requested.
+const TRACE_SESSIONS: usize = 20_000;
+
+/// Resolve a [`ChurnSpec`] into a live model — the single churn factory
+/// shared by the full-stack world, the fast path, and the experiment
+/// harness (`seed` only matters for trace synthesis; it is mixed so the
+/// trace stream is independent of the simulation stream).
+pub fn build_churn_model(spec: &ChurnSpec, seed: u64) -> Result<Box<dyn ChurnModel>> {
+    Ok(match spec {
+        ChurnSpec::Exponential { mtbf } => Box::new(Exponential::new(*mtbf)),
+        ChurnSpec::TimeVarying { mtbf0, double_time } => {
+            Box::new(TimeVarying::new(*mtbf0, *double_time))
+        }
+        ChurnSpec::HeavyTail { mean, shape } => Box::new(HeavyTail::new(*mean, *shape)),
+        ChurnSpec::Trace { kind } => {
+            let k = match kind.as_str() {
+                "gnutella" => TraceKind::Gnutella,
+                "overnet" => TraceKind::Overnet,
+                "bittorrent" => TraceKind::Bittorrent,
+                other => return Err(Error::Config(format!("unknown trace '{other}'"))),
+            };
+            let trace = SessionTrace::synthesize(k, TRACE_SESSIONS, seed ^ 0x7ACE);
+            Box::new(TraceReplay::new(trace.durations()))
+        }
+    })
+}
+
+#[cfg(test)]
+mod factory_tests {
+    use super::*;
+
+    #[test]
+    fn builds_every_spec_kind() {
+        let specs = [
+            ChurnSpec::Exponential { mtbf: 7200.0 },
+            ChurnSpec::TimeVarying { mtbf0: 7200.0, double_time: 72_000.0 },
+            ChurnSpec::HeavyTail { mean: 7200.0, shape: 0.7 },
+            ChurnSpec::Trace { kind: "gnutella".into() },
+        ];
+        for s in &specs {
+            let m = build_churn_model(s, 42).unwrap();
+            assert!(m.rate(0.0) > 0.0, "{}", m.describe());
+        }
+    }
+
+    #[test]
+    fn unknown_trace_is_an_error() {
+        let e = build_churn_model(&ChurnSpec::Trace { kind: "nope".into() }, 1).unwrap_err();
+        assert!(e.to_string().contains("unknown trace"));
+    }
+}
+

@@ -2,16 +2,32 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value` and positional args,
 //! with typed getters and an unknown-flag check.
+//!
+//! A bare `--flag` followed by another `--…` token is recorded as a
+//! *boolean* — and reading a boolean through a value getter is an error,
+//! so `p2pcp sweep --out --oracle` fails loudly instead of writing a file
+//! named `true`. Repeated flags and unknown flags are reported together,
+//! listing every offender.
 
 use crate::error::{Error, Result};
 use std::collections::BTreeMap;
+
+/// How a flag appeared on the command line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum FlagValue {
+    /// `--flag` with no value (boolean switch).
+    Bool,
+    /// `--key value` or `--key=value`.
+    Val(String),
+}
 
 /// Parsed arguments.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
     pub positional: Vec<String>,
-    flags: BTreeMap<String, String>,
-    seen: Vec<String>,
+    flags: BTreeMap<String, FlagValue>,
+    /// Flags that appeared more than once (reported by `check_unknown`).
+    duplicates: Vec<String>,
 }
 
 impl Args {
@@ -19,22 +35,27 @@ impl Args {
     pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
         let mut out = Args::default();
         let mut it = tokens.into_iter().peekable();
+        let insert = |out: &mut Args, key: String, val: FlagValue| {
+            if out.flags.insert(key.clone(), val).is_some() && !out.duplicates.contains(&key) {
+                out.duplicates.push(key);
+            }
+        };
         while let Some(tok) = it.next() {
             if let Some(body) = tok.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
-                    out.flags.insert(k.to_string(), v.to_string());
-                    out.seen.push(k.to_string());
+                    insert(&mut out, k.to_string(), FlagValue::Val(v.to_string()));
                 } else {
-                    // `--key value` unless the next token is another flag.
+                    // `--key value` unless the next token is another flag;
+                    // a lone `-5.5`-style token still counts as a value so
+                    // negative numbers work.
                     let takes_value =
                         it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
                     if takes_value {
                         let v = it.next().unwrap();
-                        out.flags.insert(body.to_string(), v);
+                        insert(&mut out, body.to_string(), FlagValue::Val(v));
                     } else {
-                        out.flags.insert(body.to_string(), "true".into());
+                        insert(&mut out, body.to_string(), FlagValue::Bool);
                     }
-                    out.seen.push(body.to_string());
                 }
             } else {
                 out.positional.push(tok);
@@ -47,16 +68,25 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// Was the flag present at all (boolean or valued)?
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
 
-    pub fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+    /// The flag's value: `Ok(None)` when absent, an error when the flag
+    /// was passed without a value.
+    pub fn get(&self, key: &str) -> Result<Option<&str>> {
+        match self.flags.get(key) {
+            None => Ok(None),
+            Some(FlagValue::Val(v)) => Ok(Some(v.as_str())),
+            Some(FlagValue::Bool) => Err(Error::Config(format!(
+                "flag --{key} requires a value (got bare --{key})"
+            ))),
+        }
     }
 
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
-        match self.flags.get(key) {
+        match self.get(key)? {
             None => Ok(default),
             Some(v) => v
                 .parse()
@@ -65,7 +95,7 @@ impl Args {
     }
 
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
-        match self.flags.get(key) {
+        match self.get(key)? {
             None => Ok(default),
             Some(v) => v
                 .parse()
@@ -77,20 +107,34 @@ impl Args {
         Ok(self.get_u64(key, default as u64)? as usize)
     }
 
-    pub fn get_str(&self, key: &str, default: &str) -> String {
-        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    pub fn get_str(&self, key: &str, default: &str) -> Result<String> {
+        Ok(self.get(key)?.unwrap_or(default).to_string())
     }
 
-    /// Error if any provided flag is not in `allowed` — typos must not
-    /// silently run a default experiment.
+    /// Error if any provided flag is not in `allowed` (typos must not
+    /// silently run a default experiment) or appeared twice. Reports every
+    /// offender in one message.
     pub fn check_unknown(&self, allowed: &[&str]) -> Result<()> {
-        for k in self.flags.keys() {
-            if !allowed.contains(&k.as_str()) {
-                return Err(Error::Config(format!(
-                    "unknown flag --{k}; allowed: {}",
-                    allowed.join(", ")
-                )));
-            }
+        let unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(|k| k.as_str())
+            .filter(|k| !allowed.contains(k))
+            .collect();
+        if !unknown.is_empty() {
+            return Err(Error::Config(format!(
+                "unknown flag{} --{}; allowed: {}",
+                if unknown.len() > 1 { "s" } else { "" },
+                unknown.join(", --"),
+                allowed.join(", ")
+            )));
+        }
+        if !self.duplicates.is_empty() {
+            return Err(Error::Config(format!(
+                "flag{} given more than once: --{}",
+                if self.duplicates.len() > 1 { "s" } else { "" },
+                self.duplicates.join(", --")
+            )));
         }
         Ok(())
     }
@@ -106,14 +150,23 @@ mod tests {
 
     #[test]
     fn flags_and_positionals() {
-        // NB: a bare `--flag` greedily takes the next non-flag token as
-        // its value; boolean flags therefore go last or use `--flag=true`.
         let a = parse("simulate out.csv --mtbf 7200 --policy=adaptive --quick");
         assert_eq!(a.positional, vec!["simulate", "out.csv"]);
         assert_eq!(a.get_f64("mtbf", 0.0).unwrap(), 7200.0);
-        assert_eq!(a.get("policy"), Some("adaptive"));
+        assert_eq!(a.get("policy").unwrap(), Some("adaptive"));
         assert!(a.has("quick"));
-        assert_eq!(a.get("quick"), Some("true"));
+        // Booleans are present but have no value to read.
+        assert!(a.get("quick").is_err());
+    }
+
+    #[test]
+    fn bare_flag_before_another_flag_is_boolean_not_value() {
+        // The old parser silently stored out="true" here.
+        let a = parse("sweep --out --oracle");
+        assert!(a.has("out") && a.has("oracle"));
+        let err = a.get("out").unwrap_err().to_string();
+        assert!(err.contains("--out requires a value"), "{err}");
+        assert!(a.get_str("out", "default").is_err());
     }
 
     #[test]
@@ -121,18 +174,41 @@ mod tests {
         let a = parse("--mtbf abc");
         assert!(a.get_f64("mtbf", 0.0).is_err());
         assert_eq!(a.get_f64("missing", 5.0).unwrap(), 5.0);
+        // A boolean read through a typed getter errors instead of
+        // defaulting (the flag was clearly *meant* to carry a value).
+        let a = parse("--trials --seed 7");
+        assert!(a.get_u64("trials", 40).is_err());
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 7);
     }
 
     #[test]
-    fn unknown_flag_check() {
-        let a = parse("--mtbf 7200 --oops 1");
-        assert!(a.check_unknown(&["mtbf"]).is_err());
-        assert!(a.check_unknown(&["mtbf", "oops"]).is_ok());
+    fn unknown_flag_check_lists_every_offender() {
+        let a = parse("--mtbf 7200 --oops 1 --worse 2");
+        let err = a.check_unknown(&["mtbf"]).unwrap_err().to_string();
+        assert!(err.contains("--oops") && err.contains("--worse"), "{err}");
+        assert!(a.check_unknown(&["mtbf", "oops", "worse"]).is_ok());
+    }
+
+    #[test]
+    fn duplicate_flags_are_rejected() {
+        let a = parse("--k 4 --k 8");
+        let err = a.check_unknown(&["k"]).unwrap_err().to_string();
+        assert!(err.contains("more than once") && err.contains("--k"), "{err}");
     }
 
     #[test]
     fn negative_number_values() {
         let a = parse("--offset=-5.5");
         assert_eq!(a.get_f64("offset", 0.0).unwrap(), -5.5);
+        // Space-separated negatives work too: `-5.5` is not a `--flag`.
+        let a = parse("--offset -5.5");
+        assert_eq!(a.get_f64("offset", 0.0).unwrap(), -5.5);
+    }
+
+    #[test]
+    fn explicit_equals_bool() {
+        let a = parse("--quick=true");
+        assert!(a.has("quick"));
+        assert_eq!(a.get("quick").unwrap(), Some("true"));
     }
 }

@@ -12,8 +12,7 @@
 //! stabilization and shares observations, Section 3.1.1/3.1.4).
 
 use crate::churn::model::ChurnModel;
-use crate::estimator::mle::MleEstimator;
-use crate::estimator::RateEstimator;
+use crate::estimator::{build_window_estimator, EstimatorSpec};
 use crate::policy::{CheckpointPolicy, PolicyCtx};
 use crate::util::rng::Pcg64;
 
@@ -36,6 +35,9 @@ pub struct JobParams {
     pub replan_period: f64,
     /// Estimator window K (Eq. 1).
     pub estimator_window: usize,
+    /// Which failure-rate estimator feeds the policy (default: the
+    /// paper's Eq. 1 windowed MLE).
+    pub estimator: EstimatorSpec,
     /// Stabilization period (detection-noise scale for observations).
     pub stab_period: f64,
     /// Abort threshold (simulated seconds).
@@ -54,6 +56,7 @@ impl Default for JobParams {
             td: 50.0,
             replan_period: 300.0,
             estimator_window: 64,
+            estimator: EstimatorSpec::Mle,
             stab_period: 30.0,
             max_sim_time: 120.0 * 24.0 * 3600.0,
             warm_observations: 32,
@@ -126,7 +129,7 @@ impl<'a> JobSimulator<'a> {
     pub fn run(&self, policy: &mut dyn CheckpointPolicy, seed: u64, stream: u64) -> JobOutcome {
         let p = &self.params;
         let mut rng = Pcg64::new(seed, stream);
-        let mut est = MleEstimator::new(p.estimator_window);
+        let mut est = build_window_estimator(&p.estimator, p.estimator_window);
 
         // The overlay existed before the job: pre-warm the window.
         for _ in 0..p.warm_observations {
@@ -155,7 +158,7 @@ impl<'a> JobSimulator<'a> {
 
         // Initial decision.
         let mut interval = {
-            let window: Vec<f64> = est.window().collect();
+            let window: Vec<f64> = est.lifetimes();
             let ctx = PolicyCtx {
                 now: t,
                 k: p.k as f64,
@@ -245,7 +248,7 @@ impl<'a> JobSimulator<'a> {
             }
 
             if tmin == next_replan {
-                let window: Vec<f64> = est.window().collect();
+                let window: Vec<f64> = est.lifetimes();
                 let ctx = PolicyCtx {
                     now: t,
                     k: p.k as f64,

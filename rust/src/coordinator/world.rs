@@ -9,14 +9,12 @@
 //! (`rust/tests/cross_validation.rs`), and the end-to-end example runs it
 //! directly.
 
-use crate::churn::model::{ChurnModel, Exponential, HeavyTail, TimeVarying, TraceReplay};
-use crate::churn::trace::{SessionTrace, TraceKind};
-use crate::config::{ChurnSpec, SimConfig};
+use crate::churn::{build_churn_model, ChurnModel};
+use crate::config::SimConfig;
 use crate::coordinator::job::JobOutcome;
 use crate::coordinator::leader::LeaderElection;
 use crate::error::{Error, Result};
-use crate::estimator::mle::MleEstimator;
-use crate::estimator::RateEstimator;
+use crate::estimator::{MleWindow, WindowEstimator};
 use crate::metrics::Metrics;
 use crate::mpi::chandy_lamport::ChandyLamport;
 use crate::mpi::program::Program;
@@ -76,35 +74,37 @@ pub struct World {
     store: DhtStore,
     churn: Box<dyn ChurnModel>,
     rng: Pcg64,
-    estimator: MleEstimator,
+    estimator: Box<dyn WindowEstimator>,
     job: Option<RunningJob>,
     pub metrics: Metrics,
 }
 
 impl World {
-    /// Build a world from config (population online, sessions scheduled).
+    /// Build a world from config with the paper-faithful default
+    /// components (default bandwidth population, churn resolved from the
+    /// config spec, Eq. 1 MLE estimator). The pluggable construction
+    /// surface is [`crate::scenario::Scenario::build_world`], which feeds
+    /// [`World::with_components`].
     pub fn new(cfg: SimConfig) -> Result<World> {
+        let churn = build_churn_model(&cfg.churn, cfg.seed)?;
+        let estimator = Box::new(MleWindow::new(cfg.estimator_window.max(1)));
+        World::with_components(cfg, BandwidthModel::default(), churn, estimator)
+    }
+
+    /// Build a world from explicit components (population online, sessions
+    /// scheduled). The RNG consumption order (overlay, links, first
+    /// sessions) is fixed so a given `cfg.seed` yields the same world
+    /// regardless of which construction path assembled the components.
+    pub fn with_components(
+        cfg: SimConfig,
+        bandwidth: BandwidthModel,
+        churn: Box<dyn ChurnModel>,
+        estimator: Box<dyn WindowEstimator>,
+    ) -> Result<World> {
         let cfg = cfg.validated()?;
         let mut rng = Pcg64::new(cfg.seed, 0xB0B);
         let overlay = Overlay::new(cfg.n_peers, &mut rng);
-        let links = BandwidthModel::default().sample_population(cfg.n_peers, &mut rng);
-        let churn: Box<dyn ChurnModel> = match &cfg.churn {
-            ChurnSpec::Exponential { mtbf } => Box::new(Exponential::new(*mtbf)),
-            ChurnSpec::TimeVarying { mtbf0, double_time } => {
-                Box::new(TimeVarying::new(*mtbf0, *double_time))
-            }
-            ChurnSpec::HeavyTail { mean, shape } => Box::new(HeavyTail::new(*mean, *shape)),
-            ChurnSpec::Trace { kind } => {
-                let k = match kind.as_str() {
-                    "gnutella" => TraceKind::Gnutella,
-                    "overnet" => TraceKind::Overnet,
-                    "bittorrent" => TraceKind::Bittorrent,
-                    other => return Err(Error::Config(format!("unknown trace '{other}'"))),
-                };
-                let trace = SessionTrace::synthesize(k, 20_000, cfg.seed ^ 0x7ACE);
-                Box::new(TraceReplay::new(trace.durations()))
-            }
-        };
+        let links = bandwidth.sample_population(cfg.n_peers, &mut rng);
         let mut engine = SimEngine::new();
         // Schedule every peer's first failure and stabilization tick.
         for p in 0..cfg.n_peers {
@@ -114,7 +114,6 @@ impl World {
             engine.schedule_in_secs(jitter, EventKind::Stabilize { peer: p });
         }
         let stab = Stabilizer::new(cfg.n_peers, cfg.stab_period);
-        let estimator = MleEstimator::new(cfg.estimator_window);
         Ok(World {
             cfg,
             engine,
@@ -192,7 +191,7 @@ impl World {
             pending_detections: Vec::new(),
         };
         // Initial decision + timers.
-        let window: Vec<f64> = self.estimator.window().collect();
+        let window: Vec<f64> = self.estimator.lifetimes();
         let (v_eff, td_eff) = self.effective_overheads(&job);
         let ctx = PolicyCtx {
             now: start,
@@ -529,7 +528,7 @@ impl World {
     fn on_replan(&mut self) {
         self.accrue_progress();
         let now = self.now();
-        let window: Vec<f64> = self.estimator.window().collect();
+        let window: Vec<f64> = self.estimator.lifetimes();
         let (v_eff, td_eff) = {
             let Some(job) = self.job.as_ref() else {
                 return;
@@ -597,7 +596,7 @@ impl World {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::PolicySpec;
+    use crate::config::{ChurnSpec, PolicySpec};
     use crate::planner::NativePlanner;
     use crate::policy;
 

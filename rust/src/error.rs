@@ -1,35 +1,60 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled Display/Error impls — `thiserror`
+//! is not in the offline crate cache, see DESIGN.md §Substitutions).
+
+use std::fmt;
 
 /// Unified error for everything in `p2pcp`.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration parse / validation problems.
-    #[error("config: {0}")]
     Config(String),
 
     /// Simulation-level invariant violations (bugs or impossible setups).
-    #[error("simulation: {0}")]
     Sim(String),
 
     /// Planner / analytic-model domain errors.
-    #[error("planner: {0}")]
     Planner(String),
 
     /// PJRT runtime errors (artifact loading, compile, execute).
-    #[error("runtime: {0}")]
     Runtime(String),
 
     /// Work-pool / coordinator protocol errors.
-    #[error("coordinator: {0}")]
     Coordinator(String),
 
     /// I/O wrapper.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Errors surfaced from the `xla` crate.
-    #[error("xla: {0}")]
     Xla(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Sim(m) => write!(f, "simulation: {m}"),
+            Error::Planner(m) => write!(f, "planner: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -40,3 +65,16 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes() {
+        assert_eq!(Error::Config("bad".into()).to_string(), "config: bad");
+        assert_eq!(Error::Planner("x".into()).to_string(), "planner: x");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().starts_with("io: "));
+    }
+}

@@ -10,6 +10,12 @@
 //!   them into a global view at zero extra message cost.
 //! * [`overhead`] — Section 3.1.2/3.1.3: the Eq. 2 checkpoint-overhead
 //!   calibration and the online T_d measurement.
+//!
+//! Estimators are pluggable through [`EstimatorSpec`] (resolved by the
+//! [`crate::scenario`] registry): the coordinator paths consume the
+//! [`WindowEstimator`] interface, which adds a lifetime-window view on top
+//! of [`RateEstimator`] so any estimator can feed the planner's Eq. 1
+//! input (`PolicyCtx::lifetimes`).
 
 pub mod categorized;
 pub mod count;
@@ -34,4 +40,195 @@ pub trait RateEstimator: Send {
 
     /// Estimator name for reports.
     fn name(&self) -> &'static str;
+}
+
+/// Which estimator a scenario runs. String keys for these live in
+/// [`crate::scenario::registry`] (`"mle"`, `"ewma:0.1"`, …).
+#[derive(Debug, Clone, PartialEq)]
+pub enum EstimatorSpec {
+    /// Eq. 1 windowed MLE — the paper's scheme. Window size K comes from
+    /// the scenario's `estimator_window`.
+    Mle,
+    /// EWMA of observed lifetimes with smoothing factor `alpha`.
+    Ewma { alpha: f64 },
+    /// Cumulative failures / cumulative lifetime (naive, unwindowed).
+    Count,
+    /// §5 history+online hybrid: Gamma prior from a historical mean
+    /// session length of `mean` seconds worth `confidence`
+    /// pseudo-observations, over a windowed likelihood.
+    Hybrid { mean: f64, confidence: f64 },
+}
+
+impl Default for EstimatorSpec {
+    fn default() -> Self {
+        EstimatorSpec::Mle
+    }
+}
+
+/// A rate estimator that can also render its evidence as a window of
+/// lifetimes — the shape `PolicyCtx::lifetimes` and the planner artifact's
+/// `[B, W]` input expect. Windowless estimators synthesize an equivalent
+/// window from their point estimate (the Eq. 1 MLE over `n` copies of
+/// `1/μ̂` recovers exactly `μ̂`).
+pub trait WindowEstimator: Send {
+    /// Record one observed peer lifetime (seconds).
+    fn observe(&mut self, lifetime: f64);
+
+    /// Current rate estimate, `None` before warm.
+    fn rate(&self) -> Option<f64>;
+
+    /// Lifetime window for the planner (most recent last; empty = no
+    /// estimate yet, policies fall back to their bootstrap interval).
+    fn lifetimes(&self) -> Vec<f64>;
+
+    /// Observations consumed.
+    fn n_observed(&self) -> u64;
+
+    /// Name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// [`WindowEstimator`] over the Eq. 1 MLE: the window is the estimator's
+/// actual observation window (byte-for-byte what the seed code fed the
+/// planner).
+pub struct MleWindow(pub mle::MleEstimator);
+
+impl MleWindow {
+    pub fn new(window: usize) -> Self {
+        MleWindow(mle::MleEstimator::new(window))
+    }
+}
+
+impl WindowEstimator for MleWindow {
+    fn observe(&mut self, lifetime: f64) {
+        RateEstimator::observe(&mut self.0, lifetime);
+    }
+
+    fn rate(&self) -> Option<f64> {
+        RateEstimator::rate(&self.0)
+    }
+
+    fn lifetimes(&self) -> Vec<f64> {
+        self.0.window().collect()
+    }
+
+    fn n_observed(&self) -> u64 {
+        RateEstimator::n_observed(&self.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "mle"
+    }
+}
+
+/// Adapter giving any [`RateEstimator`] a planner-compatible window: `n`
+/// pseudo-observations of `1/μ̂` (the MLE over that window is exactly μ̂).
+pub struct RateWindow<E: RateEstimator> {
+    inner: E,
+    /// Pseudo-observation count handed to the planner once warm.
+    pseudo_obs: usize,
+}
+
+impl<E: RateEstimator> RateWindow<E> {
+    pub fn new(inner: E) -> Self {
+        RateWindow { inner, pseudo_obs: 16 }
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+}
+
+impl<E: RateEstimator> WindowEstimator for RateWindow<E> {
+    fn observe(&mut self, lifetime: f64) {
+        self.inner.observe(lifetime);
+    }
+
+    fn rate(&self) -> Option<f64> {
+        self.inner.rate()
+    }
+
+    fn lifetimes(&self) -> Vec<f64> {
+        match self.inner.rate() {
+            Some(r) if r > 0.0 && r.is_finite() => vec![1.0 / r; self.pseudo_obs],
+            _ => Vec::new(),
+        }
+    }
+
+    fn n_observed(&self) -> u64 {
+        self.inner.n_observed()
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+/// Resolve a spec into a live estimator. `window` is the scenario's
+/// estimator window K (used by the windowed kinds).
+pub fn build_window_estimator(spec: &EstimatorSpec, window: usize) -> Box<dyn WindowEstimator> {
+    match spec {
+        EstimatorSpec::Mle => Box::new(MleWindow::new(window)),
+        EstimatorSpec::Ewma { alpha } => {
+            Box::new(RateWindow::new(ewma::EwmaEstimator::new(*alpha)))
+        }
+        EstimatorSpec::Count => Box::new(RateWindow::new(count::CountEstimator::new())),
+        EstimatorSpec::Hybrid { mean, confidence } => Box::new(RateWindow::new(
+            hybrid::HybridEstimator::from_history(1.0 / mean.max(1e-9), *confidence, window),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mle_window_matches_underlying_estimator() {
+        let mut w = build_window_estimator(&EstimatorSpec::Mle, 8);
+        for _ in 0..8 {
+            w.observe(100.0);
+        }
+        assert!((w.rate().unwrap() - 0.01).abs() < 1e-12);
+        assert_eq!(w.lifetimes(), vec![100.0; 8]);
+        assert_eq!(w.name(), "mle");
+    }
+
+    #[test]
+    fn rate_window_pseudo_observations_recover_rate() {
+        let mut w = build_window_estimator(&EstimatorSpec::Ewma { alpha: 0.5 }, 64);
+        assert!(w.lifetimes().is_empty(), "cold estimator exposes no window");
+        for _ in 0..16 {
+            w.observe(200.0);
+        }
+        let lifetimes = w.lifetimes();
+        assert!(!lifetimes.is_empty());
+        // Planner-side MLE over the pseudo window == the estimator's rate.
+        let mu = lifetimes.len() as f64 / lifetimes.iter().sum::<f64>();
+        assert!((mu - w.rate().unwrap()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_specs_build() {
+        for spec in [
+            EstimatorSpec::Mle,
+            EstimatorSpec::Ewma { alpha: 0.2 },
+            EstimatorSpec::Count,
+            EstimatorSpec::Hybrid { mean: 7200.0, confidence: 16.0 },
+        ] {
+            let mut e = build_window_estimator(&spec, 32);
+            for _ in 0..32 {
+                e.observe(500.0);
+            }
+            let r = e.rate().expect("warm estimator must report a rate");
+            assert!(r.is_finite() && r > 0.0, "{spec:?}: {r}");
+            // The hybrid is still blending in its (deliberately wrong)
+            // 7200 s prior at n=32; the others sit on the data.
+            if !matches!(spec, EstimatorSpec::Hybrid { .. }) {
+                assert!((r - 1.0 / 500.0).abs() < 1.0 / 500.0 * 0.25, "{spec:?}: {r}");
+            } else {
+                assert!(r > 1.0 / 7200.0 && r < 1.0 / 500.0, "{spec:?}: {r}");
+            }
+        }
+    }
 }

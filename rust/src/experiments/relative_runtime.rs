@@ -7,7 +7,7 @@
 //!
 //! `> 100%` ⇒ the adaptive scheme wins at that fixed interval.
 
-use crate::churn::model::{ChurnModel, Exponential, HeavyTail, TimeVarying};
+use crate::churn::build_churn_model;
 use crate::config::ChurnSpec;
 use crate::coordinator::job::{JobParams, JobSimulator};
 use crate::planner::{NativePlanner, Planner};
@@ -66,19 +66,6 @@ pub struct ComparisonResult {
     pub rows: Vec<ComparisonRow>,
 }
 
-fn build_churn(spec: &ChurnSpec) -> Box<dyn ChurnModel> {
-    match spec {
-        ChurnSpec::Exponential { mtbf } => Box::new(Exponential::new(*mtbf)),
-        ChurnSpec::TimeVarying { mtbf0, double_time } => {
-            Box::new(TimeVarying::new(*mtbf0, *double_time))
-        }
-        ChurnSpec::HeavyTail { mean, shape } => Box::new(HeavyTail::new(*mean, *shape)),
-        ChurnSpec::Trace { .. } => {
-            unimplemented!("trace churn: synthesize durations and use TraceReplay")
-        }
-    }
-}
-
 /// Average wall time of `trials` runs under a freshly-built policy.
 fn mean_runtime(
     sim: &JobSimulator,
@@ -115,7 +102,7 @@ pub fn run_comparison_with(
     cfg: &ComparisonConfig,
     planner_factory: &dyn Fn() -> Box<dyn Planner>,
 ) -> ComparisonResult {
-    let churn = build_churn(&cfg.churn);
+    let churn = build_churn_model(&cfg.churn, cfg.seed).expect("valid churn spec");
     let sim = JobSimulator::new(cfg.job.clone(), churn.as_ref());
 
     let (adaptive, _, adaptive_iv) = mean_runtime(

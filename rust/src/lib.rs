@@ -18,6 +18,16 @@
 //!
 //! ## Layering
 //!
+//! * **Construction layer** — [`scenario`]: the **single** construction
+//!   surface for the whole crate. `Scenario::builder()` composes typed,
+//!   pluggable component specs (churn, policy, estimator, planner,
+//!   bandwidth, workload) with paper-faithful defaults; the
+//!   [`scenario::registry`] maps string keys (`"adaptive"`,
+//!   `"gnutella-trace"`, `"ewma:0.1"`, …) onto the same specs so CLI
+//!   flags and config files resolve through one code path; and
+//!   [`scenario::SweepRunner`] fans scenario grids across threads with
+//!   deterministic, seed-keyed aggregation. The CLI, examples, benches,
+//!   and experiment harness all build their stacks here.
 //! * **L3 (this crate)** — discrete-event simulation core ([`sim`]), P2P
 //!   overlay with churn and stabilization ([`net`], [`churn`]), replicated
 //!   checkpoint storage ([`storage`]), failure-rate / overhead estimators
@@ -45,6 +55,7 @@ pub mod net;
 pub mod planner;
 pub mod policy;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod storage;
 pub mod util;

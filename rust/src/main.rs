@@ -1,30 +1,41 @@
-//! `p2pcp` — the launcher.
+//! `p2pcp` — the launcher. Every subcommand assembles its stack through
+//! the [`p2pcp::scenario`] builder + registry, so CLI flags resolve
+//! through exactly the same code path as programmatic construction.
 //!
 //! ```text
-//! p2pcp simulate  [--mtbf S] [--k N] [--runtime S] [--v S] [--td S]
-//!                 [--policy adaptive|oracle|never|fixed] [--interval S]
-//!                 [--trials N] [--seed N] [--planner native|xla]
-//! p2pcp sweep     [--mtbf S] [--v S] [--td S] [--trials N] [--intervals csv]
-//!                 [--double-time S] [--out file.csv]
+//! p2pcp simulate  [--churn KEY | --mtbf S [--double-time S]] [--k N]
+//!                 [--runtime S] [--v S] [--td S]
+//!                 [--policy adaptive|oracle|never|fixed[:S]] [--interval S]
+//!                 [--estimator KEY] [--planner native|xla]
+//!                 [--trials N] [--seed N]
+//! p2pcp sweep     [--churn KEY | --mtbf S [--double-time S] | --mtbfs csv]
+//!                 [--k N] [--runtime S] [--v S] [--td S] [--trials N]
+//!                 [--intervals csv] [--threads N] [--oracle] [--out file.csv]
 //! p2pcp plan      [--mtbf S] [--k N] [--v S] [--td S] [--sweep-k]
 //!                 [--planner native|xla]
 //! p2pcp trace     [--network gnutella|overnet|bittorrent] [--sessions N]
-//! p2pcp world     [--mtbf S] [--k N] [--runtime S] [--peers N]
+//! p2pcp world     [--churn KEY | --mtbf S] [--k N] [--runtime S] [--peers N]
+//!                 [--policy KEY] [--estimator KEY]
+//! p2pcp fleet     [--mtbf S] [--jobs N] [--arrival S] [--planner KEY] ...
 //! ```
+//!
+//! Component keys (`p2pcp help` prints the full lists) come from
+//! `scenario::registry` — e.g. `--churn gnutella-trace`,
+//! `--policy fixed:300`, `--estimator ewma:0.1`.
 
 use p2pcp::churn::trace::TraceKind;
 use p2pcp::cli::Args;
-use p2pcp::config::{ChurnSpec, PolicySpec, SimConfig};
-use p2pcp::coordinator::job::JobParams;
-use p2pcp::coordinator::world::World;
+use p2pcp::config::ChurnSpec;
+use p2pcp::coordinator::fleet::{run_fleet, FleetConfig};
 use p2pcp::error::{Error, Result};
 use p2pcp::experiments::fig2;
-use p2pcp::experiments::relative_runtime::{run_comparison_with, to_table, ComparisonConfig};
+use p2pcp::experiments::relative_runtime::to_table;
 use p2pcp::model::optimal::optimal_lambda_checked;
-use p2pcp::mpi::program::{CommPattern, Program};
 use p2pcp::planner::{NativePlanner, PlanRequest, Planner, XlaPlanner};
-use p2pcp::policy;
 use p2pcp::runtime::PjrtRuntime;
+use p2pcp::scenario::{registry, ComparisonSweep, PlannerSpec, Scenario, SweepRunner};
+use p2pcp::util::csv::Table;
+use p2pcp::util::stats::Running;
 
 fn main() {
     let args = Args::from_env();
@@ -48,143 +59,210 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "world" => cmd_world(args),
         "fleet" => cmd_fleet(args),
         "help" | "--help" | "-h" => {
-            print!("{}", HELP);
+            print!("{}", help_text());
             Ok(())
         }
         other => Err(Error::Config(format!("unknown command '{other}' (try `p2pcp help`)"))),
     }
 }
 
-const HELP: &str = "\
+fn help_text() -> String {
+    format!(
+        "\
 p2pcp — adaptive checkpointing for P2P volunteer-computing work flows
 
 USAGE: p2pcp <command> [flags]
 
 COMMANDS:
   simulate   run one policy on one churn setting, print the outcome
-  sweep      adaptive-vs-fixed relative-runtime sweep (Fig. 4/5 harness)
+  sweep      adaptive-vs-fixed relative-runtime sweep (Fig. 4/5 harness);
+             --mtbfs runs a multi-series grid, --threads parallelizes
   plan       evaluate the closed-form planner (lambda*, U) once or over k
   trace      synthesize a P2P session trace and analyze it (Fig. 2)
   world      run the full-stack world (overlay + Chandy-Lamport + DHT store)
   fleet      serve many concurrent jobs with shared batched planning
   help       this text
 
-Run a command with wrong flags to see its allowed flag list.
-";
+COMPONENT KEYS (shared by flags and config files):
+  --churn     {}
+  --policy    {}
+  --estimator {}
+  --planner   {}
+  --workload  {}
 
-fn mk_planner(kind: &str) -> Result<Box<dyn Planner>> {
-    match kind {
-        "native" => Ok(Box::new(NativePlanner::new())),
-        "xla" => {
-            let rt = PjrtRuntime::cpu()?;
-            Ok(Box::new(XlaPlanner::new(&rt)?))
-        }
-        other => Err(Error::Config(format!("unknown planner '{other}'"))),
-    }
+Run a command with wrong flags to see its allowed flag list.
+",
+        registry::churn_keys().join(" | "),
+        registry::policy_keys().join(" | "),
+        registry::estimator_keys().join(" | "),
+        registry::planner_keys().join(" | "),
+        registry::workload_keys().join(" | "),
+    )
 }
 
-fn parse_policy(args: &Args) -> Result<PolicySpec> {
-    Ok(match args.get_str("policy", "adaptive").as_str() {
-        "adaptive" => PolicySpec::Adaptive,
-        "oracle" => PolicySpec::Oracle,
-        "never" => PolicySpec::Never,
-        "fixed" => PolicySpec::Fixed { interval: args.get_f64("interval", 300.0)? },
-        other => return Err(Error::Config(format!("unknown policy '{other}'"))),
-    })
+/// Resolve the policy key, honouring the legacy `--policy fixed
+/// --interval S` spelling next to the registry's `--policy fixed:S`.
+fn policy_key_from_args(args: &Args) -> Result<String> {
+    let key = args.get_str("policy", "adaptive")?;
+    if key == "fixed" && !key.contains(':') {
+        return Ok(format!("fixed:{}", args.get_f64("interval", 300.0)?));
+    }
+    Ok(key)
+}
+
+/// Build the scenario every simulation-shaped subcommand shares.
+fn scenario_from_args(args: &Args, default_peers: usize) -> Result<Scenario> {
+    let mut b = Scenario::builder()
+        .peers(args.get_usize("peers", default_peers)?)
+        .k(args.get_usize("k", 16)?)
+        .runtime(args.get_f64("runtime", 4.0 * 3600.0)?)
+        .v(args.get_f64("v", 20.0)?)
+        .td(args.get_f64("td", 50.0)?)
+        .seed(args.get_u64("seed", 42)?)
+        .estimator_key(&args.get_str("estimator", "mle")?)
+        .planner_key(&args.get_str("planner", "native")?)
+        .workload_key(&args.get_str("workload", "ring")?)
+        .policy_key(&policy_key_from_args(args)?);
+    b = match args.get("churn")? {
+        Some(key) => b.churn_key(key),
+        None => {
+            let mtbf = args.get_f64("mtbf", 7200.0)?;
+            match args.get("double-time")? {
+                Some(_) => b.churn(ChurnSpec::TimeVarying {
+                    mtbf0: mtbf,
+                    double_time: args.get_f64("double-time", 72_000.0)?,
+                }),
+                None => b.mtbf(mtbf),
+            }
+        }
+    };
+    b.build()
+}
+
+const SCENARIO_FLAGS: &[&str] = &[
+    "churn", "mtbf", "double-time", "k", "runtime", "v", "td", "policy", "interval",
+    "estimator", "planner", "workload", "seed", "peers",
+];
+
+fn with_scenario_flags(extra: &[&str]) -> Vec<&str> {
+    let mut v: Vec<&str> = SCENARIO_FLAGS.to_vec();
+    v.extend_from_slice(extra);
+    v
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
-    args.check_unknown(&[
-        "mtbf", "k", "runtime", "v", "td", "policy", "interval", "trials", "seed",
-        "planner", "double-time",
-    ])?;
-    let mtbf = args.get_f64("mtbf", 7200.0)?;
-    let params = JobParams {
-        k: args.get_usize("k", 16)?,
-        runtime: args.get_f64("runtime", 4.0 * 3600.0)?,
-        v: args.get_f64("v", 20.0)?,
-        td: args.get_f64("td", 50.0)?,
-        ..JobParams::default()
-    };
+    args.check_unknown(&with_scenario_flags(&["trials"]))?;
+    let s = scenario_from_args(args, 512)?;
     let trials = args.get_u64("trials", 20)?;
-    let seed = args.get_u64("seed", 42)?;
-    let spec = parse_policy(args)?;
-    let planner_kind = args.get_str("planner", "native");
 
-    let churn: Box<dyn p2pcp::churn::model::ChurnModel> =
-        if let Some(dt) = args.get("double-time") {
-            let dt: f64 = dt
-                .parse()
-                .map_err(|_| Error::Config("--double-time must be a number".into()))?;
-            Box::new(p2pcp::churn::model::TimeVarying::new(mtbf, dt))
-        } else {
-            Box::new(p2pcp::churn::model::Exponential::new(mtbf))
-        };
-    let sim = p2pcp::coordinator::job::JobSimulator::new(params.clone(), churn.as_ref());
-
-    let mut wall = p2pcp::util::stats::Running::new();
-    let mut failures = 0u64;
-    let mut checkpoints = 0u64;
-    let mut completed = 0u64;
-    for trial in 0..trials {
-        let mut pol = policy::from_spec(&spec, || {
-            mk_planner(&planner_kind).expect("planner backend")
-        });
-        let o = sim.run(pol.as_mut(), seed + trial, trial);
+    let outcomes = s.run_trials(trials)?;
+    let mut wall = Running::new();
+    let (mut failures, mut checkpoints, mut completed) = (0u64, 0u64, 0u64);
+    for o in &outcomes {
         wall.push(o.wall_time);
         failures += o.failures;
         checkpoints += o.checkpoints;
         completed += o.completed as u64;
     }
-    println!("policy           : {}", spec.name());
-    println!("churn            : {}", churn.describe());
-    println!("k / runtime      : {} peers / {:.0} s", params.k, params.runtime);
-    println!("V / Td           : {:.0} s / {:.0} s", params.v, params.td);
+    let job = s.job_params();
+    println!("policy           : {}", registry::policy_key(&s.policy));
+    println!("churn            : {}", s.build_churn()?.describe());
+    println!("estimator        : {}", registry::estimator_key(&s.estimator));
+    println!("k / runtime      : {} peers / {:.0} s", job.k, job.runtime);
+    println!("V / Td           : {:.0} s / {:.0} s", job.v, job.td);
     println!("trials           : {trials} ({completed} completed)");
     println!("mean wall time   : {:.0} s ± {:.0} s", wall.mean(), wall.ci95());
-    println!("mean efficiency  : {:.3}", params.runtime / wall.mean());
-    println!("failures/run     : {:.1}", failures as f64 / trials as f64);
-    println!("checkpoints/run  : {:.1}", checkpoints as f64 / trials as f64);
+    println!("mean efficiency  : {:.3}", job.runtime / wall.mean());
+    println!("failures/run     : {:.1}", failures as f64 / trials.max(1) as f64);
+    println!("checkpoints/run  : {:.1}", checkpoints as f64 / trials.max(1) as f64);
     Ok(())
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    args.check_unknown(&[
-        "mtbf", "k", "runtime", "v", "td", "trials", "seed", "intervals",
-        "double-time", "out", "planner", "oracle",
-    ])?;
-    let mtbf = args.get_f64("mtbf", 7200.0)?;
-    let churn = if let Some(dt) = args.get("double-time") {
-        let dt: f64 =
-            dt.parse().map_err(|_| Error::Config("--double-time must be a number".into()))?;
-        ChurnSpec::TimeVarying { mtbf0: mtbf, double_time: dt }
-    } else {
-        ChurnSpec::Exponential { mtbf }
-    };
-    let fixed_intervals: Vec<f64> = match args.get("intervals") {
+    // The sweep compares policies itself — --policy/--interval would be
+    // silently overridden per cell, so they are rejected here.
+    let allowed: Vec<&str> = with_scenario_flags(&[
+        "trials", "intervals", "out", "oracle", "threads", "mtbfs",
+    ])
+    .into_iter()
+    .filter(|f| *f != "policy" && *f != "interval")
+    .collect();
+    args.check_unknown(&allowed)?;
+    if args.has("mtbfs") && (args.has("churn") || args.has("double-time") || args.has("mtbf")) {
+        return Err(Error::Config(
+            "--mtbfs defines the (exponential) churn axis; it cannot be combined \
+             with --churn/--mtbf/--double-time"
+                .into(),
+        ));
+    }
+    let base = scenario_from_args(args, 512)?;
+    let trials = args.get_u64("trials", 40)?;
+    let threads = args.get_usize("threads", SweepRunner::auto().threads)?;
+    let fixed_intervals: Vec<f64> = match args.get("intervals")? {
         Some(csv) => csv
             .split(',')
-            .map(|s| s.trim().parse::<f64>())
+            .map(|x| x.trim().parse::<f64>())
             .collect::<std::result::Result<_, _>>()
             .map_err(|_| Error::Config("--intervals must be comma-separated seconds".into()))?,
         None => vec![60.0, 120.0, 300.0, 600.0, 1200.0, 2400.0, 3600.0],
     };
-    let cfg = ComparisonConfig {
-        churn,
-        job: JobParams {
-            k: args.get_usize("k", 16)?,
-            runtime: args.get_f64("runtime", 4.0 * 3600.0)?,
-            v: args.get_f64("v", 20.0)?,
-            td: args.get_f64("td", 50.0)?,
-            ..JobParams::default()
-        },
-        fixed_intervals,
-        trials: args.get_u64("trials", 40)?,
-        seed: args.get_u64("seed", 42)?,
-        with_oracle: args.has("oracle"),
-    };
-    let planner_kind = args.get_str("planner", "native");
-    let res = run_comparison_with(&cfg, &|| mk_planner(&planner_kind).expect("planner"));
+
+    // Multi-series grid (Fig. 4 style): one comparison per MTBF.
+    if let Some(csv) = args.get("mtbfs")? {
+        let mtbfs: Vec<f64> = csv
+            .split(',')
+            .map(|x| x.trim().parse::<f64>())
+            .collect::<std::result::Result<_, _>>()
+            .map_err(|_| Error::Config("--mtbfs must be comma-separated seconds".into()))?;
+        let mut combined = Table::new(&[
+            "mtbf_s",
+            "fixed_interval_s",
+            "relative_runtime_pct",
+            "fixed_runtime_s",
+            "adaptive_runtime_s",
+            "fixed_aborted_frac",
+        ]);
+        for &mtbf in &mtbfs {
+            let mut series = base.clone();
+            series.churn = ChurnSpec::Exponential { mtbf };
+            let res = ComparisonSweep::new(series)
+                .intervals(fixed_intervals.clone())
+                .trials(trials)
+                .with_oracle(args.has("oracle"))
+                .threads(threads)
+                .run()?;
+            println!(
+                "MTBF={mtbf}: adaptive {:.0} s ± {:.0} (mean interval {:.0} s)",
+                res.adaptive_runtime, res.adaptive_ci95, res.adaptive_mean_interval
+            );
+            if let Some(o) = res.oracle_runtime {
+                println!("MTBF={mtbf}: oracle   {o:.0} s");
+            }
+            for row in &res.rows {
+                combined.push_f64(&[
+                    mtbf,
+                    row.fixed_interval,
+                    row.relative_runtime_pct,
+                    row.fixed_runtime,
+                    res.adaptive_runtime,
+                    row.fixed_aborted_frac,
+                ]);
+            }
+        }
+        print!("{}", combined.to_pretty());
+        if let Some(out) = args.get("out")? {
+            combined.write_to(std::path::Path::new(out))?;
+            println!("[written {out}]");
+        }
+        return Ok(());
+    }
+
+    let res = ComparisonSweep::new(base)
+        .intervals(fixed_intervals)
+        .trials(trials)
+        .with_oracle(args.has("oracle"))
+        .threads(threads)
+        .run()?;
     println!(
         "adaptive: {:.0} s ± {:.0} s (mean interval {:.0} s)",
         res.adaptive_runtime, res.adaptive_ci95, res.adaptive_mean_interval
@@ -194,7 +272,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     }
     let table = to_table(&res);
     print!("{}", table.to_pretty());
-    if let Some(out) = args.get("out") {
+    if let Some(out) = args.get("out")? {
         table.write_to(std::path::Path::new(out))?;
         println!("[written {out}]");
     }
@@ -206,7 +284,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     let mtbf = args.get_f64("mtbf", 7200.0)?;
     let v = args.get_f64("v", 20.0)?;
     let td = args.get_f64("td", 50.0)?;
-    let planner_kind = args.get_str("planner", "native");
+    let planner_spec = registry::parse_planner(&args.get_str("planner", "native")?)?;
 
     if args.has("sweep-k") {
         println!("{:>6} {:>12} {:>12} {:>8} {:>12}", "k", "lambda*", "interval_s", "U", "progress");
@@ -225,7 +303,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     }
 
     let k = args.get_f64("k", 16.0)?;
-    let mut planner = mk_planner(&planner_kind)?;
+    let mut planner = p2pcp::scenario::build_planner(&planner_spec)?;
     let resp = planner.plan_one(&PlanRequest {
         lifetimes: vec![mtbf; 64],
         v,
@@ -245,7 +323,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
 
 fn cmd_trace(args: &Args) -> Result<()> {
     args.check_unknown(&["network", "sessions", "seed"])?;
-    let kind = match args.get_str("network", "gnutella").as_str() {
+    let kind = match args.get_str("network", "gnutella")?.as_str() {
         "gnutella" => TraceKind::Gnutella,
         "overnet" => TraceKind::Overnet,
         "bittorrent" => TraceKind::Bittorrent,
@@ -267,30 +345,26 @@ fn cmd_trace(args: &Args) -> Result<()> {
 }
 
 fn cmd_fleet(args: &Args) -> Result<()> {
-    args.check_unknown(&[
-        "mtbf", "jobs", "arrival", "k", "runtime", "v", "td", "planner", "seed",
-        "min-utilization",
-    ])?;
-    use p2pcp::coordinator::fleet::{run_fleet, FleetConfig};
+    args.check_unknown(&with_scenario_flags(&["jobs", "arrival", "min-utilization"]))?;
+    let s = scenario_from_args(args, 512)?;
+    let job = s.job_params();
     let cfg = FleetConfig {
         n_jobs: args.get_usize("jobs", 32)?,
         arrival_mean: args.get_f64("arrival", 300.0)?,
-        k: args.get_usize("k", 16)?,
+        k: job.k,
         runtime: args.get_f64("runtime", 3600.0)?,
-        v: args.get_f64("v", 20.0)?,
-        td: args.get_f64("td", 50.0)?,
+        v: job.v,
+        td: job.td,
         min_utilization: args.get_f64("min-utilization", 0.05)?,
         ..FleetConfig::default()
     };
-    let churn = p2pcp::churn::model::Exponential::new(args.get_f64("mtbf", 7200.0)?);
-    let seed = args.get_u64("seed", 42)?;
-    let out = match args.get_str("planner", "native").as_str() {
-        "xla" => {
+    let churn = s.build_churn()?;
+    let out = match s.planner {
+        PlannerSpec::Xla => {
             let rt = PjrtRuntime::cpu()?;
-            run_fleet(&cfg, &churn, XlaPlanner::new(&rt)?, seed)
+            run_fleet(&cfg, churn.as_ref(), XlaPlanner::new(&rt)?, s.seed)
         }
-        "native" => run_fleet(&cfg, &churn, NativePlanner::new(), seed),
-        other => return Err(Error::Config(format!("unknown planner '{other}'"))),
+        PlannerSpec::Native => run_fleet(&cfg, churn.as_ref(), NativePlanner::new(), s.seed),
     };
     println!("completed        : {}", out.completed);
     println!("rejected         : {} (admission U floor)", out.rejected);
@@ -303,27 +377,21 @@ fn cmd_fleet(args: &Args) -> Result<()> {
 }
 
 fn cmd_world(args: &Args) -> Result<()> {
-    args.check_unknown(&["mtbf", "k", "runtime", "peers", "seed", "policy", "interval"])?;
-    let cfg = SimConfig {
-        n_peers: args.get_usize("peers", 256)?,
-        k: args.get_usize("k", 16)?,
-        job_runtime: args.get_f64("runtime", 3600.0)?,
-        churn: ChurnSpec::Exponential { mtbf: args.get_f64("mtbf", 7200.0)? },
-        seed: args.get_u64("seed", 42)?,
-        ..SimConfig::default()
-    };
-    let spec = parse_policy(args)?;
-    let mut world = World::new(cfg)?;
-    println!("warming up the overlay (4 h of churn)...");
-    world.warmup(4.0 * 3600.0);
+    args.check_unknown(&with_scenario_flags(&["warmup"]))?;
+    let mut s = scenario_from_args(args, 256)?;
+    if !args.has("runtime") {
+        s.runtime = 3600.0; // world demo default: a 1 h job
+    }
+    let warmup = args.get_f64("warmup", 4.0 * 3600.0)?;
+    let mut world = s.build_world()?;
+    println!("warming up the overlay ({:.1} h of churn)...", warmup / 3600.0);
+    world.warmup(warmup);
     println!(
         "online peers: {}, estimated rate: {:?}",
         world.online_count(),
         world.estimated_rate()
     );
-    let program = Program::new(CommPattern::Ring, 16);
-    let pol = policy::from_spec(&spec, || Box::new(NativePlanner::new()));
-    let o = world.run_job(program, pol)?;
+    let o = world.run_job(s.program(), s.build_policy()?)?;
     println!("completed        : {}", o.completed);
     println!("wall time        : {:.0} s", o.wall_time);
     println!("failures         : {}", o.failures);

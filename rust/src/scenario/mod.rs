@@ -1,0 +1,530 @@
+//! The **Scenario API** — the crate's single construction surface.
+//!
+//! Every entry point (the `p2pcp` CLI, the examples, the figure benches,
+//! the experiment harness, and the integration tests) assembles its stack
+//! through [`Scenario::builder`]:
+//!
+//! ```
+//! use p2pcp::config::ChurnSpec;
+//! use p2pcp::scenario::Scenario;
+//!
+//! let s = Scenario::builder()
+//!     .peers(400)
+//!     .churn(ChurnSpec::HeavyTail { mean: 7200.0, shape: 0.7 })
+//!     .k(16)
+//!     .runtime(4.0 * 3600.0)
+//!     .build()
+//!     .unwrap();
+//! let outcomes = s.run_trials(3).unwrap();
+//! assert_eq!(outcomes.len(), 3);
+//! ```
+//!
+//! A scenario is a *plan*, not a live object: it holds typed component
+//! specs ([`ChurnSpec`], [`PolicySpec`], [`EstimatorSpec`],
+//! [`PlannerSpec`], [`crate::net::bandwidth::BandwidthModel`],
+//! [`CommPattern`]) with paper-faithful defaults, and knows how to resolve
+//! them into live components (`build_churn`, `build_policy`,
+//! `build_world`, …). Because it is plain data (`Clone + Send + Sync`),
+//! the multi-threaded [`sweep::SweepRunner`] can fan grids of scenarios
+//! across workers deterministically.
+//!
+//! String keys for every component live in [`registry`], so CLI flags and
+//! config files resolve through exactly the same code path as programmatic
+//! construction (`"adaptive"`, `"gnutella-trace"`, `"ewma:0.1"`, …).
+
+pub mod registry;
+pub mod sweep;
+
+pub use sweep::{ComparisonSweep, ScenarioGrid, SweepRunner};
+
+use crate::churn::{build_churn_model, ChurnModel};
+use crate::config::{ChurnSpec, PolicySpec, SimConfig};
+use crate::coordinator::job::{JobOutcome, JobParams, JobSimulator};
+use crate::coordinator::world::World;
+use crate::error::{Error, Result};
+use crate::estimator::{build_window_estimator, EstimatorSpec, WindowEstimator};
+use crate::mpi::program::{CommPattern, Program};
+use crate::net::bandwidth::BandwidthModel;
+use crate::net::overlay::Overlay;
+use crate::planner::{NativePlanner, Planner, XlaPlanner};
+use crate::policy::{self, CheckpointPolicy};
+use crate::runtime::PjrtRuntime;
+use crate::util::rng::Pcg64;
+
+/// Which planner backend answers adaptive-policy planning requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlannerSpec {
+    /// Pure-rust closed form — always available.
+    Native,
+    /// The AOT-compiled artifact through PJRT (`make artifacts`).
+    Xla,
+}
+
+impl Default for PlannerSpec {
+    fn default() -> Self {
+        PlannerSpec::Native
+    }
+}
+
+/// Resolve a planner spec into a live backend.
+pub fn build_planner(spec: &PlannerSpec) -> Result<Box<dyn Planner>> {
+    match spec {
+        PlannerSpec::Native => Ok(Box::new(NativePlanner::new())),
+        PlannerSpec::Xla => {
+            let rt = PjrtRuntime::cpu()?;
+            Ok(Box::new(XlaPlanner::new(&rt)?))
+        }
+    }
+}
+
+/// One fully-specified simulation scenario: network, workload, and the
+/// checkpointing stack. Defaults reproduce the paper's Section 4 setup
+/// (512 peers, MTBF 2 h exponential churn, k = 16, 4 h job, V = 20 s,
+/// T_d = 50 s, adaptive policy over the Eq. 1 MLE).
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    /// Overlay population (full-stack world only).
+    pub n_peers: usize,
+    /// Base RNG seed; trial indices are mixed in per run.
+    pub seed: u64,
+    /// Stabilization period (seconds) — failure-detection cadence.
+    pub stab_period: f64,
+    /// Churn model spec.
+    pub churn: ChurnSpec,
+    /// Peers per job.
+    pub k: usize,
+    /// Fault-free job runtime R (seconds).
+    pub runtime: f64,
+    /// Checkpoint overhead V (seconds); `None` = derive from the
+    /// workload image size and the bandwidth model.
+    pub v: Option<f64>,
+    /// Image download overhead T_d (seconds); `None` = derive.
+    pub td: Option<f64>,
+    /// Checkpoint policy spec.
+    pub policy: PolicySpec,
+    /// Failure-rate estimator spec.
+    pub estimator: EstimatorSpec,
+    /// Estimator window K (Eq. 1).
+    pub estimator_window: usize,
+    /// Planner backend for adaptive policies.
+    pub planner: PlannerSpec,
+    /// Per-peer link-speed population model.
+    pub bandwidth: BandwidthModel,
+    /// Message-passing communication pattern of the job.
+    pub workload: CommPattern,
+    /// Re-planning period for adaptive policies (seconds).
+    pub replan_period: f64,
+    /// Abort horizon (simulated seconds).
+    pub max_sim_time: f64,
+    /// Estimator pre-warm observations (fast path).
+    pub warm_observations: usize,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            n_peers: 512,
+            seed: 42,
+            stab_period: 30.0,
+            churn: ChurnSpec::default(),
+            k: 16,
+            runtime: 4.0 * 3600.0,
+            v: Some(20.0),
+            td: Some(50.0),
+            policy: PolicySpec::default(),
+            estimator: EstimatorSpec::default(),
+            estimator_window: 64,
+            planner: PlannerSpec::default(),
+            bandwidth: BandwidthModel::default(),
+            workload: CommPattern::Ring,
+            replan_period: 300.0,
+            max_sim_time: 60.0 * 24.0 * 3600.0,
+            warm_observations: 32,
+        }
+    }
+}
+
+impl Scenario {
+    /// Start building a scenario from the paper defaults.
+    pub fn builder() -> ScenarioBuilder {
+        ScenarioBuilder { scenario: Scenario::default(), err: None }
+    }
+
+    /// Short human/CSV label: `churn|policy|estimator|k..|v..|td..`.
+    pub fn label(&self) -> String {
+        format!(
+            "{}|{}|{}|k{}|v{}|td{}",
+            registry::churn_key(&self.churn),
+            registry::policy_key(&self.policy),
+            registry::estimator_key(&self.estimator),
+            self.k,
+            self.job_params().v,
+            self.job_params().td,
+        )
+    }
+
+    /// The full-stack simulation config this scenario corresponds to.
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            n_peers: self.n_peers,
+            seed: self.seed,
+            stab_period: self.stab_period,
+            churn: self.churn.clone(),
+            k: self.k,
+            job_runtime: self.runtime,
+            v: self.v,
+            td: self.td,
+            policy: self.policy.clone(),
+            estimator_window: self.estimator_window,
+            replan_period: self.replan_period,
+            max_sim_time: self.max_sim_time,
+        }
+    }
+
+    /// The message-passing program this scenario runs.
+    pub fn program(&self) -> Program {
+        Program::new(self.workload, self.k)
+    }
+
+    /// Fast-path job parameters. When V/T_d are unset they are derived
+    /// from the workload's per-rank image and the *median* link of the
+    /// bandwidth population (the full-stack world refines this with the
+    /// actual slowest member, Section 4.2).
+    pub fn job_params(&self) -> JobParams {
+        let per_rank = self.program().rank_state_bytes;
+        let v = self.v.unwrap_or(per_rank / self.bandwidth.up_median);
+        let td = self.td.unwrap_or(per_rank / self.bandwidth.down_median);
+        JobParams {
+            k: self.k,
+            runtime: self.runtime,
+            v,
+            td,
+            replan_period: self.replan_period,
+            estimator_window: self.estimator_window,
+            estimator: self.estimator.clone(),
+            stab_period: self.stab_period,
+            max_sim_time: self.max_sim_time,
+            warm_observations: self.warm_observations,
+        }
+    }
+
+    /// Resolve the churn model.
+    pub fn build_churn(&self) -> Result<Box<dyn ChurnModel>> {
+        build_churn_model(&self.churn, self.seed)
+    }
+
+    /// Resolve the planner backend.
+    pub fn build_planner(&self) -> Result<Box<dyn Planner>> {
+        build_planner(&self.planner)
+    }
+
+    /// Resolve the failure-rate estimator.
+    pub fn build_estimator(&self) -> Box<dyn WindowEstimator> {
+        build_window_estimator(&self.estimator, self.estimator_window)
+    }
+
+    /// Resolve the checkpoint policy (the planner backend is built only
+    /// when the policy actually needs one).
+    pub fn build_policy(&self) -> Result<Box<dyn CheckpointPolicy>> {
+        match &self.policy {
+            PolicySpec::Adaptive => {
+                let planner = self.build_planner()?;
+                Ok(policy::from_spec(&self.policy, move || planner))
+            }
+            spec => Ok(policy::from_spec(spec, || {
+                unreachable!("non-adaptive policies take no planner")
+            })),
+        }
+    }
+
+    /// Resolve the policy around an externally-built planner (lets callers
+    /// share one PJRT runtime across trials).
+    pub fn policy_with_planner(&self, planner: Box<dyn Planner>) -> Box<dyn CheckpointPolicy> {
+        policy::from_spec(&self.policy, move || planner)
+    }
+
+    /// Build just the overlay population (workload-layer experiments that
+    /// need the DHT topology without the full world).
+    pub fn build_overlay(&self, rng: &mut Pcg64) -> Overlay {
+        Overlay::new(self.n_peers, rng)
+    }
+
+    /// Compose the full-stack world from this scenario's components.
+    pub fn build_world(&self) -> Result<World> {
+        World::with_components(
+            self.sim_config(),
+            self.bandwidth,
+            self.build_churn()?,
+            self.build_estimator(),
+        )
+    }
+
+    /// Run one fast-path trial (`stream` separates parallel trial RNG).
+    pub fn run_one(&self, seed: u64, stream: u64) -> Result<JobOutcome> {
+        let churn = self.build_churn()?;
+        let sim = JobSimulator::new(self.job_params(), churn.as_ref());
+        let mut pol = self.build_policy()?;
+        Ok(sim.run(pol.as_mut(), seed, stream))
+    }
+
+    /// Run `trials` independent fast-path jobs (seed `base_seed + t`,
+    /// stream `t` — the harness-wide convention, so results line up with
+    /// the experiment sweeps).
+    pub fn run_trials(&self, trials: u64) -> Result<Vec<JobOutcome>> {
+        let churn = self.build_churn()?;
+        let sim = JobSimulator::new(self.job_params(), churn.as_ref());
+        let mut out = Vec::with_capacity(trials as usize);
+        for t in 0..trials {
+            let mut pol = self.build_policy()?;
+            out.push(sim.run(pol.as_mut(), self.seed.wrapping_add(t), t));
+        }
+        Ok(out)
+    }
+}
+
+/// Fluent builder over [`Scenario`]. Key-based setters (`*_key`) record
+/// parse errors and surface them from [`ScenarioBuilder::build`], so CLI
+/// plumbing stays linear.
+#[derive(Debug, Clone)]
+pub struct ScenarioBuilder {
+    scenario: Scenario,
+    err: Option<String>,
+}
+
+impl ScenarioBuilder {
+    pub fn peers(mut self, n: usize) -> Self {
+        self.scenario.n_peers = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.scenario.seed = seed;
+        self
+    }
+
+    pub fn stab_period(mut self, secs: f64) -> Self {
+        self.scenario.stab_period = secs;
+        self
+    }
+
+    pub fn churn(mut self, spec: ChurnSpec) -> Self {
+        self.scenario.churn = spec;
+        self
+    }
+
+    /// Shorthand for homogeneous exponential churn.
+    pub fn mtbf(mut self, secs: f64) -> Self {
+        self.scenario.churn = ChurnSpec::Exponential { mtbf: secs };
+        self
+    }
+
+    pub fn k(mut self, k: usize) -> Self {
+        self.scenario.k = k;
+        self
+    }
+
+    pub fn runtime(mut self, secs: f64) -> Self {
+        self.scenario.runtime = secs;
+        self
+    }
+
+    pub fn v(mut self, secs: f64) -> Self {
+        self.scenario.v = Some(secs);
+        self
+    }
+
+    pub fn td(mut self, secs: f64) -> Self {
+        self.scenario.td = Some(secs);
+        self
+    }
+
+    /// Derive V/T_d from the workload image and the bandwidth model
+    /// instead of fixing them.
+    pub fn derive_overheads(mut self) -> Self {
+        self.scenario.v = None;
+        self.scenario.td = None;
+        self
+    }
+
+    pub fn policy(mut self, spec: PolicySpec) -> Self {
+        self.scenario.policy = spec;
+        self
+    }
+
+    pub fn estimator(mut self, spec: EstimatorSpec) -> Self {
+        self.scenario.estimator = spec;
+        self
+    }
+
+    pub fn estimator_window(mut self, k: usize) -> Self {
+        self.scenario.estimator_window = k;
+        self
+    }
+
+    pub fn planner(mut self, spec: PlannerSpec) -> Self {
+        self.scenario.planner = spec;
+        self
+    }
+
+    pub fn bandwidth(mut self, model: BandwidthModel) -> Self {
+        self.scenario.bandwidth = model;
+        self
+    }
+
+    pub fn workload(mut self, pattern: CommPattern) -> Self {
+        self.scenario.workload = pattern;
+        self
+    }
+
+    pub fn replan_period(mut self, secs: f64) -> Self {
+        self.scenario.replan_period = secs;
+        self
+    }
+
+    pub fn max_sim_time(mut self, secs: f64) -> Self {
+        self.scenario.max_sim_time = secs;
+        self
+    }
+
+    pub fn warm_observations(mut self, n: usize) -> Self {
+        self.scenario.warm_observations = n;
+        self
+    }
+
+    // ------------------------------------------------ registry-keyed setters
+
+    fn record<T>(mut self, parsed: Result<T>, apply: impl FnOnce(&mut Scenario, T)) -> Self {
+        match parsed {
+            Ok(v) => apply(&mut self.scenario, v),
+            Err(e) => {
+                if self.err.is_none() {
+                    self.err = Some(e.to_string());
+                }
+            }
+        }
+        self
+    }
+
+    /// Set the churn model from a registry key (`"exp:7200"`,
+    /// `"gnutella-trace"`, …).
+    pub fn churn_key(self, key: &str) -> Self {
+        self.record(registry::parse_churn(key), |s, v| s.churn = v)
+    }
+
+    /// Set the policy from a registry key (`"adaptive"`, `"fixed:300"`, …).
+    pub fn policy_key(self, key: &str) -> Self {
+        self.record(registry::parse_policy(key), |s, v| s.policy = v)
+    }
+
+    /// Set the estimator from a registry key (`"mle"`, `"ewma:0.1"`, …).
+    pub fn estimator_key(self, key: &str) -> Self {
+        self.record(registry::parse_estimator(key), |s, v| s.estimator = v)
+    }
+
+    /// Set the planner backend from a registry key (`"native"`, `"xla"`).
+    pub fn planner_key(self, key: &str) -> Self {
+        self.record(registry::parse_planner(key), |s, v| s.planner = v)
+    }
+
+    /// Set the workload pattern from a registry key (`"ring"`, …).
+    pub fn workload_key(self, key: &str) -> Self {
+        self.record(registry::parse_workload(key), |s, v| s.workload = v)
+    }
+
+    /// Validate and return the scenario.
+    pub fn build(self) -> Result<Scenario> {
+        if let Some(e) = self.err {
+            return Err(Error::Config(e));
+        }
+        let s = self.scenario;
+        // Shares the SimConfig invariants so both paths agree on validity.
+        s.sim_config().validated()?;
+        if s.warm_observations > 100_000 {
+            return Err(Error::Config(format!(
+                "warm_observations={} is absurd (max 100000)",
+                s.warm_observations
+            )));
+        }
+        Ok(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_are_paper_defaults() {
+        let s = Scenario::builder().build().unwrap();
+        assert_eq!(s.sim_config(), SimConfig::default());
+        let j = s.job_params();
+        assert_eq!(j.k, 16);
+        assert_eq!(j.v, 20.0);
+        assert_eq!(j.td, 50.0);
+        assert_eq!(j.estimator, EstimatorSpec::Mle);
+    }
+
+    #[test]
+    fn builder_validates() {
+        assert!(Scenario::builder().k(0).build().is_err());
+        assert!(Scenario::builder().peers(4).k(8).build().is_err());
+        assert!(Scenario::builder().runtime(-1.0).build().is_err());
+    }
+
+    #[test]
+    fn key_setters_defer_errors_to_build() {
+        let err = Scenario::builder().policy_key("bogus").build().unwrap_err();
+        assert!(err.to_string().contains("bogus"), "{err}");
+        let ok = Scenario::builder()
+            .churn_key("doubling:7200:72000")
+            .policy_key("fixed:300")
+            .estimator_key("ewma:0.1")
+            .workload_key("pipeline")
+            .build()
+            .unwrap();
+        assert_eq!(ok.policy, PolicySpec::Fixed { interval: 300.0 });
+        assert_eq!(ok.estimator, EstimatorSpec::Ewma { alpha: 0.1 });
+        assert_eq!(ok.workload, CommPattern::Pipeline);
+    }
+
+    #[test]
+    fn derived_overheads_follow_bandwidth() {
+        let s = Scenario::builder().derive_overheads().build().unwrap();
+        let j = s.job_params();
+        let per_rank = s.program().rank_state_bytes;
+        assert!((j.v - per_rank / s.bandwidth.up_median).abs() < 1e-9);
+        assert!((j.td - per_rank / s.bandwidth.down_median).abs() < 1e-9);
+        assert!(j.v > j.td, "upstream is the scarce resource");
+    }
+
+    #[test]
+    fn run_trials_is_deterministic() {
+        let s = Scenario::builder()
+            .mtbf(7200.0)
+            .runtime(1800.0)
+            .seed(7)
+            .build()
+            .unwrap();
+        let a = s.run_trials(3).unwrap();
+        let b = s.run_trials(3).unwrap();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|o| o.completed));
+    }
+
+    #[test]
+    fn world_composes_from_scenario() {
+        let s = Scenario::builder()
+            .peers(128)
+            .k(8)
+            .runtime(1800.0)
+            .mtbf(1e12)
+            .seed(11)
+            .build()
+            .unwrap();
+        let mut w = s.build_world().unwrap();
+        let o = w
+            .run_job(s.program(), s.build_policy().unwrap())
+            .unwrap();
+        assert!(o.completed);
+    }
+}

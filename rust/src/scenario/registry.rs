@@ -1,0 +1,281 @@
+//! String-keyed component registry: one parser shared by CLI flags,
+//! config files, and programmatic lookups, with exact round-tripping
+//! (`key -> spec -> key` is the identity for every registered key).
+//!
+//! Key grammar is `name` or `name:arg[:arg]` with plain decimal numbers:
+//!
+//! | family    | keys                                                          |
+//! |-----------|---------------------------------------------------------------|
+//! | churn     | `exp:MTBF`, `doubling:MTBF0:DOUBLE_TIME`, `heavytail:MEAN:SHAPE`, `gnutella-trace`, `overnet-trace`, `bittorrent-trace` |
+//! | policy    | `adaptive`, `oracle`, `never`, `fixed:INTERVAL`               |
+//! | estimator | `mle`, `ewma:ALPHA`, `count`, `hybrid:MEAN:CONFIDENCE`        |
+//! | planner   | `native`, `xla`                                               |
+//! | workload  | `pipeline`, `ring`, `stencil1d`, `allreduce`, `master_worker` |
+
+use super::PlannerSpec;
+use crate::config::{ChurnSpec, PolicySpec};
+use crate::error::{Error, Result};
+use crate::estimator::EstimatorSpec;
+use crate::mpi::program::CommPattern;
+
+/// Format a number the way keys are written: shortest round-trip form
+/// (`7200`, `0.1`, `72000`).
+fn num(x: f64) -> String {
+    format!("{x}")
+}
+
+fn parse_num(family: &str, key: &str, part: &str) -> Result<f64> {
+    part.parse::<f64>().map_err(|_| {
+        Error::Config(format!("{family} key '{key}': '{part}' is not a number"))
+    })
+}
+
+/// Split `name:a:b` into (name, args).
+fn split(key: &str) -> (&str, Vec<&str>) {
+    let mut it = key.split(':');
+    let name = it.next().unwrap_or("");
+    (name, it.collect())
+}
+
+fn arity_err(family: &str, key: &str, want: &str) -> Error {
+    Error::Config(format!(
+        "{family} key '{key}' malformed; expected {want} (known: {})",
+        match family {
+            "churn" => churn_keys().join(", "),
+            "policy" => policy_keys().join(", "),
+            "estimator" => estimator_keys().join(", "),
+            "planner" => planner_keys().join(", "),
+            "workload" => workload_keys().join(", "),
+            _ => String::new(),
+        }
+    ))
+}
+
+// ------------------------------------------------------------------ churn
+
+/// Representative keys for every churn family (used by `--help`, docs and
+/// the round-trip tests).
+pub fn churn_keys() -> Vec<String> {
+    vec![
+        "exp:7200".into(),
+        "doubling:7200:72000".into(),
+        "heavytail:7200:0.7".into(),
+        "gnutella-trace".into(),
+        "overnet-trace".into(),
+        "bittorrent-trace".into(),
+    ]
+}
+
+/// Canonical key of a churn spec.
+pub fn churn_key(spec: &ChurnSpec) -> String {
+    match spec {
+        ChurnSpec::Exponential { mtbf } => format!("exp:{}", num(*mtbf)),
+        ChurnSpec::TimeVarying { mtbf0, double_time } => {
+            format!("doubling:{}:{}", num(*mtbf0), num(*double_time))
+        }
+        ChurnSpec::HeavyTail { mean, shape } => {
+            format!("heavytail:{}:{}", num(*mean), num(*shape))
+        }
+        ChurnSpec::Trace { kind } => format!("{kind}-trace"),
+    }
+}
+
+/// Parse a churn key.
+pub fn parse_churn(key: &str) -> Result<ChurnSpec> {
+    if let Some(network) = key.strip_suffix("-trace") {
+        return match network {
+            "gnutella" | "overnet" | "bittorrent" => {
+                Ok(ChurnSpec::Trace { kind: network.to_string() })
+            }
+            other => Err(Error::Config(format!("unknown trace network '{other}'"))),
+        };
+    }
+    let (name, args) = split(key);
+    match (name, args.as_slice()) {
+        ("exp", [mtbf]) => Ok(ChurnSpec::Exponential { mtbf: parse_num("churn", key, mtbf)? }),
+        ("doubling", [mtbf0, dt]) => Ok(ChurnSpec::TimeVarying {
+            mtbf0: parse_num("churn", key, mtbf0)?,
+            double_time: parse_num("churn", key, dt)?,
+        }),
+        ("heavytail", [mean, shape]) => Ok(ChurnSpec::HeavyTail {
+            mean: parse_num("churn", key, mean)?,
+            shape: parse_num("churn", key, shape)?,
+        }),
+        _ => Err(arity_err("churn", key, "exp:MTBF | doubling:MTBF0:D | heavytail:MEAN:SHAPE | <network>-trace")),
+    }
+}
+
+// ----------------------------------------------------------------- policy
+
+pub fn policy_keys() -> Vec<String> {
+    vec!["adaptive".into(), "oracle".into(), "never".into(), "fixed:300".into()]
+}
+
+pub fn policy_key(spec: &PolicySpec) -> String {
+    match spec {
+        PolicySpec::Adaptive => "adaptive".into(),
+        PolicySpec::Oracle => "oracle".into(),
+        PolicySpec::Never => "never".into(),
+        PolicySpec::Fixed { interval } => format!("fixed:{}", num(*interval)),
+    }
+}
+
+pub fn parse_policy(key: &str) -> Result<PolicySpec> {
+    let (name, args) = split(key);
+    match (name, args.as_slice()) {
+        ("adaptive", []) => Ok(PolicySpec::Adaptive),
+        ("oracle", []) => Ok(PolicySpec::Oracle),
+        ("never", []) => Ok(PolicySpec::Never),
+        ("fixed", [iv]) => {
+            let interval = parse_num("policy", key, iv)?;
+            if interval <= 0.0 {
+                return Err(Error::Config(format!(
+                    "policy key '{key}': interval must be positive"
+                )));
+            }
+            Ok(PolicySpec::Fixed { interval })
+        }
+        _ => Err(arity_err("policy", key, "adaptive | oracle | never | fixed:INTERVAL")),
+    }
+}
+
+// -------------------------------------------------------------- estimator
+
+pub fn estimator_keys() -> Vec<String> {
+    vec!["mle".into(), "ewma:0.1".into(), "count".into(), "hybrid:7200:16".into()]
+}
+
+pub fn estimator_key(spec: &EstimatorSpec) -> String {
+    match spec {
+        EstimatorSpec::Mle => "mle".into(),
+        EstimatorSpec::Ewma { alpha } => format!("ewma:{}", num(*alpha)),
+        EstimatorSpec::Count => "count".into(),
+        EstimatorSpec::Hybrid { mean, confidence } => {
+            format!("hybrid:{}:{}", num(*mean), num(*confidence))
+        }
+    }
+}
+
+pub fn parse_estimator(key: &str) -> Result<EstimatorSpec> {
+    let (name, args) = split(key);
+    match (name, args.as_slice()) {
+        ("mle", []) => Ok(EstimatorSpec::Mle),
+        ("count", []) => Ok(EstimatorSpec::Count),
+        ("ewma", [alpha]) => {
+            let alpha = parse_num("estimator", key, alpha)?;
+            if !(alpha > 0.0 && alpha <= 1.0) {
+                return Err(Error::Config(format!(
+                    "estimator key '{key}': alpha must be in (0, 1]"
+                )));
+            }
+            Ok(EstimatorSpec::Ewma { alpha })
+        }
+        ("hybrid", [mean, confidence]) => {
+            let mean = parse_num("estimator", key, mean)?;
+            let confidence = parse_num("estimator", key, confidence)?;
+            if mean <= 0.0 || confidence < 0.0 {
+                return Err(Error::Config(format!(
+                    "estimator key '{key}': mean must be > 0 and confidence >= 0"
+                )));
+            }
+            Ok(EstimatorSpec::Hybrid { mean, confidence })
+        }
+        _ => Err(arity_err("estimator", key, "mle | ewma:ALPHA | count | hybrid:MEAN:CONF")),
+    }
+}
+
+// ---------------------------------------------------------------- planner
+
+pub fn planner_keys() -> Vec<String> {
+    vec!["native".into(), "xla".into()]
+}
+
+pub fn planner_key(spec: &PlannerSpec) -> String {
+    match spec {
+        PlannerSpec::Native => "native".into(),
+        PlannerSpec::Xla => "xla".into(),
+    }
+}
+
+pub fn parse_planner(key: &str) -> Result<PlannerSpec> {
+    match key {
+        "native" => Ok(PlannerSpec::Native),
+        "xla" => Ok(PlannerSpec::Xla),
+        _ => Err(arity_err("planner", key, "native | xla")),
+    }
+}
+
+// --------------------------------------------------------------- workload
+
+pub fn workload_keys() -> Vec<String> {
+    ALL_PATTERNS.iter().map(|p| p.name().to_string()).collect()
+}
+
+const ALL_PATTERNS: [CommPattern; 5] = [
+    CommPattern::Pipeline,
+    CommPattern::Ring,
+    CommPattern::Stencil1D,
+    CommPattern::AllReduce,
+    CommPattern::MasterWorker,
+];
+
+pub fn workload_key(pattern: CommPattern) -> String {
+    pattern.name().to_string()
+}
+
+pub fn parse_workload(key: &str) -> Result<CommPattern> {
+    ALL_PATTERNS
+        .iter()
+        .copied()
+        .find(|p| p.name() == key)
+        .ok_or_else(|| arity_err("workload", key, "a communication pattern name"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_registered_key_round_trips() {
+        for k in churn_keys() {
+            assert_eq!(churn_key(&parse_churn(&k).unwrap()), k, "churn {k}");
+        }
+        for k in policy_keys() {
+            assert_eq!(policy_key(&parse_policy(&k).unwrap()), k, "policy {k}");
+        }
+        for k in estimator_keys() {
+            assert_eq!(estimator_key(&parse_estimator(&k).unwrap()), k, "estimator {k}");
+        }
+        for k in planner_keys() {
+            assert_eq!(planner_key(&parse_planner(&k).unwrap()), k, "planner {k}");
+        }
+        for k in workload_keys() {
+            assert_eq!(workload_key(parse_workload(&k).unwrap()), k, "workload {k}");
+        }
+    }
+
+    #[test]
+    fn malformed_keys_error_with_known_list() {
+        let e = parse_policy("fixed").unwrap_err().to_string();
+        assert!(e.contains("fixed:300"), "{e}");
+        assert!(parse_policy("fixed:-5").is_err());
+        assert!(parse_churn("exp").is_err());
+        assert!(parse_churn("exp:abc").is_err());
+        assert!(parse_churn("kazaa-trace").is_err());
+        assert!(parse_estimator("ewma:1.5").is_err());
+        assert!(parse_planner("tpu").is_err());
+        assert!(parse_workload("torus").is_err());
+    }
+
+    #[test]
+    fn decimal_args_survive() {
+        assert_eq!(
+            parse_churn("heavytail:7200:0.7").unwrap(),
+            ChurnSpec::HeavyTail { mean: 7200.0, shape: 0.7 }
+        );
+        assert_eq!(
+            parse_estimator("ewma:0.25").unwrap(),
+            EstimatorSpec::Ewma { alpha: 0.25 }
+        );
+    }
+}

@@ -1,0 +1,442 @@
+//! Multi-threaded scenario sweeps.
+//!
+//! A [`ScenarioGrid`] is a cartesian product of scenario axes (churn ×
+//! policy × k × V × T_d) over a base [`Scenario`]; the [`SweepRunner`]
+//! fans its cells across `std::thread` workers. Determinism is structural:
+//! every cell derives its RNG streams from `(scenario.seed + trial,
+//! trial)` only — never from scheduling — and results are reassembled in
+//! cell-index order, so N-threaded output is byte-identical to the
+//! single-threaded run.
+//!
+//! [`ComparisonSweep`] is the Fig. 4/5 harness (Eq. 11 relative runtime)
+//! expressed as such a sweep; with one thread it reproduces
+//! [`crate::experiments::relative_runtime::run_comparison`] exactly.
+
+use super::{registry, Scenario};
+use crate::config::{ChurnSpec, PolicySpec};
+use crate::coordinator::job::JobSimulator;
+use crate::error::{Error, Result};
+use crate::experiments::relative_runtime::{ComparisonResult, ComparisonRow};
+use crate::util::csv::Table;
+use crate::util::stats::Running;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Aggregated outcome of one grid cell (`trials` fast-path runs of one
+/// scenario).
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub scenario: Scenario,
+    pub trials: u64,
+    /// Wall-time statistics across trials.
+    pub wall: Running,
+    /// Fraction of runs that hit the sim-time cap.
+    pub aborted_frac: f64,
+    /// Mean of per-run time-weighted checkpoint intervals (runs with one).
+    pub mean_interval: f64,
+    pub failures: u64,
+    pub checkpoints: u64,
+    pub completed: u64,
+}
+
+/// Run one cell: `trials` independent jobs with the harness-wide seed
+/// convention (`seed + trial`, stream `trial` — identical to the
+/// sequential experiment harness).
+fn run_cell(s: &Scenario, trials: u64) -> Result<CellResult> {
+    let churn = s.build_churn()?;
+    let sim = JobSimulator::new(s.job_params(), churn.as_ref());
+    let mut wall = Running::new();
+    let mut mean_interval = Running::new();
+    let mut aborted = 0u64;
+    let mut failures = 0u64;
+    let mut checkpoints = 0u64;
+    let mut completed = 0u64;
+    for trial in 0..trials {
+        let mut pol = s.build_policy()?;
+        let o = sim.run(pol.as_mut(), s.seed.wrapping_add(trial), trial);
+        wall.push(o.wall_time);
+        if !o.completed {
+            aborted += 1;
+        } else {
+            completed += 1;
+        }
+        if o.mean_interval > 0.0 {
+            mean_interval.push(o.mean_interval);
+        }
+        failures += o.failures;
+        checkpoints += o.checkpoints;
+    }
+    Ok(CellResult {
+        scenario: s.clone(),
+        trials,
+        wall,
+        aborted_frac: aborted as f64 / trials.max(1) as f64,
+        mean_interval: mean_interval.mean(),
+        failures,
+        checkpoints,
+        completed,
+    })
+}
+
+/// Fans scenario cells across worker threads.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRunner {
+    pub threads: usize,
+}
+
+impl SweepRunner {
+    pub fn new(threads: usize) -> Self {
+        SweepRunner { threads: threads.max(1) }
+    }
+
+    /// One worker per available core.
+    pub fn auto() -> Self {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        SweepRunner::new(n)
+    }
+
+    /// Run every cell for `trials` trials; results come back in cell
+    /// order regardless of worker scheduling.
+    pub fn run_cells(&self, cells: &[Scenario], trials: u64) -> Result<Vec<CellResult>> {
+        if cells.is_empty() {
+            return Ok(Vec::new());
+        }
+        let workers = self.threads.min(cells.len());
+        if workers <= 1 {
+            return cells.iter().map(|s| run_cell(s, trials)).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<Result<CellResult>>>> =
+            cells.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cells.len() {
+                        break;
+                    }
+                    let r = run_cell(&cells[i], trials);
+                    *slots[i].lock().expect("cell slot poisoned") = Some(r);
+                });
+            }
+        });
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, m)| {
+                m.into_inner()
+                    .expect("cell slot poisoned")
+                    .unwrap_or_else(|| Err(Error::Sim(format!("sweep cell {i} never ran"))))
+            })
+            .collect()
+    }
+
+    /// Run a full grid.
+    pub fn run_grid(&self, grid: &ScenarioGrid) -> Result<Vec<CellResult>> {
+        self.run_cells(&grid.cells(), grid.trials)
+    }
+}
+
+/// Cartesian product of scenario axes over a base scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioGrid {
+    base: Scenario,
+    churns: Vec<ChurnSpec>,
+    policies: Vec<PolicySpec>,
+    ks: Vec<usize>,
+    vs: Vec<f64>,
+    tds: Vec<f64>,
+    /// Trials per cell.
+    pub trials: u64,
+}
+
+impl ScenarioGrid {
+    pub fn new(base: Scenario) -> Self {
+        let job = base.job_params();
+        ScenarioGrid {
+            churns: vec![base.churn.clone()],
+            policies: vec![base.policy.clone()],
+            ks: vec![base.k],
+            vs: vec![job.v],
+            tds: vec![job.td],
+            trials: 20,
+            base,
+        }
+    }
+
+    pub fn churns(mut self, specs: Vec<ChurnSpec>) -> Self {
+        assert!(!specs.is_empty());
+        self.churns = specs;
+        self
+    }
+
+    /// Convenience: an exponential-churn axis over MTBFs.
+    pub fn mtbfs(self, mtbfs: &[f64]) -> Self {
+        self.churns(mtbfs.iter().map(|&m| ChurnSpec::Exponential { mtbf: m }).collect())
+    }
+
+    pub fn policies(mut self, specs: Vec<PolicySpec>) -> Self {
+        assert!(!specs.is_empty());
+        self.policies = specs;
+        self
+    }
+
+    pub fn ks(mut self, ks: Vec<usize>) -> Self {
+        assert!(!ks.is_empty());
+        self.ks = ks;
+        self
+    }
+
+    pub fn vs(mut self, vs: Vec<f64>) -> Self {
+        assert!(!vs.is_empty());
+        self.vs = vs;
+        self
+    }
+
+    pub fn tds(mut self, tds: Vec<f64>) -> Self {
+        assert!(!tds.is_empty());
+        self.tds = tds;
+        self
+    }
+
+    pub fn trials(mut self, trials: u64) -> Self {
+        self.trials = trials;
+        self
+    }
+
+    /// Number of cells in the product.
+    pub fn len(&self) -> usize {
+        self.churns.len() * self.policies.len() * self.ks.len() * self.vs.len() * self.tds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the cells in canonical order (churn-major, T_d-minor).
+    pub fn cells(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        for churn in &self.churns {
+            for policy in &self.policies {
+                for &k in &self.ks {
+                    for &v in &self.vs {
+                        for &td in &self.tds {
+                            let mut s = self.base.clone();
+                            s.churn = churn.clone();
+                            s.policy = policy.clone();
+                            s.k = k;
+                            s.v = Some(v);
+                            s.td = Some(td);
+                            out.push(s);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Render grid results as the aggregated CSV table (row order == cell
+/// order, so the bytes are thread-count independent).
+pub fn grid_table(results: &[CellResult]) -> Table {
+    let mut t = Table::new(&[
+        "churn",
+        "policy",
+        "estimator",
+        "k",
+        "v_s",
+        "td_s",
+        "trials",
+        "mean_wall_s",
+        "ci95_s",
+        "completed_frac",
+        "aborted_frac",
+        "mean_interval_s",
+        "failures_per_run",
+        "checkpoints_per_run",
+    ]);
+    for r in results {
+        let s = &r.scenario;
+        let job = s.job_params();
+        let n = r.trials.max(1) as f64;
+        t.push(vec![
+            registry::churn_key(&s.churn),
+            registry::policy_key(&s.policy),
+            registry::estimator_key(&s.estimator),
+            s.k.to_string(),
+            format!("{:.6}", job.v),
+            format!("{:.6}", job.td),
+            r.trials.to_string(),
+            format!("{:.6}", r.wall.mean()),
+            format!("{:.6}", r.wall.ci95()),
+            format!("{:.6}", r.completed as f64 / n),
+            format!("{:.6}", r.aborted_frac),
+            format!("{:.6}", r.mean_interval),
+            format!("{:.6}", r.failures as f64 / n),
+            format!("{:.6}", r.checkpoints as f64 / n),
+        ]);
+    }
+    t
+}
+
+/// The paper's Fig. 4/5 comparison (Eq. 11) as a scenario sweep: one
+/// adaptive cell, an optional oracle cell, and one cell per fixed
+/// interval, all sharing the base scenario's network and workload.
+#[derive(Debug, Clone)]
+pub struct ComparisonSweep {
+    base: Scenario,
+    fixed_intervals: Vec<f64>,
+    trials: u64,
+    with_oracle: bool,
+    threads: usize,
+}
+
+impl ComparisonSweep {
+    pub fn new(base: Scenario) -> Self {
+        ComparisonSweep {
+            base,
+            // 1, 2, 5, 10, 20, 40, 60 minutes — the paper's style of axis.
+            fixed_intervals: vec![60.0, 120.0, 300.0, 600.0, 1200.0, 2400.0, 3600.0],
+            trials: 40,
+            with_oracle: false,
+            threads: 1,
+        }
+    }
+
+    pub fn intervals(mut self, fixed_intervals: Vec<f64>) -> Self {
+        self.fixed_intervals = fixed_intervals;
+        self
+    }
+
+    pub fn trials(mut self, trials: u64) -> Self {
+        self.trials = trials;
+        self
+    }
+
+    pub fn with_oracle(mut self, yes: bool) -> Self {
+        self.with_oracle = yes;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    fn cells(&self) -> Vec<Scenario> {
+        let mut cells = Vec::with_capacity(2 + self.fixed_intervals.len());
+        let mut adaptive = self.base.clone();
+        adaptive.policy = PolicySpec::Adaptive;
+        cells.push(adaptive);
+        if self.with_oracle {
+            let mut oracle = self.base.clone();
+            oracle.policy = PolicySpec::Oracle;
+            cells.push(oracle);
+        }
+        for &iv in &self.fixed_intervals {
+            let mut fixed = self.base.clone();
+            fixed.policy = PolicySpec::Fixed { interval: iv };
+            cells.push(fixed);
+        }
+        cells
+    }
+
+    /// Run the sweep and assemble the Eq. 11 table.
+    pub fn run(&self) -> Result<ComparisonResult> {
+        let results = SweepRunner::new(self.threads).run_cells(&self.cells(), self.trials)?;
+        let adaptive = &results[0];
+        let oracle_runtime = self.with_oracle.then(|| results[1].wall.mean());
+        let fixed_offset = 1 + usize::from(self.with_oracle);
+        let rows = results[fixed_offset..]
+            .iter()
+            .zip(&self.fixed_intervals)
+            .map(|(cell, &iv)| ComparisonRow {
+                fixed_interval: iv,
+                fixed_runtime: cell.wall.mean(),
+                fixed_ci95: cell.wall.ci95(),
+                relative_runtime_pct: cell.wall.mean() / adaptive.wall.mean() * 100.0,
+                fixed_aborted_frac: cell.aborted_frac,
+            })
+            .collect();
+        Ok(ComparisonResult {
+            adaptive_runtime: adaptive.wall.mean(),
+            adaptive_ci95: adaptive.wall.ci95(),
+            adaptive_mean_interval: adaptive.mean_interval,
+            oracle_runtime,
+            rows,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::relative_runtime::{run_comparison, to_table, ComparisonConfig};
+
+    fn quick_base() -> Scenario {
+        Scenario::builder()
+            .mtbf(7200.0)
+            .runtime(2.0 * 3600.0)
+            .seed(7)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn grid_cells_enumerate_in_canonical_order() {
+        let g = ScenarioGrid::new(quick_base())
+            .mtbfs(&[4000.0, 7200.0])
+            .policies(vec![PolicySpec::Adaptive, PolicySpec::Never])
+            .vs(vec![10.0, 20.0]);
+        assert_eq!(g.len(), 8);
+        let cells = g.cells();
+        assert_eq!(cells.len(), 8);
+        assert_eq!(cells[0].churn, ChurnSpec::Exponential { mtbf: 4000.0 });
+        assert_eq!(cells[0].policy, PolicySpec::Adaptive);
+        assert_eq!(cells[0].v, Some(10.0));
+        assert_eq!(cells[1].v, Some(20.0));
+        assert_eq!(cells[7].churn, ChurnSpec::Exponential { mtbf: 7200.0 });
+        assert_eq!(cells[7].policy, PolicySpec::Never);
+    }
+
+    #[test]
+    fn threaded_sweep_is_byte_identical_to_sequential() {
+        let grid = ScenarioGrid::new(quick_base())
+            .mtbfs(&[3600.0, 7200.0])
+            .policies(vec![
+                PolicySpec::Adaptive,
+                PolicySpec::Fixed { interval: 300.0 },
+            ])
+            .trials(4);
+        let seq = SweepRunner::new(1).run_grid(&grid).unwrap();
+        let par = SweepRunner::new(4).run_grid(&grid).unwrap();
+        assert_eq!(grid_table(&seq).to_csv(), grid_table(&par).to_csv());
+    }
+
+    #[test]
+    fn comparison_sweep_matches_sequential_harness() {
+        let base = quick_base();
+        let sweep = ComparisonSweep::new(base.clone())
+            .intervals(vec![90.0, 1800.0])
+            .trials(6)
+            .with_oracle(true)
+            .threads(4);
+        let threaded = sweep.run().unwrap();
+        let sequential = run_comparison(&ComparisonConfig {
+            churn: base.churn.clone(),
+            job: base.job_params(),
+            fixed_intervals: vec![90.0, 1800.0],
+            trials: 6,
+            seed: base.seed,
+            with_oracle: true,
+        });
+        assert_eq!(
+            to_table(&threaded).to_csv(),
+            to_table(&sequential).to_csv(),
+            "threaded comparison must be byte-identical to the sequential harness"
+        );
+        assert_eq!(threaded.oracle_runtime, sequential.oracle_runtime);
+        assert_eq!(threaded.adaptive_mean_interval, sequential.adaptive_mean_interval);
+    }
+}

@@ -1,0 +1,201 @@
+//! Integration: the Scenario API is *equivalent* to the low-level
+//! constructors it superseded — same outcomes for the same seeds on both
+//! the fast path and the full-stack world — plus registry round-trips and
+//! sweep determinism across thread counts.
+
+use p2pcp::churn::build_churn_model;
+use p2pcp::config::{ChurnSpec, PolicySpec, SimConfig};
+use p2pcp::coordinator::job::{JobParams, JobSimulator};
+use p2pcp::coordinator::world::World;
+use p2pcp::estimator::EstimatorSpec;
+use p2pcp::policy::FixedPolicy;
+use p2pcp::scenario::{registry, ComparisonSweep, Scenario, ScenarioGrid, SweepRunner};
+use p2pcp::scenario::sweep::grid_table;
+
+#[test]
+fn scenario_fast_path_reproduces_job_simulator() {
+    // The seed surface: JobSimulator::new(JobParams, churn) driven by a
+    // hand-built policy. The scenario with the same knobs must produce
+    // byte-identical outcomes for the same (seed, stream).
+    let s = Scenario::builder()
+        .mtbf(7200.0)
+        .k(16)
+        .runtime(2.0 * 3600.0)
+        .v(20.0)
+        .td(50.0)
+        .policy(PolicySpec::Fixed { interval: 300.0 })
+        .seed(41)
+        .build()
+        .unwrap();
+
+    let churn = build_churn_model(&ChurnSpec::Exponential { mtbf: 7200.0 }, 41).unwrap();
+    let params = JobParams {
+        k: 16,
+        runtime: 2.0 * 3600.0,
+        v: 20.0,
+        td: 50.0,
+        max_sim_time: s.max_sim_time,
+        ..JobParams::default()
+    };
+    let sim = JobSimulator::new(params, churn.as_ref());
+
+    let from_scenario = s.run_trials(4).unwrap();
+    for (trial, via_scenario) in from_scenario.iter().enumerate() {
+        let mut pol = FixedPolicy::new(300.0);
+        let direct = sim.run(&mut pol, 41 + trial as u64, trial as u64);
+        assert_eq!(*via_scenario, direct, "trial {trial} diverged");
+    }
+}
+
+#[test]
+fn scenario_world_reproduces_direct_world() {
+    // World::new(SimConfig) with default components vs the scenario path.
+    let cfg = SimConfig {
+        n_peers: 128,
+        k: 8,
+        job_runtime: 1800.0,
+        v: Some(20.0),
+        td: Some(50.0),
+        churn: ChurnSpec::Exponential { mtbf: 3600.0 },
+        seed: 11,
+        ..SimConfig::default()
+    };
+    let s = Scenario::builder()
+        .peers(128)
+        .k(8)
+        .runtime(1800.0)
+        .v(20.0)
+        .td(50.0)
+        .mtbf(3600.0)
+        .seed(11)
+        .max_sim_time(cfg.max_sim_time)
+        .build()
+        .unwrap();
+    assert_eq!(s.sim_config(), cfg, "scenario must map onto the same SimConfig");
+
+    let run = |mut w: World| {
+        w.warmup(2.0 * 3600.0);
+        let est = w.estimated_rate();
+        let o = w
+            .run_job(s.program(), Box::new(FixedPolicy::new(300.0)))
+            .unwrap();
+        (est, o)
+    };
+    let (est_direct, direct) = run(World::new(cfg).unwrap());
+    let (est_scenario, via_scenario) = run(s.build_world().unwrap());
+    assert_eq!(est_direct, est_scenario, "estimator warmup diverged");
+    assert_eq!(direct, via_scenario, "world outcome diverged");
+}
+
+#[test]
+fn registry_round_trips_every_key() {
+    for k in registry::churn_keys() {
+        let spec = registry::parse_churn(&k).unwrap();
+        assert_eq!(registry::churn_key(&spec), k, "churn {k}");
+        // Every registered churn key must also build a live model.
+        assert!(build_churn_model(&spec, 1).is_ok(), "churn {k} must build");
+    }
+    for k in registry::policy_keys() {
+        assert_eq!(registry::policy_key(&registry::parse_policy(&k).unwrap()), k);
+    }
+    for k in registry::estimator_keys() {
+        assert_eq!(registry::estimator_key(&registry::parse_estimator(&k).unwrap()), k);
+    }
+    for k in registry::planner_keys() {
+        assert_eq!(registry::planner_key(&registry::parse_planner(&k).unwrap()), k);
+    }
+    for k in registry::workload_keys() {
+        assert_eq!(registry::workload_key(registry::parse_workload(&k).unwrap()), k);
+    }
+}
+
+#[test]
+fn keyed_and_programmatic_construction_agree() {
+    let via_keys = Scenario::builder()
+        .churn_key("heavytail:7200:0.7")
+        .policy_key("fixed:600")
+        .estimator_key("ewma:0.2")
+        .workload_key("stencil1d")
+        .seed(5)
+        .runtime(1800.0)
+        .build()
+        .unwrap();
+    let programmatic = Scenario::builder()
+        .churn(ChurnSpec::HeavyTail { mean: 7200.0, shape: 0.7 })
+        .policy(PolicySpec::Fixed { interval: 600.0 })
+        .estimator(EstimatorSpec::Ewma { alpha: 0.2 })
+        .workload(p2pcp::mpi::program::CommPattern::Stencil1D)
+        .seed(5)
+        .runtime(1800.0)
+        .build()
+        .unwrap();
+    assert_eq!(
+        via_keys.run_trials(2).unwrap(),
+        programmatic.run_trials(2).unwrap(),
+        "CLI keys and programmatic specs must resolve to the same stack"
+    );
+}
+
+#[test]
+fn sweep_output_is_thread_count_invariant() {
+    let base = Scenario::builder()
+        .mtbf(7200.0)
+        .runtime(3600.0)
+        .seed(13)
+        .build()
+        .unwrap();
+    let grid = ScenarioGrid::new(base.clone())
+        .mtbfs(&[3600.0, 7200.0, 14400.0])
+        .policies(vec![
+            PolicySpec::Adaptive,
+            PolicySpec::Fixed { interval: 300.0 },
+            PolicySpec::Fixed { interval: 1200.0 },
+        ])
+        .trials(5);
+    let one = SweepRunner::new(1).run_grid(&grid).unwrap();
+    let many = SweepRunner::new(8).run_grid(&grid).unwrap();
+    assert_eq!(
+        grid_table(&one).to_csv(),
+        grid_table(&many).to_csv(),
+        "aggregated CSV must be byte-identical across thread counts"
+    );
+
+    let seq = ComparisonSweep::new(base.clone())
+        .intervals(vec![120.0, 600.0])
+        .trials(5)
+        .threads(1)
+        .run()
+        .unwrap();
+    let par = ComparisonSweep::new(base)
+        .intervals(vec![120.0, 600.0])
+        .trials(5)
+        .threads(6)
+        .run()
+        .unwrap();
+    assert_eq!(seq.adaptive_runtime, par.adaptive_runtime);
+    assert_eq!(
+        seq.rows.iter().map(|r| r.fixed_runtime).collect::<Vec<_>>(),
+        par.rows.iter().map(|r| r.fixed_runtime).collect::<Vec<_>>(),
+    );
+}
+
+#[test]
+fn estimator_plugs_into_fast_path() {
+    // Swapping the estimator through the scenario changes the adaptive
+    // trajectory but still completes the job.
+    let mk = |estimator: EstimatorSpec| {
+        Scenario::builder()
+            .mtbf(7200.0)
+            .runtime(3600.0)
+            .estimator(estimator)
+            .seed(3)
+            .build()
+            .unwrap()
+            .run_trials(2)
+            .unwrap()
+    };
+    let mle = mk(EstimatorSpec::Mle);
+    let ewma = mk(EstimatorSpec::Ewma { alpha: 0.1 });
+    assert!(mle.iter().all(|o| o.completed));
+    assert!(ewma.iter().all(|o| o.completed));
+}
