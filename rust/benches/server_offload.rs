@@ -1,0 +1,46 @@
+//! Server I/O-offload sweep — the paper's Fig. 1 motivation as a tracked
+//! experiment: server bytes/s under `server` vs `replicate:3` vs
+//! `erasure:4:2` checkpoint storage across overlay size × image size.
+//!
+//! Expect the P2P strategies to carry the bulk bytes on peer links with
+//! the server reduced to per-chunk placement metadata — at 400 peers the
+//! server-path baseline is ≥ an order of magnitude above both.
+//!
+//! Determinism: cells are seeded by index only and rows assemble in cell
+//! order, so the CSV is byte-identical across `--threads 1` and
+//! `--threads N` (same contract as `rust/tests/scenario_api.rs`).
+//!
+//! `cargo bench --bench server_offload` (add `-- --quick` for a smoke
+//! run, `-- --threads N` to pin the worker count).
+
+use p2pcp::experiments::bench_support::{emit_table, is_quick};
+use p2pcp::experiments::server_offload::{run_sweep, summarize, to_table, OffloadConfig};
+use p2pcp::scenario::SweepRunner;
+
+/// `-- --threads N` (defaults to one worker per core).
+fn threads_arg() -> usize {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--threads")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|n| n.parse().ok())
+        .unwrap_or(SweepRunner::auto().threads)
+}
+
+fn main() {
+    let mut cfg = OffloadConfig::default();
+    if is_quick() {
+        cfg.peer_counts = vec![100, 400];
+        cfg.image_bytes = vec![8e6];
+        cfg.horizon = 3600.0;
+    }
+    let threads = threads_arg();
+    let rows = run_sweep(&cfg, threads);
+
+    // Offload summary per (peers, image) pair: baseline vs P2P.
+    for line in summarize(&rows, cfg.storages.len()) {
+        println!("{line}");
+    }
+
+    emit_table("server_offload", &to_table(&rows));
+}

@@ -13,6 +13,7 @@ use crate::churn::{build_churn_model, ChurnModel};
 use crate::config::SimConfig;
 use crate::coordinator::job::JobOutcome;
 use crate::coordinator::leader::LeaderElection;
+use crate::dataplane::{DataPlane, StorageSpec};
 use crate::error::{Error, Result};
 use crate::estimator::{MleWindow, WindowEstimator};
 use crate::metrics::Metrics;
@@ -27,7 +28,7 @@ use crate::net::stabilize::Stabilizer;
 use crate::policy::{CheckpointPolicy, PolicyCtx};
 use crate::sim::event::{EventKind, JobTimerKind};
 use crate::sim::{EventId, SimEngine, SimTime};
-use crate::storage::dht_store::{download_time, upload_time, DhtStore};
+use crate::storage::dht_store::{download_time, upload_time};
 use crate::storage::image::CheckpointImage;
 use crate::util::rng::Pcg64;
 
@@ -71,7 +72,10 @@ pub struct World {
     overlay: Overlay,
     stab: Stabilizer,
     links: Vec<LinkSpeed>,
-    store: DhtStore,
+    store: DataPlane,
+    /// Last data-plane repair sweep (throttles the per-peer stabilize
+    /// events down to one sweep per stabilization period).
+    last_repair: f64,
     churn: Box<dyn ChurnModel>,
     rng: Pcg64,
     estimator: Box<dyn WindowEstimator>,
@@ -88,7 +92,13 @@ impl World {
     pub fn new(cfg: SimConfig) -> Result<World> {
         let churn = build_churn_model(&cfg.churn, cfg.seed)?;
         let estimator = Box::new(MleWindow::new(cfg.estimator_window.max(1)));
-        World::with_components(cfg, BandwidthModel::default(), churn, estimator)
+        World::with_components(
+            cfg,
+            BandwidthModel::default(),
+            StorageSpec::default(),
+            churn,
+            estimator,
+        )
     }
 
     /// Build a world from explicit components (population online, sessions
@@ -98,10 +108,12 @@ impl World {
     pub fn with_components(
         cfg: SimConfig,
         bandwidth: BandwidthModel,
+        storage: StorageSpec,
         churn: Box<dyn ChurnModel>,
         estimator: Box<dyn WindowEstimator>,
     ) -> Result<World> {
         let cfg = cfg.validated()?;
+        let storage = storage.validated()?;
         let mut rng = Pcg64::new(cfg.seed, 0xB0B);
         let overlay = Overlay::new(cfg.n_peers, &mut rng);
         let links = bandwidth.sample_population(cfg.n_peers, &mut rng);
@@ -120,7 +132,8 @@ impl World {
             overlay,
             stab,
             links,
-            store: DhtStore::new(),
+            store: DataPlane::new(storage),
+            last_repair: f64::NEG_INFINITY,
             churn,
             rng,
             estimator,
@@ -239,6 +252,8 @@ impl World {
         self.metrics.observe("job.wall_time", job.outcome.wall_time);
         self.metrics.add("job.failures", job.outcome.failures);
         self.metrics.add("job.checkpoints", job.outcome.checkpoints);
+        // Surface the per-endpoint I/O-offload accounting.
+        self.store.publish_metrics(&mut self.metrics);
         Ok(job.outcome)
     }
 
@@ -371,6 +386,16 @@ impl World {
                 self.estimator.observe(obs.lifetime);
                 self.metrics.inc("stabilize.observations");
             }
+            // Data-plane maintenance rides the stabilization cadence —
+            // throttled to one sweep per period (every peer fires its own
+            // Stabilize event; n_peers sweeps per period would be waste).
+            if now - self.last_repair >= self.cfg.stab_period {
+                self.last_repair = now;
+                let repaired = self.store.repair_sweep(now, &self.overlay, &self.links);
+                if repaired > 0 {
+                    self.metrics.add("dataplane.chunks_repaired", repaired as u64);
+                }
+            }
         }
         self.engine
             .schedule_in_secs(self.cfg.stab_period, EventKind::Stabilize { peer });
@@ -425,8 +450,18 @@ impl World {
             }
             job.leader.replace(peer, new);
         }
-        // Restart: download the latest retrievable image.
-        let latest = self.store.latest(&self.overlay, 0).cloned();
+        // Restart: fetch the latest retrievable image through the
+        // data-plane (charges download/reconstruction transfer counters;
+        // wall-clock timing still follows the configured/derived T_d).
+        let downloader = self
+            .job
+            .as_ref()
+            .and_then(|j| j.members.first().copied())
+            .unwrap_or(0);
+        let latest = self
+            .store
+            .restore(now, &self.overlay, &self.links, downloader, 0)
+            .map(|(img, _)| img);
         let job = self.job.as_mut().unwrap();
         let (restore_to, dl) = match latest {
             Some(img) => {
@@ -497,12 +532,15 @@ impl World {
         if let Phase::Checkpointing { started } = job.phase {
             job.outcome.overhead_checkpoint += now - started;
         }
-        // Commit: persist the image (replicated on the DHT).
+        // Commit: persist the image through the data-plane (placement per
+        // the configured storage strategy; transfer bytes charged to the
+        // per-endpoint counters — wall-clock timing already elapsed as V).
         job.committed = job.progress;
         job.work_since_commit = 0.0;
         job.outcome.checkpoints += 1;
+        let uploader = job.members.first().copied().unwrap_or(0);
         let img = CheckpointImage::new(0, seq, job.committed, job.program.image_bytes());
-        self.store.put(&self.overlay, img);
+        let _ = self.store.put(now, &self.overlay, &self.links, uploader, img);
         self.store.gc(0, seq.saturating_sub(1)); // keep previous as backup
         let job = self.job.as_mut().unwrap();
         job.phase = Phase::Computing;
@@ -582,6 +620,11 @@ impl World {
     /// Current estimator view (for diagnostics / examples).
     pub fn estimated_rate(&self) -> Option<f64> {
         self.estimator.rate()
+    }
+
+    /// The checkpoint data-plane (placement state + I/O counters).
+    pub fn dataplane(&self) -> &DataPlane {
+        &self.store
     }
 
     pub fn online_count(&self) -> usize {
@@ -666,6 +709,58 @@ mod tests {
         assert!(
             online > 100 && online <= 128,
             "population drifted: {online}/128"
+        );
+    }
+
+    #[test]
+    fn dataplane_counters_track_checkpoint_traffic() {
+        let mut w = World::with_components(
+            cfg(1e12),
+            BandwidthModel::default(),
+            StorageSpec::Replicate { replicas: 3 },
+            build_churn_model(&ChurnSpec::Exponential { mtbf: 1e12 }, 11).unwrap(),
+            Box::new(MleWindow::new(64)),
+        )
+        .unwrap();
+        let program = Program::new(CommPattern::Ring, 8);
+        let o = w
+            .run_job(program.clone(), mk_policy(&PolicySpec::Fixed { interval: 600.0 }))
+            .unwrap();
+        assert!(o.completed);
+        assert_eq!(o.checkpoints, 2);
+        // 2 checkpoints x 3 replicas transited peer links; the server only
+        // saw per-chunk placement metadata (the paper's offload claim).
+        let c = w.dataplane().counters();
+        let expect = 2.0 * 3.0 * program.image_bytes();
+        assert!(c.peer_in >= expect * 0.99, "peer_in {} vs {expect}", c.peer_in);
+        assert!(
+            c.server_bytes() < program.image_bytes() / 100.0,
+            "server must only see metadata: {}",
+            c.server_bytes()
+        );
+        assert!(w.metrics.gauge("dataplane.peer_bytes_in").unwrap() >= expect * 0.99);
+    }
+
+    #[test]
+    fn server_storage_routes_world_checkpoints_through_server() {
+        let mut w = World::with_components(
+            cfg(1e12),
+            BandwidthModel::default(),
+            StorageSpec::Server,
+            build_churn_model(&ChurnSpec::Exponential { mtbf: 1e12 }, 11).unwrap(),
+            Box::new(MleWindow::new(64)),
+        )
+        .unwrap();
+        let program = Program::new(CommPattern::Ring, 8);
+        let o = w
+            .run_job(program.clone(), mk_policy(&PolicySpec::Fixed { interval: 600.0 }))
+            .unwrap();
+        assert!(o.completed);
+        let c = w.dataplane().counters();
+        assert!(
+            c.server_in >= 2.0 * program.image_bytes() * 0.99,
+            "all checkpoint bytes transit the server: {}",
+            c.server_in
         );
     }
 

@@ -1,0 +1,180 @@
+//! Chunked checkpoint images.
+//!
+//! A committed [`CheckpointImage`] is split into fixed-size chunks — the
+//! unit of transfer, placement, integrity and repair (the torrent-style
+//! distribution model of peer-assisted content delivery). Erasure specs
+//! additionally derive parity chunks per group of `data` chunks; any
+//! `data` members of a group reconstruct it.
+
+use super::StorageSpec;
+use crate::storage::image::CheckpointImage;
+
+/// Default chunk size: 4 MB (in f64 bytes, like the rest of the size
+/// model). Images smaller than one chunk produce a single chunk.
+pub const DEFAULT_CHUNK_BYTES: f64 = 4e6;
+
+/// One transferable/storable unit of a checkpoint image.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Chunk {
+    /// Owning job.
+    pub job: usize,
+    /// Checkpoint sequence number within the job.
+    pub seq: u64,
+    /// Index within the image's chunk list (data chunks first, then
+    /// parity chunks).
+    pub index: usize,
+    /// Parity group this chunk belongs to (always 0 for non-erasure).
+    pub group: usize,
+    /// Is this a derived parity chunk (never true for non-erasure)?
+    pub parity: bool,
+    /// Chunk size in bytes.
+    pub bytes: f64,
+    /// Per-chunk integrity tag (fletcher/FNV over the logical fields).
+    pub tag: u64,
+}
+
+impl Chunk {
+    fn new(job: usize, seq: u64, index: usize, group: usize, parity: bool, bytes: f64) -> Chunk {
+        let mut c = Chunk { job, seq, index, group, parity, bytes, tag: 0 };
+        c.tag = c.compute_tag();
+        c
+    }
+
+    /// Integrity tag over the logical content (same FNV-style mix as
+    /// [`CheckpointImage::compute_tag`]).
+    pub fn compute_tag(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        };
+        mix(self.job as u64);
+        mix(self.seq);
+        mix(self.index as u64);
+        mix(self.group as u64);
+        mix(self.parity as u64);
+        mix(self.bytes.to_bits());
+        h
+    }
+
+    pub fn verify(&self) -> bool {
+        self.tag == self.compute_tag()
+    }
+}
+
+/// Number of data chunks an image of `bytes` splits into.
+pub fn data_chunk_count(bytes: f64, chunk_bytes: f64) -> usize {
+    ((bytes / chunk_bytes.max(1.0)).ceil() as usize).max(1)
+}
+
+/// Split `img` into chunks under `spec`. Data chunks split the image
+/// bytes evenly (so chunk-level accounting sums exactly back to the image
+/// size); erasure specs append `parity` parity chunks per group of
+/// `data` data chunks, each as large as one data chunk.
+pub fn chunk_image(img: &CheckpointImage, chunk_bytes: f64, spec: &StorageSpec) -> Vec<Chunk> {
+    let n = data_chunk_count(img.bytes, chunk_bytes);
+    let per_chunk = img.bytes / n as f64;
+    let group_of = |i: usize| match spec {
+        StorageSpec::Erasure { data, .. } => i / (*data).max(1),
+        _ => 0,
+    };
+    let mut chunks: Vec<Chunk> = (0..n)
+        .map(|i| Chunk::new(img.job, img.seq, i, group_of(i), false, per_chunk))
+        .collect();
+    if let StorageSpec::Erasure { data, parity } = spec {
+        let data = (*data).max(1);
+        let n_groups = (n + data - 1) / data;
+        let mut index = n;
+        for g in 0..n_groups {
+            for _ in 0..*parity {
+                chunks.push(Chunk::new(img.job, img.seq, index, g, true, per_chunk));
+                index += 1;
+            }
+        }
+    }
+    chunks
+}
+
+/// Per-group data-chunk counts (how many live chunks a group needs to be
+/// recoverable): group `g` needs `min(data, n_data - g*data)` survivors.
+pub fn group_data_counts(chunks: &[Chunk]) -> Vec<usize> {
+    let n_groups = chunks.iter().map(|c| c.group + 1).max().unwrap_or(0);
+    let mut counts = vec![0usize; n_groups];
+    for c in chunks {
+        if !c.parity {
+            counts[c.group] += 1;
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn img(bytes: f64) -> CheckpointImage {
+        CheckpointImage::new(1, 2, 100.0, bytes)
+    }
+
+    #[test]
+    fn data_chunks_conserve_bytes() {
+        for bytes in [1.0, 3.9e6, 4e6, 4.1e6, 64e6, 1e9] {
+            let chunks = chunk_image(&img(bytes), 4e6, &StorageSpec::Replicate { replicas: 3 });
+            let total: f64 = chunks.iter().map(|c| c.bytes).sum();
+            assert!((total - bytes).abs() < 1e-6 * bytes.max(1.0), "{bytes}: {total}");
+            assert!(chunks.iter().all(|c| !c.parity));
+            assert!(chunks.iter().all(|c| c.verify()));
+        }
+    }
+
+    #[test]
+    fn small_image_is_one_chunk() {
+        let chunks = chunk_image(&img(100.0), 4e6, &StorageSpec::Server);
+        assert_eq!(chunks.len(), 1);
+        assert_eq!(chunks[0].bytes, 100.0);
+    }
+
+    #[test]
+    fn erasure_adds_parity_per_group() {
+        // 64 MB / 4 MB = 16 data chunks; erasure 4:2 -> 4 groups x 2 parity.
+        let spec = StorageSpec::Erasure { data: 4, parity: 2 };
+        let chunks = chunk_image(&img(64e6), 4e6, &spec);
+        assert_eq!(chunks.len(), 16 + 8);
+        assert_eq!(chunks.iter().filter(|c| c.parity).count(), 8);
+        // Every group has 4 data + 2 parity.
+        for g in 0..4 {
+            let in_group = chunks.iter().filter(|c| c.group == g).count();
+            assert_eq!(in_group, 6, "group {g}");
+        }
+        assert_eq!(group_data_counts(&chunks), vec![4, 4, 4, 4]);
+        // Indices are unique and contiguous.
+        let mut idx: Vec<usize> = chunks.iter().map(|c| c.index).collect();
+        idx.sort_unstable();
+        assert_eq!(idx, (0..24).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ragged_last_group_needs_fewer_survivors() {
+        // 6 data chunks under 4:2 -> groups of 4 and 2 data chunks.
+        let spec = StorageSpec::Erasure { data: 4, parity: 2 };
+        let chunks = chunk_image(&img(24e6), 4e6, &spec);
+        assert_eq!(group_data_counts(&chunks), vec![4, 2]);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut c = chunk_image(&img(4e6), 4e6, &StorageSpec::Server).remove(0);
+        c.bytes += 1.0;
+        assert!(!c.verify());
+    }
+
+    #[test]
+    fn tags_disperse_across_chunks() {
+        let chunks = chunk_image(&img(16e6), 4e6, &StorageSpec::Server);
+        for a in 0..chunks.len() {
+            for b in a + 1..chunks.len() {
+                assert_ne!(chunks[a].tag, chunks[b].tag);
+            }
+        }
+    }
+}

@@ -1,0 +1,122 @@
+//! The checkpoint **data-plane**: everything between "the coordinator
+//! committed a checkpoint" and "the bytes live somewhere retrievable".
+//!
+//! The paper's headline motivation (Section 1, Fig. 1) is that inter-
+//! workflow I/O "can lead to a significant increase in I/O demands at the
+//! work pool server", solved by off-loading checkpoint I/O to the peers.
+//! This module makes that claim measurable:
+//!
+//! * [`chunk`] — checkpoint images are split into fixed-size **chunks**
+//!   with per-chunk integrity tags (torrent-style distribution units);
+//!   erasure specs add XOR/parity-group chunks.
+//! * [`placement`] — pluggable placement strategies ([`StorageSpec`]):
+//!   `server` (centralized baseline — every byte transits the work pool
+//!   server), `replicate:k` (k successor replicas, generalizing the
+//!   seed's hard-coded 3), and `erasure:k:m` (k-of-k+m parity groups,
+//!   ~(k+m)/k storage overhead instead of k-fold).
+//! * [`transfer`] — a bandwidth-aware transfer scheduler that charges
+//!   every movement against per-link and per-server capacity and
+//!   serializes on the bottleneck link, so server-path scenarios exhibit
+//!   the paper's I/O pile-up; per-endpoint byte counters
+//!   ([`transfer::IoCounters`]) feed the `server_offload` experiment and
+//!   the world's metrics.
+//! * [`store`] — the [`DataPlane`] store proper: put / get / latest,
+//!   churn-driven repair, epoch GC, and **byte-conservation accounting**
+//!   (`Σ stored_bytes(endpoint)` ≡ `Σ chunks bytes × holders` at all
+//!   times — audited, property-tested in `rust/tests/dataplane.rs`).
+//!
+//! String keys (`"server"`, `"replicate:3"`, `"erasure:4:2"`) live in
+//! [`crate::scenario::registry`]; `Scenario::builder().storage(..)` is the
+//! construction surface and [`crate::coordinator::world::World`] routes
+//! its checkpoint/restore path through here.
+
+pub mod chunk;
+pub mod placement;
+pub mod store;
+pub mod transfer;
+
+pub use chunk::{chunk_image, Chunk, DEFAULT_CHUNK_BYTES};
+pub use placement::{place_chunks, ChunkPlacement, Endpoint};
+pub use store::{DataPlane, CHUNK_META_BYTES};
+pub use transfer::{IoCounters, TransferScheduler, DEFAULT_SERVER_BPS};
+
+/// Where checkpoint bytes go — the scenario `storage` axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageSpec {
+    /// Centralized baseline: every chunk is stored at (and later fetched
+    /// from) the work pool server. No peer storage, no repair — but all
+    /// checkpoint I/O transits the server link.
+    Server,
+    /// Whole-chunk replication on the `replicas` online ring successors
+    /// of the image key (the seed's scheme, degree now configurable).
+    Replicate { replicas: usize },
+    /// Parity-group erasure coding: groups of `data` chunks get `parity`
+    /// parity chunks; any `data` of the `data + parity` survive a group.
+    /// Storage overhead is (data+parity)/data instead of `replicas`-fold.
+    Erasure { data: usize, parity: usize },
+}
+
+impl Default for StorageSpec {
+    fn default() -> Self {
+        // The seed behaviour: 3-fold successor replication.
+        StorageSpec::Replicate { replicas: 3 }
+    }
+}
+
+impl StorageSpec {
+    /// Stored bytes per logical byte (1 for `server`).
+    pub fn redundancy(&self) -> f64 {
+        match self {
+            StorageSpec::Server => 1.0,
+            StorageSpec::Replicate { replicas } => *replicas as f64,
+            StorageSpec::Erasure { data, parity } => (data + parity) as f64 / *data as f64,
+        }
+    }
+
+    /// Does this strategy store bytes on peers (and therefore need
+    /// churn-driven repair)?
+    pub fn peer_hosted(&self) -> bool {
+        !matches!(self, StorageSpec::Server)
+    }
+
+    /// Validate the arities (degree ≥ 1 everywhere).
+    pub fn validated(self) -> crate::error::Result<Self> {
+        match self {
+            StorageSpec::Replicate { replicas } if replicas == 0 => Err(
+                crate::error::Error::Config("storage replicate: degree must be >= 1".into()),
+            ),
+            StorageSpec::Erasure { data, parity } if data == 0 || parity == 0 => {
+                Err(crate::error::Error::Config(
+                    "storage erasure: data and parity counts must be >= 1".into(),
+                ))
+            }
+            ok => Ok(ok),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn redundancy_factors() {
+        assert_eq!(StorageSpec::Server.redundancy(), 1.0);
+        assert_eq!(StorageSpec::Replicate { replicas: 3 }.redundancy(), 3.0);
+        let e = StorageSpec::Erasure { data: 4, parity: 2 }.redundancy();
+        assert!((e - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_degrees() {
+        assert!(StorageSpec::Replicate { replicas: 0 }.validated().is_err());
+        assert!(StorageSpec::Erasure { data: 0, parity: 1 }.validated().is_err());
+        assert!(StorageSpec::Erasure { data: 4, parity: 0 }.validated().is_err());
+        assert!(StorageSpec::Erasure { data: 4, parity: 2 }.validated().is_ok());
+    }
+
+    #[test]
+    fn default_matches_seed_replication() {
+        assert_eq!(StorageSpec::default(), StorageSpec::Replicate { replicas: 3 });
+    }
+}

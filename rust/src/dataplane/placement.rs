@@ -1,0 +1,230 @@
+//! Chunk placement: which endpoint holds which chunk.
+//!
+//! * `server` — every chunk at the work pool server.
+//! * `replicate:k` — every chunk on the same `k` online successors of the
+//!   image key (whole-image successor replication, the seed's scheme —
+//!   chunking only changes the *transfer* granularity).
+//! * `erasure:k:m` — one holder per chunk, round-robin over the key's
+//!   successor list so the members of a parity group land on distinct
+//!   peers whenever the overlay is large enough (failure independence).
+
+use super::chunk::Chunk;
+use super::StorageSpec;
+use crate::net::overlay::{Overlay, PeerId};
+
+/// A storage endpoint: the centralized work pool server or a volunteer
+/// peer. `Ord` so accounting maps can be deterministic `BTreeMap`s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Endpoint {
+    Server,
+    Peer(PeerId),
+}
+
+impl Endpoint {
+    /// Is this endpoint reachable right now? The server never churns.
+    pub fn is_online(&self, overlay: &Overlay) -> bool {
+        match self {
+            Endpoint::Server => true,
+            Endpoint::Peer(p) => overlay.is_online(*p),
+        }
+    }
+}
+
+/// Per-chunk holder lists for one stored image (`holders[i]` are the
+/// endpoints holding chunk `i`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkPlacement {
+    pub holders: Vec<Vec<Endpoint>>,
+}
+
+impl ChunkPlacement {
+    /// Total stored bytes this placement accounts for.
+    pub fn stored_bytes(&self, chunks: &[Chunk]) -> f64 {
+        chunks
+            .iter()
+            .zip(&self.holders)
+            .map(|(c, h)| c.bytes * h.len() as f64)
+            .sum()
+    }
+}
+
+/// Candidate peers for key `key`: the owner followed by its successors
+/// (online peers only), deduplicated, at most `want`.
+pub fn candidates(overlay: &Overlay, key: u64, want: usize) -> Vec<PeerId> {
+    let Some(owner) = overlay.owner_of(key) else {
+        return Vec::new();
+    };
+    let want = want.max(1);
+    let mut out = vec![owner];
+    if want > 1 {
+        // (`Overlay::successors` never yields the start peer, so the
+        // `contains` check only guards ring wrap-around duplicates.)
+        for s in overlay.successors(owner, want - 1) {
+            if out.len() >= want {
+                break;
+            }
+            if !out.contains(&s) {
+                out.push(s);
+            }
+        }
+    }
+    out
+}
+
+/// Place `chunks` for the image keyed `key` under `spec`. Returns `None`
+/// when the overlay cannot host the placement (no online peer for a
+/// peer-hosted spec).
+pub fn place_chunks(
+    overlay: &Overlay,
+    key: u64,
+    chunks: &[Chunk],
+    spec: &StorageSpec,
+) -> Option<ChunkPlacement> {
+    match spec {
+        StorageSpec::Server => Some(ChunkPlacement {
+            holders: chunks.iter().map(|_| vec![Endpoint::Server]).collect(),
+        }),
+        StorageSpec::Replicate { replicas } => {
+            let set = candidates(overlay, key, (*replicas).max(1));
+            if set.is_empty() {
+                return None;
+            }
+            let holders: Vec<Endpoint> = set.into_iter().map(Endpoint::Peer).collect();
+            Some(ChunkPlacement {
+                holders: chunks.iter().map(|_| holders.clone()).collect(),
+            })
+        }
+        StorageSpec::Erasure { data, parity } => {
+            // Enough distinct peers that one parity group spreads across
+            // distinct holders; fall back to wrap-around when the overlay
+            // is smaller than a group. Chunks are addressed by their
+            // *within-group rank* (data chunks 0..d, parity chunks
+            // data..data+parity) so a group's parity never co-locates
+            // with its own data — chunk indices alone would collide for
+            // multi-group images (parity chunks of group g sit at global
+            // index n_data + g*parity, which `% set.len()` can map onto
+            // the same peers as group g's data chunks).
+            let width = (data + parity).max(1);
+            let set = candidates(overlay, key, width * 2);
+            if set.is_empty() {
+                return None;
+            }
+            let n_data = chunks.iter().filter(|c| !c.parity).count();
+            Some(ChunkPlacement {
+                holders: chunks
+                    .iter()
+                    .map(|c| {
+                        let rank = if c.parity {
+                            data + (c.index - n_data - c.group * parity)
+                        } else {
+                            c.index - c.group * data
+                        };
+                        let pos = (c.group * width + rank) % set.len();
+                        vec![Endpoint::Peer(set[pos])]
+                    })
+                    .collect(),
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataplane::chunk::chunk_image;
+    use crate::storage::image::CheckpointImage;
+    use crate::util::rng::Pcg64;
+
+    fn overlay(n: usize) -> Overlay {
+        let mut rng = Pcg64::new(77, 0);
+        Overlay::new(n, &mut rng)
+    }
+
+    #[test]
+    fn server_placement_uses_only_the_server() {
+        let o = overlay(10);
+        let img = CheckpointImage::new(1, 1, 0.0, 16e6);
+        let chunks = chunk_image(&img, 4e6, &StorageSpec::Server);
+        let p = place_chunks(&o, img.key(), &chunks, &StorageSpec::Server).unwrap();
+        assert!(p.holders.iter().all(|h| h.len() == 1 && h[0] == Endpoint::Server));
+    }
+
+    #[test]
+    fn replicate_shares_one_holder_set() {
+        let o = overlay(20);
+        let spec = StorageSpec::Replicate { replicas: 3 };
+        let img = CheckpointImage::new(1, 1, 0.0, 16e6);
+        let chunks = chunk_image(&img, 4e6, &spec);
+        let p = place_chunks(&o, img.key(), &chunks, &spec).unwrap();
+        assert_eq!(p.holders[0].len(), 3);
+        assert!(p.holders.iter().all(|h| h == &p.holders[0]));
+        // Stored bytes = 3x image.
+        assert!((p.stored_bytes(&chunks) - 3.0 * 16e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn erasure_group_members_on_distinct_peers() {
+        let o = overlay(40);
+        let spec = StorageSpec::Erasure { data: 4, parity: 2 };
+        let img = CheckpointImage::new(1, 1, 0.0, 16e6); // 4 data + 2 parity
+        let chunks = chunk_image(&img, 4e6, &spec);
+        let p = place_chunks(&o, img.key(), &chunks, &spec).unwrap();
+        let mut seen = Vec::new();
+        for h in &p.holders {
+            assert_eq!(h.len(), 1, "erasure stores one copy per chunk");
+            assert!(!seen.contains(&h[0]), "group members must be distinct");
+            seen.push(h[0]);
+        }
+        // Storage overhead 1.5x, not 3x.
+        assert!((p.stored_bytes(&chunks) - 1.5 * 16e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn erasure_multi_group_images_keep_groups_on_distinct_peers() {
+        // 64 MB -> 16 data chunks in 4 groups + 8 parity chunks; each
+        // group's 6 members (4 data + 2 parity) must sit on 6 distinct
+        // peers or m=2 losses can destroy a group.
+        let o = overlay(40);
+        let spec = StorageSpec::Erasure { data: 4, parity: 2 };
+        let img = CheckpointImage::new(1, 1, 0.0, 64e6);
+        let chunks = chunk_image(&img, 4e6, &spec);
+        let p = place_chunks(&o, img.key(), &chunks, &spec).unwrap();
+        for g in 0..4 {
+            let mut group_peers: Vec<Endpoint> = chunks
+                .iter()
+                .zip(&p.holders)
+                .filter(|(c, _)| c.group == g)
+                .map(|(_, h)| h[0])
+                .collect();
+            assert_eq!(group_peers.len(), 6, "group {g}");
+            group_peers.sort();
+            group_peers.dedup();
+            assert_eq!(group_peers.len(), 6, "group {g} members must be distinct peers");
+        }
+    }
+
+    #[test]
+    fn replicate_one_uses_exactly_one_holder() {
+        let o = overlay(20);
+        let spec = StorageSpec::Replicate { replicas: 1 };
+        let img = CheckpointImage::new(1, 1, 0.0, 8e6);
+        let chunks = chunk_image(&img, 4e6, &spec);
+        let p = place_chunks(&o, img.key(), &chunks, &spec).unwrap();
+        assert!(p.holders.iter().all(|h| h.len() == 1));
+    }
+
+    #[test]
+    fn empty_overlay_rejects_peer_hosted_placement() {
+        let mut o = overlay(3);
+        for p in 0..3 {
+            o.depart(p, 1.0);
+        }
+        let img = CheckpointImage::new(1, 1, 0.0, 4e6);
+        let spec = StorageSpec::Replicate { replicas: 3 };
+        let chunks = chunk_image(&img, 4e6, &spec);
+        assert!(place_chunks(&o, img.key(), &chunks, &spec).is_none());
+        // ... but the server spec still works.
+        let chunks = chunk_image(&img, 4e6, &StorageSpec::Server);
+        assert!(place_chunks(&o, img.key(), &chunks, &StorageSpec::Server).is_some());
+    }
+}

@@ -1,0 +1,648 @@
+//! The [`DataPlane`] store: chunked images + placements + repair + GC +
+//! byte-conservation accounting.
+//!
+//! Accounting contract (property-tested in `rust/tests/dataplane.rs`):
+//! at every point in time the incrementally-maintained per-endpoint
+//! stored-byte map equals the recomputation from first principles,
+//! `Σ_images Σ_chunks bytes × |holders|` ([`DataPlane::audit`]). `put`
+//! credits every placed copy, `repair` debits the copies it supersedes on
+//! departed peers before crediting their replacements, and `gc` debits
+//! every copy of every dropped image — nothing leaks, nothing is counted
+//! twice.
+
+use super::chunk::{chunk_image, group_data_counts, Chunk, DEFAULT_CHUNK_BYTES};
+use super::placement::{candidates, place_chunks, ChunkPlacement, Endpoint};
+use super::transfer::{IoCounters, TransferScheduler, DEFAULT_SERVER_BPS};
+use super::StorageSpec;
+use crate::metrics::Metrics;
+use crate::net::bandwidth::LinkSpeed;
+use crate::net::overlay::{Overlay, PeerId};
+use crate::storage::image::CheckpointImage;
+use std::collections::BTreeMap;
+
+/// Control-plane metadata charged against the server per chunk commit
+/// (placement registration at the work pool). This is what keeps the
+/// server's byte counters honest-but-small under the peer-hosted
+/// strategies: coordination still transits the server, bulk data no
+/// longer does.
+pub const CHUNK_META_BYTES: f64 = 256.0;
+
+/// One stored (chunked, placed) checkpoint image.
+#[derive(Debug, Clone)]
+struct StoredImage {
+    image: CheckpointImage,
+    chunks: Vec<Chunk>,
+    placement: ChunkPlacement,
+}
+
+/// The checkpoint data-plane store.
+#[derive(Debug)]
+pub struct DataPlane {
+    spec: StorageSpec,
+    chunk_bytes: f64,
+    /// (job, seq) -> stored image. `BTreeMap` so sweeps, audits and float
+    /// accumulations run in one deterministic order.
+    images: BTreeMap<(usize, u64), StoredImage>,
+    /// Incrementally-maintained stored bytes per peer.
+    peer_stored: BTreeMap<PeerId, f64>,
+    /// Incrementally-maintained stored bytes at the server.
+    server_stored: f64,
+    /// Transfer timing + per-endpoint byte counters.
+    pub sched: TransferScheduler,
+}
+
+impl DataPlane {
+    pub fn new(spec: StorageSpec) -> DataPlane {
+        DataPlane::with_config(spec, DEFAULT_CHUNK_BYTES, DEFAULT_SERVER_BPS)
+    }
+
+    pub fn with_config(spec: StorageSpec, chunk_bytes: f64, server_bps: f64) -> DataPlane {
+        DataPlane {
+            spec,
+            chunk_bytes: chunk_bytes.max(1.0),
+            images: BTreeMap::new(),
+            peer_stored: BTreeMap::new(),
+            server_stored: 0.0,
+            sched: TransferScheduler::new(server_bps),
+        }
+    }
+
+    pub fn spec(&self) -> StorageSpec {
+        self.spec
+    }
+
+    pub fn chunk_bytes(&self) -> f64 {
+        self.chunk_bytes
+    }
+
+    pub fn counters(&self) -> &IoCounters {
+        &self.sched.counters
+    }
+
+    pub fn image_count(&self) -> usize {
+        self.images.len()
+    }
+
+    // ------------------------------------------------------- accounting
+
+    fn credit(&mut self, e: Endpoint, bytes: f64) {
+        match e {
+            Endpoint::Server => self.server_stored += bytes,
+            Endpoint::Peer(p) => *self.peer_stored.entry(p).or_insert(0.0) += bytes,
+        }
+    }
+
+    fn debit(&mut self, e: Endpoint, bytes: f64) {
+        match e {
+            Endpoint::Server => self.server_stored = (self.server_stored - bytes).max(0.0),
+            Endpoint::Peer(p) => {
+                if let Some(b) = self.peer_stored.get_mut(&p) {
+                    *b = (*b - bytes).max(0.0);
+                }
+            }
+        }
+    }
+
+    /// Bytes currently stored on peer `p`.
+    pub fn stored_bytes(&self, p: PeerId) -> f64 {
+        self.peer_stored.get(&p).copied().unwrap_or(0.0)
+    }
+
+    /// Bytes currently stored at the server.
+    pub fn server_stored_bytes(&self) -> f64 {
+        self.server_stored
+    }
+
+    /// Total stored bytes across every endpoint (incremental view).
+    pub fn total_stored_bytes(&self) -> f64 {
+        self.server_stored + self.peer_stored.values().sum::<f64>()
+    }
+
+    /// Byte-conservation audit: (incremental total, recomputed
+    /// `Σ_images Σ_chunks bytes × |holders|`). The two must agree.
+    pub fn audit(&self) -> (f64, f64) {
+        let recomputed: f64 = self
+            .images
+            .values()
+            .map(|si| si.placement.stored_bytes(&si.chunks))
+            .sum();
+        (self.total_stored_bytes(), recomputed)
+    }
+
+    // ------------------------------------------------------- liveness
+
+    fn chunk_live(overlay: &Overlay, c: &Chunk, holders: &[Endpoint]) -> bool {
+        c.verify() && holders.iter().any(|h| h.is_online(overlay))
+    }
+
+    fn recoverable(&self, overlay: &Overlay, si: &StoredImage) -> bool {
+        match self.spec {
+            StorageSpec::Erasure { .. } => {
+                let needs = group_data_counts(&si.chunks);
+                let mut live = vec![0usize; needs.len()];
+                for (c, h) in si.chunks.iter().zip(&si.placement.holders) {
+                    if Self::chunk_live(overlay, c, h) {
+                        live[c.group] += 1;
+                    }
+                }
+                needs.iter().zip(&live).all(|(need, have)| have >= need)
+            }
+            _ => si
+                .chunks
+                .iter()
+                .zip(&si.placement.holders)
+                .all(|(c, h)| Self::chunk_live(overlay, c, h)),
+        }
+    }
+
+    /// Is checkpoint (job, seq) currently retrievable?
+    pub fn available(&self, overlay: &Overlay, job: usize, seq: u64) -> bool {
+        self.images
+            .get(&(job, seq))
+            .map(|si| si.image.verify() && self.recoverable(overlay, si))
+            .unwrap_or(false)
+    }
+
+    /// Fetch an image if it is retrievable and integrity-verified.
+    pub fn get(&self, overlay: &Overlay, job: usize, seq: u64) -> Option<&CheckpointImage> {
+        let si = self.images.get(&(job, seq))?;
+        if si.image.verify() && self.recoverable(overlay, si) {
+            Some(&si.image)
+        } else {
+            None
+        }
+    }
+
+    /// Latest retrievable checkpoint for a job.
+    pub fn latest(&self, overlay: &Overlay, job: usize) -> Option<&CheckpointImage> {
+        self.images
+            .range((job, 0)..=(job, u64::MAX))
+            .rev()
+            .find(|(_, si)| si.image.verify() && self.recoverable(overlay, si))
+            .map(|(_, si)| &si.image)
+    }
+
+    /// Currently-live copies of chunk 0 (diagnostics; for `replicate` this
+    /// is the live replica count of the whole image).
+    pub fn live_holders(&self, overlay: &Overlay, job: usize, seq: u64) -> usize {
+        self.images
+            .get(&(job, seq))
+            .and_then(|si| si.placement.holders.first())
+            .map(|h| h.iter().filter(|e| e.is_online(overlay)).count())
+            .unwrap_or(0)
+    }
+
+    // ------------------------------------------------------- data path
+
+    /// Store `img`: chunk it, place it under the spec, charge the upload
+    /// transfers from `uploader` (plus per-chunk control metadata to the
+    /// server), and account every placed copy. Returns the completion
+    /// time of the slowest chunk transfer, or `None` when the overlay
+    /// cannot host the placement.
+    pub fn put(
+        &mut self,
+        now: f64,
+        overlay: &Overlay,
+        links: &[LinkSpeed],
+        uploader: PeerId,
+        img: CheckpointImage,
+    ) -> Option<f64> {
+        let chunks = chunk_image(&img, self.chunk_bytes, &self.spec);
+        let placement = place_chunks(overlay, img.key(), &chunks, &self.spec)?;
+        // Replacing an existing (job, seq): reclaim its copies first.
+        self.drop_image(img.job, img.seq);
+        let src = Endpoint::Peer(uploader);
+        let mut finish = now;
+        for (c, holders) in chunks.iter().zip(&placement.holders) {
+            for &h in holders {
+                let t = self.sched.transfer(now, src, h, c.bytes, links, false);
+                finish = finish.max(t);
+            }
+            // Placement registration: control-plane bytes to the server
+            // (excluded from the data-path completion time).
+            self.sched.transfer(now, src, Endpoint::Server, CHUNK_META_BYTES, links, false);
+        }
+        for (c, holders) in chunks.iter().zip(&placement.holders) {
+            for &h in holders {
+                self.credit(h, c.bytes);
+            }
+        }
+        self.images.insert((img.job, img.seq), StoredImage { image: img, chunks, placement });
+        Some(finish)
+    }
+
+    /// Fetch the latest retrievable checkpoint of `job` to `downloader`,
+    /// charging the chunk transfers (for erasure, enough chunks per group
+    /// to reconstruct). Returns the image and the completion time of the
+    /// slowest chunk fetch.
+    pub fn restore(
+        &mut self,
+        now: f64,
+        overlay: &Overlay,
+        links: &[LinkSpeed],
+        downloader: PeerId,
+        job: usize,
+    ) -> Option<(CheckpointImage, f64)> {
+        // Transfer plan: (source endpoint, bytes) per fetched chunk.
+        let (image, plan) = {
+            let (_, si) = self
+                .images
+                .range((job, 0)..=(job, u64::MAX))
+                .rev()
+                .find(|(_, si)| si.image.verify() && self.recoverable(overlay, si))?;
+            let mut plan: Vec<(Endpoint, f64)> = Vec::new();
+            match self.spec {
+                StorageSpec::Erasure { .. } => {
+                    // Per group, fetch the first `need` live chunks (data
+                    // chunks come first by index, so direct reads are
+                    // preferred and parity only fills the gaps).
+                    let needs = group_data_counts(&si.chunks);
+                    let mut fetched = vec![0usize; needs.len()];
+                    for (c, h) in si.chunks.iter().zip(&si.placement.holders) {
+                        if fetched[c.group] >= needs[c.group] {
+                            continue;
+                        }
+                        if let Some(&src) = h.iter().find(|e| e.is_online(overlay)) {
+                            plan.push((src, c.bytes));
+                            fetched[c.group] += 1;
+                        }
+                    }
+                }
+                _ => {
+                    for (c, h) in si.chunks.iter().zip(&si.placement.holders) {
+                        let src = h.iter().find(|e| e.is_online(overlay))?;
+                        plan.push((*src, c.bytes));
+                    }
+                }
+            }
+            (si.image.clone(), plan)
+        };
+        let dst = Endpoint::Peer(downloader);
+        let mut finish = now;
+        for (src, bytes) in plan {
+            let t = self.sched.transfer(now, src, dst, bytes, links, false);
+            finish = finish.max(t);
+        }
+        Some((image, finish))
+    }
+
+    // ------------------------------------------------------- maintenance
+
+    /// Churn-driven repair of one image: re-replicate (or reconstruct)
+    /// chunk copies whose holders departed, charging the repair transfers.
+    /// Copies on departed peers are debited when superseded — a rejoining
+    /// peer's stale copy is considered discarded. Chunks with no live
+    /// source (and unrecoverable erasure groups) are left untouched: their
+    /// holders may yet rejoin. Returns the number of chunk copies
+    /// restored.
+    pub fn repair(
+        &mut self,
+        now: f64,
+        overlay: &Overlay,
+        links: &[LinkSpeed],
+        job: usize,
+        seq: u64,
+    ) -> usize {
+        if !self.spec.peer_hosted() {
+            return 0;
+        }
+        let Some(mut si) = self.images.remove(&(job, seq)) else {
+            return 0;
+        };
+        let mut restored = 0usize;
+        match self.spec {
+            StorageSpec::Server => {}
+            StorageSpec::Replicate { replicas } => {
+                let replicas = replicas.max(1);
+                let cands = candidates(overlay, si.image.key(), replicas * 2 + 2);
+                for (i, c) in si.chunks.iter().enumerate() {
+                    let holders = &si.placement.holders[i];
+                    let live: Vec<Endpoint> =
+                        holders.iter().copied().filter(|h| h.is_online(overlay)).collect();
+                    if live.is_empty() || live.len() >= replicas {
+                        continue;
+                    }
+                    // Reclaim the superseded dead copies.
+                    let dead: Vec<Endpoint> =
+                        holders.iter().copied().filter(|h| !h.is_online(overlay)).collect();
+                    for &d in &dead {
+                        self.debit(d, c.bytes);
+                    }
+                    let mut new_holders = live.clone();
+                    for &cand in &cands {
+                        if new_holders.len() >= replicas {
+                            break;
+                        }
+                        let e = Endpoint::Peer(cand);
+                        if new_holders.contains(&e) {
+                            continue;
+                        }
+                        let src = live[restored % live.len()];
+                        self.sched.transfer(now, src, e, c.bytes, links, true);
+                        self.credit(e, c.bytes);
+                        new_holders.push(e);
+                        restored += 1;
+                    }
+                    si.placement.holders[i] = new_holders;
+                }
+            }
+            StorageSpec::Erasure { data, parity } => {
+                let needs = group_data_counts(&si.chunks);
+                let cands = candidates(overlay, si.image.key(), (data + parity).max(1) * 2);
+                // Live chunk count per group decides recoverability.
+                let mut live_count = vec![0usize; needs.len()];
+                for (c, h) in si.chunks.iter().zip(&si.placement.holders) {
+                    if Self::chunk_live(overlay, c, h) {
+                        live_count[c.group] += 1;
+                    }
+                }
+                for i in 0..si.chunks.len() {
+                    let c = si.chunks[i].clone();
+                    if Self::chunk_live(overlay, &c, &si.placement.holders[i]) {
+                        continue;
+                    }
+                    if live_count[c.group] < needs[c.group] {
+                        continue; // group unrecoverable; holders may rejoin
+                    }
+                    // Sources: `need` live chunks of the group (the
+                    // reconstruction read set).
+                    let sources: Vec<Endpoint> = si
+                        .chunks
+                        .iter()
+                        .zip(&si.placement.holders)
+                        .filter(|(s, h)| {
+                            s.group == c.group && Self::chunk_live(overlay, s, h)
+                        })
+                        .take(needs[c.group])
+                        .filter_map(|(_, h)| {
+                            h.iter().find(|e| e.is_online(overlay)).copied()
+                        })
+                        .collect();
+                    if sources.is_empty() {
+                        continue;
+                    }
+                    // New holder: a candidate not already holding a live
+                    // chunk of this group (failure independence).
+                    let group_holders: Vec<Endpoint> = si
+                        .chunks
+                        .iter()
+                        .zip(&si.placement.holders)
+                        .filter(|(s, _)| s.group == c.group)
+                        .flat_map(|(_, h)| h.iter().copied())
+                        .filter(|e| e.is_online(overlay))
+                        .collect();
+                    let new = cands
+                        .iter()
+                        .map(|&p| Endpoint::Peer(p))
+                        .find(|e| !group_holders.contains(e))
+                        .or_else(|| {
+                            cands.first().map(|&p| Endpoint::Peer(p))
+                        });
+                    let Some(new) = new else {
+                        continue;
+                    };
+                    // Reclaim the dead copies, read the reconstruction
+                    // set to the new holder, store the rebuilt chunk.
+                    let dead: Vec<Endpoint> = si.placement.holders[i]
+                        .iter()
+                        .copied()
+                        .filter(|h| !h.is_online(overlay))
+                        .collect();
+                    for &d in &dead {
+                        self.debit(d, c.bytes);
+                    }
+                    for &src in &sources {
+                        self.sched.transfer(now, src, new, c.bytes, links, true);
+                    }
+                    self.credit(new, c.bytes);
+                    si.placement.holders[i] = vec![new];
+                    live_count[c.group] += 1;
+                    restored += 1;
+                }
+            }
+        }
+        self.images.insert((job, seq), si);
+        restored
+    }
+
+    /// Repair every stored image (stabilization-driven maintenance).
+    pub fn repair_sweep(&mut self, now: f64, overlay: &Overlay, links: &[LinkSpeed]) -> usize {
+        let keys: Vec<(usize, u64)> = self.images.keys().copied().collect();
+        keys.into_iter().map(|(j, s)| self.repair(now, overlay, links, j, s)).sum()
+    }
+
+    /// Drop one stored image, reclaiming every copy. Returns whether it
+    /// existed.
+    fn drop_image(&mut self, job: usize, seq: u64) -> bool {
+        let Some(si) = self.images.remove(&(job, seq)) else {
+            return false;
+        };
+        for (c, holders) in si.chunks.iter().zip(&si.placement.holders) {
+            for &h in holders {
+                self.debit(h, c.bytes);
+            }
+        }
+        true
+    }
+
+    /// Epoch GC: drop all checkpoints of `job` with `seq < keep_from`.
+    /// Returns the number of images dropped.
+    pub fn gc(&mut self, job: usize, keep_from: u64) -> usize {
+        let victims: Vec<(usize, u64)> = self
+            .images
+            .range((job, 0)..=(job, u64::MAX))
+            .map(|(&k, _)| k)
+            .filter(|&(_, s)| s < keep_from)
+            .collect();
+        for (j, s) in &victims {
+            self.drop_image(*j, *s);
+        }
+        victims.len()
+    }
+
+    /// Export the I/O-offload accounting into a metrics registry.
+    pub fn publish_metrics(&self, m: &mut Metrics) {
+        let c = self.counters();
+        m.set("dataplane.server_bytes_in", c.server_in);
+        m.set("dataplane.server_bytes_out", c.server_out);
+        m.set("dataplane.peer_bytes_in", c.peer_in);
+        m.set("dataplane.peer_bytes_out", c.peer_out);
+        m.set("dataplane.repair_bytes", c.repair_bytes);
+        m.set("dataplane.transfers", c.transfers as f64);
+        m.set("dataplane.stored_bytes", self.total_stored_bytes());
+        m.set("dataplane.server_stored_bytes", self.server_stored_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::bandwidth::BandwidthModel;
+    use crate::util::rng::Pcg64;
+
+    fn world(n: usize) -> (Overlay, Vec<LinkSpeed>) {
+        let mut rng = Pcg64::new(21, 0);
+        let o = Overlay::new(n, &mut rng);
+        let links = BandwidthModel::default().sample_population(n, &mut rng);
+        (o, links)
+    }
+
+    fn audit_ok(dp: &DataPlane) {
+        let (inc, rec) = dp.audit();
+        assert!(
+            (inc - rec).abs() <= 1e-6 * rec.max(1.0),
+            "byte-conservation violated: incremental {inc} vs recomputed {rec}"
+        );
+    }
+
+    #[test]
+    fn put_get_roundtrip_all_specs() {
+        for spec in [
+            StorageSpec::Server,
+            StorageSpec::Replicate { replicas: 3 },
+            StorageSpec::Erasure { data: 4, parity: 2 },
+        ] {
+            let (o, links) = world(30);
+            let mut dp = DataPlane::new(spec);
+            let img = CheckpointImage::new(1, 1, 100.0, 16e6);
+            let done = dp.put(0.0, &o, &links, 0, img.clone()).unwrap();
+            assert!(done > 0.0, "upload takes time");
+            assert_eq!(dp.get(&o, 1, 1), Some(&img), "{spec:?}");
+            assert_eq!(dp.latest(&o, 1), Some(&img));
+            // Stored bytes match the spec's redundancy.
+            let (total, _) = dp.audit();
+            assert!(
+                (total - 16e6 * spec.redundancy()).abs() < 1.0,
+                "{spec:?}: stored {total}"
+            );
+            audit_ok(&dp);
+        }
+    }
+
+    #[test]
+    fn server_strategy_routes_all_bytes_through_server() {
+        let (o, links) = world(20);
+        let mut dp = DataPlane::new(StorageSpec::Server);
+        dp.put(0.0, &o, &links, 0, CheckpointImage::new(1, 1, 0.0, 16e6)).unwrap();
+        let c = dp.counters().clone();
+        assert!(c.server_in >= 16e6, "all upload bytes hit the server: {c:?}");
+        // Restore pulls everything back off the server.
+        dp.restore(10.0, &o, &links, 3, 1).unwrap();
+        assert!(dp.counters().server_out >= 16e6);
+    }
+
+    #[test]
+    fn peer_strategies_keep_server_traffic_to_metadata() {
+        let (o, links) = world(30);
+        for spec in [
+            StorageSpec::Replicate { replicas: 3 },
+            StorageSpec::Erasure { data: 4, parity: 2 },
+        ] {
+            let mut dp = DataPlane::new(spec);
+            dp.put(0.0, &o, &links, 0, CheckpointImage::new(1, 1, 0.0, 64e6)).unwrap();
+            dp.restore(10.0, &o, &links, 3, 1).unwrap();
+            let c = dp.counters();
+            assert!(
+                c.server_bytes() < 64e6 / 100.0,
+                "{spec:?}: server must only see metadata, saw {}",
+                c.server_bytes()
+            );
+            assert!(c.peer_bytes() >= 64e6, "{spec:?}: bulk bytes stay on peers");
+        }
+    }
+
+    #[test]
+    fn erasure_survives_parity_many_failures_per_group() {
+        let (mut o, links) = world(40);
+        let mut dp = DataPlane::new(StorageSpec::Erasure { data: 4, parity: 2 });
+        let img = CheckpointImage::new(1, 1, 50.0, 16e6); // one group: 4 + 2
+        dp.put(0.0, &o, &links, 0, img).unwrap();
+        // Kill 2 holders: still recoverable (any 4 of 6 survive).
+        let holders: Vec<PeerId> = (0..o.len())
+            .filter(|&p| dp.stored_bytes(p) > 0.0)
+            .collect();
+        assert!(holders.len() >= 6);
+        o.depart(holders[0], 1.0);
+        o.depart(holders[1], 1.0);
+        assert!(dp.get(&o, 1, 1).is_some(), "2 losses with m=2 must survive");
+        // A third loss in the same group kills it.
+        o.depart(holders[2], 2.0);
+        assert!(dp.get(&o, 1, 1).is_none(), "3 losses with m=2 must not survive");
+    }
+
+    #[test]
+    fn repair_restores_replication_and_conserves_bytes() {
+        let (mut o, links) = world(30);
+        let mut dp = DataPlane::new(StorageSpec::Replicate { replicas: 3 });
+        dp.put(0.0, &o, &links, 0, CheckpointImage::new(2, 5, 1.0, 8e6)).unwrap();
+        let holders: Vec<PeerId> = (0..o.len()).filter(|&p| dp.stored_bytes(p) > 0.0).collect();
+        assert_eq!(holders.len(), 3);
+        o.depart(holders[0], 1.0);
+        let restored = dp.repair(2.0, &o, &links, 2, 5);
+        assert!(restored > 0);
+        assert_eq!(dp.live_holders(&o, 2, 5), 3, "back to full replication");
+        assert!(dp.counters().repair_bytes >= 8e6, "repair traffic charged");
+        audit_ok(&dp);
+        // The departed holder's stale copy was reclaimed.
+        assert_eq!(dp.stored_bytes(holders[0]), 0.0);
+    }
+
+    #[test]
+    fn erasure_repair_reconstructs_from_surviving_group() {
+        let (mut o, links) = world(40);
+        let mut dp = DataPlane::new(StorageSpec::Erasure { data: 4, parity: 2 });
+        dp.put(0.0, &o, &links, 0, CheckpointImage::new(1, 1, 0.0, 16e6)).unwrap();
+        let holders: Vec<PeerId> = (0..o.len()).filter(|&p| dp.stored_bytes(p) > 0.0).collect();
+        o.depart(holders[0], 1.0);
+        let before = dp.counters().repair_bytes;
+        let restored = dp.repair(2.0, &o, &links, 1, 1);
+        assert_eq!(restored, 1);
+        // Reconstruction reads `data` chunks to rebuild one.
+        assert!(dp.counters().repair_bytes - before >= 4.0 * 4e6);
+        audit_ok(&dp);
+        assert!(dp.get(&o, 1, 1).is_some());
+    }
+
+    #[test]
+    fn gc_reclaims_every_copy() {
+        let (o, links) = world(30);
+        let mut dp = DataPlane::new(StorageSpec::Replicate { replicas: 3 });
+        for seq in 1..=5 {
+            dp.put(0.0, &o, &links, 0, CheckpointImage::new(1, seq, seq as f64, 4e6)).unwrap();
+        }
+        assert_eq!(dp.image_count(), 5);
+        let dropped = dp.gc(1, 4);
+        assert_eq!(dropped, 3);
+        assert_eq!(dp.image_count(), 2);
+        assert!(dp.get(&o, 1, 4).is_some());
+        assert!(dp.get(&o, 1, 2).is_none());
+        audit_ok(&dp);
+        let (total, _) = dp.audit();
+        assert!((total - 2.0 * 3.0 * 4e6).abs() < 1.0, "two images x3 replicas: {total}");
+    }
+
+    #[test]
+    fn corrupted_image_is_never_served() {
+        let (o, links) = world(20);
+        let mut dp = DataPlane::new(StorageSpec::Replicate { replicas: 3 });
+        let mut img = CheckpointImage::new(1, 1, 500.0, 1e6);
+        img.progress = 999.0; // bit-rot after tag computation
+        let _ = dp.put(0.0, &o, &links, 0, img);
+        assert!(dp.get(&o, 1, 1).is_none());
+        assert!(dp.latest(&o, 1).is_none());
+    }
+
+    #[test]
+    fn latest_prefers_highest_live_seq() {
+        let (o, links) = world(30);
+        let mut dp = DataPlane::new(StorageSpec::Replicate { replicas: 3 });
+        for seq in 1..=3 {
+            dp.put(0.0, &o, &links, 0, CheckpointImage::new(1, seq, seq as f64 * 100.0, 4e6))
+                .unwrap();
+        }
+        assert_eq!(dp.latest(&o, 1).unwrap().seq, 3);
+        // Seq 3 rots away: latest falls back to seq 2.
+        dp.images.get_mut(&(1, 3)).unwrap().image.progress = 1e9;
+        assert_eq!(dp.latest(&o, 1).unwrap().seq, 2);
+    }
+}

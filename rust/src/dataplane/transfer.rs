@@ -1,0 +1,213 @@
+//! Bandwidth-aware transfer scheduling with link contention.
+//!
+//! Every chunk movement is charged against the capacity of the two links
+//! it crosses: the source's upstream and the destination's downstream
+//! (the server's NIC is one shared symmetric link). Links are modelled as
+//! FIFO queues — a transfer starts when *both* links are free and
+//! occupies both until it completes, i.e. transfers **serialize on the
+//! bottleneck link**. That is deliberately the crudest contention model
+//! that exhibits the paper's Fig. 1 pathology: when every checkpoint
+//! transits the work pool server, the server link's queue grows with the
+//! peer count while the peer-hosted strategies spread the same bytes over
+//! hundreds of independent links.
+//!
+//! The scheduler also owns the per-endpoint byte counters
+//! ([`IoCounters`]) that the `server_offload` experiment and the world's
+//! metrics report.
+
+use super::placement::Endpoint;
+use crate::net::bandwidth::LinkSpeed;
+use std::collections::BTreeMap;
+
+/// Default work-pool-server NIC capacity: 1 Gbit/s, in bytes/second
+/// (volunteer peers default to ~1 Mbit/s up — see
+/// [`crate::net::bandwidth::BandwidthModel`]).
+pub const DEFAULT_SERVER_BPS: f64 = 1e9 / 8.0;
+
+/// Byte counters per endpoint class (monotone over a run).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct IoCounters {
+    /// Bytes received by the work pool server.
+    pub server_in: f64,
+    /// Bytes sent by the work pool server.
+    pub server_out: f64,
+    /// Bytes received by volunteer peers.
+    pub peer_in: f64,
+    /// Bytes sent by volunteer peers.
+    pub peer_out: f64,
+    /// Subset of the above moved by churn-driven repair.
+    pub repair_bytes: f64,
+    /// Number of individual transfers charged.
+    pub transfers: u64,
+}
+
+impl IoCounters {
+    /// Total bytes that transited the server link (in + out).
+    pub fn server_bytes(&self) -> f64 {
+        self.server_in + self.server_out
+    }
+
+    /// Total bytes that transited peer links (in + out).
+    pub fn peer_bytes(&self) -> f64 {
+        self.peer_in + self.peer_out
+    }
+}
+
+/// FIFO link-queue transfer scheduler.
+#[derive(Debug, Clone)]
+pub struct TransferScheduler {
+    server_bps: f64,
+    /// Busy-until time of the server's shared link.
+    server_busy: f64,
+    /// Busy-until time of each peer's upstream link.
+    up_busy: BTreeMap<usize, f64>,
+    /// Busy-until time of each peer's downstream link.
+    down_busy: BTreeMap<usize, f64>,
+    /// Charged byte counters.
+    pub counters: IoCounters,
+}
+
+impl TransferScheduler {
+    pub fn new(server_bps: f64) -> Self {
+        TransferScheduler {
+            server_bps: server_bps.max(1.0),
+            server_busy: 0.0,
+            up_busy: BTreeMap::new(),
+            down_busy: BTreeMap::new(),
+            counters: IoCounters::default(),
+        }
+    }
+
+    pub fn server_bps(&self) -> f64 {
+        self.server_bps
+    }
+
+    fn src_rate(&self, src: Endpoint, links: &[LinkSpeed]) -> f64 {
+        match src {
+            Endpoint::Server => self.server_bps,
+            Endpoint::Peer(p) => links.get(p).map(|l| l.up_bps).unwrap_or(1.0),
+        }
+    }
+
+    fn dst_rate(&self, dst: Endpoint, links: &[LinkSpeed]) -> f64 {
+        match dst {
+            Endpoint::Server => self.server_bps,
+            Endpoint::Peer(p) => links.get(p).map(|l| l.down_bps).unwrap_or(1.0),
+        }
+    }
+
+    fn busy(&self, side_up: bool, e: Endpoint) -> f64 {
+        match e {
+            Endpoint::Server => self.server_busy,
+            Endpoint::Peer(p) => {
+                let map = if side_up { &self.up_busy } else { &self.down_busy };
+                map.get(&p).copied().unwrap_or(0.0)
+            }
+        }
+    }
+
+    fn set_busy(&mut self, side_up: bool, e: Endpoint, t: f64) {
+        match e {
+            Endpoint::Server => self.server_busy = self.server_busy.max(t),
+            Endpoint::Peer(p) => {
+                let map = if side_up { &mut self.up_busy } else { &mut self.down_busy };
+                map.insert(p, t);
+            }
+        }
+    }
+
+    /// Schedule `bytes` from `src` to `dst`, starting no earlier than
+    /// `now`, charging both links. Returns the completion time.
+    pub fn transfer(
+        &mut self,
+        now: f64,
+        src: Endpoint,
+        dst: Endpoint,
+        bytes: f64,
+        links: &[LinkSpeed],
+        repair: bool,
+    ) -> f64 {
+        let rate = self.src_rate(src, links).min(self.dst_rate(dst, links)).max(1.0);
+        let start = now.max(self.busy(true, src)).max(self.busy(false, dst));
+        let finish = start + bytes / rate;
+        self.set_busy(true, src, finish);
+        self.set_busy(false, dst, finish);
+        match src {
+            Endpoint::Server => self.counters.server_out += bytes,
+            Endpoint::Peer(_) => self.counters.peer_out += bytes,
+        }
+        match dst {
+            Endpoint::Server => self.counters.server_in += bytes,
+            Endpoint::Peer(_) => self.counters.peer_in += bytes,
+        }
+        if repair {
+            self.counters.repair_bytes += bytes;
+        }
+        self.counters.transfers += 1;
+        finish
+    }
+
+    /// How far behind `now` the server link's queue is (0 when idle) —
+    /// the Fig. 1 "I/O demands at the work pool server" signal.
+    pub fn server_backlog(&self, now: f64) -> f64 {
+        (self.server_busy - now).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn links() -> Vec<LinkSpeed> {
+        // Peer 0: 1 MB/s up, 10 MB/s down; peer 1: 2 MB/s up, 4 MB/s down.
+        vec![
+            LinkSpeed { up_bps: 1e6, down_bps: 1e7 },
+            LinkSpeed { up_bps: 2e6, down_bps: 4e6 },
+        ]
+    }
+
+    #[test]
+    fn rate_is_bottleneck_of_the_two_links() {
+        let mut s = TransferScheduler::new(1e8);
+        // Peer 0 -> peer 1: min(1 MB/s up, 4 MB/s down) = 1 MB/s.
+        let t = s.transfer(0.0, Endpoint::Peer(0), Endpoint::Peer(1), 2e6, &links(), false);
+        assert!((t - 2.0).abs() < 1e-9, "{t}");
+        assert_eq!(s.counters.peer_out, 2e6);
+        assert_eq!(s.counters.peer_in, 2e6);
+        assert_eq!(s.counters.server_bytes(), 0.0);
+    }
+
+    #[test]
+    fn shared_link_serializes() {
+        let mut s = TransferScheduler::new(1e6); // 1 MB/s server NIC
+        // Two peers each push 1 MB to the server at t=0: the second
+        // transfer queues behind the first on the server link.
+        let t0 = s.transfer(0.0, Endpoint::Peer(0), Endpoint::Server, 1e6, &links(), false);
+        let t1 = s.transfer(0.0, Endpoint::Peer(1), Endpoint::Server, 1e6, &links(), false);
+        assert!((t0 - 1.0).abs() < 1e-9);
+        assert!((t1 - 2.0).abs() < 1e-9, "second upload must queue: {t1}");
+        assert!((s.server_backlog(0.0) - 2.0).abs() < 1e-9);
+        assert_eq!(s.counters.server_in, 2e6);
+        assert_eq!(s.counters.transfers, 2);
+    }
+
+    #[test]
+    fn independent_peer_links_run_in_parallel() {
+        let mut s = TransferScheduler::new(1e8);
+        // Peer 0 -> peer 1 and (conceptually) peer 1 -> peer 0 overlap:
+        // they use disjoint (up, down) link pairs.
+        let a = s.transfer(0.0, Endpoint::Peer(0), Endpoint::Peer(1), 1e6, &links(), false);
+        let b = s.transfer(0.0, Endpoint::Peer(1), Endpoint::Peer(0), 2e6, &links(), false);
+        assert!((a - 1.0).abs() < 1e-9);
+        assert!((b - 1.0).abs() < 1e-9, "reverse direction must not queue: {b}");
+    }
+
+    #[test]
+    fn repair_bytes_tracked_separately() {
+        let mut s = TransferScheduler::new(1e8);
+        s.transfer(0.0, Endpoint::Peer(0), Endpoint::Peer(1), 5e5, &links(), true);
+        s.transfer(0.0, Endpoint::Peer(1), Endpoint::Peer(0), 5e5, &links(), false);
+        assert_eq!(s.counters.repair_bytes, 5e5);
+        assert_eq!(s.counters.peer_out, 1e6);
+    }
+}

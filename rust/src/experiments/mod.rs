@@ -5,11 +5,14 @@
 //!   comparison sweeps.
 //! * [`fig2`] — trace synthesis + exponential-fit / rate-variability
 //!   analysis (Fig. 2(a)/(b)).
+//! * [`server_offload`] — the Fig. 1 motivation: server bytes/s under
+//!   `server` vs `replicate:*` vs `erasure:*` checkpoint storage.
 //! * [`bench_support`] — timing + reporting helpers for the harness-less
 //!   benches (criterion is not in the offline crate cache).
 
 pub mod bench_support;
 pub mod fig2;
 pub mod relative_runtime;
+pub mod server_offload;
 
 pub use relative_runtime::{run_comparison, ComparisonConfig, ComparisonRow};

@@ -1,0 +1,378 @@
+//! The server I/O-offload experiment — the paper's Fig. 1 motivation,
+//! now a tracked, regenerable measurement.
+//!
+//! Section 1's claim: checkpointing many inter-communicating work flows
+//! through the work pool server "can lead to a significant increase in
+//! I/O demands at the work pool server", which the P2P checkpoint storage
+//! off-loads onto the peers. This harness sweeps overlay size ×
+//! checkpoint image size × storage strategy and reports, per cell, the
+//! bytes/second that transited the server against the bytes/second
+//! carried by peer links — plus the upload pile-up (mean/p95 checkpoint
+//! upload completion latency under the FIFO bottleneck-link contention
+//! model) and the restore success fraction.
+//!
+//! Determinism contract (same as `scenario::SweepRunner`): every cell is
+//! simulated from an RNG seeded only by `(config.seed + cell index, cell
+//! index)` and rows are assembled in cell order, so the emitted CSV is
+//! byte-identical for any `--threads` count (asserted in
+//! `rust/tests/dataplane.rs`).
+
+use crate::dataplane::{DataPlane, StorageSpec, DEFAULT_CHUNK_BYTES, DEFAULT_SERVER_BPS};
+use crate::net::bandwidth::BandwidthModel;
+use crate::net::overlay::Overlay;
+use crate::scenario::registry;
+use crate::storage::image::CheckpointImage;
+use crate::util::csv::Table;
+use crate::util::rng::Pcg64;
+use crate::util::stats::percentiles;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Sweep configuration (axes + the per-cell workload model).
+#[derive(Debug, Clone)]
+pub struct OffloadConfig {
+    /// Overlay sizes to sweep.
+    pub peer_counts: Vec<usize>,
+    /// Checkpoint image sizes (bytes) to sweep.
+    pub image_bytes: Vec<f64>,
+    /// Storage strategies to compare.
+    pub storages: Vec<StorageSpec>,
+    /// Peers per job (jobs = peers / k, disjoint member ranges).
+    pub k: usize,
+    /// Seconds between checkpoints of each job.
+    pub checkpoint_period: f64,
+    /// Simulated horizon (seconds).
+    pub horizon: f64,
+    /// Churn/bookkeeping step (seconds); must divide the period.
+    pub step: f64,
+    /// Exponential session MTBF (seconds).
+    pub mtbf: f64,
+    /// Mean offline time before rejoin (seconds).
+    pub rejoin_mean: f64,
+    /// Work pool server NIC capacity (bytes/s).
+    pub server_bps: f64,
+    /// Base RNG seed (cell index is mixed in per cell).
+    pub seed: u64,
+}
+
+impl Default for OffloadConfig {
+    fn default() -> Self {
+        OffloadConfig {
+            peer_counts: vec![100, 200, 400],
+            image_bytes: vec![8e6, 64e6],
+            storages: vec![
+                StorageSpec::Server,
+                StorageSpec::Replicate { replicas: 3 },
+                StorageSpec::Erasure { data: 4, parity: 2 },
+            ],
+            k: 16,
+            checkpoint_period: 600.0,
+            horizon: 4.0 * 3600.0,
+            step: 60.0,
+            mtbf: 7200.0,
+            rejoin_mean: 1800.0,
+            server_bps: DEFAULT_SERVER_BPS,
+            seed: 1,
+        }
+    }
+}
+
+/// One cell of the sweep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OffloadCell {
+    pub peers: usize,
+    pub image_bytes: f64,
+    pub storage: StorageSpec,
+}
+
+/// Per-cell measurements.
+#[derive(Debug, Clone)]
+pub struct OffloadRow {
+    pub cell: OffloadCell,
+    pub checkpoints: u64,
+    pub restores: u64,
+    /// Bytes/second that transited the work pool server (in + out).
+    pub server_bytes_per_s: f64,
+    /// Bytes/second carried by peer links (in + out).
+    pub peer_bytes_per_s: f64,
+    /// Repair-traffic bytes/second.
+    pub repair_bytes_per_s: f64,
+    /// Mean checkpoint upload completion latency (contention included).
+    pub mean_upload_s: f64,
+    /// 95th-percentile upload completion latency (the pile-up signal).
+    pub p95_upload_s: f64,
+    /// Fraction of churn-driven restore attempts that found a
+    /// retrievable checkpoint.
+    pub restore_success_frac: f64,
+}
+
+/// Materialize the sweep cells in canonical order (peers-major,
+/// storage-minor).
+pub fn cells(cfg: &OffloadConfig) -> Vec<OffloadCell> {
+    let mut out = Vec::new();
+    for &peers in &cfg.peer_counts {
+        for &image_bytes in &cfg.image_bytes {
+            for &storage in &cfg.storages {
+                out.push(OffloadCell { peers, image_bytes, storage });
+            }
+        }
+    }
+    out
+}
+
+/// Simulate one cell: jobs on disjoint member ranges checkpoint every
+/// period through a fresh [`DataPlane`]; churn drives repair traffic and
+/// restore reads. Pure function of `(cfg, cell, index)`.
+pub fn run_cell(cfg: &OffloadConfig, cell: &OffloadCell, index: usize) -> OffloadRow {
+    let mut rng = Pcg64::new(cfg.seed.wrapping_add(index as u64), index as u64);
+    let mut overlay = Overlay::new(cell.peers, &mut rng);
+    let links = BandwidthModel::default().sample_population(cell.peers, &mut rng);
+    let mut dp = DataPlane::with_config(cell.storage, DEFAULT_CHUNK_BYTES, cfg.server_bps);
+
+    let jobs = (cell.peers / cfg.k).max(1);
+    let mut seq = vec![0u64; jobs];
+    let mut upload_latencies: Vec<f64> = Vec::new();
+    let mut checkpoints = 0u64;
+    let mut restores_attempted = 0u64;
+    let mut restores_ok = 0u64;
+
+    let steps = (cfg.horizon / cfg.step).ceil() as usize;
+    let period_steps = ((cfg.checkpoint_period / cfg.step).round() as usize).max(1);
+    for s in 1..=steps {
+        let t = s as f64 * cfg.step;
+        // Churn: memoryless per-step departure/rejoin.
+        let mut departed: Vec<usize> = Vec::new();
+        for p in 0..cell.peers {
+            if overlay.is_online(p) {
+                if rng.next_f64() < cfg.step / cfg.mtbf {
+                    overlay.depart(p, t);
+                    departed.push(p);
+                }
+            } else if rng.next_f64() < cfg.step / cfg.rejoin_mean {
+                overlay.join(p, t);
+            }
+        }
+        // Maintenance: re-replicate / reconstruct what churn took.
+        dp.repair_sweep(t, &overlay, &links);
+        // A departed job member forces the job to re-fetch its latest
+        // checkpoint (the restore read path).
+        for &p in &departed {
+            let j = p / cfg.k;
+            if j >= jobs {
+                continue;
+            }
+            restores_attempted += 1;
+            let members = j * cfg.k..((j + 1) * cfg.k).min(cell.peers);
+            if let Some(d) = members.clone().find(|&m| overlay.is_online(m)) {
+                if dp.restore(t, &overlay, &links, d, j).is_some() {
+                    restores_ok += 1;
+                }
+            }
+        }
+        // Checkpoint commits on the period boundary.
+        if s % period_steps == 0 {
+            for (j, seq_j) in seq.iter_mut().enumerate() {
+                let members = j * cfg.k..((j + 1) * cfg.k).min(cell.peers);
+                let Some(uploader) = members.clone().find(|&m| overlay.is_online(m)) else {
+                    continue;
+                };
+                *seq_j += 1;
+                let img = CheckpointImage::new(j, *seq_j, t, cell.image_bytes);
+                if let Some(done) = dp.put(t, &overlay, &links, uploader, img) {
+                    upload_latencies.push(done - t);
+                    checkpoints += 1;
+                    // Epoch GC: keep the previous checkpoint as backup.
+                    dp.gc(j, seq_j.saturating_sub(1));
+                } else {
+                    *seq_j -= 1; // overlay could not host the placement
+                }
+            }
+        }
+    }
+
+    // Accounting sanity: the data-plane must be byte-conserving.
+    let (incremental, recomputed) = dp.audit();
+    assert!(
+        (incremental - recomputed).abs() <= 1e-6 * recomputed.max(1.0),
+        "byte-conservation violated in cell {index}: {incremental} vs {recomputed}"
+    );
+
+    let c = dp.counters();
+    let (mean_up, p95_up) = if upload_latencies.is_empty() {
+        (0.0, 0.0)
+    } else {
+        let mean = upload_latencies.iter().sum::<f64>() / upload_latencies.len() as f64;
+        let p = percentiles(&upload_latencies, &[95.0]);
+        (mean, p[0])
+    };
+    OffloadRow {
+        cell: *cell,
+        checkpoints,
+        restores: restores_attempted,
+        server_bytes_per_s: c.server_bytes() / cfg.horizon,
+        peer_bytes_per_s: c.peer_bytes() / cfg.horizon,
+        repair_bytes_per_s: c.repair_bytes / cfg.horizon,
+        mean_upload_s: mean_up,
+        p95_upload_s: p95_up,
+        restore_success_frac: restores_ok as f64 / restores_attempted.max(1) as f64,
+    }
+}
+
+/// Run the sweep across `threads` workers. Rows come back in canonical
+/// cell order regardless of scheduling, so downstream CSVs are
+/// byte-identical for any thread count.
+pub fn run_sweep(cfg: &OffloadConfig, threads: usize) -> Vec<OffloadRow> {
+    let cells = cells(cfg);
+    if cells.is_empty() {
+        return Vec::new();
+    }
+    let workers = threads.max(1).min(cells.len());
+    if workers <= 1 {
+        return cells.iter().enumerate().map(|(i, c)| run_cell(cfg, c, i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<OffloadRow>>> = cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let row = run_cell(cfg, &cells[i], i);
+                *slots[i].lock().expect("offload slot poisoned") = Some(row);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().expect("offload slot poisoned").expect("cell never ran"))
+        .collect()
+}
+
+/// Render rows as the `server_offload.csv` table (row order == cell
+/// order).
+pub fn to_table(rows: &[OffloadRow]) -> Table {
+    let mut t = Table::new(&[
+        "peers",
+        "image_mb",
+        "storage",
+        "checkpoints",
+        "restores",
+        "server_bytes_per_s",
+        "peer_bytes_per_s",
+        "repair_bytes_per_s",
+        "mean_upload_s",
+        "p95_upload_s",
+        "restore_success_frac",
+    ]);
+    for r in rows {
+        t.push(vec![
+            r.cell.peers.to_string(),
+            format!("{:.3}", r.cell.image_bytes / 1e6),
+            registry::storage_key(&r.cell.storage),
+            r.checkpoints.to_string(),
+            r.restores.to_string(),
+            format!("{:.6}", r.server_bytes_per_s),
+            format!("{:.6}", r.peer_bytes_per_s),
+            format!("{:.6}", r.repair_bytes_per_s),
+            format!("{:.6}", r.mean_upload_s),
+            format!("{:.6}", r.p95_upload_s),
+            format!("{:.6}", r.restore_success_frac),
+        ]);
+    }
+    t
+}
+
+/// Human-readable offload summary: one line per row with the ratio of
+/// the group's `server` baseline to the row's server traffic. Rows are
+/// grouped by `group_size` (= number of storage strategies per
+/// (peers, image) pair, i.e. `cfg.storages.len()`); groups without a
+/// `server` baseline are skipped. Shared by the bench and the CLI.
+pub fn summarize(rows: &[OffloadRow], group_size: usize) -> Vec<String> {
+    let mut lines = Vec::new();
+    for group in rows.chunks(group_size.max(1)) {
+        let Some(baseline) = group.iter().find(|r| r.cell.storage == StorageSpec::Server)
+        else {
+            continue;
+        };
+        for r in group {
+            lines.push(format!(
+                "peers={:>4} image={:>4.0}MB {:<12} server {:>12.0} B/s  peers {:>12.0} B/s  \
+                 p95 upload {:>8.1} s  restore ok {:.2}  ({:.0}x offload)",
+                r.cell.peers,
+                r.cell.image_bytes / 1e6,
+                registry::storage_key(&r.cell.storage),
+                r.server_bytes_per_s,
+                r.peer_bytes_per_s,
+                r.p95_upload_s,
+                r.restore_success_frac,
+                baseline.server_bytes_per_s / r.server_bytes_per_s.max(1e-9),
+            ));
+        }
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> OffloadConfig {
+        OffloadConfig {
+            peer_counts: vec![64],
+            image_bytes: vec![8e6],
+            horizon: 3600.0,
+            ..OffloadConfig::default()
+        }
+    }
+
+    #[test]
+    fn canonical_cell_order() {
+        let cfg = OffloadConfig::default();
+        let cs = cells(&cfg);
+        assert_eq!(cs.len(), 3 * 2 * 3);
+        assert_eq!(cs[0].peers, 100);
+        assert_eq!(cs[0].storage, StorageSpec::Server);
+        assert_eq!(cs[1].storage, StorageSpec::Replicate { replicas: 3 });
+        assert_eq!(cs.last().unwrap().peers, 400);
+    }
+
+    #[test]
+    fn offload_shows_in_tiny_sweep() {
+        let rows = run_sweep(&tiny(), 1);
+        assert_eq!(rows.len(), 3);
+        let server = &rows[0];
+        let replicate = &rows[1];
+        let erasure = &rows[2];
+        assert!(server.checkpoints > 0);
+        assert!(
+            server.server_bytes_per_s > 10.0 * replicate.server_bytes_per_s,
+            "server {} vs replicate {}",
+            server.server_bytes_per_s,
+            replicate.server_bytes_per_s
+        );
+        assert!(server.server_bytes_per_s > 10.0 * erasure.server_bytes_per_s);
+        // The bulk bytes moved to peer links under the P2P strategies.
+        assert!(replicate.peer_bytes_per_s > server.peer_bytes_per_s);
+    }
+
+    #[test]
+    fn summary_emits_one_line_per_row() {
+        let rows = run_sweep(&tiny(), 2);
+        let lines = summarize(&rows, 3);
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].contains("server"));
+        assert!(lines[1].contains("replicate:3"));
+        // Without a server baseline in the group there is nothing to
+        // compare against.
+        assert!(summarize(&rows[1..], 2).is_empty());
+    }
+
+    #[test]
+    fn rows_are_deterministic() {
+        let a = to_table(&run_sweep(&tiny(), 1)).to_csv();
+        let b = to_table(&run_sweep(&tiny(), 1)).to_csv();
+        assert_eq!(a, b);
+    }
+}

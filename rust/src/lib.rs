@@ -30,7 +30,10 @@
 //!   and experiment harness all build their stacks here.
 //! * **L3 (this crate)** — discrete-event simulation core ([`sim`]), P2P
 //!   overlay with churn and stabilization ([`net`], [`churn`]), replicated
-//!   checkpoint storage ([`storage`]), failure-rate / overhead estimators
+//!   checkpoint storage ([`storage`]) behind the chunked checkpoint
+//!   data-plane ([`dataplane`]: server / replicate / erasure placement,
+//!   contention-aware transfers, repair, server I/O-offload accounting),
+//!   failure-rate / overhead estimators
 //!   ([`estimator`]), the analytic utilization model ([`model`]),
 //!   checkpoint policies ([`policy`]), a message-passing substrate with
 //!   Chandy–Lamport snapshots ([`mpi`]), the job coordinator and BOINC-style
@@ -45,6 +48,7 @@ pub mod churn;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod dataplane;
 pub mod error;
 pub mod estimator;
 pub mod experiments;

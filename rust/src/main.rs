@@ -15,8 +15,11 @@
 //!                 [--planner native|xla]
 //! p2pcp trace     [--network gnutella|overnet|bittorrent] [--sessions N]
 //! p2pcp world     [--churn KEY | --mtbf S] [--k N] [--runtime S] [--peers N]
-//!                 [--policy KEY] [--estimator KEY]
+//!                 [--policy KEY] [--estimator KEY] [--storage KEY]
 //! p2pcp fleet     [--mtbf S] [--jobs N] [--arrival S] [--planner KEY] ...
+//! p2pcp server-offload [--peers csv] [--image-mb csv] [--storages csv]
+//!                 [--k N] [--period S] [--horizon S] [--mtbf S]
+//!                 [--threads N] [--seed N] [--out file.csv]
 //! ```
 //!
 //! Component keys (`p2pcp help` prints the full lists) come from
@@ -27,9 +30,11 @@ use p2pcp::churn::trace::TraceKind;
 use p2pcp::cli::Args;
 use p2pcp::config::ChurnSpec;
 use p2pcp::coordinator::fleet::{run_fleet, FleetConfig};
+use p2pcp::dataplane::StorageSpec;
 use p2pcp::error::{Error, Result};
 use p2pcp::experiments::fig2;
 use p2pcp::experiments::relative_runtime::to_table;
+use p2pcp::experiments::server_offload::{self, OffloadConfig};
 use p2pcp::model::optimal::optimal_lambda_checked;
 use p2pcp::planner::{NativePlanner, PlanRequest, Planner, XlaPlanner};
 use p2pcp::runtime::PjrtRuntime;
@@ -58,6 +63,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "trace" => cmd_trace(args),
         "world" => cmd_world(args),
         "fleet" => cmd_fleet(args),
+        "server-offload" => cmd_server_offload(args),
         "help" | "--help" | "-h" => {
             print!("{}", help_text());
             Ok(())
@@ -81,6 +87,8 @@ COMMANDS:
   trace      synthesize a P2P session trace and analyze it (Fig. 2)
   world      run the full-stack world (overlay + Chandy-Lamport + DHT store)
   fleet      serve many concurrent jobs with shared batched planning
+  server-offload  sweep peers x image size x storage strategy and report
+             server vs peer bytes/s (the paper's Fig. 1 motivation)
   help       this text
 
 COMPONENT KEYS (shared by flags and config files):
@@ -89,6 +97,7 @@ COMPONENT KEYS (shared by flags and config files):
   --estimator {}
   --planner   {}
   --workload  {}
+  --storage   {}
 
 Run a command with wrong flags to see its allowed flag list.
 ",
@@ -97,6 +106,7 @@ Run a command with wrong flags to see its allowed flag list.
         registry::estimator_keys().join(" | "),
         registry::planner_keys().join(" | "),
         registry::workload_keys().join(" | "),
+        registry::storage_keys().join(" | "),
     )
 }
 
@@ -122,6 +132,7 @@ fn scenario_from_args(args: &Args, default_peers: usize) -> Result<Scenario> {
         .estimator_key(&args.get_str("estimator", "mle")?)
         .planner_key(&args.get_str("planner", "native")?)
         .workload_key(&args.get_str("workload", "ring")?)
+        .storage_key(&args.get_str("storage", "replicate:3")?)
         .policy_key(&policy_key_from_args(args)?);
     b = match args.get("churn")? {
         Some(key) => b.churn_key(key),
@@ -141,7 +152,7 @@ fn scenario_from_args(args: &Args, default_peers: usize) -> Result<Scenario> {
 
 const SCENARIO_FLAGS: &[&str] = &[
     "churn", "mtbf", "double-time", "k", "runtime", "v", "td", "policy", "interval",
-    "estimator", "planner", "workload", "seed", "peers",
+    "estimator", "planner", "workload", "storage", "seed", "peers",
 ];
 
 fn with_scenario_flags(extra: &[&str]) -> Vec<&str> {
@@ -376,6 +387,66 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn parse_csv_f64(flag: &str, csv: &str) -> Result<Vec<f64>> {
+    csv.split(',')
+        .map(|x| {
+            x.trim().parse::<f64>().map_err(|_| {
+                Error::Config(format!("--{flag} must be comma-separated numbers"))
+            })
+        })
+        .collect()
+}
+
+fn parse_csv_usize(flag: &str, csv: &str) -> Result<Vec<usize>> {
+    csv.split(',')
+        .map(|x| {
+            x.trim().parse::<usize>().map_err(|_| {
+                Error::Config(format!("--{flag} must be comma-separated counts"))
+            })
+        })
+        .collect()
+}
+
+fn cmd_server_offload(args: &Args) -> Result<()> {
+    args.check_unknown(&[
+        "peers", "image-mb", "storages", "k", "period", "horizon", "mtbf", "threads",
+        "seed", "out",
+    ])?;
+    let mut cfg = OffloadConfig::default();
+    if let Some(csv) = args.get("peers")? {
+        cfg.peer_counts = parse_csv_usize("peers", csv)?;
+    }
+    if let Some(csv) = args.get("image-mb")? {
+        cfg.image_bytes = parse_csv_f64("image-mb", csv)?.into_iter().map(|m| m * 1e6).collect();
+    }
+    if let Some(csv) = args.get("storages")? {
+        cfg.storages = csv
+            .split(',')
+            .map(|s| registry::parse_storage(s.trim()))
+            .collect::<Result<Vec<StorageSpec>>>()?;
+    }
+    cfg.k = args.get_usize("k", cfg.k)?;
+    cfg.checkpoint_period = args.get_f64("period", cfg.checkpoint_period)?;
+    cfg.horizon = args.get_f64("horizon", cfg.horizon)?;
+    cfg.mtbf = args.get_f64("mtbf", cfg.mtbf)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+    let threads = args.get_usize("threads", SweepRunner::auto().threads)?;
+
+    let rows = server_offload::run_sweep(&cfg, threads);
+    let table = server_offload::to_table(&rows);
+    print!("{}", table.to_pretty());
+    // Offload summary: server-path baseline vs each P2P strategy, per
+    // (peers, image-size) pair (rows are storage-minor in cell order).
+    for line in server_offload::summarize(&rows, cfg.storages.len()) {
+        println!("{line}");
+    }
+    if let Some(out) = args.get("out")? {
+        table.write_to(std::path::Path::new(out))?;
+        println!("[written {out}]");
+    }
+    Ok(())
+}
+
 fn cmd_world(args: &Args) -> Result<()> {
     args.check_unknown(&with_scenario_flags(&["warmup"]))?;
     let mut s = scenario_from_args(args, 256)?;
@@ -399,5 +470,10 @@ fn cmd_world(args: &Args) -> Result<()> {
     println!("wasted work      : {:.0} s", o.wasted);
     println!("efficiency       : {:.3}", o.efficiency);
     println!("events processed : {}", world.events_processed());
+    let c = world.dataplane().counters();
+    println!("storage          : {}", registry::storage_key(&s.storage));
+    println!("server bytes     : {:.0} in / {:.0} out", c.server_in, c.server_out);
+    println!("peer bytes       : {:.0} in / {:.0} out", c.peer_in, c.peer_out);
+    println!("repair bytes     : {:.0}", c.repair_bytes);
     Ok(())
 }

@@ -22,7 +22,8 @@
 //! A scenario is a *plan*, not a live object: it holds typed component
 //! specs ([`ChurnSpec`], [`PolicySpec`], [`EstimatorSpec`],
 //! [`PlannerSpec`], [`crate::net::bandwidth::BandwidthModel`],
-//! [`CommPattern`]) with paper-faithful defaults, and knows how to resolve
+//! [`StorageSpec`], [`CommPattern`]) with paper-faithful defaults, and
+//! knows how to resolve
 //! them into live components (`build_churn`, `build_policy`,
 //! `build_world`, …). Because it is plain data (`Clone + Send + Sync`),
 //! the multi-threaded [`sweep::SweepRunner`] can fan grids of scenarios
@@ -41,6 +42,7 @@ use crate::churn::{build_churn_model, ChurnModel};
 use crate::config::{ChurnSpec, PolicySpec, SimConfig};
 use crate::coordinator::job::{JobOutcome, JobParams, JobSimulator};
 use crate::coordinator::world::World;
+use crate::dataplane::StorageSpec;
 use crate::error::{Error, Result};
 use crate::estimator::{build_window_estimator, EstimatorSpec, WindowEstimator};
 use crate::mpi::program::{CommPattern, Program};
@@ -110,6 +112,9 @@ pub struct Scenario {
     pub planner: PlannerSpec,
     /// Per-peer link-speed population model.
     pub bandwidth: BandwidthModel,
+    /// Checkpoint data-plane placement strategy
+    /// (`server | replicate:K | erasure:K:M`).
+    pub storage: StorageSpec,
     /// Message-passing communication pattern of the job.
     pub workload: CommPattern,
     /// Re-planning period for adaptive policies (seconds).
@@ -136,6 +141,7 @@ impl Default for Scenario {
             estimator_window: 64,
             planner: PlannerSpec::default(),
             bandwidth: BandwidthModel::default(),
+            storage: StorageSpec::default(),
             workload: CommPattern::Ring,
             replan_period: 300.0,
             max_sim_time: 60.0 * 24.0 * 3600.0,
@@ -254,6 +260,7 @@ impl Scenario {
         World::with_components(
             self.sim_config(),
             self.bandwidth,
+            self.storage,
             self.build_churn()?,
             self.build_estimator(),
         )
@@ -371,6 +378,12 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Checkpoint data-plane placement strategy.
+    pub fn storage(mut self, spec: StorageSpec) -> Self {
+        self.scenario.storage = spec;
+        self
+    }
+
     pub fn workload(mut self, pattern: CommPattern) -> Self {
         self.scenario.workload = pattern;
         self
@@ -431,6 +444,12 @@ impl ScenarioBuilder {
         self.record(registry::parse_workload(key), |s, v| s.workload = v)
     }
 
+    /// Set the storage strategy from a registry key (`"server"`,
+    /// `"replicate:3"`, `"erasure:4:2"`).
+    pub fn storage_key(self, key: &str) -> Self {
+        self.record(registry::parse_storage(key), |s, v| s.storage = v)
+    }
+
     /// Validate and return the scenario.
     pub fn build(self) -> Result<Scenario> {
         if let Some(e) = self.err {
@@ -439,6 +458,7 @@ impl ScenarioBuilder {
         let s = self.scenario;
         // Shares the SimConfig invariants so both paths agree on validity.
         s.sim_config().validated()?;
+        s.storage.validated()?;
         if s.warm_observations > 100_000 {
             return Err(Error::Config(format!(
                 "warm_observations={} is absurd (max 100000)",
@@ -485,6 +505,24 @@ mod tests {
         assert_eq!(ok.policy, PolicySpec::Fixed { interval: 300.0 });
         assert_eq!(ok.estimator, EstimatorSpec::Ewma { alpha: 0.1 });
         assert_eq!(ok.workload, CommPattern::Pipeline);
+    }
+
+    #[test]
+    fn storage_axis_round_trips_through_builder() {
+        let s = Scenario::builder().storage_key("erasure:4:2").build().unwrap();
+        assert_eq!(s.storage, StorageSpec::Erasure { data: 4, parity: 2 });
+        assert_eq!(registry::storage_key(&s.storage), "erasure:4:2");
+        let s = Scenario::builder()
+            .storage(StorageSpec::Replicate { replicas: 5 })
+            .build()
+            .unwrap();
+        assert_eq!(registry::storage_key(&s.storage), "replicate:5");
+        assert_eq!(Scenario::builder().build().unwrap().storage, StorageSpec::default());
+        assert!(Scenario::builder().storage_key("replicate:0").build().is_err());
+        assert!(Scenario::builder()
+            .storage(StorageSpec::Erasure { data: 0, parity: 1 })
+            .build()
+            .is_err());
     }
 
     #[test]

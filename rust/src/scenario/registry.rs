@@ -11,9 +11,11 @@
 //! | estimator | `mle`, `ewma:ALPHA`, `count`, `hybrid:MEAN:CONFIDENCE`        |
 //! | planner   | `native`, `xla`                                               |
 //! | workload  | `pipeline`, `ring`, `stencil1d`, `allreduce`, `master_worker` |
+//! | storage   | `server`, `replicate:K`, `erasure:K:M`                        |
 
 use super::PlannerSpec;
 use crate::config::{ChurnSpec, PolicySpec};
+use crate::dataplane::StorageSpec;
 use crate::error::{Error, Result};
 use crate::estimator::EstimatorSpec;
 use crate::mpi::program::CommPattern;
@@ -46,6 +48,7 @@ fn arity_err(family: &str, key: &str, want: &str) -> Error {
             "estimator" => estimator_keys().join(", "),
             "planner" => planner_keys().join(", "),
             "workload" => workload_keys().join(", "),
+            "storage" => storage_keys().join(", "),
             _ => String::new(),
         }
     ))
@@ -205,6 +208,44 @@ pub fn parse_planner(key: &str) -> Result<PlannerSpec> {
     }
 }
 
+// ---------------------------------------------------------------- storage
+
+pub fn storage_keys() -> Vec<String> {
+    vec!["server".into(), "replicate:3".into(), "erasure:4:2".into()]
+}
+
+pub fn storage_key(spec: &StorageSpec) -> String {
+    match spec {
+        StorageSpec::Server => "server".into(),
+        StorageSpec::Replicate { replicas } => format!("replicate:{replicas}"),
+        StorageSpec::Erasure { data, parity } => format!("erasure:{data}:{parity}"),
+    }
+}
+
+fn parse_count(family: &str, key: &str, part: &str) -> Result<usize> {
+    part.parse::<usize>().map_err(|_| {
+        Error::Config(format!("{family} key '{key}': '{part}' is not a count"))
+    })
+}
+
+pub fn parse_storage(key: &str) -> Result<StorageSpec> {
+    let (name, args) = split(key);
+    let spec = match (name, args.as_slice()) {
+        ("server", []) => StorageSpec::Server,
+        ("replicate", [r]) => {
+            StorageSpec::Replicate { replicas: parse_count("storage", key, r)? }
+        }
+        ("erasure", [k, m]) => StorageSpec::Erasure {
+            data: parse_count("storage", key, k)?,
+            parity: parse_count("storage", key, m)?,
+        },
+        _ => {
+            return Err(arity_err("storage", key, "server | replicate:K | erasure:K:M"));
+        }
+    };
+    spec.validated()
+}
+
 // --------------------------------------------------------------- workload
 
 pub fn workload_keys() -> Vec<String> {
@@ -252,6 +293,9 @@ mod tests {
         for k in workload_keys() {
             assert_eq!(workload_key(parse_workload(&k).unwrap()), k, "workload {k}");
         }
+        for k in storage_keys() {
+            assert_eq!(storage_key(&parse_storage(&k).unwrap()), k, "storage {k}");
+        }
     }
 
     #[test]
@@ -265,6 +309,16 @@ mod tests {
         assert!(parse_estimator("ewma:1.5").is_err());
         assert!(parse_planner("tpu").is_err());
         assert!(parse_workload("torus").is_err());
+        let e = parse_storage("raid").unwrap_err().to_string();
+        assert!(e.contains("erasure:4:2"), "{e}");
+        assert!(parse_storage("replicate:0").is_err());
+        assert!(parse_storage("replicate:2.5").is_err());
+        assert!(parse_storage("erasure:4").is_err());
+        assert!(parse_storage("erasure:4:0").is_err());
+        assert_eq!(
+            parse_storage("erasure:8:3").unwrap(),
+            StorageSpec::Erasure { data: 8, parity: 3 }
+        );
     }
 
     #[test]

@@ -6,8 +6,10 @@ use crate::net::bandwidth::LinkSpeed;
 use crate::net::overlay::{Overlay, PeerId};
 use std::collections::HashMap;
 
-/// Replication degree for checkpoint images.
-pub const REPLICAS: usize = 3;
+/// The seed's replication degree, kept as the default. The live degree is
+/// per-store state now, configured through the scenario `storage` axis
+/// (`replicate:K` — see `scenario::registry`).
+pub const DEFAULT_REPLICAS: usize = 3;
 
 /// Where an image's replicas live.
 #[derive(Debug, Clone, PartialEq)]
@@ -16,26 +18,43 @@ pub struct Placement {
 }
 
 /// Distributed store state: images + their current holders.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct DhtStore {
+    /// Replication degree for checkpoint images.
+    replicas: usize,
     /// (job, seq) -> (image, placement)
     images: HashMap<(usize, u64), (CheckpointImage, Placement)>,
     /// Bytes stored per peer (diagnostics / GC pressure).
     stored_bytes: HashMap<PeerId, f64>,
 }
 
+impl Default for DhtStore {
+    fn default() -> Self {
+        DhtStore::new(DEFAULT_REPLICAS)
+    }
+}
+
 impl DhtStore {
-    pub fn new() -> Self {
-        Self::default()
+    pub fn new(replicas: usize) -> Self {
+        DhtStore {
+            replicas: replicas.max(1),
+            images: HashMap::new(),
+            stored_bytes: HashMap::new(),
+        }
     }
 
-    /// Place an image on the `REPLICAS` online successors of its key.
+    /// The configured replication degree.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Place an image on the `replicas` online successors of its key.
     /// Returns the placement, or `None` if the overlay is too empty.
     pub fn put(&mut self, overlay: &Overlay, img: CheckpointImage) -> Option<Placement> {
         let owner = overlay.owner_of(img.key())?;
         let mut holders = vec![owner];
-        holders.extend(overlay.successors(owner, REPLICAS - 1));
-        holders.truncate(REPLICAS);
+        holders.extend(overlay.successors(owner, self.replicas - 1));
+        holders.truncate(self.replicas);
         if holders.is_empty() {
             return None;
         }
@@ -78,24 +97,30 @@ impl DhtStore {
     }
 
     /// Re-replicate an image whose holder set decayed (maintenance task).
-    /// Returns how many new holders were added.
+    /// Departed holders are dropped from the placement and their bytes
+    /// reclaimed (their copy is superseded — a rejoining peer's stale
+    /// replica is discarded), keeping the store byte-conserving:
+    /// `Σ stored_bytes(peer)` ≡ `Σ images bytes × |holders|` (see
+    /// [`DhtStore::audit`]). Returns how many new holders were added.
     pub fn repair(&mut self, overlay: &Overlay, job: usize, seq: u64) -> usize {
         let Some((img, placement)) = self.images.get(&(job, seq)) else {
             return 0;
         };
         let live: Vec<PeerId> =
             placement.holders.iter().copied().filter(|&h| overlay.is_online(h)).collect();
-        if live.len() >= REPLICAS || live.is_empty() {
+        if live.len() >= self.replicas || live.is_empty() {
             return 0;
         }
+        let dead: Vec<PeerId> =
+            placement.holders.iter().copied().filter(|&h| !overlay.is_online(h)).collect();
         let bytes = img.bytes;
         let owner = match overlay.owner_of(img.key()) {
             Some(o) => o,
             None => return 0,
         };
         let mut holders = live.clone();
-        for cand in std::iter::once(owner).chain(overlay.successors(owner, REPLICAS * 2)) {
-            if holders.len() >= REPLICAS {
+        for cand in std::iter::once(owner).chain(overlay.successors(owner, self.replicas * 2)) {
+            if holders.len() >= self.replicas {
                 break;
             }
             if !holders.contains(&cand) {
@@ -103,6 +128,11 @@ impl DhtStore {
             }
         }
         let added = holders.len() - live.len();
+        for &h in &dead {
+            if let Some(b) = self.stored_bytes.get_mut(&h) {
+                *b = (*b - bytes).max(0.0);
+            }
+        }
         for &h in &holders {
             if !live.contains(&h) {
                 *self.stored_bytes.entry(h).or_insert(0.0) += bytes;
@@ -137,6 +167,25 @@ impl DhtStore {
         self.stored_bytes.get(&p).copied().unwrap_or(0.0)
     }
 
+    /// Byte-conservation audit: (incremental `Σ stored_bytes(peer)`,
+    /// recomputed `Σ images bytes × |holders|`). The two must agree after
+    /// any sequence of put / repair / gc (property-tested in
+    /// `rust/tests/dataplane.rs`).
+    pub fn audit(&self) -> (f64, f64) {
+        let incremental: f64 = self.stored_bytes.values().sum();
+        let recomputed: f64 = self
+            .images
+            .values()
+            .map(|(img, p)| img.bytes * p.holders.len() as f64)
+            .sum();
+        (incremental, recomputed)
+    }
+
+    /// The recorded placement of one image (holders may be offline).
+    pub fn placement(&self, job: usize, seq: u64) -> Option<&Placement> {
+        self.images.get(&(job, seq)).map(|(_, p)| p)
+    }
+
     pub fn image_count(&self) -> usize {
         self.images.len()
     }
@@ -167,7 +216,7 @@ mod tests {
     fn mk(n: usize) -> (Overlay, DhtStore, Pcg64) {
         let mut rng = Pcg64::new(33, 0);
         let o = Overlay::new(n, &mut rng);
-        (o, DhtStore::new(), rng)
+        (o, DhtStore::new(DEFAULT_REPLICAS), rng)
     }
 
     #[test]
@@ -175,7 +224,7 @@ mod tests {
         let (o, mut s, _) = mk(20);
         let img = CheckpointImage::new(1, 1, 100.0, 5e6);
         let p = s.put(&o, img.clone()).unwrap();
-        assert_eq!(p.holders.len(), REPLICAS);
+        assert_eq!(p.holders.len(), s.replicas());
         let got = s.get(&o, 1, 1).unwrap();
         assert_eq!(got, &img);
     }
@@ -226,7 +275,23 @@ mod tests {
         let added = s.repair(&o, 2, 5);
         assert!(added > 0);
         assert!(s.live_replicas(&o, 2, 5) > before);
-        assert_eq!(s.live_replicas(&o, 2, 5), REPLICAS);
+        assert_eq!(s.live_replicas(&o, 2, 5), s.replicas());
+        // Accounting stays conserved through the repair: the departed
+        // holder's superseded copy was reclaimed.
+        let (incremental, recomputed) = s.audit();
+        assert!((incremental - recomputed).abs() < 1e-6, "{incremental} vs {recomputed}");
+        assert_eq!(s.stored_bytes(p.holders[0]), 0.0);
+    }
+
+    #[test]
+    fn configurable_replication_degree() {
+        let mut rng = Pcg64::new(34, 0);
+        let o = Overlay::new(30, &mut rng);
+        for degree in [1usize, 2, 5] {
+            let mut s = DhtStore::new(degree);
+            let p = s.put(&o, CheckpointImage::new(1, 1, 1.0, 1e6)).unwrap();
+            assert_eq!(p.holders.len(), degree);
+        }
     }
 
     #[test]

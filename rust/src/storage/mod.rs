@@ -9,5 +9,5 @@
 pub mod dht_store;
 pub mod image;
 
-pub use dht_store::{DhtStore, Placement, REPLICAS};
+pub use dht_store::{DhtStore, Placement, DEFAULT_REPLICAS};
 pub use image::CheckpointImage;

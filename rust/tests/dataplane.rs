@@ -1,0 +1,265 @@
+//! Data-plane integration + property tests: byte-conservation accounting
+//! under churn (the ISSUE-2 invariant), thread-count-invariant offload
+//! sweeps, the server-offload headline ratio, and the world running end
+//! to end on every storage strategy.
+
+use p2pcp::dataplane::{DataPlane, StorageSpec};
+use p2pcp::experiments::server_offload::{run_sweep, to_table, OffloadConfig};
+use p2pcp::net::bandwidth::BandwidthModel;
+use p2pcp::net::overlay::Overlay;
+use p2pcp::scenario::Scenario;
+use p2pcp::storage::dht_store::DhtStore;
+use p2pcp::storage::image::CheckpointImage;
+use p2pcp::util::prop::{check, Gen};
+use std::collections::HashMap;
+
+// ------------------------------------------------------------ conservation
+
+/// After any sequence of put / repair / gc under churn, the incremental
+/// per-endpoint stored-byte map equals `Σ_images Σ_chunks bytes ×
+/// |holders|` — nothing leaks on departure, nothing is double-counted on
+/// repair.
+#[test]
+fn prop_dataplane_byte_conservation() {
+    check("dataplane conserves bytes under put/repair/gc + churn", |g: &mut Gen| {
+        let spec = *g.pick(&[
+            StorageSpec::Server,
+            StorageSpec::Replicate { replicas: 2 },
+            StorageSpec::Replicate { replicas: 3 },
+            StorageSpec::Erasure { data: 3, parity: 1 },
+            StorageSpec::Erasure { data: 4, parity: 2 },
+        ]);
+        let n = g.usize(8, 40);
+        let mut overlay = Overlay::new(n, g.rng());
+        let links = BandwidthModel::default().sample_population(n, g.rng());
+        let mut dp = DataPlane::new(spec);
+        let mut seq = [0u64; 3];
+        let ops = g.usize(5, 40);
+        for step in 0..ops {
+            let t = step as f64;
+            match g.usize(0, 5) {
+                0 | 1 => {
+                    let job = g.usize(0, 2);
+                    seq[job] += 1;
+                    let bytes = g.f64(1e5, 32e6);
+                    let uploader = g.usize(0, n - 1);
+                    let img = CheckpointImage::new(job, seq[job], t, bytes);
+                    let _ = dp.put(t, &overlay, &links, uploader, img);
+                }
+                2 => {
+                    let p = g.usize(0, n - 1);
+                    if overlay.is_online(p) {
+                        if overlay.online_count() > 1 {
+                            overlay.depart(p, t);
+                        }
+                    } else {
+                        overlay.join(p, t);
+                    }
+                }
+                3 => {
+                    dp.repair_sweep(t, &overlay, &links);
+                }
+                4 => {
+                    let job = g.usize(0, 2);
+                    dp.gc(job, seq[job].saturating_sub(1));
+                }
+                _ => {
+                    let job = g.usize(0, 2);
+                    let downloader = g.usize(0, n - 1);
+                    let _ = dp.restore(t, &overlay, &links, downloader, job);
+                }
+            }
+            let (incremental, recomputed) = dp.audit();
+            assert!(
+                (incremental - recomputed).abs() <= 1e-6 * recomputed.max(1.0),
+                "step {step} ({spec:?}): incremental {incremental} vs recomputed {recomputed}"
+            );
+        }
+    });
+}
+
+/// The same conservation law for the legacy whole-image `DhtStore`, plus
+/// the repair postcondition: right after a repair pass every placement is
+/// homogeneous — all holders online (repaired / intact images) or all
+/// offline (images whose every replica departed; their copies sit on the
+/// departed disks until the holders rejoin). So `Σ stored_bytes(peer)`
+/// equals the sum over live images of `bytes × live holders` plus the
+/// fully-departed remainder.
+#[test]
+fn prop_dht_store_byte_conservation() {
+    check("dht store conserves bytes; repair leaves live holders", |g: &mut Gen| {
+        let replicas = g.usize(1, 5);
+        let n = g.usize(8, 40);
+        let mut overlay = Overlay::new(n, g.rng());
+        let mut s = DhtStore::new(replicas);
+        let mut bytes_of: HashMap<u64, f64> = HashMap::new();
+        let mut seq = 0u64;
+        let ops = g.usize(5, 40);
+        for step in 0..ops {
+            match g.usize(0, 3) {
+                0 | 1 => {
+                    seq += 1;
+                    let bytes = g.f64(1e5, 8e6);
+                    if s.put(&overlay, CheckpointImage::new(0, seq, step as f64, bytes)).is_some()
+                    {
+                        bytes_of.insert(seq, bytes);
+                    }
+                }
+                2 => {
+                    let p = g.usize(0, n - 1);
+                    if overlay.is_online(p) {
+                        if overlay.online_count() > 1 {
+                            overlay.depart(p, step as f64);
+                        }
+                    } else {
+                        overlay.join(p, step as f64);
+                    }
+                }
+                _ => {
+                    let keep = seq.saturating_sub(2);
+                    s.gc(0, keep);
+                    bytes_of.retain(|&q, _| q >= keep);
+                }
+            }
+            // Maintenance pass over every image, then audit.
+            for q in 1..=seq {
+                s.repair(&overlay, 0, q);
+            }
+            let (incremental, recomputed) = s.audit();
+            assert!(
+                (incremental - recomputed).abs() <= 1e-6 * recomputed.max(1.0),
+                "step {step}: incremental {incremental} vs recomputed {recomputed}"
+            );
+            // Repair postcondition + the "bytes x live holders" identity.
+            let mut expected = 0.0;
+            for (&q, &bytes) in &bytes_of {
+                let Some(p) = s.placement(0, q) else { continue };
+                let live = p.holders.iter().filter(|&&h| overlay.is_online(h)).count();
+                assert!(
+                    live == 0 || live == p.holders.len(),
+                    "after repair, placements are all-live or all-dead \
+                     (seq {q}: {live}/{})",
+                    p.holders.len()
+                );
+                expected += bytes * p.holders.len() as f64;
+            }
+            assert!(
+                (incremental - expected).abs() <= 1e-6 * expected.max(1.0),
+                "step {step}: stored {incremental} vs bytes x holders {expected}"
+            );
+        }
+    });
+}
+
+// ----------------------------------------------------------- offload sweep
+
+fn quick_offload() -> OffloadConfig {
+    OffloadConfig {
+        peer_counts: vec![48, 96],
+        image_bytes: vec![8e6],
+        horizon: 1800.0,
+        ..OffloadConfig::default()
+    }
+}
+
+/// The determinism contract of the `server_offload` bench: the CSV is
+/// byte-identical across thread counts.
+#[test]
+fn offload_sweep_is_thread_count_invariant() {
+    let cfg = quick_offload();
+    let seq = to_table(&run_sweep(&cfg, 1)).to_csv();
+    let par = to_table(&run_sweep(&cfg, 4)).to_csv();
+    assert_eq!(seq, par, "offload CSV must not depend on the thread count");
+    assert_eq!(seq.lines().count(), 1 + 2 * 3, "header + 2 peers x 3 storages");
+}
+
+/// The acceptance-criterion shape at test scale: P2P checkpoint storage
+/// keeps server traffic at least an order of magnitude below the
+/// server-path baseline.
+#[test]
+fn p2p_storage_offloads_the_server_by_an_order_of_magnitude() {
+    let cfg = OffloadConfig {
+        peer_counts: vec![160],
+        image_bytes: vec![8e6],
+        horizon: 3600.0,
+        ..OffloadConfig::default()
+    };
+    let rows = run_sweep(&cfg, 2);
+    let baseline = rows
+        .iter()
+        .find(|r| r.cell.storage == StorageSpec::Server)
+        .expect("server baseline present");
+    assert!(baseline.server_bytes_per_s > 0.0);
+    for r in rows.iter().filter(|r| r.cell.storage != StorageSpec::Server) {
+        assert!(
+            baseline.server_bytes_per_s > 10.0 * r.server_bytes_per_s,
+            "{:?}: baseline {} vs {}",
+            r.cell.storage,
+            baseline.server_bytes_per_s,
+            r.server_bytes_per_s
+        );
+        assert!(
+            r.peer_bytes_per_s > baseline.peer_bytes_per_s,
+            "{:?}: bulk bytes must move onto peer links",
+            r.cell.storage
+        );
+    }
+}
+
+/// Erasure coding stores ~(k+m)/k copies of the bytes where replication
+/// stores `replicas` — same offload, cheaper disks.
+#[test]
+fn erasure_stores_fewer_bytes_than_replication() {
+    let mut rng = p2pcp::util::rng::Pcg64::new(9, 0);
+    let overlay = Overlay::new(40, &mut rng);
+    let links = BandwidthModel::default().sample_population(40, &mut rng);
+    let img = CheckpointImage::new(0, 1, 0.0, 64e6);
+    let mut rep = DataPlane::new(StorageSpec::Replicate { replicas: 3 });
+    rep.put(0.0, &overlay, &links, 0, img.clone()).unwrap();
+    let mut era = DataPlane::new(StorageSpec::Erasure { data: 4, parity: 2 });
+    era.put(0.0, &overlay, &links, 0, img).unwrap();
+    let (rep_total, _) = rep.audit();
+    let (era_total, _) = era.audit();
+    assert!((rep_total - 3.0 * 64e6).abs() < 1.0);
+    assert!((era_total - 1.5 * 64e6).abs() < 1.0);
+    assert!(era_total < rep_total / 1.9);
+}
+
+// ------------------------------------------------------------- world wiring
+
+/// The full-stack world completes a job on every storage strategy, and
+/// the per-endpoint counters reflect where the bytes went.
+#[test]
+fn world_runs_on_every_storage_strategy() {
+    for key in ["server", "replicate:3", "erasure:4:2"] {
+        let s = Scenario::builder()
+            .peers(96)
+            .k(8)
+            .runtime(1200.0)
+            .mtbf(1e12)
+            .seed(5)
+            .storage_key(key)
+            .build()
+            .unwrap();
+        let mut w = s.build_world().unwrap();
+        let o = w.run_job(s.program(), s.build_policy().unwrap()).unwrap();
+        assert!(o.completed, "{key}: job must complete");
+        let c = w.dataplane().counters();
+        assert!(c.transfers > 0, "{key}: checkpoints must move bytes");
+        if key == "server" {
+            assert!(
+                c.server_in > c.peer_in,
+                "{key}: upload bytes transit the server ({} vs {})",
+                c.server_in,
+                c.peer_in
+            );
+        } else {
+            assert!(
+                c.peer_in > c.server_in,
+                "{key}: upload bytes stay on peers ({} vs {})",
+                c.peer_in,
+                c.server_in
+            );
+        }
+    }
+}

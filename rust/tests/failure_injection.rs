@@ -16,7 +16,7 @@ use p2pcp::util::rng::Pcg64;
 fn corrupted_image_is_never_served() {
     let mut rng = Pcg64::new(1, 0);
     let o = Overlay::new(20, &mut rng);
-    let mut store = DhtStore::new();
+    let mut store = DhtStore::new(3);
     let mut img = CheckpointImage::new(1, 1, 500.0, 1e6);
     img.progress = 999.0; // bit-rot after tag computation
     store.put(&o, img);
@@ -30,7 +30,7 @@ fn total_replica_loss_forces_scratch_restart() {
     // scratch (progress 0) instead of hanging.
     let mut rng = Pcg64::new(2, 0);
     let mut o = Overlay::new(12, &mut rng);
-    let mut store = DhtStore::new();
+    let mut store = DhtStore::new(3);
     let p = store.put(&o, CheckpointImage::new(0, 1, 800.0, 1e6)).unwrap();
     for &h in &p.holders {
         o.depart(h, 1.0);
@@ -131,7 +131,7 @@ fn leader_survives_cascading_member_failures() {
 fn dht_store_repair_after_churn_burst() {
     let mut rng = Pcg64::new(5, 0);
     let mut o = Overlay::new(40, &mut rng);
-    let mut store = DhtStore::new();
+    let mut store = DhtStore::new(3);
     let placement = store.put(&o, CheckpointImage::new(7, 1, 100.0, 1e6)).unwrap();
     // Kill two of three holders.
     o.depart(placement.holders[0], 1.0);
