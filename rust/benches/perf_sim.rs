@@ -1,17 +1,44 @@
 //! L3 perf: simulator throughput — the fast-path jobs/second, the DES
-//! event rate of the full-stack world, and the overlay routing rate.
-//! §Perf in DESIGN.md tracks these before/after optimization.
+//! event rate of the full-stack world at 1k/10k/100k peers, and the
+//! overlay routing rate. §Perf in DESIGN.md tracks these before/after
+//! optimization; CI uploads the JSON so the bench trajectory accrues per
+//! PR.
 //!
-//! `cargo bench --bench perf_sim`
+//! ```text
+//! cargo bench --bench perf_sim                        # full tiers
+//! cargo bench --bench perf_sim -- --quick             # smoke tier
+//! cargo bench --bench perf_sim -- --json BENCH_perf_sim.json
+//! ```
+//!
+//! Iteration counts are env-pinnable for comparable CI runs:
+//! `P2PCP_PERF_REPEATS` (timed repeats per section, default 3 full /
+//! 1 quick) and `P2PCP_PERF_WARMUP` (untimed warmup iterations, default
+//! 1 full / 0 quick).
 
 use p2pcp::coordinator::job::JobSimulator;
-use p2pcp::experiments::bench_support::{report_throughput, report_timing, time_it};
+use p2pcp::experiments::bench_support::{is_quick, report_throughput, report_timing, time_it};
 use p2pcp::net::routing::{route, HopLatency};
 use p2pcp::policy::FixedPolicy;
 use p2pcp::scenario::Scenario;
+use p2pcp::util::json::Json;
 use p2pcp::util::rng::Pcg64;
 
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn json_path() -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    args.iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1).cloned())
+}
+
 fn main() {
+    let quick = is_quick();
+    let repeats = env_usize("P2PCP_PERF_REPEATS", if quick { 1 } else { 3 }).max(1);
+    let warmup_iters = env_usize("P2PCP_PERF_WARMUP", usize::from(!quick));
+
     // --- fast-path job simulation ----------------------------------------
     let fast = Scenario::builder()
         .mtbf(7200.0)
@@ -20,41 +47,73 @@ fn main() {
         .expect("valid scenario");
     let churn = fast.build_churn().expect("churn model");
     let sim = JobSimulator::new(fast.job_params(), churn.as_ref());
+    let fast_reps = if quick { 5 } else { 20 };
     let mut seed = 0u64;
-    let r = time_it(3, 20, || {
+    let r_fixed = time_it(warmup_iters, fast_reps, || {
         let mut pol = FixedPolicy::new(300.0);
         seed += 1;
         std::hint::black_box(sim.run(&mut pol, seed, 0));
     });
-    report_timing("fastpath: one 4h job (fixed policy)", &r);
-    report_throughput("fastpath jobs", 1.0, &r);
+    report_timing("fastpath: one 4h job (fixed policy)", &r_fixed);
+    report_throughput("fastpath jobs", 1.0, &r_fixed);
 
     let mut seed2 = 1000u64;
-    let r = time_it(3, 20, || {
+    let r_adaptive = time_it(warmup_iters, fast_reps, || {
         let mut pol = fast.build_policy().expect("adaptive policy");
         seed2 += 1;
         std::hint::black_box(sim.run(pol.as_mut(), seed2, 0));
     });
-    report_timing("fastpath: one 4h job (adaptive native)", &r);
+    report_timing("fastpath: one 4h job (adaptive native)", &r_adaptive);
 
-    // --- full-stack world event rate ---------------------------------------
-    let world_scenario = Scenario::builder()
-        .peers(512)
-        .mtbf(3600.0)
-        .seed(99)
-        .build()
-        .expect("valid scenario");
-    let r = time_it(1, 5, || {
-        let mut w = world_scenario.build_world().unwrap();
-        w.warmup(6.0 * 3600.0);
-        std::hint::black_box(w.events_processed());
-    });
-    // Count events once for the throughput figure.
-    let mut w = world_scenario.build_world().unwrap();
-    w.warmup(6.0 * 3600.0);
-    let events = w.events_processed() as f64;
-    report_timing("world: 512 peers x 6h churn+stabilize", &r);
-    report_throughput("world events", events, &r);
+    // --- full-stack world event rate: 1k / 10k / 100k peers ---------------
+    // Warmup hours shrink as n grows so each tier stays seconds-scale; the
+    // figure of merit is events/second, which is population-independent in
+    // a healthy engine.
+    let tiers: &[(usize, f64)] = if quick {
+        &[(1_000, 0.5)]
+    } else {
+        &[(1_000, 6.0), (10_000, 3.0), (100_000, 1.0)]
+    };
+    let mut world_rows: Vec<Json> = Vec::new();
+    for &(n_peers, hours) in tiers {
+        let scenario = Scenario::builder()
+            .peers(n_peers)
+            .k(8)
+            .mtbf(3600.0)
+            .runtime(1800.0)
+            .v(20.0)
+            .td(50.0)
+            .seed(99)
+            .build()
+            .expect("valid scenario");
+        // Capture the stats from the last timed iteration rather than
+        // paying for an extra untimed warmup+job per tier.
+        let mut last = (0u64, false, 0.0f64);
+        let r = time_it(warmup_iters, repeats, || {
+            let mut w = scenario.build_world().expect("world");
+            w.warmup(hours * 3600.0);
+            let o = w
+                .run_job(scenario.program(), Box::new(FixedPolicy::new(600.0)))
+                .expect("job");
+            last = (w.events_processed(), o.completed, o.wall_time);
+            std::hint::black_box(&last);
+        });
+        let (events, completed, job_wall_sim) = last;
+        let label = format!("world: {n_peers} peers x {hours}h churn + job");
+        report_timing(&label, &r);
+        report_throughput("world events", events as f64, &r);
+        world_rows.push(Json::obj(vec![
+            ("n_peers", Json::Num(n_peers as f64)),
+            ("warmup_sim_hours", Json::Num(hours)),
+            ("events", Json::Num(events as f64)),
+            ("events_per_s", Json::Num(events as f64 / r.mean())),
+            ("wall_s_mean", Json::Num(r.mean())),
+            ("wall_s_ci95", Json::Num(r.ci95())),
+            ("wall_s_min", Json::Num(r.min())),
+            ("job_completed", Json::Bool(completed)),
+            ("job_wall_sim_s", Json::Num(job_wall_sim)),
+        ]));
+    }
 
     // --- overlay routing ----------------------------------------------------
     let mut rng = Pcg64::new(5, 0);
@@ -64,13 +123,46 @@ fn main() {
         .expect("valid scenario")
         .build_overlay(&mut rng);
     let n_routes = 10_000u64;
-    let r = time_it(1, 10, || {
+    let r_routes = time_it(1, if quick { 3 } else { 10 }, || {
         for i in 0..n_routes {
             let key = i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
             let src = (i % 1024) as usize;
             std::hint::black_box(route(&overlay, src, key, HopLatency::default(), &mut rng));
         }
     });
-    report_timing("overlay: 10k greedy routes (n=1024)", &r);
-    report_throughput("routes", n_routes as f64, &r);
+    report_timing("overlay: 10k greedy routes (n=1024)", &r_routes);
+    report_throughput("routes", n_routes as f64, &r_routes);
+
+    // --- machine-readable trajectory ---------------------------------------
+    if let Some(path) = json_path() {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("perf_sim".into())),
+            ("quick", Json::Bool(quick)),
+            ("repeats", Json::Num(repeats as f64)),
+            (
+                "fastpath",
+                Json::obj(vec![
+                    ("fixed_job_s_mean", Json::Num(r_fixed.mean())),
+                    ("fixed_jobs_per_s", Json::Num(1.0 / r_fixed.mean())),
+                    ("adaptive_job_s_mean", Json::Num(r_adaptive.mean())),
+                    ("adaptive_jobs_per_s", Json::Num(1.0 / r_adaptive.mean())),
+                ]),
+            ),
+            ("world", Json::Arr(world_rows)),
+            (
+                "routing",
+                Json::obj(vec![
+                    ("routes", Json::Num(n_routes as f64)),
+                    ("routes_per_s", Json::Num(n_routes as f64 / r_routes.mean())),
+                ]),
+            ),
+        ]);
+        match std::fs::write(&path, doc.to_pretty() + "\n") {
+            Ok(()) => println!("[perf json written to {path}]"),
+            Err(e) => {
+                eprintln!("[perf json write failed: {e}]");
+                std::process::exit(1);
+            }
+        }
+    }
 }

@@ -12,7 +12,7 @@
 //! stabilization and shares observations, Section 3.1.1/3.1.4).
 
 use crate::churn::model::ChurnModel;
-use crate::estimator::{build_window_estimator, EstimatorSpec};
+use crate::estimator::{build_window_estimator, EstimatorSpec, WindowEstimator};
 use crate::policy::{CheckpointPolicy, PolicyCtx};
 use crate::util::rng::Pcg64;
 
@@ -127,9 +127,25 @@ impl<'a> JobSimulator<'a> {
 
     /// Run the job to completion (or abort) under `policy`.
     pub fn run(&self, policy: &mut dyn CheckpointPolicy, seed: u64, stream: u64) -> JobOutcome {
+        let mut est =
+            build_window_estimator(&self.params.estimator, self.params.estimator_window);
+        self.run_with(policy, seed, stream, est.as_mut())
+    }
+
+    /// Like [`JobSimulator::run`], but reusing a caller-owned estimator as
+    /// scratch. The estimator is `reset()` on entry, so outcomes are
+    /// byte-identical to `run` with a freshly-built estimator — the sweep
+    /// runner calls this once per trial without re-boxing the estimator.
+    pub fn run_with(
+        &self,
+        policy: &mut dyn CheckpointPolicy,
+        seed: u64,
+        stream: u64,
+        est: &mut dyn WindowEstimator,
+    ) -> JobOutcome {
         let p = &self.params;
         let mut rng = Pcg64::new(seed, stream);
-        let mut est = build_window_estimator(&p.estimator, p.estimator_window);
+        est.reset();
 
         // The overlay existed before the job: pre-warm the window.
         for _ in 0..p.warm_observations {
@@ -156,15 +172,15 @@ impl<'a> JobSimulator<'a> {
             efficiency: 0.0,
         };
 
-        // Initial decision.
+        // Initial decision (the window is borrowed straight from the
+        // estimator — no per-decide clone).
         let mut interval = {
-            let window: Vec<f64> = est.lifetimes();
             let ctx = PolicyCtx {
                 now: t,
                 k: p.k as f64,
                 v: p.v,
                 td: p.td,
-                lifetimes: &window,
+                lifetimes: est.lifetimes(),
                 true_rate: Some(self.churn.rate(t)),
             };
             policy.decide(&ctx).map(|d| d.interval).unwrap_or(Some(300.0))
@@ -248,13 +264,12 @@ impl<'a> JobSimulator<'a> {
             }
 
             if tmin == next_replan {
-                let window: Vec<f64> = est.lifetimes();
                 let ctx = PolicyCtx {
                     now: t,
                     k: p.k as f64,
                     v: p.v,
                     td: p.td,
-                    lifetimes: &window,
+                    lifetimes: est.lifetimes(),
                     true_rate: Some(self.churn.rate(t)),
                 };
                 if let Ok(d) = policy.decide(&ctx) {

@@ -80,6 +80,11 @@ pub struct World {
     rng: Pcg64,
     estimator: Box<dyn WindowEstimator>,
     job: Option<RunningJob>,
+    /// Monotonic `run_job` counter. Every job-scoped event is stamped
+    /// with the epoch that scheduled it and dropped on mismatch, so a
+    /// pending `Replan` timer or late `MemberFailDetected` from job N can
+    /// never fire into job N+1.
+    job_epoch: usize,
     pub metrics: Metrics,
 }
 
@@ -138,6 +143,7 @@ impl World {
             rng,
             estimator,
             job: None,
+            job_epoch: 0,
             metrics: Metrics::new(),
         })
     }
@@ -167,6 +173,9 @@ impl World {
         if self.job.is_some() {
             return Err(Error::Coordinator("a job is already running".into()));
         }
+        // New job epoch: any still-queued job-scoped event from a
+        // previous run_job is now stale and will be dropped on dispatch.
+        self.job_epoch += 1;
         let k = self.cfg.k;
         let members = self
             .overlay
@@ -203,26 +212,29 @@ impl World {
             },
             pending_detections: Vec::new(),
         };
-        // Initial decision + timers.
-        let window: Vec<f64> = self.estimator.lifetimes();
+        // Initial decision + timers. The lifetime window is borrowed
+        // straight from the estimator — no per-decide clone.
         let (v_eff, td_eff) = self.effective_overheads(&job);
-        let ctx = PolicyCtx {
-            now: start,
-            k: k as f64,
-            v: v_eff,
-            td: td_eff,
-            lifetimes: &window,
-            true_rate: Some(self.churn.rate(start)),
-        };
-        if let Ok(d) = job.policy.decide(&ctx) {
-            job.interval = d.interval;
+        let true_rate = self.churn.rate(start);
+        {
+            let ctx = PolicyCtx {
+                now: start,
+                k: k as f64,
+                v: v_eff,
+                td: td_eff,
+                lifetimes: self.estimator.lifetimes(),
+                true_rate: Some(true_rate),
+            };
+            if let Ok(d) = job.policy.decide(&ctx) {
+                job.interval = d.interval;
+            }
         }
         self.job = Some(job);
         self.schedule_compute_timers();
         if self.job.as_ref().unwrap().policy.wants_replanning() {
             self.engine.schedule_in_secs(
                 self.cfg.replan_period,
-                EventKind::JobTimer { job: 0, what: JobTimerKind::Replan },
+                EventKind::JobTimer { job: self.job_epoch, what: JobTimerKind::Replan },
             );
         }
 
@@ -300,13 +312,15 @@ impl World {
             self.engine.cancel(id);
         }
         job.compute_started = now;
+        let epoch = self.job_epoch;
         if cp_in.is_finite() && cp_in < done_in {
             job.cp_due = Some(self.engine.schedule_in_secs(
                 cp_in,
-                EventKind::JobTimer { job: 0, what: JobTimerKind::CheckpointDue },
+                EventKind::JobTimer { job: epoch, what: JobTimerKind::CheckpointDue },
             ));
         }
-        job.done_at = Some(self.engine.schedule_in_secs(done_in, EventKind::JobDone { job: 0 }));
+        job.done_at =
+            Some(self.engine.schedule_in_secs(done_in, EventKind::JobDone { job: epoch }));
     }
 
     /// Accrue progress for the elapsed computing time.
@@ -323,6 +337,14 @@ impl World {
     }
 
     fn handle(&mut self, ev: EventKind) {
+        // Drop stale job-scoped events: anything stamped with a previous
+        // job's epoch (or arriving while no job runs) is a leftover timer
+        // whose job is gone.
+        if let Some(epoch) = ev.job_scope() {
+            if epoch != self.job_epoch || self.job.is_none() {
+                return;
+            }
+        }
         match ev {
             EventKind::PeerFail { peer } => self.on_peer_fail(peer),
             EventKind::PeerJoin { peer } => self.on_peer_join(peer),
@@ -358,12 +380,13 @@ impl World {
             .map(|j| j.members.contains(&peer) && j.phase != Phase::Done)
             .unwrap_or(false);
         if is_member {
+            let epoch = self.job_epoch;
             let j = self.job.as_mut().unwrap();
             if !j.pending_detections.contains(&peer) {
                 j.pending_detections.push(peer);
                 let d = self.rng.next_f64() * self.cfg.stab_period;
                 self.engine
-                    .schedule_in_secs(d, EventKind::MemberFailDetected { job: 0, peer });
+                    .schedule_in_secs(d, EventKind::MemberFailDetected { job: epoch, peer });
             }
         }
     }
@@ -381,10 +404,21 @@ impl World {
     fn on_stabilize(&mut self, peer: PeerId) {
         let now = self.now();
         if self.overlay.is_online(peer) {
-            for obs in self.stab.tick(&self.overlay, peer, now) {
-                // Gossiped into the shared (global-average) estimator.
-                self.estimator.observe(obs.lifetime);
-                self.metrics.inc("stabilize.observations");
+            // Stream observations straight into the shared
+            // (global-average) estimator — no per-tick Vec, one batched
+            // metrics update.
+            let mut observed = 0u64;
+            {
+                let stab = &mut self.stab;
+                let overlay = &self.overlay;
+                let estimator = &mut self.estimator;
+                stab.tick_with(overlay, peer, now, |obs| {
+                    estimator.observe(obs.lifetime);
+                    observed += 1;
+                });
+            }
+            if observed > 0 {
+                self.metrics.add("stabilize.observations", observed);
             }
             // Data-plane maintenance rides the stabilization cadence —
             // throttled to one sweep per period (every peer fires its own
@@ -427,19 +461,11 @@ impl World {
             self.engine.cancel(id);
         }
         job.outcome.wasted += job.progress - job.committed;
-        // Replacement peer.
-        let members = job.members.clone();
+        // Replacement peer: one uniform draw from the dense online set
+        // (was: collect every online id, then index — O(n) per failure).
         let replacement = {
-            let candidates: Vec<PeerId> = self
-                .overlay
-                .online_ids()
-                .filter(|p| !members.contains(p))
-                .collect();
-            if candidates.is_empty() {
-                None
-            } else {
-                Some(candidates[self.rng.next_below(candidates.len() as u64) as usize])
-            }
+            let job = self.job.as_ref().unwrap();
+            self.overlay.sample_online_excluding(&job.members, &mut self.rng)
         };
         let job = self.job.as_mut().unwrap();
         if let Some(new) = replacement {
@@ -479,9 +505,10 @@ impl World {
         job.committed = job.progress;
         job.work_since_commit = 0.0;
         job.phase = Phase::Restarting { started: now };
+        let epoch = self.job_epoch;
         job.xfer = Some(
             self.engine
-                .schedule_in_secs(dl, EventKind::DownloadDone { job: 0, seq: job.seq }),
+                .schedule_in_secs(dl, EventKind::DownloadDone { job: epoch, seq: job.seq }),
         );
         self.metrics.inc("job.restarts");
     }
@@ -516,9 +543,12 @@ impl World {
             let job = self.job.as_ref().unwrap();
             self.effective_overheads(job)
         };
+        let epoch = self.job_epoch;
         let job = self.job.as_mut().unwrap();
-        job.xfer =
-            Some(self.engine.schedule_in_secs(v_eff, EventKind::UploadDone { job: 0, seq }));
+        job.xfer = Some(
+            self.engine
+                .schedule_in_secs(v_eff, EventKind::UploadDone { job: epoch, seq }),
+        );
     }
 
     fn on_upload_done(&mut self, seq: u64) {
@@ -566,7 +596,6 @@ impl World {
     fn on_replan(&mut self) {
         self.accrue_progress();
         let now = self.now();
-        let window: Vec<f64> = self.estimator.lifetimes();
         let (v_eff, td_eff) = {
             let Some(job) = self.job.as_ref() else {
                 return;
@@ -578,26 +607,31 @@ impl World {
         };
         let true_rate = self.churn.rate(now);
         let k = self.cfg.k as f64;
-        let job = self.job.as_mut().unwrap();
-        let ctx = PolicyCtx {
-            now,
-            k,
-            v: v_eff,
-            td: td_eff,
-            lifetimes: &window,
-            true_rate: Some(true_rate),
+        let computing = {
+            // Split borrows: the decision context borrows the estimator's
+            // window while the policy lives in the (disjoint) job field.
+            let estimator = &self.estimator;
+            let job = self.job.as_mut().unwrap();
+            let ctx = PolicyCtx {
+                now,
+                k,
+                v: v_eff,
+                td: td_eff,
+                lifetimes: estimator.lifetimes(),
+                true_rate: Some(true_rate),
+            };
+            if let Ok(d) = job.policy.decide(&ctx) {
+                job.interval = d.interval;
+                job.outcome.replans += 1;
+            }
+            job.phase == Phase::Computing
         };
-        if let Ok(d) = job.policy.decide(&ctx) {
-            job.interval = d.interval;
-            job.outcome.replans += 1;
-        }
-        let computing = job.phase == Phase::Computing;
         if computing {
             self.schedule_compute_timers();
         }
         self.engine.schedule_in_secs(
             self.cfg.replan_period,
-            EventKind::JobTimer { job: 0, what: JobTimerKind::Replan },
+            EventKind::JobTimer { job: self.job_epoch, what: JobTimerKind::Replan },
         );
     }
 
@@ -761,6 +795,33 @@ mod tests {
             c.server_in >= 2.0 * program.image_bytes() * 0.99,
             "all checkpoint bytes transit the server: {}",
             c.server_in
+        );
+    }
+
+    #[test]
+    fn stale_job_events_do_not_leak_across_jobs() {
+        // Regression: job-scoped timers used to carry `job: 0` forever, so
+        // a Replan timer scheduled by job 1's adaptive policy kept firing
+        // during job 2 (and re-arming itself), inflating job 2's replan
+        // count and letting stale `MemberFailDetected` events roll job 2
+        // back for job-1 failures. Epoch stamping drops them at dispatch.
+        let mut w = World::new(cfg(3600.0)).unwrap();
+        w.warmup(4.0 * 3600.0);
+        let program = Program::new(CommPattern::Ring, 8);
+        let o1 = w
+            .run_job(program.clone(), mk_policy(&PolicySpec::Adaptive))
+            .unwrap();
+        assert!(o1.completed);
+        assert!(o1.replans > 0, "job 1 must have left a replan chain behind");
+        // Job 2 runs a fixed policy: it never schedules replans itself, so
+        // any replan it reports must have come from job 1's stale timers.
+        let o2 = w
+            .run_job(program, mk_policy(&PolicySpec::Fixed { interval: 300.0 }))
+            .unwrap();
+        assert!(o2.completed);
+        assert_eq!(
+            o2.replans, 0,
+            "job 2 consumed job 1's stale replan timers"
         );
     }
 

@@ -119,6 +119,17 @@ impl RateEstimator for CategorizedEstimator {
         }
     }
 
+    fn reset(&mut self) {
+        self.boundary_window.clear();
+        for est in &mut self.per_category {
+            est.reset();
+        }
+        for c in &mut self.counts {
+            *c = 0;
+        }
+        self.n_total = 0;
+    }
+
     fn n_observed(&self) -> u64 {
         self.n_total
     }

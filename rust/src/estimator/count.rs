@@ -38,6 +38,11 @@ impl RateEstimator for CountEstimator {
         }
     }
 
+    fn reset(&mut self) {
+        self.n = 0;
+        self.total = 0.0;
+    }
+
     fn n_observed(&self) -> u64 {
         self.n
     }

@@ -46,6 +46,11 @@ impl RateEstimator for EwmaEstimator {
         self.mean_lifetime.map(|m| 1.0 / m)
     }
 
+    fn reset(&mut self) {
+        self.mean_lifetime = None;
+        self.n = 0;
+    }
+
     fn n_observed(&self) -> u64 {
         self.n
     }

@@ -88,6 +88,12 @@ impl RateEstimator for HybridEstimator {
         Some(alpha / beta)
     }
 
+    fn reset(&mut self) {
+        self.window.clear();
+        self.sum = 0.0;
+        self.n_total = 0;
+    }
+
     fn n_observed(&self) -> u64 {
         self.n_total
     }

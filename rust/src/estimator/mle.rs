@@ -2,14 +2,25 @@
 //!
 //! The paper's chosen estimator — Maximum Likelihood for exponential
 //! lifetimes, windowed so it tracks non-stationary rates (Fig. 4 right).
+//!
+//! The window lives in a compacting `Vec` rather than a `VecDeque`: the
+//! buffer appends until it reaches `2K` entries, then memmoves the live
+//! half back to the front. Amortized O(1) per observation with a running
+//! sum, and — the point — the window is always one contiguous
+//! chronological slice, so `PolicyCtx::lifetimes` can borrow it directly
+//! instead of cloning a `Vec<f64>` on every decide/replan. The running-sum
+//! update applies the exact FP operation order of the historical deque
+//! implementation (evict, push, add), keeping rates bit-identical across
+//! the representation change.
 
 use super::RateEstimator;
-use std::collections::VecDeque;
 
 /// Windowed MLE failure-rate estimator.
 #[derive(Debug, Clone)]
 pub struct MleEstimator {
-    window: VecDeque<f64>,
+    /// Append-only buffer, compacted at `2 * capacity`; the window is the
+    /// trailing `min(len, capacity)` elements.
+    buf: Vec<f64>,
     capacity: usize,
     /// Minimum observations before reporting a rate.
     min_obs: usize,
@@ -22,7 +33,7 @@ impl MleEstimator {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         MleEstimator {
-            window: VecDeque::with_capacity(capacity),
+            buf: Vec::with_capacity(2 * capacity),
             capacity,
             min_obs: capacity.min(8),
             sum: 0.0,
@@ -35,39 +46,60 @@ impl MleEstimator {
         self
     }
 
+    /// The current window as one contiguous chronological slice (oldest
+    /// first) — zero-copy input for the planner's `[B, W]` artifact and
+    /// `PolicyCtx::lifetimes`.
+    pub fn window_slice(&self) -> &[f64] {
+        &self.buf[self.buf.len().saturating_sub(self.capacity)..]
+    }
+
     /// Current window contents (for the planner artifact's [B, W] input).
     pub fn window(&self) -> impl Iterator<Item = f64> + '_ {
-        self.window.iter().copied()
+        self.window_slice().iter().copied()
     }
 
     pub fn window_len(&self) -> usize {
-        self.window.len()
+        self.buf.len().min(self.capacity)
     }
 }
 
 impl RateEstimator for MleEstimator {
     fn observe(&mut self, lifetime: f64) {
         let lifetime = lifetime.max(1e-6); // zero-length sessions: clamp
-        if self.window.len() == self.capacity {
-            if let Some(old) = self.window.pop_front() {
-                self.sum -= old;
-            }
+        // Evict the element sliding out of the window from the running sum
+        // *before* adding the new one (the historical FP order).
+        let start = self.buf.len().saturating_sub(self.capacity);
+        if self.buf.len() - start == self.capacity {
+            self.sum -= self.buf[start];
         }
-        self.window.push_back(lifetime);
+        self.buf.push(lifetime);
         self.sum += lifetime;
         self.total_seen += 1;
         // Periodic exact re-sum to stop FP drift in very long runs.
         if self.total_seen % 4096 == 0 {
-            self.sum = self.window.iter().sum();
+            self.sum = self.window_slice().iter().sum();
+        }
+        // Compact: memmove the live window back to the buffer front.
+        if self.buf.len() == 2 * self.capacity {
+            let cap = self.capacity;
+            self.buf.copy_within(cap.., 0);
+            self.buf.truncate(cap);
         }
     }
 
     fn rate(&self) -> Option<f64> {
-        if self.window.len() < self.min_obs || self.sum <= 0.0 {
+        let n = self.window_len();
+        if n < self.min_obs || self.sum <= 0.0 {
             None
         } else {
-            Some(self.window.len() as f64 / self.sum)
+            Some(n as f64 / self.sum)
         }
+    }
+
+    fn reset(&mut self) {
+        self.buf.clear();
+        self.sum = 0.0;
+        self.total_seen = 0;
     }
 
     fn n_observed(&self) -> u64 {
@@ -132,6 +164,50 @@ mod tests {
         }
         let after = e.rate().unwrap();
         assert!((after / before - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn window_slice_is_chronological_across_compactions() {
+        // Push far past several 2K compaction points; the slice must
+        // always be the last K observations in order, and the running sum
+        // must match an exact recomputation.
+        let mut e = MleEstimator::new(8);
+        let mut fed = Vec::new();
+        for i in 0..100u32 {
+            let x = 10.0 + i as f64;
+            e.observe(x);
+            fed.push(x);
+            let want: Vec<f64> =
+                fed[fed.len().saturating_sub(8)..].to_vec();
+            assert_eq!(e.window_slice(), &want[..], "after {} obs", i + 1);
+            assert_eq!(e.window_len(), want.len());
+            let exact: f64 = want.iter().sum();
+            match e.rate() {
+                Some(r) => {
+                    assert!(want.len() >= 8);
+                    assert!((r - want.len() as f64 / exact).abs() < 1e-9);
+                }
+                None => assert!(want.len() < 8),
+            }
+        }
+    }
+
+    #[test]
+    fn reset_restores_fresh_state() {
+        let mut a = MleEstimator::new(16);
+        let mut b = MleEstimator::new(16);
+        for i in 0..40 {
+            a.observe(50.0 + i as f64);
+        }
+        a.reset();
+        for e in [&mut a, &mut b] {
+            for i in 0..20 {
+                e.observe(100.0 + i as f64);
+            }
+        }
+        assert_eq!(a.rate(), b.rate());
+        assert_eq!(a.window_slice(), b.window_slice());
+        assert_eq!(a.n_observed(), b.n_observed());
     }
 
     #[test]

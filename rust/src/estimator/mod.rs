@@ -35,6 +35,13 @@ pub trait RateEstimator: Send {
     /// before enough observations have arrived.
     fn rate(&self) -> Option<f64>;
 
+    /// Restore the exact freshly-constructed state (drop all
+    /// observations, keep configuration). Lets trial loops reuse one
+    /// estimator allocation as scratch instead of re-boxing per run —
+    /// `reset()` followed by N observes must be indistinguishable from a
+    /// new estimator fed the same N observes.
+    fn reset(&mut self);
+
     /// Number of observations consumed.
     fn n_observed(&self) -> u64;
 
@@ -77,9 +84,16 @@ pub trait WindowEstimator: Send {
     /// Current rate estimate, `None` before warm.
     fn rate(&self) -> Option<f64>;
 
-    /// Lifetime window for the planner (most recent last; empty = no
-    /// estimate yet, policies fall back to their bootstrap interval).
-    fn lifetimes(&self) -> Vec<f64>;
+    /// Lifetime window for the planner, borrowed zero-copy from the
+    /// estimator's own storage (most recent last; empty = no estimate
+    /// yet, policies fall back to their bootstrap interval). This is read
+    /// on every decide/replan, so implementations keep it materialized
+    /// rather than building a fresh `Vec` per call.
+    fn lifetimes(&self) -> &[f64];
+
+    /// Restore the exact freshly-constructed state (see
+    /// [`RateEstimator::reset`]).
+    fn reset(&mut self);
 
     /// Observations consumed.
     fn n_observed(&self) -> u64;
@@ -108,8 +122,12 @@ impl WindowEstimator for MleWindow {
         RateEstimator::rate(&self.0)
     }
 
-    fn lifetimes(&self) -> Vec<f64> {
-        self.0.window().collect()
+    fn lifetimes(&self) -> &[f64] {
+        self.0.window_slice()
+    }
+
+    fn reset(&mut self) {
+        RateEstimator::reset(&mut self.0);
     }
 
     fn n_observed(&self) -> u64 {
@@ -123,36 +141,56 @@ impl WindowEstimator for MleWindow {
 
 /// Adapter giving any [`RateEstimator`] a planner-compatible window: `n`
 /// pseudo-observations of `1/μ̂` (the MLE over that window is exactly μ̂).
+/// The pseudo window is re-materialized on observe (refills of a
+/// `pseudo_obs`-slot buffer), so `lifetimes()` is a borrow, not a build.
 pub struct RateWindow<E: RateEstimator> {
     inner: E,
     /// Pseudo-observation count handed to the planner once warm.
     pseudo_obs: usize,
+    /// Cached pseudo window (empty while the inner estimator is cold).
+    pseudo: Vec<f64>,
 }
 
 impl<E: RateEstimator> RateWindow<E> {
     pub fn new(inner: E) -> Self {
-        RateWindow { inner, pseudo_obs: 16 }
+        let mut w = RateWindow { inner, pseudo_obs: 16, pseudo: Vec::new() };
+        // Estimators with informative priors (e.g. the §5 hybrid) report
+        // a rate before any observation — materialize their window now.
+        w.refresh_pseudo();
+        w
     }
 
     pub fn inner(&self) -> &E {
         &self.inner
+    }
+
+    fn refresh_pseudo(&mut self) {
+        self.pseudo.clear();
+        if let Some(r) = self.inner.rate() {
+            if r > 0.0 && r.is_finite() {
+                self.pseudo.resize(self.pseudo_obs, 1.0 / r);
+            }
+        }
     }
 }
 
 impl<E: RateEstimator> WindowEstimator for RateWindow<E> {
     fn observe(&mut self, lifetime: f64) {
         self.inner.observe(lifetime);
+        self.refresh_pseudo();
     }
 
     fn rate(&self) -> Option<f64> {
         self.inner.rate()
     }
 
-    fn lifetimes(&self) -> Vec<f64> {
-        match self.inner.rate() {
-            Some(r) if r > 0.0 && r.is_finite() => vec![1.0 / r; self.pseudo_obs],
-            _ => Vec::new(),
-        }
+    fn lifetimes(&self) -> &[f64] {
+        &self.pseudo
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+        self.refresh_pseudo();
     }
 
     fn n_observed(&self) -> u64 {
@@ -190,8 +228,38 @@ mod tests {
             w.observe(100.0);
         }
         assert!((w.rate().unwrap() - 0.01).abs() < 1e-12);
-        assert_eq!(w.lifetimes(), vec![100.0; 8]);
+        assert_eq!(w.lifetimes(), &[100.0; 8][..]);
         assert_eq!(w.name(), "mle");
+    }
+
+    #[test]
+    fn reset_equals_fresh_for_every_spec() {
+        // The scratch-reuse contract: reset() + N observes must be
+        // indistinguishable from a new estimator fed the same N observes.
+        for spec in [
+            EstimatorSpec::Mle,
+            EstimatorSpec::Ewma { alpha: 0.2 },
+            EstimatorSpec::Count,
+            EstimatorSpec::Hybrid { mean: 7200.0, confidence: 16.0 },
+        ] {
+            let mut reused = build_window_estimator(&spec, 16);
+            for i in 0..40 {
+                reused.observe(100.0 + i as f64);
+            }
+            reused.reset();
+            let mut fresh = build_window_estimator(&spec, 16);
+            for i in 0..24 {
+                reused.observe(400.0 + i as f64);
+                fresh.observe(400.0 + i as f64);
+            }
+            assert_eq!(reused.rate(), fresh.rate(), "{spec:?} rate diverged");
+            assert_eq!(
+                reused.lifetimes(),
+                fresh.lifetimes(),
+                "{spec:?} window diverged"
+            );
+            assert_eq!(reused.n_observed(), fresh.n_observed(), "{spec:?}");
+        }
     }
 
     #[test]

@@ -66,6 +66,13 @@ impl RateEstimator for TimeWindowEstimator {
         Some(self.failures.len() as f64 / expo)
     }
 
+    fn reset(&mut self) {
+        self.failures.clear();
+        self.exposure.clear();
+        self.now = 0.0;
+        self.n = 0;
+    }
+
     fn n_observed(&self) -> u64 {
         self.n
     }

@@ -23,15 +23,33 @@ impl Metrics {
     }
 
     pub fn add(&mut self, key: &str, n: u64) {
-        *self.counters.entry(key.to_string()).or_insert(0) += n;
+        // Hot path: only the first update of a key allocates its String.
+        match self.counters.get_mut(key) {
+            Some(c) => *c += n,
+            None => {
+                self.counters.insert(key.to_string(), n);
+            }
+        }
     }
 
     pub fn set(&mut self, key: &str, v: f64) {
-        self.gauges.insert(key.to_string(), v);
+        match self.gauges.get_mut(key) {
+            Some(g) => *g = v,
+            None => {
+                self.gauges.insert(key.to_string(), v);
+            }
+        }
     }
 
     pub fn observe(&mut self, key: &str, v: f64) {
-        self.dists.entry(key.to_string()).or_insert_with(Running::new).push(v);
+        match self.dists.get_mut(key) {
+            Some(d) => d.push(v),
+            None => {
+                let mut d = Running::new();
+                d.push(v);
+                self.dists.insert(key.to_string(), d);
+            }
+        }
     }
 
     pub fn counter(&self, key: &str) -> u64 {

@@ -5,15 +5,33 @@
 //! failures it can observe during stabilization) and `log2(n)`-ish fingers
 //! for greedy routing. The overlay tracks join/leave and exposes the
 //! neighbour sets the failure detector watches.
+//!
+//! # Hot-path data structures
+//!
+//! The overlay is on the per-event hot path of the full-stack world
+//! (every stabilization tick walks a successor list; every job placement
+//! samples members), so it keeps two indices over the online population:
+//!
+//! * a **bucketed ring index** ([`RingIndex`]) — online peers sorted by
+//!   ring id, sharded into power-of-two buckets by the id's top bits.
+//!   Ring ids are uniform, so buckets hold O(1) entries: successor scans,
+//!   `owner_of`, joins and departs are all O(1) expected with contiguous
+//!   memory, replacing the pointer-chasing `BTreeMap` the seed used;
+//! * a **dense online set** — a swap-remove vector plus a per-peer index
+//!   map, giving O(1) membership updates and O(k) uniform sampling
+//!   (`sample_online`, `sample_online_excluding`) with no "collect every
+//!   online id" scans anywhere.
 
 use crate::util::rng::Pcg64;
-use std::collections::BTreeMap;
 
 /// Index into the overlay's peer table (stable across sessions).
 pub type PeerId = usize;
 
 /// Number of successor links each peer maintains (its neighbour set).
 pub const SUCCESSORS: usize = 4;
+
+/// Sentinel for "not in the dense online vector".
+const OFFLINE: usize = usize::MAX;
 
 /// Per-peer state.
 #[derive(Debug, Clone)]
@@ -28,12 +46,128 @@ pub struct PeerState {
     pub sessions: u64,
 }
 
-/// The overlay: peer table plus a ring index of the online peers.
+/// Sorted ring membership sharded by the top bits of the ring id.
+///
+/// `buckets[rid >> shift]` holds `(ring_id, peer)` pairs sorted ascending;
+/// concatenating the buckets in order yields the whole ring sorted. With
+/// uniform ids and load factor ~4, every operation touches one or two
+/// small contiguous vectors.
+#[derive(Debug)]
+struct RingIndex {
+    shift: u32,
+    buckets: Vec<Vec<(u64, u32)>>,
+    len: usize,
+}
+
+impl RingIndex {
+    fn with_capacity(n: usize) -> RingIndex {
+        // Target ~4 entries per bucket at full population, min 16 buckets.
+        let buckets = (n / 4).next_power_of_two().max(16);
+        RingIndex {
+            shift: 64 - buckets.trailing_zeros(),
+            buckets: (0..buckets).map(|_| Vec::new()).collect(),
+            len: 0,
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn bucket_of(&self, rid: u64) -> usize {
+        (rid >> self.shift) as usize
+    }
+
+    fn contains(&self, rid: u64) -> bool {
+        let b = self.bucket_of(rid);
+        self.buckets[b].binary_search_by_key(&rid, |&(r, _)| r).is_ok()
+    }
+
+    fn insert(&mut self, rid: u64, p: PeerId) {
+        let b = self.bucket_of(rid);
+        let bucket = &mut self.buckets[b];
+        let pos = bucket.partition_point(|&(r, _)| r < rid);
+        bucket.insert(pos, (rid, p as u32));
+        self.len += 1;
+    }
+
+    fn remove(&mut self, rid: u64) {
+        let b = self.bucket_of(rid);
+        let bucket = &mut self.buckets[b];
+        let pos = bucket.partition_point(|&(r, _)| r < rid);
+        debug_assert!(pos < bucket.len() && bucket[pos].0 == rid, "rid not in ring");
+        bucket.remove(pos);
+        self.len -= 1;
+    }
+
+    /// Circular iterator over peers in ascending ring order, starting at
+    /// the first entry with `ring_id >= key` and wrapping once around.
+    fn iter_from(&self, key: u64) -> RingIter<'_> {
+        let start_bucket = self.bucket_of(key);
+        let start_pos = self.buckets[start_bucket].partition_point(|&(r, _)| r < key);
+        RingIter {
+            buckets: &self.buckets,
+            start_bucket,
+            start_pos,
+            bucket: start_bucket,
+            pos: start_pos,
+            wrapped: false,
+        }
+    }
+
+    /// All peers in ascending ring order.
+    fn iter(&self) -> impl Iterator<Item = PeerId> + '_ {
+        self.buckets.iter().flat_map(|b| b.iter().map(|&(_, p)| p as PeerId))
+    }
+}
+
+/// See [`RingIndex::iter_from`]. Yields every online peer exactly once.
+struct RingIter<'a> {
+    buckets: &'a [Vec<(u64, u32)>],
+    start_bucket: usize,
+    start_pos: usize,
+    bucket: usize,
+    pos: usize,
+    wrapped: bool,
+}
+
+impl<'a> Iterator for RingIter<'a> {
+    type Item = PeerId;
+
+    fn next(&mut self) -> Option<PeerId> {
+        loop {
+            let closing = self.wrapped && self.bucket == self.start_bucket;
+            let bucket = &self.buckets[self.bucket];
+            let limit = if closing { self.start_pos } else { bucket.len() };
+            if self.pos < limit {
+                let (_, p) = bucket[self.pos];
+                self.pos += 1;
+                return Some(p as PeerId);
+            }
+            if closing {
+                return None;
+            }
+            self.bucket += 1;
+            self.pos = 0;
+            if self.bucket == self.buckets.len() {
+                self.bucket = 0;
+                self.wrapped = true;
+            }
+        }
+    }
+}
+
+/// The overlay: peer table plus the two online indices (sorted ring,
+/// dense sampling set).
 #[derive(Debug)]
 pub struct Overlay {
     peers: Vec<PeerState>,
-    /// ring_id -> peer, online peers only.
-    ring: BTreeMap<u64, PeerId>,
+    /// Online peers sorted by ring id.
+    ring: RingIndex,
+    /// Online peers in swap-remove order (uniform O(1) sampling).
+    online: Vec<PeerId>,
+    /// peer -> its index in `online`, [`OFFLINE`] when offline.
+    online_pos: Vec<usize>,
 }
 
 impl Overlay {
@@ -41,11 +175,11 @@ impl Overlay {
     /// ring positions, sessions starting at time 0.
     pub fn new(n: usize, rng: &mut Pcg64) -> Overlay {
         let mut peers = Vec::with_capacity(n);
-        let mut ring = BTreeMap::new();
+        let mut ring = RingIndex::with_capacity(n);
         for i in 0..n {
             // Distinct ring ids (collisions are ~impossible but be strict).
             let mut rid = rng.next_u64();
-            while ring.contains_key(&rid) {
+            while ring.contains(rid) {
                 rid = rng.next_u64();
             }
             ring.insert(rid, i);
@@ -56,7 +190,12 @@ impl Overlay {
                 sessions: 1,
             });
         }
-        Overlay { peers, ring }
+        Overlay {
+            peers,
+            ring,
+            online: (0..n).collect(),
+            online_pos: (0..n).collect(),
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -68,7 +207,8 @@ impl Overlay {
     }
 
     pub fn online_count(&self) -> usize {
-        self.ring.len()
+        debug_assert_eq!(self.ring.len(), self.online.len());
+        self.online.len()
     }
 
     pub fn peer(&self, p: PeerId) -> &PeerState {
@@ -84,8 +224,15 @@ impl Overlay {
         let st = &mut self.peers[p];
         debug_assert!(st.online, "departing an offline peer");
         st.online = false;
-        self.ring.remove(&st.ring_id);
-        now - st.session_start
+        self.ring.remove(st.ring_id);
+        let i = self.online_pos[p];
+        debug_assert!(i != OFFLINE && self.online[i] == p);
+        self.online.swap_remove(i);
+        if let Some(&moved) = self.online.get(i) {
+            self.online_pos[moved] = i;
+        }
+        self.online_pos[p] = OFFLINE;
+        now - self.peers[p].session_start
     }
 
     /// Bring `p` back online at `now` with a fresh session.
@@ -96,22 +243,18 @@ impl Overlay {
         st.session_start = now;
         st.sessions += 1;
         self.ring.insert(st.ring_id, p);
+        self.online_pos[p] = self.online.len();
+        self.online.push(p);
     }
 
     /// The `k` online successors of `p` on the ring (p's neighbour set).
     pub fn successors(&self, p: PeerId, k: usize) -> Vec<PeerId> {
         let start = self.peers[p].ring_id;
-        let mut out = Vec::with_capacity(k);
-        for (_, &q) in self.ring.range((start + 1)..).chain(self.ring.range(..=start)) {
-            if q == p {
-                continue;
-            }
-            out.push(q);
-            if out.len() == k {
-                break;
-            }
-        }
-        out
+        self.ring
+            .iter_from(start.wrapping_add(1))
+            .filter(|&q| q != p)
+            .take(k)
+            .collect()
     }
 
     /// Neighbour set used by the failure detector: successor list.
@@ -124,34 +267,71 @@ impl Overlay {
     pub fn successors_iter(&self, p: PeerId) -> impl Iterator<Item = PeerId> + '_ {
         let start = self.peers[p].ring_id;
         self.ring
-            .range((start + 1)..)
-            .chain(self.ring.range(..=start))
-            .map(|(_, &q)| q)
+            .iter_from(start.wrapping_add(1))
             .filter(move |&q| q != p)
             .take(SUCCESSORS)
     }
 
     /// The online peer owning ring key `key` (first peer clockwise).
     pub fn owner_of(&self, key: u64) -> Option<PeerId> {
-        self.ring
-            .range(key..)
-            .next()
-            .or_else(|| self.ring.iter().next())
-            .map(|(_, &p)| p)
+        self.ring.iter_from(key).next()
     }
 
-    /// Sample `k` distinct online peers (for job placement).
+    /// Sample `k` distinct online peers (for job placement). O(k) expected
+    /// for sparse draws; one O(n) scratch pass when `k` approaches the
+    /// online count.
     pub fn sample_online(&self, k: usize, rng: &mut Pcg64) -> Option<Vec<PeerId>> {
-        let online: Vec<PeerId> = self.online_ids().collect();
-        if online.len() < k {
+        let n = self.online.len();
+        if n < k {
             return None;
         }
-        let idx = rng.sample_indices(online.len(), k);
-        Some(idx.into_iter().map(|i| online[i]).collect())
+        if k * 2 >= n {
+            // Dense draw: partial Fisher–Yates over a scratch copy.
+            let mut pool = self.online.clone();
+            for i in 0..k {
+                let j = i + rng.next_below((n - i) as u64) as usize;
+                pool.swap(i, j);
+            }
+            pool.truncate(k);
+            Some(pool)
+        } else {
+            // Sparse draw: rejection against the (small) chosen set.
+            let mut out = Vec::with_capacity(k);
+            while out.len() < k {
+                let p = self.online[rng.next_below(n as u64) as usize];
+                if !out.contains(&p) {
+                    out.push(p);
+                }
+            }
+            Some(out)
+        }
     }
 
+    /// One uniformly-drawn online peer not in `exclude`, or `None` when
+    /// every online peer is excluded. O(|exclude|) plus O(1) expected
+    /// draws — the hot-path replacement for "collect all online ids and
+    /// index into them".
+    pub fn sample_online_excluding(
+        &self,
+        exclude: &[PeerId],
+        rng: &mut Pcg64,
+    ) -> Option<PeerId> {
+        let n = self.online.len();
+        let excluded_online = exclude.iter().filter(|&&p| self.is_online(p)).count();
+        if n == 0 || n <= excluded_online {
+            return None;
+        }
+        loop {
+            let p = self.online[rng.next_below(n as u64) as usize];
+            if !exclude.contains(&p) {
+                return Some(p);
+            }
+        }
+    }
+
+    /// Online peers in ascending ring order.
     pub fn online_ids(&self) -> impl Iterator<Item = PeerId> + '_ {
-        self.ring.values().copied()
+        self.ring.iter()
     }
 
     /// Finger targets for routing: the owners of ring_id + 2^i.
@@ -218,6 +398,22 @@ mod tests {
     }
 
     #[test]
+    fn successors_are_sorted_clockwise_from_p() {
+        let (o, _) = mk(40);
+        for p in 0..40 {
+            let start = o.peer(p).ring_id;
+            let succ = o.successors(p, 8);
+            assert_eq!(succ.len(), 8);
+            // Clockwise distance from p must be strictly increasing.
+            let dist =
+                |q: PeerId| o.peer(q).ring_id.wrapping_sub(start.wrapping_add(1));
+            for w in succ.windows(2) {
+                assert!(dist(w[0]) < dist(w[1]), "successors out of ring order");
+            }
+        }
+    }
+
+    #[test]
     fn owner_of_covers_whole_ring() {
         let (o, mut rng) = mk(50);
         for _ in 0..1000 {
@@ -244,6 +440,19 @@ mod tests {
     }
 
     #[test]
+    fn online_ids_are_ring_sorted() {
+        let (mut o, _) = mk(64);
+        for p in [3, 17, 40] {
+            o.depart(p, 1.0);
+        }
+        let ids: Vec<PeerId> = o.online_ids().collect();
+        assert_eq!(ids.len(), 61);
+        for w in ids.windows(2) {
+            assert!(o.peer(w[0]).ring_id < o.peer(w[1]).ring_id);
+        }
+    }
+
+    #[test]
     fn sample_online_distinct_and_online() {
         let (mut o, mut rng) = mk(30);
         for p in 0..10 {
@@ -257,6 +466,57 @@ mod tests {
         assert_eq!(d.len(), 16);
         assert!(s.iter().all(|&p| o.is_online(p)));
         assert!(o.sample_online(25, &mut rng).is_none());
+        // Sparse branch: k well under half the online population.
+        let sparse = o.sample_online(3, &mut rng).unwrap();
+        assert_eq!(sparse.len(), 3);
+        assert!(sparse.iter().all(|&p| o.is_online(p)));
+    }
+
+    #[test]
+    fn sample_online_excluding_avoids_exclusions() {
+        let (mut o, mut rng) = mk(12);
+        let exclude: Vec<PeerId> = vec![0, 1, 2, 3];
+        for _ in 0..200 {
+            let p = o.sample_online_excluding(&exclude, &mut rng).unwrap();
+            assert!(!exclude.contains(&p));
+            assert!(o.is_online(p));
+        }
+        // Everyone but one excluded peer offline -> only that peer drawable.
+        for p in 4..12 {
+            o.depart(p, 1.0);
+        }
+        o.depart(0, 1.0);
+        assert_eq!(o.online_count(), 3); // 1, 2, 3 online, all excluded
+        assert_eq!(o.sample_online_excluding(&exclude, &mut rng), None);
+        o.join(4, 2.0);
+        assert_eq!(o.sample_online_excluding(&exclude, &mut rng), Some(4));
+    }
+
+    #[test]
+    fn dense_set_and_ring_stay_consistent_under_churn() {
+        // Random depart/join storm; every step the three views (peer
+        // flags, dense vector, sorted ring) must agree exactly.
+        let (mut o, mut rng) = mk(50);
+        let mut t = 0.0;
+        for _ in 0..2000 {
+            t += 1.0;
+            let p = rng.next_below(50) as usize;
+            if o.is_online(p) {
+                if o.online_count() > 1 {
+                    o.depart(p, t);
+                }
+            } else {
+                o.join(p, t);
+            }
+        }
+        let by_flag: Vec<PeerId> = (0..50).filter(|&p| o.is_online(p)).collect();
+        let mut by_dense: Vec<PeerId> = o.sample_online(o.online_count(), &mut rng).unwrap();
+        by_dense.sort_unstable();
+        let mut by_ring: Vec<PeerId> = o.online_ids().collect();
+        by_ring.sort_unstable();
+        assert_eq!(by_flag, by_dense);
+        assert_eq!(by_flag, by_ring);
+        assert_eq!(o.online_count(), by_flag.len());
     }
 
     #[test]

@@ -36,23 +36,32 @@ impl Stabilizer {
         Stabilizer { watch: vec![Vec::new(); n_peers], period }
     }
 
-    /// Refresh `observer`'s watch list from the overlay and return
-    /// observations for watched subjects that died since the last tick.
+    /// Refresh `observer`'s watch list from the overlay, streaming an
+    /// observation into `sink` for every watched subject that died since
+    /// the last tick. Allocation-free: the per-observer watch buffer is
+    /// scanned and refilled in place — stabilization runs
+    /// `n_peers / period` times per sim-second, so this is the single
+    /// hottest call in the full-stack world.
     ///
     /// `now` is the tick time. A watched subject that is offline is
     /// reported with lifetime = (now - its watched session_start) minus
     /// half a period on average — we report the midpoint of the detection
     /// window as the best unbiased estimate.
-    pub fn tick(&mut self, overlay: &Overlay, observer: PeerId, now: f64) -> Vec<FailureObservation> {
-        let mut obs = Vec::new();
-        let mut watched = std::mem::take(&mut self.watch[observer]);
-        for (subject, session_start) in watched.drain(..) {
+    pub fn tick_with<F: FnMut(FailureObservation)>(
+        &mut self,
+        overlay: &Overlay,
+        observer: PeerId,
+        now: f64,
+        mut sink: F,
+    ) {
+        let watched = &mut self.watch[observer];
+        for &(subject, session_start) in watched.iter() {
             let st = overlay.peer(subject);
             let still_same_session = st.online && st.session_start <= session_start;
             if !still_same_session {
                 // Died (or died and rejoined) within the last period.
                 let est_end = (now - self.period / 2.0).max(session_start);
-                obs.push(FailureObservation {
+                sink(FailureObservation {
                     observer,
                     subject,
                     lifetime: est_end - session_start,
@@ -60,15 +69,21 @@ impl Stabilizer {
                 });
             }
         }
-        // Re-adopt the current neighbour set (reusing the drained buffer —
-        // stabilization runs n_peers/period times per sim-second).
+        // Re-adopt the current neighbour set, reusing the buffer.
+        watched.clear();
         for q in overlay.successors_iter(observer) {
             let st = overlay.peer(q);
             if st.online {
                 watched.push((q, st.session_start));
             }
         }
-        self.watch[observer] = watched;
+    }
+
+    /// Collecting wrapper over [`Stabilizer::tick_with`] (tests and
+    /// subsystem loops that want the observations as a `Vec`).
+    pub fn tick(&mut self, overlay: &Overlay, observer: PeerId, now: f64) -> Vec<FailureObservation> {
+        let mut obs = Vec::new();
+        self.tick_with(overlay, observer, now, |o| obs.push(o));
         obs
     }
 

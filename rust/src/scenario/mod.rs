@@ -276,14 +276,16 @@ impl Scenario {
 
     /// Run `trials` independent fast-path jobs (seed `base_seed + t`,
     /// stream `t` — the harness-wide convention, so results line up with
-    /// the experiment sweeps).
+    /// the experiment sweeps). One estimator allocation serves every
+    /// trial as reset scratch (byte-identical to per-trial construction).
     pub fn run_trials(&self, trials: u64) -> Result<Vec<JobOutcome>> {
         let churn = self.build_churn()?;
         let sim = JobSimulator::new(self.job_params(), churn.as_ref());
+        let mut est = self.build_estimator();
         let mut out = Vec::with_capacity(trials as usize);
         for t in 0..trials {
             let mut pol = self.build_policy()?;
-            out.push(sim.run(pol.as_mut(), self.seed.wrapping_add(t), t));
+            out.push(sim.run_with(pol.as_mut(), self.seed.wrapping_add(t), t, est.as_mut()));
         }
         Ok(out)
     }

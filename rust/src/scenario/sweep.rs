@@ -41,10 +41,13 @@ pub struct CellResult {
 
 /// Run one cell: `trials` independent jobs with the harness-wide seed
 /// convention (`seed + trial`, stream `trial` — identical to the
-/// sequential experiment harness).
+/// sequential experiment harness). The estimator is built once per cell
+/// and reused as reset scratch across trials (`JobSimulator::run_with`),
+/// so a worker's inner loop allocates only the per-trial policy box.
 fn run_cell(s: &Scenario, trials: u64) -> Result<CellResult> {
     let churn = s.build_churn()?;
     let sim = JobSimulator::new(s.job_params(), churn.as_ref());
+    let mut est = s.build_estimator();
     let mut wall = Running::new();
     let mut mean_interval = Running::new();
     let mut aborted = 0u64;
@@ -53,7 +56,7 @@ fn run_cell(s: &Scenario, trials: u64) -> Result<CellResult> {
     let mut completed = 0u64;
     for trial in 0..trials {
         let mut pol = s.build_policy()?;
-        let o = sim.run(pol.as_mut(), s.seed.wrapping_add(trial), trial);
+        let o = sim.run_with(pol.as_mut(), s.seed.wrapping_add(trial), trial, est.as_mut());
         wall.push(o.wall_time);
         if !o.completed {
             aborted += 1;

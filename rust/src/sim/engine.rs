@@ -1,21 +1,107 @@
-//! The discrete-event engine: a min-heap calendar with cancellation and a
-//! monotone clock.
+//! The discrete-event engine: a generation-stamped timer slab for O(1)
+//! cancellation plus a bucketed calendar wheel (with a far-future overflow
+//! heap) for O(1)-amortized scheduling of the recurring Stabilize/PeerFail
+//! flood that dominates the queue at large populations.
 //!
 //! Generic over the event payload so subsystems can run private loops in
 //! tests; the integrated world uses [`crate::sim::EventKind`].
+//!
+//! # Data-structure contract
+//!
+//! * **Slab** — every scheduled event owns a slot in a free-listed slab;
+//!   its [`EventId`] packs `(generation << 32) | slot`. Cancellation is a
+//!   single indexed compare-and-flip: no hashing, no tombstone set, and a
+//!   stale id (already fired, already cancelled, or from a recycled slot)
+//!   is rejected by the generation stamp instead of leaking state. The
+//!   slab never grows beyond the peak number of concurrently queued
+//!   events.
+//! * **Calendar wheel** — events due within `n_buckets × bucket_width` of
+//!   the cursor land in `wheel[(time >> shift) & mask]`; beyond-horizon
+//!   events overflow into a binary heap and migrate into the wheel when
+//!   the cursor reaches their bucket (each event migrates at most once).
+//!   At any instant all wheel entries fall inside one horizon window, so a
+//!   bucket never mixes "laps" and the active bucket is drained in exact
+//!   `(time, seq)` order after one `sort_unstable` — cancelled entries are
+//!   skipped lazily as they surface.
+//! * **Determinism** — events are totally ordered by `(time, seq)` where
+//!   `seq` is the schedule counter, i.e. same-time events fire in
+//!   scheduling order, bit-identically to the historical
+//!   `BinaryHeap<Reverse<Event>>` implementation (asserted by the
+//!   differential reference-model test below).
 
 use super::event::{Event, EventId};
 use super::time::{SimDuration, SimTime};
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashSet};
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// Default bucket width: `2^20` µs ≈ 1.05 s.
+const DEFAULT_SHIFT: u32 = 20;
+/// Default wheel size (buckets). Horizon ≈ 8192 × 1.05 s ≈ 2.4 h.
+const DEFAULT_BUCKETS: usize = 8192;
+
+/// A queued event: heap/bucket entry. Ordered by `(time, seq)` only.
+#[derive(Debug)]
+struct Entry<E> {
+    time: SimTime,
+    /// Monotonic schedule counter — total order for same-time events.
+    seq: u64,
+    /// Slab slot this entry occupies.
+    slot: u32,
+    /// Slot generation at schedule time (stale-entry detection).
+    gen: u32,
+    payload: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        (self.time, self.seq).cmp(&(other.time, other.seq))
+    }
+}
+
+/// One slab slot: the generation stamp plus whether the current tenant is
+/// still live (not cancelled).
+#[derive(Debug, Clone, Copy)]
+struct Slot {
+    gen: u32,
+    live: bool,
+}
 
 /// Calendar queue + clock.
 #[derive(Debug)]
 pub struct SimEngine<E> {
     now: SimTime,
-    heap: BinaryHeap<Reverse<Event<E>>>,
-    cancelled: HashSet<EventId>,
-    next_id: u64,
+    /// Generation-stamped cancellation slab + its free list.
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    /// Monotonic schedule counter (same-time FIFO order).
+    seq: u64,
+    /// The near wheel: `wheel[(time >> shift) & mask]`.
+    wheel: Vec<Vec<Entry<E>>>,
+    mask: u64,
+    shift: u32,
+    /// Absolute bucket index (`time >> shift`) the drain cursor is at.
+    cursor: u64,
+    /// Whether the cursor bucket is currently sorted (descending, so the
+    /// minimum pops from the back in O(1)).
+    cursor_sorted: bool,
+    /// Entries resident in the wheel (including cancelled ones).
+    near: usize,
+    /// Beyond-horizon overflow, min-ordered by `(time, seq)`.
+    far: BinaryHeap<Reverse<Entry<E>>>,
     processed: u64,
 }
 
@@ -27,11 +113,26 @@ impl<E> Default for SimEngine<E> {
 
 impl<E> SimEngine<E> {
     pub fn new() -> Self {
+        SimEngine::with_geometry(DEFAULT_SHIFT, DEFAULT_BUCKETS)
+    }
+
+    /// Engine with an explicit wheel geometry: bucket width `2^shift` µs,
+    /// `buckets` buckets (must be a power of two). Smaller wheels push
+    /// more traffic through the overflow heap; correctness is unaffected.
+    pub fn with_geometry(shift: u32, buckets: usize) -> Self {
+        assert!(buckets.is_power_of_two() && shift < 63);
         SimEngine {
             now: SimTime::ZERO,
-            heap: BinaryHeap::new(),
-            cancelled: HashSet::new(),
-            next_id: 0,
+            slots: Vec::new(),
+            free: Vec::new(),
+            seq: 0,
+            wheel: (0..buckets).map(|_| Vec::new()).collect(),
+            mask: (buckets - 1) as u64,
+            shift,
+            cursor: 0,
+            cursor_sorted: false,
+            near: 0,
+            far: BinaryHeap::new(),
             processed: 0,
         }
     }
@@ -46,18 +147,27 @@ impl<E> SimEngine<E> {
         self.processed
     }
 
-    /// Events still pending (including tombstoned ones not yet skipped).
+    /// Events still queued (including cancelled ones not yet drained).
     pub fn pending(&self) -> usize {
-        self.heap.len()
+        self.near + self.far.len()
+    }
+
+    /// Slab capacity — bounded by the peak number of concurrently queued
+    /// events, regardless of how many cancels have happened (diagnostics;
+    /// the regression test for the historical tombstone leak watches it).
+    pub fn slab_slots(&self) -> usize {
+        self.slots.len()
     }
 
     /// Schedule `payload` at absolute time `at` (clamped to now if earlier).
     pub fn schedule_at(&mut self, at: SimTime, payload: E) -> EventId {
-        let id = EventId(self.next_id);
-        self.next_id += 1;
         let time = at.max(self.now);
-        self.heap.push(Reverse(Event { time, id, payload }));
-        id
+        let slot = self.alloc_slot();
+        let gen = self.slots[slot as usize].gen;
+        let seq = self.seq;
+        self.seq += 1;
+        self.insert(Entry { time, seq, slot, gen, payload });
+        EventId(((gen as u64) << 32) | slot as u64)
     }
 
     /// Schedule `payload` after `delay`.
@@ -70,50 +180,61 @@ impl<E> SimEngine<E> {
         self.schedule_in(SimDuration::from_secs_f64(secs), payload)
     }
 
-    /// Cancel a scheduled event. Cancelling an already-fired or unknown id
-    /// is a no-op (returns false).
+    /// Cancel a scheduled event in O(1). Returns false (and changes
+    /// nothing) for an id that already fired, was already cancelled, or
+    /// whose slot has been recycled — stale ids can no longer leak
+    /// tombstones or cancel an unrelated later event.
     pub fn cancel(&mut self, id: EventId) -> bool {
-        if id.0 >= self.next_id {
-            return false;
+        let slot = (id.0 & 0xFFFF_FFFF) as usize;
+        let gen = (id.0 >> 32) as u32;
+        match self.slots.get_mut(slot) {
+            Some(s) if s.gen == gen && s.live => {
+                s.live = false;
+                true
+            }
+            _ => false,
         }
-        self.cancelled.insert(id)
     }
 
     /// Pop the next live event, advancing the clock. `None` when drained.
     pub fn pop(&mut self) -> Option<Event<E>> {
-        while let Some(Reverse(ev)) = self.heap.pop() {
-            if self.cancelled.remove(&ev.id) {
-                continue;
-            }
-            debug_assert!(ev.time >= self.now, "time went backwards");
-            self.now = ev.time;
-            self.processed += 1;
-            return Some(ev);
-        }
-        None
+        self.pop_until(SimTime::NEVER)
     }
 
     /// Pop the next event only if it fires at or before `limit`.
     pub fn pop_until(&mut self, limit: SimTime) -> Option<Event<E>> {
         loop {
-            let head_time = self.heap.peek().map(|Reverse(e)| (e.time, e.id))?;
-            if head_time.0 > limit {
+            let entry = self.pop_entry()?;
+            if entry.time > limit {
+                // Not due yet: back into the (sorted) cursor bucket — the
+                // minimum slides in at the drain end in O(1).
+                self.wheel[(self.cursor & self.mask) as usize].push(entry);
+                self.near += 1;
                 return None;
             }
-            if let Some(ev) = self.pop_one_checked() {
-                return Some(ev);
+            let idx = entry.slot as usize;
+            debug_assert_eq!(
+                self.slots[idx].gen, entry.gen,
+                "slab slot recycled while its entry was still queued"
+            );
+            let was_live = self.slots[idx].live;
+            // Retire the slot either way (fired, or draining a cancelled
+            // entry); the generation bump invalidates any outstanding id.
+            self.slots[idx].live = false;
+            self.slots[idx].gen = self.slots[idx].gen.wrapping_add(1);
+            self.free.push(entry.slot);
+            if !was_live {
+                continue; // cancelled: skip silently
             }
+            debug_assert!(entry.time >= self.now, "time went backwards");
+            self.now = entry.time;
+            self.processed += 1;
+            return Some(Event {
+                time: entry.time,
+                id: EventId(((entry.gen as u64) << 32) | entry.slot as u64),
+                payload: entry.payload,
+            });
         }
-    }
-
-    fn pop_one_checked(&mut self) -> Option<Event<E>> {
-        let Reverse(ev) = self.heap.pop()?;
-        if self.cancelled.remove(&ev.id) {
-            return None;
-        }
-        self.now = ev.time;
-        self.processed += 1;
-        Some(ev)
     }
 
     /// Advance the clock with no event (used when an outer loop owns time).
@@ -121,11 +242,101 @@ impl<E> SimEngine<E> {
         debug_assert!(t >= self.now);
         self.now = self.now.max(t);
     }
+
+    // ------------------------------------------------------------ internals
+
+    fn alloc_slot(&mut self) -> u32 {
+        if let Some(i) = self.free.pop() {
+            self.slots[i as usize].live = true;
+            i
+        } else {
+            let i = self.slots.len() as u32;
+            self.slots.push(Slot { gen: 0, live: true });
+            i
+        }
+    }
+
+    /// Place an entry in the wheel (in-horizon) or the overflow heap.
+    /// Bucket indices are clamped to the cursor so an entry can never land
+    /// in an already-passed bucket; within a bucket the `(time, seq)` sort
+    /// restores exact order.
+    fn insert(&mut self, entry: Entry<E>) {
+        let slot_idx = (entry.time.0 >> self.shift).max(self.cursor);
+        if slot_idx < self.cursor + self.wheel.len() as u64 {
+            let b = (slot_idx & self.mask) as usize;
+            if slot_idx == self.cursor && self.cursor_sorted {
+                let bucket = &mut self.wheel[b];
+                let pos = bucket
+                    .partition_point(|e| (e.time, e.seq) > (entry.time, entry.seq));
+                bucket.insert(pos, entry);
+            } else {
+                self.wheel[b].push(entry);
+            }
+            self.near += 1;
+        } else {
+            self.far.push(Reverse(entry));
+        }
+    }
+
+    /// Move overflow entries whose bucket the cursor has reached into the
+    /// wheel. Each entry migrates at most once over its lifetime.
+    fn migrate_due(&mut self) {
+        loop {
+            match self.far.peek() {
+                Some(Reverse(e)) if (e.time.0 >> self.shift) <= self.cursor => {}
+                _ => return,
+            }
+            let Some(Reverse(entry)) = self.far.pop() else { return };
+            let b = (self.cursor & self.mask) as usize;
+            if self.cursor_sorted {
+                let bucket = &mut self.wheel[b];
+                let pos = bucket
+                    .partition_point(|e| (e.time, e.seq) > (entry.time, entry.seq));
+                bucket.insert(pos, entry);
+            } else {
+                self.wheel[b].push(entry);
+            }
+            self.near += 1;
+        }
+    }
+
+    /// Remove and return the globally-minimum `(time, seq)` entry.
+    fn pop_entry(&mut self) -> Option<Entry<E>> {
+        loop {
+            self.migrate_due();
+            let b = (self.cursor & self.mask) as usize;
+            if !self.wheel[b].is_empty() {
+                if !self.cursor_sorted {
+                    // Descending, so the minimum pops from the back.
+                    self.wheel[b]
+                        .sort_unstable_by(|a, b| (b.time, b.seq).cmp(&(a.time, a.seq)));
+                    self.cursor_sorted = true;
+                }
+                let entry = self.wheel[b].pop().expect("non-empty bucket");
+                self.near -= 1;
+                return Some(entry);
+            }
+            if self.near > 0 {
+                self.cursor += 1;
+                self.cursor_sorted = false;
+            } else {
+                // Wheel empty: jump straight to the overflow's next bucket.
+                match self.far.peek() {
+                    None => return None,
+                    Some(Reverse(e)) => {
+                        self.cursor = e.time.0 >> self.shift;
+                        self.cursor_sorted = false;
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn fifo_within_same_time() {
@@ -189,5 +400,168 @@ mod tests {
             order
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn cancel_of_fired_event_is_rejected_without_leaking() {
+        // Regression: the historical HashSet tombstone scheme inserted any
+        // id < next_id into `cancelled` forever; cancelling an
+        // already-fired id (a) returned true and (b) leaked a tombstone.
+        let mut e: SimEngine<u32> = SimEngine::new();
+        let mut stale = Vec::new();
+        for round in 0..1000u32 {
+            let id = e.schedule_in_secs(1.0, round);
+            assert_eq!(e.pop().unwrap().payload, round);
+            assert!(!e.cancel(id), "cancel after fire must be a no-op");
+            stale.push(id);
+        }
+        // Re-cancelling every stale id leaks nothing and cancels nothing.
+        for id in &stale {
+            assert!(!e.cancel(*id));
+        }
+        assert_eq!(e.pending(), 0);
+        // The slab stays at its peak concurrency (1), not O(#cancels).
+        assert_eq!(e.slab_slots(), 1);
+    }
+
+    #[test]
+    fn stale_id_cannot_cancel_a_slots_new_tenant() {
+        let mut e: SimEngine<u32> = SimEngine::new();
+        let a = e.schedule_in_secs(1.0, 1);
+        assert_eq!(e.pop().unwrap().payload, 1);
+        // The next schedule recycles a's slot with a bumped generation.
+        let b = e.schedule_in_secs(1.0, 2);
+        assert_eq!(a.0 & 0xFFFF_FFFF, b.0 & 0xFFFF_FFFF, "slot reused");
+        assert_ne!(a, b, "generation stamp differs");
+        assert!(!e.cancel(a), "stale id must not hit the new tenant");
+        assert_eq!(e.pop().unwrap().payload, 2);
+    }
+
+    #[test]
+    fn far_horizon_events_interleave_correctly() {
+        // Events far beyond the wheel horizon (overflow heap) must still
+        // pop in global (time, seq) order against near events.
+        let mut e: SimEngine<u32> = SimEngine::with_geometry(10, 8); // 8 ms horizon
+        e.schedule_in_secs(3600.0, 3);
+        e.schedule_in_secs(0.001, 0);
+        e.schedule_in_secs(7200.0, 4);
+        e.schedule_in_secs(1800.0, 2);
+        e.schedule_in_secs(0.002, 1);
+        for want in 0..5u32 {
+            assert_eq!(e.pop().unwrap().payload, want);
+        }
+        assert!(e.pop().is_none());
+    }
+
+    /// Brute-force reference model: a flat vector scanned for the
+    /// `(time, insertion)` minimum. Deliberately too slow for production
+    /// and too simple to be wrong.
+    struct RefModel {
+        pending: Vec<(u64, u64, EventId, u32)>,
+        now: u64,
+        order: u64,
+    }
+
+    impl RefModel {
+        fn new() -> Self {
+            RefModel { pending: Vec::new(), now: 0, order: 0 }
+        }
+
+        fn schedule(&mut self, at: u64, id: EventId, payload: u32) {
+            let t = at.max(self.now);
+            self.pending.push((t, self.order, id, payload));
+            self.order += 1;
+        }
+
+        fn cancel(&mut self, id: EventId) -> bool {
+            match self.pending.iter().position(|&(_, _, i, _)| i == id) {
+                Some(p) => {
+                    self.pending.remove(p);
+                    true
+                }
+                None => false,
+            }
+        }
+
+        fn pop_until(&mut self, limit: u64) -> Option<(u64, u32)> {
+            let best = self
+                .pending
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, &(t, o, _, _))| (t, o))
+                .map(|(i, _)| i)?;
+            if self.pending[best].0 > limit {
+                return None;
+            }
+            let (t, _, _, payload) = self.pending.remove(best);
+            self.now = t;
+            Some((t, payload))
+        }
+    }
+
+    fn differential_run(shift: u32, buckets: usize, seed: u64) {
+        let mut eng: SimEngine<u32> = SimEngine::with_geometry(shift, buckets);
+        let mut reference = RefModel::new();
+        let mut rng = Pcg64::new(seed, 17);
+        let mut ids: Vec<EventId> = Vec::new();
+        let mut payload = 0u32;
+        for _ in 0..6000 {
+            match rng.next_below(6) {
+                0 | 1 => {
+                    // Mixed near/far delays, down to zero.
+                    let delay = match rng.next_below(4) {
+                        0 => rng.next_below(4),                      // sub-bucket
+                        1 => rng.next_below(1 << (shift + 3)),       // few buckets
+                        2 => rng.next_below(1 << (shift + 14)),      // across wheel
+                        _ => rng.next_below(20_000_000_000),         // far overflow
+                    };
+                    let at = eng.now().0.saturating_add(delay);
+                    payload += 1;
+                    let id = eng.schedule_at(SimTime(at), payload);
+                    reference.schedule(at, id, payload);
+                    ids.push(id);
+                }
+                2 => {
+                    if !ids.is_empty() {
+                        let id = ids[rng.next_below(ids.len() as u64) as usize];
+                        assert_eq!(eng.cancel(id), reference.cancel(id), "cancel {id:?}");
+                    }
+                }
+                3 | 4 => {
+                    let got = eng.pop().map(|ev| (ev.time.0, ev.payload));
+                    let want = reference.pop_until(u64::MAX);
+                    assert_eq!(got, want, "pop diverged");
+                }
+                _ => {
+                    let limit = eng.now().0.saturating_add(rng.next_below(1 << (shift + 6)));
+                    let got = eng.pop_until(SimTime(limit)).map(|ev| (ev.time.0, ev.payload));
+                    let want = reference.pop_until(limit);
+                    assert_eq!(got, want, "pop_until diverged");
+                }
+            }
+            assert_eq!(eng.now().0, reference.now, "clock diverged");
+        }
+        // Drain both to the end.
+        loop {
+            let got = eng.pop().map(|ev| (ev.time.0, ev.payload));
+            let want = reference.pop_until(u64::MAX);
+            assert_eq!(got, want, "drain diverged");
+            if got.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn matches_reference_model_default_geometry() {
+        differential_run(DEFAULT_SHIFT, DEFAULT_BUCKETS, 91);
+    }
+
+    #[test]
+    fn matches_reference_model_tiny_wheel() {
+        // A 4-bucket wheel forces constant overflow migration and cursor
+        // wraps — the stress geometry for the calendar bookkeeping.
+        differential_run(4, 4, 92);
+        differential_run(1, 2, 93);
     }
 }

@@ -2,14 +2,16 @@
 //! tokens.
 
 use super::time::SimTime;
-use std::cmp::Ordering;
 
 /// Handle for a scheduled event; used to cancel it before it fires.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct EventId(pub u64);
 
-/// Heap entry. Ordered by `(time, seq)` so same-time events fire in
-/// scheduling order — deterministic across runs.
+/// A fired event as returned by [`crate::sim::SimEngine::pop`]. Firing
+/// order is the engine's concern — events are dispatched in exact
+/// `(time, schedule-order)` sequence; `id` is the slab handle the event
+/// was scheduled under (generation-stamped, so recycled values carry no
+/// ordering meaning).
 #[derive(Debug, Clone)]
 pub struct Event<E> {
     pub time: SimTime,
@@ -42,6 +44,28 @@ pub enum EventKind {
     JobDone { job: usize },
 }
 
+impl EventKind {
+    /// The job epoch a job-scoped event belongs to (`None` for
+    /// network-level events). The world stamps job-scoped events with the
+    /// epoch of the `run_job` call that scheduled them and drops
+    /// mismatches on dispatch, so a timer from job N (a pending `Replan`,
+    /// a late `MemberFailDetected`, a stale transfer completion) can never
+    /// fire into job N+1.
+    pub fn job_scope(&self) -> Option<usize> {
+        match self {
+            EventKind::JobTimer { job, .. }
+            | EventKind::MemberFailDetected { job, .. }
+            | EventKind::UploadDone { job, .. }
+            | EventKind::DownloadDone { job, .. }
+            | EventKind::JobDone { job } => Some(*job),
+            EventKind::PeerJoin { .. }
+            | EventKind::PeerFail { .. }
+            | EventKind::Stabilize { .. }
+            | EventKind::Deliver { .. } => None,
+        }
+    }
+}
+
 /// What a job timer means when it fires.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum JobTimerKind {
@@ -61,29 +85,35 @@ impl<E> PartialEq for Event<E> {
 
 impl<E> Eq for Event<E> {}
 
-impl<E> PartialOrd for Event<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl<E> Ord for Event<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // BinaryHeap is a max-heap; engine wraps in Reverse for min-order.
-        (self.time, self.id).cmp(&(other.time, other.id))
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
-    fn ordering_time_then_seq() {
+    fn job_scope_tags_job_events_only() {
+        assert_eq!(EventKind::JobDone { job: 3 }.job_scope(), Some(3));
+        assert_eq!(
+            EventKind::JobTimer { job: 7, what: JobTimerKind::Replan }.job_scope(),
+            Some(7)
+        );
+        assert_eq!(
+            EventKind::MemberFailDetected { job: 2, peer: 9 }.job_scope(),
+            Some(2)
+        );
+        assert_eq!(EventKind::UploadDone { job: 4, seq: 1 }.job_scope(), Some(4));
+        assert_eq!(EventKind::DownloadDone { job: 5, seq: 1 }.job_scope(), Some(5));
+        assert_eq!(EventKind::PeerFail { peer: 1 }.job_scope(), None);
+        assert_eq!(EventKind::PeerJoin { peer: 1 }.job_scope(), None);
+        assert_eq!(EventKind::Stabilize { peer: 1 }.job_scope(), None);
+        assert_eq!(EventKind::Deliver { dst: 1, msg_id: 0 }.job_scope(), None);
+    }
+
+    #[test]
+    fn events_compare_by_time_and_id() {
         let a = Event { time: SimTime(5), id: EventId(1), payload: () };
-        let b = Event { time: SimTime(5), id: EventId(2), payload: () };
+        let b = Event { time: SimTime(5), id: EventId(1), payload: () };
         let c = Event { time: SimTime(4), id: EventId(9), payload: () };
-        assert!(a < b);
-        assert!(c < a);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
     }
 }

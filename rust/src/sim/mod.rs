@@ -1,10 +1,11 @@
 //! Discrete-event simulation core.
 //!
-//! The engine is a classic calendar loop over a binary heap keyed by
-//! [`time::SimTime`] (integer microseconds — deterministic ordering, no
-//! float drift). Everything in the framework — churn, overlay maintenance,
-//! message delivery, checkpoint uploads, job progress — is an [`event`]
-//! processed by a handler registered with the [`engine::SimEngine`].
+//! The engine is a generation-stamped timer slab (O(1) cancel) over a
+//! bucketed calendar wheel keyed by [`time::SimTime`] (integer
+//! microseconds — deterministic ordering, no float drift). Everything in
+//! the framework — churn, overlay maintenance, message delivery,
+//! checkpoint uploads, job progress — is an [`event`] processed by a
+//! handler registered with the [`engine::SimEngine`].
 
 pub mod engine;
 pub mod event;

@@ -180,6 +180,83 @@ fn sweep_output_is_thread_count_invariant() {
 }
 
 #[test]
+fn fixture_cells_pin_outcomes_across_refactors() {
+    // Seed-equivalence fixture for hot-path refactors, in two layers.
+    //
+    // Layer 1 — churn-free cells whose JobOutcomes are *analytically*
+    // exact: every timestamp in the trajectory is an exact binary f64, so
+    // any change to the simulator's arithmetic, event ordering, estimator
+    // window bookkeeping or scratch reuse shows up as a bit-level
+    // mismatch against these recorded values.
+    for &(interval, v, runtime, want_cps) in &[
+        (600.0, 20.0, 1800.0, 2u64),
+        (300.0, 5.0, 3600.0, 11),
+        (900.0, 50.0, 1800.0, 1),
+        (700.0, 20.0, 1800.0, 2),
+    ] {
+        let s = Scenario::builder()
+            .mtbf(1e15)
+            .runtime(runtime)
+            .v(v)
+            .td(50.0)
+            .policy(PolicySpec::Fixed { interval })
+            .seed(123)
+            .build()
+            .unwrap();
+        let o = s.run_trials(1).unwrap().remove(0);
+        let label = format!("fixed:{interval} v:{v} r:{runtime}");
+        assert!(o.completed, "{label}");
+        assert_eq!(o.failures, 0, "{label}");
+        assert_eq!(o.checkpoints, want_cps, "{label}");
+        let want_wall = runtime + want_cps as f64 * v;
+        assert_eq!(o.wall_time, want_wall, "{label}: wall must be bit-exact");
+        assert_eq!(o.wasted, 0.0, "{label}");
+        assert_eq!(o.overhead_restart, 0.0, "{label}");
+        assert_eq!(o.overhead_checkpoint, want_cps as f64 * v, "{label}");
+        assert_eq!(o.efficiency, runtime / want_wall, "{label}");
+    }
+
+    // Layer 2 — a churny grid where exact values cannot be hand-derived:
+    // pin that (a) repeated runs are byte-identical and (b) the
+    // scratch-reusing Scenario surface (`run_trials` -> `run_with` with
+    // estimator reset) is byte-identical to a direct JobSimulator
+    // reconstruction that builds a fresh estimator per trial.
+    for mtbf in [3600.0, 7200.0] {
+        for policy in [PolicySpec::Adaptive, PolicySpec::Fixed { interval: 300.0 }] {
+            for estimator in [EstimatorSpec::Mle, EstimatorSpec::Ewma { alpha: 0.1 }] {
+                let s = Scenario::builder()
+                    .mtbf(mtbf)
+                    .runtime(3600.0)
+                    .policy(policy.clone())
+                    .estimator(estimator.clone())
+                    .seed(29)
+                    .build()
+                    .unwrap();
+                let trials = 3u64;
+                let via_scenario = s.run_trials(trials).unwrap();
+                assert_eq!(
+                    via_scenario,
+                    s.run_trials(trials).unwrap(),
+                    "mtbf {mtbf} {policy:?} {estimator:?}: repeat determinism"
+                );
+                let churn = s.build_churn().unwrap();
+                let sim = JobSimulator::new(s.job_params(), churn.as_ref());
+                for (t, want) in via_scenario.iter().enumerate() {
+                    let mut pol = s.build_policy().unwrap();
+                    let direct =
+                        sim.run(pol.as_mut(), s.seed.wrapping_add(t as u64), t as u64);
+                    assert_eq!(
+                        &direct, want,
+                        "mtbf {mtbf} {policy:?} {estimator:?} trial {t}: \
+                         scratch-reuse path diverged from fresh-estimator path"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn estimator_plugs_into_fast_path() {
     // Swapping the estimator through the scenario changes the adaptive
     // trajectory but still completes the job.
