@@ -1,8 +1,11 @@
 //! L3 perf: simulator throughput — the fast-path jobs/second, the DES
-//! event rate of the full-stack world at 1k/10k/100k peers, and the
-//! overlay routing rate. §Perf in DESIGN.md tracks these before/after
-//! optimization; CI uploads the JSON so the bench trajectory accrues per
-//! PR.
+//! event rate of the full-stack world at 1k/10k/100k peers, the
+//! data-plane maintenance rate (chunk transfers/s and repair sweeps/s,
+//! dirty-queue vs full-rescan reference, at 1k/10k/100k peers under
+//! `replicate:3` and `erasure:4:2`), and the overlay routing rate. §Perf
+//! in DESIGN.md tracks these before/after optimization; CI uploads the
+//! JSON so the bench trajectory accrues per PR, and the latest full-tier
+//! run is committed at the repo root as `BENCH_perf_sim.json`.
 //!
 //! ```text
 //! cargo bench --bench perf_sim                        # full tiers
@@ -16,10 +19,16 @@
 //! 1 full / 0 quick).
 
 use p2pcp::coordinator::job::JobSimulator;
+use p2pcp::dataplane::{
+    DataPlane, Endpoint, StorageSpec, TransferScheduler, DEFAULT_SERVER_BPS,
+};
 use p2pcp::experiments::bench_support::{is_quick, report_throughput, report_timing, time_it};
+use p2pcp::net::bandwidth::BandwidthModel;
+use p2pcp::net::overlay::Overlay;
 use p2pcp::net::routing::{route, HopLatency};
 use p2pcp::policy::FixedPolicy;
 use p2pcp::scenario::Scenario;
+use p2pcp::storage::image::CheckpointImage;
 use p2pcp::util::json::Json;
 use p2pcp::util::rng::Pcg64;
 
@@ -115,6 +124,120 @@ fn main() {
         ]));
     }
 
+    // --- data-plane tier: chunk transfers/s + repair sweeps/s --------------
+    // Per (peer count, storage strategy): a store holding peers/16 images
+    // is driven through depart-32 → sweep → rejoin-32 → sweep rounds, once
+    // with the dirty-queue sweep and once with the full-rescan reference
+    // on an identically-seeded world; IoCounters are asserted identical
+    // (the bit-identity contract) and the wall-clock ratio is the
+    // "churn-proportional vs stored-state-proportional" figure of merit.
+    let dp_tiers: &[usize] = if quick { &[1_000] } else { &[1_000, 10_000, 100_000] };
+    let dp_rounds = if quick { 2 } else { 5 };
+    let mut dataplane_rows: Vec<Json> = Vec::new();
+    for &n_peers in dp_tiers {
+        // Chunk-transfer scheduling throughput (slab busy maps), once per
+        // population size.
+        let mut rng = Pcg64::new(77, n_peers as u64);
+        let links = BandwidthModel::default().sample_population(n_peers, &mut rng);
+        let n_transfers: u64 = if quick { 20_000 } else { 200_000 };
+        let mut sched = TransferScheduler::new(DEFAULT_SERVER_BPS);
+        let r_xfer = time_it(warmup_iters, repeats, || {
+            for i in 0..n_transfers as usize {
+                let src = Endpoint::Peer(i % n_peers);
+                let dst = Endpoint::Peer((i * 7 + 1) % n_peers);
+                std::hint::black_box(sched.transfer(0.0, src, dst, 4e6, &links, false));
+            }
+        });
+        let xfer_label = format!("dataplane: chunk transfers (n={n_peers})");
+        report_throughput(&xfer_label, n_transfers as f64, &r_xfer);
+        let transfers_per_s = n_transfers as f64 / r_xfer.mean();
+
+        for (label, spec) in [
+            ("replicate:3", StorageSpec::Replicate { replicas: 3 }),
+            ("erasure:4:2", StorageSpec::Erasure { data: 4, parity: 2 }),
+        ] {
+            let images = (n_peers / 16).max(4);
+            let churn_k = 32.min(n_peers / 4);
+            // One phase: identically-seeded world + store, churn rounds
+            // driven by the chosen sweep implementation.
+            let phase = |full: bool| {
+                let mut rng = Pcg64::new(1234, n_peers as u64);
+                let mut overlay = Overlay::new(n_peers, &mut rng);
+                let links = BandwidthModel::default().sample_population(n_peers, &mut rng);
+                let mut dp = DataPlane::new(spec);
+                for job in 0..images {
+                    dp.put(
+                        0.0,
+                        &overlay,
+                        &links,
+                        job % n_peers,
+                        CheckpointImage::new(job, 1, 0.0, 8e6),
+                    )
+                    .expect("placement");
+                }
+                let mut t = 10.0;
+                let r = time_it(warmup_iters, repeats, || {
+                    for _ in 0..dp_rounds {
+                        let departed =
+                            overlay.sample_online(churn_k, &mut rng).expect("enough online");
+                        for &p in &departed {
+                            overlay.depart(p, t);
+                        }
+                        t += 1.0;
+                        if full {
+                            dp.repair_sweep_full(t, &overlay, &links);
+                        } else {
+                            dp.repair_sweep(t, &overlay, &links);
+                        }
+                        for &p in &departed {
+                            overlay.join(p, t);
+                        }
+                        t += 1.0;
+                        if full {
+                            dp.repair_sweep_full(t, &overlay, &links);
+                        } else {
+                            dp.repair_sweep(t, &overlay, &links);
+                        }
+                    }
+                });
+                (dp.counters().clone(), r)
+            };
+            let (c_inc, r_inc) = phase(false);
+            let (c_full, r_full) = phase(true);
+            assert_eq!(
+                c_inc, c_full,
+                "dirty-queue sweep must be bit-identical to the full rescan \
+                 (n={n_peers}, {label})"
+            );
+            let sweeps_per_invocation = 2.0 * dp_rounds as f64;
+            let label_line =
+                format!("dataplane: repair sweeps (n={n_peers}, {label}, {images} images)");
+            report_throughput(&label_line, sweeps_per_invocation, &r_inc);
+            let speedup = r_full.mean() / r_inc.mean();
+            println!(
+                "{label_line:<60} {speedup:>10.1}x vs full rescan ({:.3} ms -> {:.3} ms)",
+                r_full.mean() * 1e3,
+                r_inc.mean() * 1e3,
+            );
+            dataplane_rows.push(Json::obj(vec![
+                ("n_peers", Json::Num(n_peers as f64)),
+                ("storage", Json::Str(label.into())),
+                ("images", Json::Num(images as f64)),
+                ("churned_per_round", Json::Num(churn_k as f64)),
+                ("chunk_transfers_per_s", Json::Num(transfers_per_s)),
+                (
+                    "sweeps_per_s_incremental",
+                    Json::Num(sweeps_per_invocation / r_inc.mean()),
+                ),
+                (
+                    "sweeps_per_s_full_rescan",
+                    Json::Num(sweeps_per_invocation / r_full.mean()),
+                ),
+                ("sweep_speedup", Json::Num(speedup)),
+            ]));
+        }
+    }
+
     // --- overlay routing ----------------------------------------------------
     let mut rng = Pcg64::new(5, 0);
     let overlay = Scenario::builder()
@@ -149,6 +272,7 @@ fn main() {
                 ]),
             ),
             ("world", Json::Arr(world_rows)),
+            ("dataplane", Json::Arr(dataplane_rows)),
             (
                 "routing",
                 Json::obj(vec![
@@ -157,8 +281,21 @@ fn main() {
                 ]),
             ),
         ]);
-        match std::fs::write(&path, doc.to_pretty() + "\n") {
-            Ok(()) => println!("[perf json written to {path}]"),
+        // Cargo runs bench binaries with CWD set to the *package* root
+        // (rust/), while CI and the committed trajectory live at the
+        // workspace root — anchor relative paths there (via the runtime
+        // CARGO_MANIFEST_DIR cargo exports to bench processes, so no
+        // build-machine path is baked in) so `--json BENCH_perf_sim.json`
+        // lands at the repo root; direct binary invocation keeps plain
+        // CWD-relative semantics.
+        let out = match std::env::var("CARGO_MANIFEST_DIR") {
+            Ok(manifest) if !std::path::Path::new(&path).is_absolute() => {
+                std::path::Path::new(&manifest).join("..").join(&path)
+            }
+            _ => std::path::PathBuf::from(&path),
+        };
+        match std::fs::write(&out, doc.to_pretty() + "\n") {
+            Ok(()) => println!("[perf json written to {}]", out.display()),
             Err(e) => {
                 eprintln!("[perf json write failed: {e}]");
                 std::process::exit(1);

@@ -1,6 +1,9 @@
 //! Server I/O-offload sweep — the paper's Fig. 1 motivation as a tracked
 //! experiment: server bytes/s under `server` vs `replicate:3` vs
-//! `erasure:4:2` checkpoint storage across overlay size × image size.
+//! `erasure:4:2` checkpoint storage across overlay size × image size,
+//! plus the mean server-link backlog (seconds of queued transfer work —
+//! the queue-depth signal the `dataplane.server_backlog` world gauge
+//! samples every stabilization period).
 //!
 //! Expect the P2P strategies to carry the bulk bytes on peer links with
 //! the server reduced to per-chunk placement metadata — at 400 peers the

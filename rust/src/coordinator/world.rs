@@ -423,12 +423,21 @@ impl World {
             // Data-plane maintenance rides the stabilization cadence —
             // throttled to one sweep per period (every peer fires its own
             // Stabilize event; n_peers sweeps per period would be waste).
+            // The sweep drains the churn-dirty queue in O(affected); the
+            // journal is compacted up to the store's cursor afterwards so
+            // it never outgrows one period of churn.
             if now - self.last_repair >= self.cfg.stab_period {
                 self.last_repair = now;
                 let repaired = self.store.repair_sweep(now, &self.overlay, &self.links);
                 if repaired > 0 {
                     self.metrics.add("dataplane.chunks_repaired", repaired as u64);
                 }
+                self.overlay.compact_churn(self.store.churn_cursor());
+                // Fig. 1's server-queue signal, sampled on the same
+                // cadence so sweeps expose it without a dedicated
+                // offload experiment.
+                self.metrics
+                    .set("dataplane.server_backlog", self.store.sched.server_backlog(now));
             }
         }
         self.engine
@@ -479,6 +488,8 @@ impl World {
         // Restart: fetch the latest retrievable image through the
         // data-plane (charges download/reconstruction transfer counters;
         // wall-clock timing still follows the configured/derived T_d).
+        // The restore path hands back a borrow — only the two scalars the
+        // restart math needs are copied out, no image clone.
         let downloader = self
             .job
             .as_ref()
@@ -487,17 +498,17 @@ impl World {
         let latest = self
             .store
             .restore(now, &self.overlay, &self.links, downloader, 0)
-            .map(|(img, _)| img);
+            .map(|(img, _)| (img.progress, img.bytes));
         let job = self.job.as_mut().unwrap();
         let (restore_to, dl) = match latest {
-            Some(img) => {
+            Some((progress, bytes)) => {
                 let links: Vec<LinkSpeed> =
                     job.members.iter().map(|&m| self.links[m]).collect();
                 let dl = self
                     .cfg
                     .td
-                    .unwrap_or_else(|| download_time(img.bytes / job.members.len() as f64, &links));
-                (img.progress, dl)
+                    .unwrap_or_else(|| download_time(bytes / job.members.len() as f64, &links));
+                (progress, dl)
             }
             None => (0.0, self.cfg.td.unwrap_or(5.0)), // scratch restart
         };

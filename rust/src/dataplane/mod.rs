@@ -24,6 +24,11 @@
 //!   churn-driven repair, epoch GC, and **byte-conservation accounting**
 //!   (`Σ stored_bytes(endpoint)` ≡ `Σ chunks bytes × holders` at all
 //!   times — audited, property-tested in `rust/tests/dataplane.rs`).
+//!   Maintenance is **churn-proportional**: an inverted holder index fed
+//!   by the overlay's churn journal keeps per-image live-copy counters
+//!   current and enqueues only churn-affected images for the repair
+//!   sweep, with outcomes bit-identical to the full-rescan reference
+//!   (`DataPlane::repair_sweep_full`, differentially property-tested).
 //!
 //! String keys (`"server"`, `"replicate:3"`, `"erasure:4:2"`) live in
 //! [`crate::scenario::registry`]; `Scenario::builder().storage(..)` is the

@@ -51,15 +51,24 @@ impl ChunkPlacement {
 /// Candidate peers for key `key`: the owner followed by its successors
 /// (online peers only), deduplicated, at most `want`.
 pub fn candidates(overlay: &Overlay, key: u64, want: usize) -> Vec<PeerId> {
+    let mut out = Vec::new();
+    candidates_into(overlay, key, want, &mut out);
+    out
+}
+
+/// [`candidates`] into a caller-owned scratch buffer (cleared first) —
+/// the repair hot path reuses one allocation across images.
+pub fn candidates_into(overlay: &Overlay, key: u64, want: usize, out: &mut Vec<PeerId>) {
+    out.clear();
     let Some(owner) = overlay.owner_of(key) else {
-        return Vec::new();
+        return;
     };
     let want = want.max(1);
-    let mut out = vec![owner];
+    out.push(owner);
     if want > 1 {
-        // (`Overlay::successors` never yields the start peer, so the
+        // (`Overlay::successors_from` never yields the start peer, so the
         // `contains` check only guards ring wrap-around duplicates.)
-        for s in overlay.successors(owner, want - 1) {
+        for s in overlay.successors_from(owner, want - 1) {
             if out.len() >= want {
                 break;
             }
@@ -68,7 +77,6 @@ pub fn candidates(overlay: &Overlay, key: u64, want: usize) -> Vec<PeerId> {
             }
         }
     }
-    out
 }
 
 /// Place `chunks` for the image keyed `key` under `spec`. Returns `None`

@@ -9,16 +9,36 @@
 //! departed peers before crediting their replacements, and `gc` debits
 //! every copy of every dropped image — nothing leaks, nothing is counted
 //! twice.
+//!
+//! # Churn-proportional maintenance
+//!
+//! Every maintenance cost is proportional to **churn**, not to stored
+//! state (the differential property test in `rust/tests/dataplane.rs`
+//! proves the outcomes bit-identical to the full-rescan reference,
+//! [`DataPlane::repair_sweep_full`]):
+//!
+//! * an **inverted holder index** (`peer → (job, seq) → chunk indices`)
+//!   is maintained on `put`/`repair`/`gc`; replaying the overlay's churn
+//!   journal ([`DataPlane::sync_churn`]) touches only the images the
+//!   churned peer actually holds;
+//! * per-image **live-copy counters** ([`LiveState`]) are updated by the
+//!   same replay, so `available`/`get`/`latest` answer recoverability in
+//!   O(1) (with a full-scan fallback whenever the store is queried
+//!   against an overlay state it has not synced to);
+//! * churn enqueues affected images into a **dirty queue** that
+//!   [`DataPlane::repair_sweep`] drains in deterministic key order — a
+//!   quiet period costs nothing (and allocates nothing, asserted in
+//!   `rust/tests/dataplane_alloc.rs`).
 
 use super::chunk::{chunk_image, group_data_counts, Chunk, DEFAULT_CHUNK_BYTES};
-use super::placement::{candidates, place_chunks, ChunkPlacement, Endpoint};
+use super::placement::{candidates_into, place_chunks, ChunkPlacement, Endpoint};
 use super::transfer::{IoCounters, TransferScheduler, DEFAULT_SERVER_BPS};
 use super::StorageSpec;
 use crate::metrics::Metrics;
 use crate::net::bandwidth::LinkSpeed;
 use crate::net::overlay::{Overlay, PeerId};
 use crate::storage::image::CheckpointImage;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Control-plane metadata charged against the server per chunk commit
 /// (placement registration at the work pool). This is what keeps the
@@ -27,12 +47,127 @@ use std::collections::BTreeMap;
 /// longer does.
 pub const CHUNK_META_BYTES: f64 = 256.0;
 
+/// Image key: (job, checkpoint sequence).
+type ImgKey = (usize, u64);
+
+/// Incrementally-maintained recoverability state of one stored image.
+///
+/// Every chunk belongs to a **recovery group**: its parity group under
+/// erasure, or a singleton group (need 1) otherwise. The image is
+/// recoverable iff no group has fewer live chunks than it needs
+/// (`bad_groups == 0`), where a chunk is live iff its integrity tag
+/// verifies and at least one holder is online. The counters are updated
+/// on holder churn ([`LiveState::holder_flip`]) and holder replacement,
+/// never rescanned; a `debug_assert` in the query path cross-checks them
+/// against the scan-based reference.
+#[derive(Debug, Clone)]
+struct LiveState {
+    /// Online holder count per chunk.
+    online: Vec<u32>,
+    /// Cached per-chunk integrity verification (chunks are immutable
+    /// once placed).
+    ok: Vec<bool>,
+    /// Recovery group of each chunk.
+    group_of: Vec<u32>,
+    /// Live chunk count per group.
+    group_live: Vec<u32>,
+    /// Live chunks required per group.
+    group_need: Vec<u32>,
+    /// Number of groups with `group_live < group_need`.
+    bad_groups: usize,
+}
+
+impl LiveState {
+    fn build(
+        spec: &StorageSpec,
+        overlay: &Overlay,
+        chunks: &[Chunk],
+        placement: &ChunkPlacement,
+    ) -> LiveState {
+        let n = chunks.len();
+        let (group_of, group_need): (Vec<u32>, Vec<u32>) = match spec {
+            StorageSpec::Erasure { .. } => (
+                chunks.iter().map(|c| c.group as u32).collect(),
+                group_data_counts(chunks).iter().map(|&x| x as u32).collect(),
+            ),
+            // Singleton groups: every chunk must stay individually live.
+            _ => ((0..n as u32).collect(), vec![1u32; n]),
+        };
+        let mut st = LiveState {
+            online: vec![0; n],
+            ok: chunks.iter().map(|c| c.verify()).collect(),
+            group_live: vec![0; group_need.len()],
+            group_of,
+            group_need,
+            bad_groups: 0,
+        };
+        for (i, h) in placement.holders.iter().enumerate() {
+            st.online[i] = h.iter().filter(|e| e.is_online(overlay)).count() as u32;
+            if st.ok[i] && st.online[i] > 0 {
+                st.group_live[st.group_of[i] as usize] += 1;
+            }
+        }
+        st.bad_groups =
+            st.group_live.iter().zip(&st.group_need).filter(|(l, need)| l < need).count();
+        st
+    }
+
+    fn recoverable(&self) -> bool {
+        self.bad_groups == 0
+    }
+
+    fn chunk_live(&self, idx: usize) -> bool {
+        self.ok[idx] && self.online[idx] > 0
+    }
+
+    /// One holder of chunk `idx` flipped online (`+1`) or offline (`-1`).
+    fn holder_flip(&mut self, idx: usize, delta: i32) {
+        let was_live = self.chunk_live(idx);
+        let next = self.online[idx] as i64 + delta as i64;
+        debug_assert!(next >= 0, "online holder count underflow on chunk {idx}");
+        self.online[idx] = next.max(0) as u32;
+        let is_live = self.chunk_live(idx);
+        if was_live == is_live {
+            return;
+        }
+        let g = self.group_of[idx] as usize;
+        if is_live {
+            self.group_live[g] += 1;
+            if self.group_live[g] == self.group_need[g] {
+                self.bad_groups -= 1;
+            }
+        } else {
+            if self.group_live[g] == self.group_need[g] {
+                self.bad_groups += 1;
+            }
+            self.group_live[g] -= 1;
+        }
+    }
+}
+
 /// One stored (chunked, placed) checkpoint image.
 #[derive(Debug, Clone)]
 struct StoredImage {
     image: CheckpointImage,
     chunks: Vec<Chunk>,
     placement: ChunkPlacement,
+    live: LiveState,
+}
+
+/// Reusable scratch buffers for the repair/restore hot paths (taken with
+/// `mem::take` for the duration of a call so field borrows never fight).
+#[derive(Debug, Default)]
+struct Scratch {
+    keys: Vec<ImgKey>,
+    cands: Vec<PeerId>,
+    live: Vec<Endpoint>,
+    dead: Vec<Endpoint>,
+    new_holders: Vec<Endpoint>,
+    sources: Vec<Endpoint>,
+    group_holders: Vec<Endpoint>,
+    old_holders: Vec<Endpoint>,
+    plan: Vec<(Endpoint, f64)>,
+    fetched: Vec<u32>,
 }
 
 /// The checkpoint data-plane store.
@@ -42,11 +177,24 @@ pub struct DataPlane {
     chunk_bytes: f64,
     /// (job, seq) -> stored image. `BTreeMap` so sweeps, audits and float
     /// accumulations run in one deterministic order.
-    images: BTreeMap<(usize, u64), StoredImage>,
+    images: BTreeMap<ImgKey, StoredImage>,
     /// Incrementally-maintained stored bytes per peer.
     peer_stored: BTreeMap<PeerId, f64>,
     /// Incrementally-maintained stored bytes at the server.
     server_stored: f64,
+    /// Inverted holder index: peer id -> images -> chunk indices that
+    /// peer holds (dead holders stay indexed until superseded, mirroring
+    /// the placement's holder lists exactly).
+    holder_index: Vec<BTreeMap<ImgKey, Vec<u32>>>,
+    /// Images needing repair attention, drained in ascending key order.
+    dirty: BTreeSet<ImgKey>,
+    /// Overlay instance the live-state counters are synced against
+    /// (0 = never attached).
+    sync_token: u64,
+    /// Churn-journal cursor into that overlay.
+    sync_cursor: u64,
+    /// Hot-path scratch buffers.
+    scratch: Scratch,
     /// Transfer timing + per-endpoint byte counters.
     pub sched: TransferScheduler,
 }
@@ -63,6 +211,11 @@ impl DataPlane {
             images: BTreeMap::new(),
             peer_stored: BTreeMap::new(),
             server_stored: 0.0,
+            holder_index: Vec::new(),
+            dirty: BTreeSet::new(),
+            sync_token: 0,
+            sync_cursor: 0,
+            scratch: Scratch::default(),
             sched: TransferScheduler::new(server_bps),
         }
     }
@@ -129,19 +282,116 @@ impl DataPlane {
         (self.total_stored_bytes(), recomputed)
     }
 
+    // ------------------------------------------------- inverted index
+
+    fn index_add(&mut self, p: PeerId, key: ImgKey, chunk: u32) {
+        if p >= self.holder_index.len() {
+            self.holder_index.resize_with(p + 1, BTreeMap::new);
+        }
+        self.holder_index[p].entry(key).or_default().push(chunk);
+    }
+
+    fn index_remove(&mut self, p: PeerId, key: ImgKey, chunk: u32) {
+        let entry = self
+            .holder_index
+            .get_mut(p)
+            .and_then(|m| m.get_mut(&key));
+        let Some(v) = entry else {
+            debug_assert!(false, "holder index missing peer {p} for image {key:?}");
+            return;
+        };
+        match v.iter().position(|&c| c == chunk) {
+            Some(pos) => {
+                v.swap_remove(pos);
+            }
+            None => debug_assert!(false, "holder index missing chunk {chunk} of {key:?}"),
+        }
+        if v.is_empty() {
+            self.holder_index[p].remove(&key);
+        }
+    }
+
+    // ---------------------------------------------------- churn replay
+
+    /// Replay the overlay's churn journal into the holder index's
+    /// live-copy counters and the repair dirty queue — O(affected
+    /// chunks), independent of how many images are stored. Called by
+    /// every `&mut self` entry point; `&self` queries fall back to the
+    /// scan path whenever the store has not synced to the overlay state
+    /// they are asked about.
+    pub fn sync_churn(&mut self, overlay: &Overlay) {
+        if self.sync_token != overlay.token() || self.sync_cursor < overlay.churn_horizon() {
+            // First attach, a different overlay instance, or a journal
+            // compacted past our cursor (another consumer of the same
+            // overlay advanced the horizon — replaying would silently
+            // miss the compacted flips): rebuild every image's live
+            // state against this overlay's current membership and let
+            // the sweep re-examine everything.
+            self.sync_token = overlay.token();
+            self.sync_cursor = overlay.churn_seq();
+            let peer_hosted = self.spec.peer_hosted();
+            for (key, si) in self.images.iter_mut() {
+                si.live = LiveState::build(&self.spec, overlay, &si.chunks, &si.placement);
+                if peer_hosted {
+                    self.dirty.insert(*key);
+                }
+            }
+            return;
+        }
+        let seq = overlay.churn_seq();
+        if self.sync_cursor == seq {
+            return;
+        }
+        for ev in overlay.churn_events_since(self.sync_cursor) {
+            let p = ev.peer as usize;
+            let Some(held) = self.holder_index.get(p) else {
+                continue;
+            };
+            let delta = if ev.online { 1 } else { -1 };
+            for (key, idxs) in held {
+                let si = self.images.get_mut(key).expect("index references a stored image");
+                for &i in idxs {
+                    si.live.holder_flip(i as usize, delta);
+                }
+                // Departure may demand repair; arrival may un-block one
+                // (a rejoining holder revives its group). Either way the
+                // sweep re-examines exactly this image.
+                self.dirty.insert(*key);
+            }
+        }
+        self.sync_cursor = seq;
+    }
+
+    /// Journal cursor (for the overlay owner's `compact_churn`).
+    pub fn churn_cursor(&self) -> u64 {
+        self.sync_cursor
+    }
+
+    /// Images currently queued for repair attention (diagnostics).
+    pub fn dirty_len(&self) -> usize {
+        self.dirty.len()
+    }
+
     // ------------------------------------------------------- liveness
 
-    fn chunk_live(overlay: &Overlay, c: &Chunk, holders: &[Endpoint]) -> bool {
+    /// Are the live-copy counters valid for this exact overlay state?
+    fn fresh(&self, overlay: &Overlay) -> bool {
+        self.sync_token == overlay.token() && self.sync_cursor == overlay.churn_seq()
+    }
+
+    fn chunk_live_scan(overlay: &Overlay, c: &Chunk, holders: &[Endpoint]) -> bool {
         c.verify() && holders.iter().any(|h| h.is_online(overlay))
     }
 
-    fn recoverable(&self, overlay: &Overlay, si: &StoredImage) -> bool {
-        match self.spec {
+    /// Scan-based recoverability (the pre-index reference; also the
+    /// fallback for queries against an unsynced overlay state).
+    fn recoverable_scan(spec: &StorageSpec, overlay: &Overlay, si: &StoredImage) -> bool {
+        match spec {
             StorageSpec::Erasure { .. } => {
                 let needs = group_data_counts(&si.chunks);
                 let mut live = vec![0usize; needs.len()];
                 for (c, h) in si.chunks.iter().zip(&si.placement.holders) {
-                    if Self::chunk_live(overlay, c, h) {
+                    if Self::chunk_live_scan(overlay, c, h) {
                         live[c.group] += 1;
                     }
                 }
@@ -151,7 +401,21 @@ impl DataPlane {
                 .chunks
                 .iter()
                 .zip(&si.placement.holders)
-                .all(|(c, h)| Self::chunk_live(overlay, c, h)),
+                .all(|(c, h)| Self::chunk_live_scan(overlay, c, h)),
+        }
+    }
+
+    fn recoverable(&self, overlay: &Overlay, si: &StoredImage) -> bool {
+        if self.fresh(overlay) {
+            let fast = si.live.recoverable();
+            debug_assert_eq!(
+                fast,
+                Self::recoverable_scan(&self.spec, overlay, si),
+                "incremental live state diverged from the scan reference"
+            );
+            fast
+        } else {
+            Self::recoverable_scan(&self.spec, overlay, si)
         }
     }
 
@@ -207,6 +471,7 @@ impl DataPlane {
         uploader: PeerId,
         img: CheckpointImage,
     ) -> Option<f64> {
+        self.sync_churn(overlay);
         let chunks = chunk_image(&img, self.chunk_bytes, &self.spec);
         let placement = place_chunks(overlay, img.key(), &chunks, &self.spec)?;
         // Replacing an existing (job, seq): reclaim its copies first.
@@ -222,19 +487,32 @@ impl DataPlane {
             // (excluded from the data-path completion time).
             self.sched.transfer(now, src, Endpoint::Server, CHUNK_META_BYTES, links, false);
         }
-        for (c, holders) in chunks.iter().zip(&placement.holders) {
+        let key = (img.job, img.seq);
+        for (i, (c, holders)) in chunks.iter().zip(&placement.holders).enumerate() {
             for &h in holders {
                 self.credit(h, c.bytes);
+                if let Endpoint::Peer(p) = h {
+                    self.index_add(p, key, i as u32);
+                }
             }
         }
-        self.images.insert((img.job, img.seq), StoredImage { image: img, chunks, placement });
+        let live = LiveState::build(&self.spec, overlay, &chunks, &placement);
+        // A birth-under-replicated image (overlay smaller than the
+        // replica degree) needs periodic top-up attempts, exactly like
+        // the rescan gave it.
+        let retry = Self::repair_retry_needed(&self.spec, &live);
+        self.images.insert(key, StoredImage { image: img, chunks, placement, live });
+        if retry {
+            self.dirty.insert(key);
+        }
         Some(finish)
     }
 
     /// Fetch the latest retrievable checkpoint of `job` to `downloader`,
     /// charging the chunk transfers (for erasure, enough chunks per group
-    /// to reconstruct). Returns the image and the completion time of the
-    /// slowest chunk fetch.
+    /// to reconstruct). Returns the image (borrowed — the store keeps
+    /// ownership; no clone on the restart path) and the completion time
+    /// of the slowest chunk fetch.
     pub fn restore(
         &mut self,
         now: f64,
@@ -242,51 +520,81 @@ impl DataPlane {
         links: &[LinkSpeed],
         downloader: PeerId,
         job: usize,
-    ) -> Option<(CheckpointImage, f64)> {
-        // Transfer plan: (source endpoint, bytes) per fetched chunk.
-        let (image, plan) = {
-            let (_, si) = self
+    ) -> Option<(&CheckpointImage, f64)> {
+        self.sync_churn(overlay);
+        let key = {
+            let (k, _) = self
                 .images
                 .range((job, 0)..=(job, u64::MAX))
                 .rev()
                 .find(|(_, si)| si.image.verify() && self.recoverable(overlay, si))?;
-            let mut plan: Vec<(Endpoint, f64)> = Vec::new();
+            *k
+        };
+        // Transfer plan: (source endpoint, bytes) per fetched chunk,
+        // built into the reusable scratch buffer.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.plan.clear();
+        {
+            let si = &self.images[&key];
             match self.spec {
                 StorageSpec::Erasure { .. } => {
                     // Per group, fetch the first `need` live chunks (data
                     // chunks come first by index, so direct reads are
                     // preferred and parity only fills the gaps).
-                    let needs = group_data_counts(&si.chunks);
-                    let mut fetched = vec![0usize; needs.len()];
+                    scratch.fetched.clear();
+                    scratch.fetched.resize(si.live.group_need.len(), 0);
                     for (c, h) in si.chunks.iter().zip(&si.placement.holders) {
-                        if fetched[c.group] >= needs[c.group] {
+                        if scratch.fetched[c.group] >= si.live.group_need[c.group] {
                             continue;
                         }
                         if let Some(&src) = h.iter().find(|e| e.is_online(overlay)) {
-                            plan.push((src, c.bytes));
-                            fetched[c.group] += 1;
+                            scratch.plan.push((src, c.bytes));
+                            scratch.fetched[c.group] += 1;
                         }
                     }
                 }
                 _ => {
                     for (c, h) in si.chunks.iter().zip(&si.placement.holders) {
-                        let src = h.iter().find(|e| e.is_online(overlay))?;
-                        plan.push((*src, c.bytes));
+                        // The image was just selected via `recoverable`
+                        // against this same overlay state, so every chunk
+                        // has an online holder.
+                        let src = h
+                            .iter()
+                            .find(|e| e.is_online(overlay))
+                            .expect("recoverable chunk must have an online holder");
+                        scratch.plan.push((*src, c.bytes));
                     }
                 }
             }
-            (si.image.clone(), plan)
-        };
+        }
         let dst = Endpoint::Peer(downloader);
         let mut finish = now;
-        for (src, bytes) in plan {
+        for &(src, bytes) in &scratch.plan {
             let t = self.sched.transfer(now, src, dst, bytes, links, false);
             finish = finish.max(t);
         }
+        self.scratch = scratch;
+        let image = &self.images.get(&key).expect("image just found").image;
         Some((image, finish))
     }
 
     // ------------------------------------------------------- maintenance
+
+    /// Would the rescan repair keep acting on this image? (Replicate
+    /// top-up is the one case repair can leave unfinished — candidate
+    /// supply, not holder churn, is the limiter — so it must stay queued
+    /// exactly as the rescan kept retrying it. Erasure repair always
+    /// completes whatever is reachable; unreachable groups are revived by
+    /// holder arrivals, which re-queue through the churn journal.)
+    fn repair_retry_needed(spec: &StorageSpec, live: &LiveState) -> bool {
+        match spec {
+            StorageSpec::Replicate { replicas } => {
+                let want = (*replicas).max(1) as u32;
+                live.online.iter().any(|&c| c > 0 && c < want)
+            }
+            _ => false,
+        }
+    }
 
     /// Churn-driven repair of one image: re-replicate (or reconstruct)
     /// chunk copies whose holders departed, charging the repair transfers.
@@ -303,161 +611,269 @@ impl DataPlane {
         job: usize,
         seq: u64,
     ) -> usize {
+        self.sync_churn(overlay);
+        self.repair_image(now, overlay, links, (job, seq))
+    }
+
+    /// Repair one image against a synced overlay state. Dequeues the
+    /// image, then re-queues it iff the rescan would keep acting on it.
+    fn repair_image(
+        &mut self,
+        now: f64,
+        overlay: &Overlay,
+        links: &[LinkSpeed],
+        key: ImgKey,
+    ) -> usize {
+        debug_assert!(self.fresh(overlay), "repair_image requires a synced store");
+        self.dirty.remove(&key);
         if !self.spec.peer_hosted() {
             return 0;
         }
-        let Some(mut si) = self.images.remove(&(job, seq)) else {
+        let Some(mut si) = self.images.remove(&key) else {
             return 0;
         };
+        let mut scratch = std::mem::take(&mut self.scratch);
         let mut restored = 0usize;
         match self.spec {
             StorageSpec::Server => {}
             StorageSpec::Replicate { replicas } => {
                 let replicas = replicas.max(1);
-                let cands = candidates(overlay, si.image.key(), replicas * 2 + 2);
-                for (i, c) in si.chunks.iter().enumerate() {
-                    let holders = &si.placement.holders[i];
-                    let live: Vec<Endpoint> =
-                        holders.iter().copied().filter(|h| h.is_online(overlay)).collect();
-                    if live.is_empty() || live.len() >= replicas {
+                candidates_into(overlay, si.image.key(), replicas * 2 + 2, &mut scratch.cands);
+                for i in 0..si.chunks.len() {
+                    let bytes = si.chunks[i].bytes;
+                    scratch.live.clear();
+                    scratch.dead.clear();
+                    for &h in &si.placement.holders[i] {
+                        if h.is_online(overlay) {
+                            scratch.live.push(h);
+                        } else {
+                            scratch.dead.push(h);
+                        }
+                    }
+                    debug_assert_eq!(si.live.online[i] as usize, scratch.live.len());
+                    if scratch.live.is_empty() || scratch.live.len() >= replicas {
                         continue;
                     }
                     // Reclaim the superseded dead copies.
-                    let dead: Vec<Endpoint> =
-                        holders.iter().copied().filter(|h| !h.is_online(overlay)).collect();
-                    for &d in &dead {
-                        self.debit(d, c.bytes);
+                    for &d in &scratch.dead {
+                        self.debit(d, bytes);
+                        if let Endpoint::Peer(p) = d {
+                            self.index_remove(p, key, i as u32);
+                        }
                     }
-                    let mut new_holders = live.clone();
-                    for &cand in &cands {
-                        if new_holders.len() >= replicas {
+                    scratch.new_holders.clear();
+                    scratch.new_holders.extend_from_slice(&scratch.live);
+                    for &cand in &scratch.cands {
+                        if scratch.new_holders.len() >= replicas {
                             break;
                         }
                         let e = Endpoint::Peer(cand);
-                        if new_holders.contains(&e) {
+                        if scratch.new_holders.contains(&e) {
                             continue;
                         }
-                        let src = live[restored % live.len()];
-                        self.sched.transfer(now, src, e, c.bytes, links, true);
-                        self.credit(e, c.bytes);
-                        new_holders.push(e);
+                        let src = scratch.live[restored % scratch.live.len()];
+                        self.sched.transfer(now, src, e, bytes, links, true);
+                        self.credit(e, bytes);
+                        self.index_add(cand, key, i as u32);
+                        si.live.holder_flip(i, 1);
+                        scratch.new_holders.push(e);
                         restored += 1;
                     }
-                    si.placement.holders[i] = new_holders;
+                    si.placement.holders[i].clear();
+                    si.placement.holders[i].extend_from_slice(&scratch.new_holders);
                 }
             }
             StorageSpec::Erasure { data, parity } => {
-                let needs = group_data_counts(&si.chunks);
-                let cands = candidates(overlay, si.image.key(), (data + parity).max(1) * 2);
-                // Live chunk count per group decides recoverability.
-                let mut live_count = vec![0usize; needs.len()];
-                for (c, h) in si.chunks.iter().zip(&si.placement.holders) {
-                    if Self::chunk_live(overlay, c, h) {
-                        live_count[c.group] += 1;
-                    }
-                }
+                candidates_into(
+                    overlay,
+                    si.image.key(),
+                    (data + parity).max(1) * 2,
+                    &mut scratch.cands,
+                );
+                // Group recoverability comes straight from the live-copy
+                // counters (`holder_flip` keeps them current as repairs
+                // land, mirroring the old in-loop `live_count` updates).
                 for i in 0..si.chunks.len() {
-                    let c = si.chunks[i].clone();
-                    if Self::chunk_live(overlay, &c, &si.placement.holders[i]) {
+                    let bytes = si.chunks[i].bytes;
+                    let g = si.live.group_of[i] as usize;
+                    if si.live.chunk_live(i) {
                         continue;
                     }
-                    if live_count[c.group] < needs[c.group] {
+                    if si.live.group_live[g] < si.live.group_need[g] {
                         continue; // group unrecoverable; holders may rejoin
                     }
                     // Sources: `need` live chunks of the group (the
                     // reconstruction read set).
-                    let sources: Vec<Endpoint> = si
-                        .chunks
-                        .iter()
-                        .zip(&si.placement.holders)
-                        .filter(|(s, h)| {
-                            s.group == c.group && Self::chunk_live(overlay, s, h)
-                        })
-                        .take(needs[c.group])
-                        .filter_map(|(_, h)| {
-                            h.iter().find(|e| e.is_online(overlay)).copied()
-                        })
-                        .collect();
-                    if sources.is_empty() {
+                    scratch.sources.clear();
+                    let mut taken = 0u32;
+                    for j in 0..si.chunks.len() {
+                        if taken >= si.live.group_need[g] {
+                            break;
+                        }
+                        if si.chunks[j].group != g || !si.live.chunk_live(j) {
+                            continue;
+                        }
+                        taken += 1;
+                        if let Some(&src) =
+                            si.placement.holders[j].iter().find(|e| e.is_online(overlay))
+                        {
+                            scratch.sources.push(src);
+                        }
+                    }
+                    if scratch.sources.is_empty() {
                         continue;
                     }
                     // New holder: a candidate not already holding a live
                     // chunk of this group (failure independence).
-                    let group_holders: Vec<Endpoint> = si
-                        .chunks
-                        .iter()
-                        .zip(&si.placement.holders)
-                        .filter(|(s, _)| s.group == c.group)
-                        .flat_map(|(_, h)| h.iter().copied())
-                        .filter(|e| e.is_online(overlay))
-                        .collect();
-                    let new = cands
+                    scratch.group_holders.clear();
+                    for j in 0..si.chunks.len() {
+                        if si.chunks[j].group != g {
+                            continue;
+                        }
+                        for &h in &si.placement.holders[j] {
+                            if h.is_online(overlay) {
+                                scratch.group_holders.push(h);
+                            }
+                        }
+                    }
+                    let new = scratch
+                        .cands
                         .iter()
                         .map(|&p| Endpoint::Peer(p))
-                        .find(|e| !group_holders.contains(e))
-                        .or_else(|| {
-                            cands.first().map(|&p| Endpoint::Peer(p))
-                        });
+                        .find(|e| !scratch.group_holders.contains(e))
+                        .or_else(|| scratch.cands.first().map(|&p| Endpoint::Peer(p)));
                     let Some(new) = new else {
                         continue;
                     };
                     // Reclaim the dead copies, read the reconstruction
                     // set to the new holder, store the rebuilt chunk.
-                    let dead: Vec<Endpoint> = si.placement.holders[i]
-                        .iter()
-                        .copied()
-                        .filter(|h| !h.is_online(overlay))
-                        .collect();
-                    for &d in &dead {
-                        self.debit(d, c.bytes);
+                    scratch.old_holders.clear();
+                    scratch.old_holders.extend_from_slice(&si.placement.holders[i]);
+                    for &h in &scratch.old_holders {
+                        self.debit(h, bytes);
+                        if h.is_online(overlay) {
+                            // Unreachable through the public API (an
+                            // online holder of a dead chunk means a
+                            // corrupt tag); keep the counters coherent
+                            // anyway.
+                            si.live.holder_flip(i, -1);
+                        }
+                        if let Endpoint::Peer(p) = h {
+                            self.index_remove(p, key, i as u32);
+                        }
                     }
-                    for &src in &sources {
-                        self.sched.transfer(now, src, new, c.bytes, links, true);
+                    for &src in &scratch.sources {
+                        self.sched.transfer(now, src, new, bytes, links, true);
                     }
-                    self.credit(new, c.bytes);
-                    si.placement.holders[i] = vec![new];
-                    live_count[c.group] += 1;
+                    self.credit(new, bytes);
+                    if let Endpoint::Peer(p) = new {
+                        self.index_add(p, key, i as u32);
+                    }
+                    si.placement.holders[i].clear();
+                    si.placement.holders[i].push(new);
+                    si.live.holder_flip(i, 1);
                     restored += 1;
                 }
             }
         }
-        self.images.insert((job, seq), si);
+        self.scratch = scratch;
+        let retry = Self::repair_retry_needed(&self.spec, &si.live);
+        self.images.insert(key, si);
+        if retry {
+            self.dirty.insert(key);
+        }
         restored
     }
 
-    /// Repair every stored image (stabilization-driven maintenance).
+    /// Drain the repair dirty queue in ascending key order
+    /// (stabilization-driven maintenance). Only images touched by churn
+    /// since the last sweep — plus replicate images still awaiting
+    /// candidate supply — are examined; outcomes are bit-identical to
+    /// [`DataPlane::repair_sweep_full`] (differential property test in
+    /// `rust/tests/dataplane.rs`). A quiet period does no work and
+    /// allocates nothing.
     pub fn repair_sweep(&mut self, now: f64, overlay: &Overlay, links: &[LinkSpeed]) -> usize {
-        let keys: Vec<(usize, u64)> = self.images.keys().copied().collect();
-        keys.into_iter().map(|(j, s)| self.repair(now, overlay, links, j, s)).sum()
+        self.sync_churn(overlay);
+        if self.dirty.is_empty() {
+            return 0;
+        }
+        self.drain_repairs(now, overlay, links, false)
+    }
+
+    /// Repair every stored image, churned or not — the full-rescan
+    /// reference implementation the dirty-queue sweep is differentially
+    /// tested (and benchmarked) against.
+    pub fn repair_sweep_full(
+        &mut self,
+        now: f64,
+        overlay: &Overlay,
+        links: &[LinkSpeed],
+    ) -> usize {
+        self.sync_churn(overlay);
+        self.drain_repairs(now, overlay, links, true)
+    }
+
+    /// Repair the dirty set (or every stored image when `all`) in
+    /// ascending key order, snapshotted into the reusable key scratch so
+    /// `repair_image` can mutate the queue while draining.
+    fn drain_repairs(
+        &mut self,
+        now: f64,
+        overlay: &Overlay,
+        links: &[LinkSpeed],
+        all: bool,
+    ) -> usize {
+        let mut keys = std::mem::take(&mut self.scratch.keys);
+        keys.clear();
+        if all {
+            keys.extend(self.images.keys().copied());
+        } else {
+            keys.extend(self.dirty.iter().copied());
+        }
+        let mut restored = 0usize;
+        for &key in &keys {
+            restored += self.repair_image(now, overlay, links, key);
+        }
+        self.scratch.keys = keys;
+        restored
     }
 
     /// Drop one stored image, reclaiming every copy. Returns whether it
     /// existed.
     fn drop_image(&mut self, job: usize, seq: u64) -> bool {
-        let Some(si) = self.images.remove(&(job, seq)) else {
+        let key = (job, seq);
+        let Some(si) = self.images.remove(&key) else {
             return false;
         };
-        for (c, holders) in si.chunks.iter().zip(&si.placement.holders) {
+        for (i, (c, holders)) in si.chunks.iter().zip(&si.placement.holders).enumerate() {
             for &h in holders {
                 self.debit(h, c.bytes);
+                if let Endpoint::Peer(p) = h {
+                    self.index_remove(p, key, i as u32);
+                }
             }
         }
+        self.dirty.remove(&key);
         true
     }
 
     /// Epoch GC: drop all checkpoints of `job` with `seq < keep_from`.
     /// Returns the number of images dropped.
     pub fn gc(&mut self, job: usize, keep_from: u64) -> usize {
-        let victims: Vec<(usize, u64)> = self
-            .images
-            .range((job, 0)..=(job, u64::MAX))
-            .map(|(&k, _)| k)
-            .filter(|&(_, s)| s < keep_from)
-            .collect();
-        for (j, s) in &victims {
-            self.drop_image(*j, *s);
+        let mut victims = std::mem::take(&mut self.scratch.keys);
+        victims.clear();
+        victims.extend(
+            self.images
+                .range((job, 0)..=(job, u64::MAX))
+                .map(|(&k, _)| k)
+                .filter(|&(_, s)| s < keep_from),
+        );
+        for &(j, s) in &victims {
+            self.drop_image(j, s);
         }
-        victims.len()
+        let dropped = victims.len();
+        self.scratch.keys = victims;
+        dropped
     }
 
     /// Export the I/O-offload accounting into a metrics registry.
@@ -644,5 +1060,102 @@ mod tests {
         // Seq 3 rots away: latest falls back to seq 2.
         dp.images.get_mut(&(1, 3)).unwrap().image.progress = 1e9;
         assert_eq!(dp.latest(&o, 1).unwrap().seq, 2);
+    }
+
+    #[test]
+    fn dirty_queue_tracks_only_affected_images() {
+        let (mut o, links) = world(40);
+        let mut dp = DataPlane::new(StorageSpec::Replicate { replicas: 3 });
+        for job in 0..4 {
+            dp.put(0.0, &o, &links, 0, CheckpointImage::new(job, 1, 0.0, 4e6)).unwrap();
+        }
+        assert_eq!(dp.dirty_len(), 0, "fully-replicated puts need no repair");
+        // Kill one holder of job 2: exactly the images that peer holds
+        // queue for repair — not the whole store, as the rescan swept.
+        let victim = (0..dp.holder_index.len())
+            .find(|&p| dp.holder_index[p].contains_key(&(2, 1)))
+            .expect("job 2 has peer holders");
+        let affected = dp.holder_index[victim].len();
+        assert!(affected >= 1);
+        o.depart(victim, 1.0);
+        dp.sync_churn(&o);
+        assert_eq!(dp.dirty_len(), affected, "only the victim's images queue");
+        let restored = dp.repair_sweep(2.0, &o, &links);
+        assert!(restored > 0);
+        assert_eq!(dp.dirty_len(), 0, "repaired images dequeue");
+        assert_eq!(dp.live_holders(&o, 2, 1), 3);
+        audit_ok(&dp);
+    }
+
+    #[test]
+    fn under_replicated_image_stays_queued_until_candidates_appear() {
+        // 3 peers, replicate:3 — kill one holder; repair cannot top back
+        // up to 3 replicas until a third peer exists again, and the image
+        // must stay queued so the periodic sweep keeps retrying (the
+        // rescan semantics).
+        let (mut o, links) = world(3);
+        let mut dp = DataPlane::new(StorageSpec::Replicate { replicas: 3 });
+        dp.put(0.0, &o, &links, 0, CheckpointImage::new(0, 1, 0.0, 4e6)).unwrap();
+        o.depart(2, 1.0);
+        dp.repair_sweep(2.0, &o, &links);
+        assert_eq!(dp.live_holders(&o, 0, 1), 2, "only two candidates online");
+        assert_eq!(dp.dirty_len(), 1, "under-replicated image stays queued");
+        // A non-holder candidate appears: the *sweep* (not an arrival of
+        // a holder) must finish the top-up.
+        o.join(2, 3.0);
+        let restored = dp.repair_sweep(4.0, &o, &links);
+        assert_eq!(restored, 1);
+        assert_eq!(dp.live_holders(&o, 0, 1), 3);
+        assert_eq!(dp.dirty_len(), 0);
+        audit_ok(&dp);
+    }
+
+    #[test]
+    fn lagging_consumer_rebuilds_after_foreign_compaction() {
+        // Two stores share one overlay; compacting the journal to the
+        // fast consumer's cursor strands the slow one behind the horizon.
+        // Its next sync must rebuild from current membership (replaying
+        // the surviving suffix would silently miss the compacted flips).
+        let (mut o, links) = world(30);
+        let spec = StorageSpec::Replicate { replicas: 3 };
+        let mut fast = DataPlane::new(spec);
+        let mut slow = DataPlane::new(spec);
+        let img = CheckpointImage::new(1, 1, 0.0, 4e6);
+        fast.put(0.0, &o, &links, 0, img.clone()).unwrap();
+        slow.put(0.0, &o, &links, 0, img).unwrap();
+        let holders: Vec<PeerId> = (0..o.len()).filter(|&p| slow.stored_bytes(p) > 0.0).collect();
+        for &h in &holders {
+            o.depart(h, 1.0);
+        }
+        fast.sync_churn(&o);
+        o.compact_churn(fast.churn_cursor());
+        // The departures are gone from the journal; the slow store's
+        // cursor predates the horizon, so sync rebuilds.
+        slow.sync_churn(&o);
+        assert!(!slow.available(&o, 1, 1), "all holders dead");
+        o.join(holders[0], 2.0);
+        slow.sync_churn(&o);
+        assert!(slow.available(&o, 1, 1), "one holder back (incremental replay)");
+    }
+
+    #[test]
+    fn queries_fall_back_to_scan_when_unsynced() {
+        let (mut o, links) = world(30);
+        let mut dp = DataPlane::new(StorageSpec::Replicate { replicas: 3 });
+        dp.put(0.0, &o, &links, 0, CheckpointImage::new(1, 1, 0.0, 4e6)).unwrap();
+        let holders: Vec<PeerId> = (0..o.len()).filter(|&p| dp.stored_bytes(p) > 0.0).collect();
+        // Churn without telling the data-plane: &self queries must still
+        // answer against the *current* overlay state.
+        for &h in &holders {
+            o.depart(h, 1.0);
+        }
+        assert!(!dp.available(&o, 1, 1), "all holders dead");
+        assert!(dp.latest(&o, 1).is_none());
+        o.join(holders[0], 2.0);
+        assert!(dp.available(&o, 1, 1), "one holder back");
+        // After syncing, the O(1) path must agree (debug_assert inside
+        // recoverable cross-checks it against the scan).
+        dp.sync_churn(&o);
+        assert!(dp.available(&o, 1, 1));
     }
 }

@@ -16,8 +16,7 @@
 //! metrics report.
 
 use super::placement::Endpoint;
-use crate::net::bandwidth::LinkSpeed;
-use std::collections::BTreeMap;
+use crate::net::bandwidth::{BandwidthModel, LinkSpeed};
 
 /// Default work-pool-server NIC capacity: 1 Gbit/s, in bytes/second
 /// (volunteer peers default to ~1 Mbit/s up — see
@@ -54,15 +53,20 @@ impl IoCounters {
 }
 
 /// FIFO link-queue transfer scheduler.
+///
+/// The per-peer busy-until times live in two **dense slab vectors**
+/// indexed by peer id (grown on demand, 0.0 = idle since peer ids are
+/// dense and times are positive): charging a transfer is two indexed
+/// stores, no tree walk, no per-transfer allocation.
 #[derive(Debug, Clone)]
 pub struct TransferScheduler {
     server_bps: f64,
     /// Busy-until time of the server's shared link.
     server_busy: f64,
-    /// Busy-until time of each peer's upstream link.
-    up_busy: BTreeMap<usize, f64>,
-    /// Busy-until time of each peer's downstream link.
-    down_busy: BTreeMap<usize, f64>,
+    /// Busy-until time of each peer's upstream link, indexed by peer id.
+    up_busy: Vec<f64>,
+    /// Busy-until time of each peer's downstream link, indexed by peer id.
+    down_busy: Vec<f64>,
     /// Charged byte counters.
     pub counters: IoCounters,
 }
@@ -72,8 +76,8 @@ impl TransferScheduler {
         TransferScheduler {
             server_bps: server_bps.max(1.0),
             server_busy: 0.0,
-            up_busy: BTreeMap::new(),
-            down_busy: BTreeMap::new(),
+            up_busy: Vec::new(),
+            down_busy: Vec::new(),
             counters: IoCounters::default(),
         }
     }
@@ -85,14 +89,30 @@ impl TransferScheduler {
     fn src_rate(&self, src: Endpoint, links: &[LinkSpeed]) -> f64 {
         match src {
             Endpoint::Server => self.server_bps,
-            Endpoint::Peer(p) => links.get(p).map(|l| l.up_bps).unwrap_or(1.0),
+            Endpoint::Peer(p) => match links.get(p) {
+                Some(l) => l.up_bps,
+                None => {
+                    // A peer without a sampled link is a caller bug (link
+                    // populations are sized to the overlay); fall back to
+                    // the model's median peer uplink rather than the old
+                    // silent 1 B/s, which made the transfer look ~infinite.
+                    debug_assert!(false, "no LinkSpeed for source peer {p}");
+                    BandwidthModel::default().up_median
+                }
+            },
         }
     }
 
     fn dst_rate(&self, dst: Endpoint, links: &[LinkSpeed]) -> f64 {
         match dst {
             Endpoint::Server => self.server_bps,
-            Endpoint::Peer(p) => links.get(p).map(|l| l.down_bps).unwrap_or(1.0),
+            Endpoint::Peer(p) => match links.get(p) {
+                Some(l) => l.down_bps,
+                None => {
+                    debug_assert!(false, "no LinkSpeed for destination peer {p}");
+                    BandwidthModel::default().down_median
+                }
+            },
         }
     }
 
@@ -100,8 +120,8 @@ impl TransferScheduler {
         match e {
             Endpoint::Server => self.server_busy,
             Endpoint::Peer(p) => {
-                let map = if side_up { &self.up_busy } else { &self.down_busy };
-                map.get(&p).copied().unwrap_or(0.0)
+                let slab = if side_up { &self.up_busy } else { &self.down_busy };
+                slab.get(p).copied().unwrap_or(0.0)
             }
         }
     }
@@ -110,8 +130,11 @@ impl TransferScheduler {
         match e {
             Endpoint::Server => self.server_busy = self.server_busy.max(t),
             Endpoint::Peer(p) => {
-                let map = if side_up { &mut self.up_busy } else { &mut self.down_busy };
-                map.insert(p, t);
+                let slab = if side_up { &mut self.up_busy } else { &mut self.down_busy };
+                if p >= slab.len() {
+                    slab.resize(p + 1, 0.0);
+                }
+                slab[p] = t;
             }
         }
     }
@@ -200,6 +223,17 @@ mod tests {
         let b = s.transfer(0.0, Endpoint::Peer(1), Endpoint::Peer(0), 2e6, &links(), false);
         assert!((a - 1.0).abs() < 1e-9);
         assert!((b - 1.0).abs() < 1e-9, "reverse direction must not queue: {b}");
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "no LinkSpeed"))]
+    fn missing_link_is_loud_and_falls_back_to_model_default() {
+        let mut s = TransferScheduler::new(1e8);
+        // Peer 9 has no sampled link: debug builds assert; release builds
+        // charge the model's median uplink (125 kB/s -> 1 s), not the old
+        // 1 B/s that made the transfer look ~infinite.
+        let t = s.transfer(0.0, Endpoint::Peer(9), Endpoint::Server, 125_000.0, &links(), false);
+        assert!((t - 1.0).abs() < 1e-9, "{t}");
     }
 
     #[test]

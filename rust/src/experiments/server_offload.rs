@@ -104,6 +104,9 @@ pub struct OffloadRow {
     /// Fraction of churn-driven restore attempts that found a
     /// retrievable checkpoint.
     pub restore_success_frac: f64,
+    /// Mean server-link queue depth (seconds of backlog, sampled each
+    /// step) — the Fig. 1 "I/O demands at the work pool server" signal.
+    pub mean_server_backlog_s: f64,
 }
 
 /// Materialize the sweep cells in canonical order (peers-major,
@@ -138,6 +141,7 @@ pub fn run_cell(cfg: &OffloadConfig, cell: &OffloadCell, index: usize) -> Offloa
 
     let steps = (cfg.horizon / cfg.step).ceil() as usize;
     let period_steps = ((cfg.checkpoint_period / cfg.step).round() as usize).max(1);
+    let mut backlog_sum = 0.0;
     for s in 1..=steps {
         let t = s as f64 * cfg.step;
         // Churn: memoryless per-step departure/rejoin.
@@ -152,8 +156,11 @@ pub fn run_cell(cfg: &OffloadConfig, cell: &OffloadCell, index: usize) -> Offloa
                 overlay.join(p, t);
             }
         }
-        // Maintenance: re-replicate / reconstruct what churn took.
+        // Maintenance: re-replicate / reconstruct what churn took (the
+        // dirty-queue sweep touches only churn-affected images); compact
+        // the consumed churn journal so it never outgrows one step.
         dp.repair_sweep(t, &overlay, &links);
+        overlay.compact_churn(dp.churn_cursor());
         // A departed job member forces the job to re-fetch its latest
         // checkpoint (the restore read path).
         for &p in &departed {
@@ -188,6 +195,7 @@ pub fn run_cell(cfg: &OffloadConfig, cell: &OffloadCell, index: usize) -> Offloa
                 }
             }
         }
+        backlog_sum += dp.sched.server_backlog(t);
     }
 
     // Accounting sanity: the data-plane must be byte-conserving.
@@ -215,6 +223,7 @@ pub fn run_cell(cfg: &OffloadConfig, cell: &OffloadCell, index: usize) -> Offloa
         mean_upload_s: mean_up,
         p95_upload_s: p95_up,
         restore_success_frac: restores_ok as f64 / restores_attempted.max(1) as f64,
+        mean_server_backlog_s: backlog_sum / steps.max(1) as f64,
     }
 }
 
@@ -265,6 +274,7 @@ pub fn to_table(rows: &[OffloadRow]) -> Table {
         "mean_upload_s",
         "p95_upload_s",
         "restore_success_frac",
+        "mean_server_backlog_s",
     ]);
     for r in rows {
         t.push(vec![
@@ -279,6 +289,7 @@ pub fn to_table(rows: &[OffloadRow]) -> Table {
             format!("{:.6}", r.mean_upload_s),
             format!("{:.6}", r.p95_upload_s),
             format!("{:.6}", r.restore_success_frac),
+            format!("{:.6}", r.mean_server_backlog_s),
         ]);
     }
     t
@@ -299,13 +310,14 @@ pub fn summarize(rows: &[OffloadRow], group_size: usize) -> Vec<String> {
         for r in group {
             lines.push(format!(
                 "peers={:>4} image={:>4.0}MB {:<12} server {:>12.0} B/s  peers {:>12.0} B/s  \
-                 p95 upload {:>8.1} s  restore ok {:.2}  ({:.0}x offload)",
+                 p95 upload {:>8.1} s  backlog {:>7.1} s  restore ok {:.2}  ({:.0}x offload)",
                 r.cell.peers,
                 r.cell.image_bytes / 1e6,
                 registry::storage_key(&r.cell.storage),
                 r.server_bytes_per_s,
                 r.peer_bytes_per_s,
                 r.p95_upload_s,
+                r.mean_server_backlog_s,
                 r.restore_success_frac,
                 baseline.server_bytes_per_s / r.server_bytes_per_s.max(1e-9),
             ));

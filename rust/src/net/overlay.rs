@@ -21,8 +21,17 @@
 //!   map, giving O(1) membership updates and O(k) uniform sampling
 //!   (`sample_online`, `sample_online_excluding`) with no "collect every
 //!   online id" scans anywhere.
+//!
+//! The overlay also keeps a **churn journal** ([`ChurnEvent`]): every
+//! `depart`/`join` appends one sequence-numbered event. Consumers that
+//! maintain state proportional to the membership (the data-plane's
+//! inverted holder index) hold a cursor and replay only the events since
+//! their last sync — O(churn) instead of O(stored state) per maintenance
+//! period. The journal is compacted by its owner via
+//! [`Overlay::compact_churn`] once the (single) consumer has caught up.
 
 use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Index into the overlay's peer table (stable across sessions).
 pub type PeerId = usize;
@@ -32,6 +41,21 @@ pub const SUCCESSORS: usize = 4;
 
 /// Sentinel for "not in the dense online vector".
 const OFFLINE: usize = usize::MAX;
+
+/// Distinguishes overlay instances so a journal consumer can detect that
+/// it was handed a *different* overlay (not just a later state of the one
+/// it synced against). Monotonic, never 0 — consumers can use 0 as
+/// "never attached". Deliberately process-global: the token gates only
+/// which code path answers a query, never the answer itself, so it does
+/// not perturb determinism.
+static NEXT_OVERLAY_TOKEN: AtomicU64 = AtomicU64::new(1);
+
+/// One churn-journal entry: `peer` went online/offline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnEvent {
+    pub peer: u32,
+    pub online: bool,
+}
 
 /// Per-peer state.
 #[derive(Debug, Clone)]
@@ -168,6 +192,14 @@ pub struct Overlay {
     online: Vec<PeerId>,
     /// peer -> its index in `online`, [`OFFLINE`] when offline.
     online_pos: Vec<usize>,
+    /// Instance token (see [`Overlay::token`]).
+    token: u64,
+    /// Churn journal: events `churn_base..churn_base + churn_log.len()`.
+    /// Initial membership is not journalled — consumers attach to the
+    /// overlay's *current* state and replay deltas from there.
+    churn_log: Vec<ChurnEvent>,
+    /// Absolute sequence number of `churn_log[0]`.
+    churn_base: u64,
 }
 
 impl Overlay {
@@ -195,6 +227,51 @@ impl Overlay {
             ring,
             online: (0..n).collect(),
             online_pos: (0..n).collect(),
+            token: NEXT_OVERLAY_TOKEN.fetch_add(1, Ordering::Relaxed),
+            churn_log: Vec::new(),
+            churn_base: 0,
+        }
+    }
+
+    /// Instance token for journal consumers (never 0).
+    pub fn token(&self) -> u64 {
+        self.token
+    }
+
+    /// Sequence number the *next* churn event will get; a consumer whose
+    /// cursor equals this value has replayed every membership change.
+    pub fn churn_seq(&self) -> u64 {
+        self.churn_base + self.churn_log.len() as u64
+    }
+
+    /// Compaction horizon: the oldest event sequence still in the
+    /// journal. A consumer whose cursor predates this cannot replay
+    /// (another consumer advanced the compaction point past it) and must
+    /// rebuild from the overlay's current state instead.
+    pub fn churn_horizon(&self) -> u64 {
+        self.churn_base
+    }
+
+    /// Journal entries from absolute sequence `since` onward. `since`
+    /// must not predate the compaction horizon — a consumer can never be
+    /// behind the compaction point it advanced itself.
+    pub fn churn_events_since(&self, since: u64) -> &[ChurnEvent] {
+        debug_assert!(
+            since >= self.churn_base,
+            "churn cursor {since} predates compaction horizon {}",
+            self.churn_base
+        );
+        let start = (since.saturating_sub(self.churn_base) as usize).min(self.churn_log.len());
+        &self.churn_log[start..]
+    }
+
+    /// Drop journal entries below `upto` (the consumer's cursor). Called
+    /// by the overlay's owner once the journal consumer has synced.
+    pub fn compact_churn(&mut self, upto: u64) {
+        let n = (upto.saturating_sub(self.churn_base) as usize).min(self.churn_log.len());
+        if n > 0 {
+            self.churn_log.drain(..n);
+            self.churn_base += n as u64;
         }
     }
 
@@ -232,6 +309,7 @@ impl Overlay {
             self.online_pos[moved] = i;
         }
         self.online_pos[p] = OFFLINE;
+        self.churn_log.push(ChurnEvent { peer: p as u32, online: false });
         now - self.peers[p].session_start
     }
 
@@ -245,16 +323,12 @@ impl Overlay {
         self.ring.insert(st.ring_id, p);
         self.online_pos[p] = self.online.len();
         self.online.push(p);
+        self.churn_log.push(ChurnEvent { peer: p as u32, online: true });
     }
 
     /// The `k` online successors of `p` on the ring (p's neighbour set).
     pub fn successors(&self, p: PeerId, k: usize) -> Vec<PeerId> {
-        let start = self.peers[p].ring_id;
-        self.ring
-            .iter_from(start.wrapping_add(1))
-            .filter(|&q| q != p)
-            .take(k)
-            .collect()
+        self.successors_from(p, k).collect()
     }
 
     /// Neighbour set used by the failure detector: successor list.
@@ -265,11 +339,18 @@ impl Overlay {
     /// Allocation-free iterator over the first `SUCCESSORS` online
     /// successors of `p` (hot-path twin of [`Overlay::neighbours`]).
     pub fn successors_iter(&self, p: PeerId) -> impl Iterator<Item = PeerId> + '_ {
+        self.successors_from(p, SUCCESSORS)
+    }
+
+    /// Allocation-free iterator over the first `k` online successors of
+    /// `p` (generic-arity twin of [`Overlay::successors`], used by the
+    /// data-plane's candidate selection).
+    pub fn successors_from(&self, p: PeerId, k: usize) -> impl Iterator<Item = PeerId> + '_ {
         let start = self.peers[p].ring_id;
         self.ring
             .iter_from(start.wrapping_add(1))
             .filter(move |&q| q != p)
-            .take(SUCCESSORS)
+            .take(k)
     }
 
     /// The online peer owning ring key `key` (first peer clockwise).
@@ -517,6 +598,58 @@ mod tests {
         assert_eq!(by_flag, by_dense);
         assert_eq!(by_flag, by_ring);
         assert_eq!(o.online_count(), by_flag.len());
+    }
+
+    #[test]
+    fn churn_journal_records_and_compacts() {
+        let (mut o, _) = mk(8);
+        assert_eq!(o.churn_seq(), 0);
+        assert!(o.churn_events_since(0).is_empty());
+        o.depart(3, 1.0);
+        o.depart(5, 2.0);
+        o.join(3, 3.0);
+        assert_eq!(o.churn_seq(), 3);
+        let evs = o.churn_events_since(0);
+        assert_eq!(
+            evs,
+            &[
+                ChurnEvent { peer: 3, online: false },
+                ChurnEvent { peer: 5, online: false },
+                ChurnEvent { peer: 3, online: true },
+            ]
+        );
+        // Partial replay from a cursor.
+        assert_eq!(o.churn_events_since(2), &[ChurnEvent { peer: 3, online: true }]);
+        // Compaction keeps absolute numbering intact.
+        o.compact_churn(2);
+        assert_eq!(o.churn_seq(), 3);
+        assert_eq!(o.churn_events_since(2), &[ChurnEvent { peer: 3, online: true }]);
+        o.compact_churn(o.churn_seq());
+        assert!(o.churn_events_since(o.churn_seq()).is_empty());
+        o.depart(1, 4.0);
+        assert_eq!(o.churn_seq(), 4);
+        assert_eq!(o.churn_events_since(3), &[ChurnEvent { peer: 1, online: false }]);
+    }
+
+    #[test]
+    fn tokens_distinguish_instances() {
+        let (a, _) = mk(4);
+        let (b, _) = mk(4);
+        assert_ne!(a.token(), 0);
+        assert_ne!(a.token(), b.token());
+    }
+
+    #[test]
+    fn successors_from_matches_collecting_successors() {
+        let (mut o, _) = mk(32);
+        o.depart(7, 1.0);
+        for p in [0usize, 3, 12, 31] {
+            for k in [1usize, 4, 9] {
+                let collected = o.successors(p, k);
+                let streamed: Vec<PeerId> = o.successors_from(p, k).collect();
+                assert_eq!(collected, streamed, "p={p} k={k}");
+            }
+        }
     }
 
     #[test]

@@ -78,6 +78,110 @@ fn prop_dataplane_byte_conservation() {
     });
 }
 
+/// Differential reference test for the churn-proportional maintenance
+/// path: the same random put / churn / sweep / gc / restore interleaving
+/// drives two stores — one maintained by the inverted-index dirty-queue
+/// sweep (`repair_sweep`), one by the brute-force full rescan
+/// (`repair_sweep_full`) — and at every step the transfer counters, the
+/// byte-conservation audit, every `available()` answer and every
+/// `latest()` answer must be identical. This is the bit-identity
+/// guarantee the dirty-queue optimization rides on.
+#[test]
+fn prop_incremental_sweep_matches_full_rescan_reference() {
+    check("dirty-queue sweep ≡ full-rescan reference", |g: &mut Gen| {
+        let spec = *g.pick(&[
+            StorageSpec::Server,
+            StorageSpec::Replicate { replicas: 2 },
+            StorageSpec::Replicate { replicas: 3 },
+            StorageSpec::Erasure { data: 3, parity: 1 },
+            StorageSpec::Erasure { data: 4, parity: 2 },
+        ]);
+        let n = g.usize(8, 40);
+        let mut overlay = Overlay::new(n, g.rng());
+        let links = BandwidthModel::default().sample_population(n, g.rng());
+        let mut inc = DataPlane::new(spec);
+        let mut full = DataPlane::new(spec);
+        let mut seq = [0u64; 3];
+        let ops = g.usize(10, 50);
+        for step in 0..ops {
+            let t = step as f64;
+            match g.usize(0, 5) {
+                0 | 1 => {
+                    let job = g.usize(0, 2);
+                    seq[job] += 1;
+                    let bytes = g.f64(1e5, 32e6);
+                    let uploader = g.usize(0, n - 1);
+                    let img = CheckpointImage::new(job, seq[job], t, bytes);
+                    let a = inc.put(t, &overlay, &links, uploader, img.clone());
+                    let b = full.put(t, &overlay, &links, uploader, img);
+                    assert_eq!(a, b, "step {step}: put completion times diverged");
+                }
+                2 => {
+                    let p = g.usize(0, n - 1);
+                    if overlay.is_online(p) {
+                        if overlay.online_count() > 1 {
+                            overlay.depart(p, t);
+                        }
+                    } else {
+                        overlay.join(p, t);
+                    }
+                }
+                3 => {
+                    let a = inc.repair_sweep(t, &overlay, &links);
+                    let b = full.repair_sweep_full(t, &overlay, &links);
+                    assert_eq!(a, b, "step {step} ({spec:?}): repaired counts diverged");
+                }
+                4 => {
+                    let job = g.usize(0, 2);
+                    let keep = seq[job].saturating_sub(1);
+                    assert_eq!(inc.gc(job, keep), full.gc(job, keep), "step {step}: gc");
+                }
+                _ => {
+                    let job = g.usize(0, 2);
+                    let downloader = g.usize(0, n - 1);
+                    let a = inc
+                        .restore(t, &overlay, &links, downloader, job)
+                        .map(|(img, done)| (img.clone(), done));
+                    let b = full
+                        .restore(t, &overlay, &links, downloader, job)
+                        .map(|(img, done)| (img.clone(), done));
+                    assert_eq!(a, b, "step {step}: restore diverged");
+                }
+            }
+            // Counters, conservation and retrievability answers must be
+            // bit-identical after every operation.
+            assert_eq!(
+                inc.counters(),
+                full.counters(),
+                "step {step} ({spec:?}): IoCounters diverged"
+            );
+            for dp in [&inc, &full] {
+                let (incremental, recomputed) = dp.audit();
+                assert!(
+                    (incremental - recomputed).abs() <= 1e-6 * recomputed.max(1.0),
+                    "step {step} ({spec:?}): conservation {incremental} vs {recomputed}"
+                );
+            }
+            let (ia, fa) = (inc.audit().0, full.audit().0);
+            assert_eq!(ia, fa, "step {step}: stored bytes diverged");
+            for job in 0..3usize {
+                assert_eq!(
+                    inc.latest(&overlay, job),
+                    full.latest(&overlay, job),
+                    "step {step}: latest({job}) diverged"
+                );
+                for q in 1..=seq[job] {
+                    assert_eq!(
+                        inc.available(&overlay, job, q),
+                        full.available(&overlay, job, q),
+                        "step {step}: available({job}, {q}) diverged"
+                    );
+                }
+            }
+        }
+    });
+}
+
 /// The same conservation law for the legacy whole-image `DhtStore`, plus
 /// the repair postcondition: right after a repair pass every placement is
 /// homogeneous — all holders online (repaired / intact images) or all

@@ -1,0 +1,76 @@
+//! Allocation audit for the data-plane maintenance hot path.
+//!
+//! The dirty-queue `repair_sweep` must do **nothing** on a quiet period:
+//! no key collection, no cloning, no allocation at all (the pre-index
+//! implementation collected and cloned every stored `(job, seq)` key per
+//! period even when nothing churned). A counting global allocator pins
+//! that down. This lives in its own integration-test binary so no
+//! concurrently-running test can perturb the counter.
+
+use p2pcp::dataplane::{DataPlane, StorageSpec};
+use p2pcp::net::bandwidth::BandwidthModel;
+use p2pcp::net::overlay::Overlay;
+use p2pcp::storage::image::CheckpointImage;
+use p2pcp::util::rng::Pcg64;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn quiet_period_repair_sweep_is_allocation_free() {
+    for spec in [
+        StorageSpec::Replicate { replicas: 3 },
+        StorageSpec::Erasure { data: 4, parity: 2 },
+    ] {
+        let mut rng = Pcg64::new(7, 0);
+        let mut overlay = Overlay::new(64, &mut rng);
+        let links = BandwidthModel::default().sample_population(64, &mut rng);
+        let mut dp = DataPlane::new(spec);
+        for job in 0..6 {
+            dp.put(0.0, &overlay, &links, 0, CheckpointImage::new(job, 1, 0.0, 16e6))
+                .expect("placement");
+        }
+        // One real churn + repair round so every scratch buffer has been
+        // exercised and sized.
+        let victim = (0..overlay.len())
+            .find(|&p| dp.stored_bytes(p) > 0.0)
+            .expect("some peer holds chunks");
+        overlay.depart(victim, 1.0);
+        let repaired = dp.repair_sweep(2.0, &overlay, &links);
+        assert!(repaired > 0, "{spec:?}: churn must trigger repair");
+        overlay.join(victim, 3.0);
+        dp.repair_sweep(4.0, &overlay, &links);
+        assert_eq!(dp.dirty_len(), 0, "{spec:?}: queue drained");
+        // Quiet periods: nothing churned, so the sweep must not repair
+        // anything — and must not allocate a single time doing so.
+        for i in 0..3u32 {
+            let before = ALLOCATIONS.load(Ordering::Relaxed);
+            let restored = dp.repair_sweep(5.0 + i as f64, &overlay, &links);
+            let allocated = ALLOCATIONS.load(Ordering::Relaxed) - before;
+            assert_eq!(restored, 0, "{spec:?}: quiet period repairs nothing");
+            assert_eq!(allocated, 0, "{spec:?}: quiet sweep allocated {allocated}x");
+        }
+    }
+}
