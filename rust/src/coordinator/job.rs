@@ -14,6 +14,7 @@
 use crate::churn::model::ChurnModel;
 use crate::estimator::{build_window_estimator, EstimatorSpec, WindowEstimator};
 use crate::policy::{CheckpointPolicy, PolicyCtx};
+use crate::util::digest::DeterminismDigest;
 use crate::util::rng::Pcg64;
 
 /// Neighbours each member effectively watches (own successors + shared
@@ -84,6 +85,23 @@ pub struct JobOutcome {
     pub mean_interval: f64,
     /// Effective utilization: runtime / wall_time.
     pub efficiency: f64,
+}
+
+impl JobOutcome {
+    /// Fold every field into a determinism digest under `prefix` — the
+    /// outcome half of the dual-run byte-identical contract.
+    pub fn fold_digest(&self, prefix: &str, d: &mut DeterminismDigest) {
+        d.record_f64(&format!("{prefix}.wall_time"), self.wall_time);
+        d.record_bool(&format!("{prefix}.completed"), self.completed);
+        d.record_u64(&format!("{prefix}.failures"), self.failures);
+        d.record_u64(&format!("{prefix}.checkpoints"), self.checkpoints);
+        d.record_f64(&format!("{prefix}.wasted"), self.wasted);
+        d.record_f64(&format!("{prefix}.overhead_checkpoint"), self.overhead_checkpoint);
+        d.record_f64(&format!("{prefix}.overhead_restart"), self.overhead_restart);
+        d.record_u64(&format!("{prefix}.replans"), self.replans);
+        d.record_f64(&format!("{prefix}.mean_interval"), self.mean_interval);
+        d.record_f64(&format!("{prefix}.efficiency"), self.efficiency);
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq)]

@@ -88,7 +88,7 @@ impl<'a> ReplicatedJobSimulator<'a> {
 
         // Per-replica failure clocks: min-heap of (time, rank).
         let mut clocks: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
-        let us = |t: f64| (t * 1e6) as u64;
+        let us = |t: f64| (t * 1e6).floor() as u64;
         let mut live = vec![p.replicas; p.k];
         let mut repairs: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
         for rank in 0..p.k {

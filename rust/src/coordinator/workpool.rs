@@ -8,8 +8,8 @@
 //! The work-flow experiments compare this server-mediated path against the
 //! P2P-mediated path for multi-step flows.
 
+use crate::util::detmap::DetMap;
 use crate::util::rng::Pcg64;
-use std::collections::HashMap;
 
 /// One independent unit of work.
 #[derive(Debug, Clone, PartialEq)]
@@ -62,10 +62,10 @@ pub struct PoolStats {
 #[derive(Debug)]
 pub struct WorkPoolServer {
     pending: Vec<WorkUnit>,
-    units: HashMap<u64, WorkUnit>,
+    units: DetMap<u64, WorkUnit>,
     active: Vec<Assignment>,
-    results: HashMap<u64, Vec<UnitResult>>,
-    validated: HashMap<u64, u64>,
+    results: DetMap<u64, Vec<UnitResult>>,
+    validated: DetMap<u64, u64>,
     pub stats: PoolStats,
 }
 
@@ -76,8 +76,8 @@ impl WorkPoolServer {
             pending: units,
             units: map,
             active: Vec::new(),
-            results: HashMap::new(),
-            validated: HashMap::new(),
+            results: DetMap::new(),
+            validated: DetMap::new(),
             stats: PoolStats::default(),
         }
     }
@@ -137,7 +137,9 @@ impl WorkPoolServer {
         }
         let results = &self.results[&unit.id];
         let need = (unit.replicas / 2 + 1).max(1) as usize;
-        let mut counts: HashMap<u64, usize> = HashMap::new();
+        // DetMap: with a split quorum the winning value is the smallest
+        // qualifying one — stable across runs, unlike HashMap order.
+        let mut counts: DetMap<u64, usize> = DetMap::new();
         for r in results {
             *counts.entry(r.value).or_insert(0) += 1;
         }

@@ -7,19 +7,21 @@
 
 use crate::util::csv::Table;
 use crate::util::stats::Running;
+use crate::util::wall_clock::{self, Stopwatch};
 use std::path::PathBuf;
-use std::time::Instant;
 
-/// Measure `f` `repeats` times after `warmup` unmeasured calls.
+/// Measure `f` `repeats` times after `warmup` unmeasured calls. All
+/// wall-clock access goes through `util::wall_clock` — the sim core
+/// proper is clock-free (enforced by simlint).
 pub fn time_it<F: FnMut()>(warmup: usize, repeats: usize, mut f: F) -> Running {
     for _ in 0..warmup {
         f();
     }
     let mut r = Running::new();
     for _ in 0..repeats {
-        let t0 = Instant::now();
+        let sw = Stopwatch::start();
         f();
-        r.push(t0.elapsed().as_secs_f64());
+        r.push(sw.elapsed_secs());
     }
     r
 }
@@ -65,8 +67,7 @@ pub fn emit_table(name: &str, table: &Table) {
 
 /// Bench arg helper: `--quick` shrinks trial counts for smoke runs.
 pub fn is_quick() -> bool {
-    std::env::args().any(|a| a == "--quick")
-        || std::env::var("P2PCP_BENCH_QUICK").is_ok()
+    wall_clock::cli_flag("--quick") || wall_clock::env_flag("P2PCP_BENCH_QUICK")
 }
 
 #[cfg(test)]

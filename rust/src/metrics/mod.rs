@@ -1,6 +1,7 @@
 //! Metrics: counters + a recorder the simulator and coordinator write to,
 //! with JSON export for experiment post-processing.
 
+use crate::util::digest::DeterminismDigest;
 use crate::util::json::Json;
 use crate::util::stats::Running;
 use std::collections::BTreeMap;
@@ -62,6 +63,25 @@ impl Metrics {
 
     pub fn dist(&self, key: &str) -> Option<&Running> {
         self.dists.get(key)
+    }
+
+    /// Fold the full registry — counters, gauges, distribution summaries
+    /// — into a determinism digest, in key order. Two runs of the same
+    /// seeded scenario must produce identical folds (the dual-run harness
+    /// in `rust/tests/determinism.rs` asserts exactly this).
+    pub fn fold_digest(&self, d: &mut DeterminismDigest) {
+        for (k, v) in &self.counters {
+            d.record_u64(&format!("counter.{k}"), *v);
+        }
+        for (k, v) in &self.gauges {
+            d.record_f64(&format!("gauge.{k}"), *v);
+        }
+        for (k, r) in &self.dists {
+            d.record_u64(&format!("dist.{k}.count"), r.count());
+            d.record_f64(&format!("dist.{k}.mean"), r.mean());
+            d.record_f64(&format!("dist.{k}.min"), r.min());
+            d.record_f64(&format!("dist.{k}.max"), r.max());
+        }
     }
 
     /// Export everything as JSON.

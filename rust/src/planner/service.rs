@@ -29,6 +29,9 @@ pub struct ServiceStats {
 pub struct PlannerService<P: Planner> {
     backend: P,
     queue: Vec<(Ticket, PlanRequest)>,
+    /// Completed responses awaiting pickup. Keyed by ticket and only ever
+    /// probed/drained per ticket, so hash order can't leak anywhere.
+    // simlint: allow(unordered, reason = "ticket-keyed mailbox; lookup/remove only, never iterated")
     ready: HashMap<Ticket, PlanResponse>,
     next_ticket: u64,
     /// Flush automatically when the queue reaches this size.
@@ -41,6 +44,7 @@ impl<P: Planner> PlannerService<P> {
         PlannerService {
             backend,
             queue: Vec::new(),
+            // simlint: allow(unordered, reason = "ticket-keyed mailbox; lookup/remove only, never iterated")
             ready: HashMap::new(),
             next_ticket: 0,
             auto_flush_at: auto_flush_at.max(1),

@@ -8,6 +8,7 @@
 
 use crate::error::{Error, Result};
 use crate::util::json::{parse as json_parse, Json};
+use crate::util::wall_clock;
 use std::path::{Path, PathBuf};
 
 /// Metadata written next to each artifact by aot.py.
@@ -122,12 +123,13 @@ impl PjrtRuntime {
     }
 }
 
-/// Locate `artifacts/`: env override, else walk up from cwd.
+/// Locate `artifacts/`: env override, else walk up from cwd. Host access
+/// goes through `util::wall_clock`, the allowlisted boundary.
 pub fn default_artifacts_dir() -> PathBuf {
-    if let Ok(dir) = std::env::var("P2PCP_ARTIFACTS") {
+    if let Some(dir) = wall_clock::env_var("P2PCP_ARTIFACTS") {
         return PathBuf::from(dir);
     }
-    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut cur = wall_clock::current_dir();
     loop {
         let cand = cur.join("artifacts");
         if cand.join("planner.hlo.txt").exists() {
@@ -145,7 +147,7 @@ mod tests {
 
     #[test]
     fn meta_parses() {
-        let dir = std::env::temp_dir().join("p2pcp_meta_test");
+        let dir = wall_clock::temp_dir().join("p2pcp_meta_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("m.json");
         std::fs::write(&p, r#"{"batch": 256, "window": 64, "dtype": "f64"}"#).unwrap();

@@ -21,7 +21,7 @@ impl SimTime {
         if s <= 0.0 {
             SimTime(0)
         } else {
-            SimTime((s * 1e6).round().min(u64::MAX as f64 - 1.0) as u64)
+            SimTime((s * 1e6).min(u64::MAX as f64 - 1.0).round() as u64)
         }
     }
 
@@ -54,7 +54,7 @@ impl SimDuration {
         if s <= 0.0 {
             SimDuration(0)
         } else {
-            SimDuration((s * 1e6).round().min(u64::MAX as f64 - 1.0) as u64)
+            SimDuration((s * 1e6).min(u64::MAX as f64 - 1.0).round() as u64)
         }
     }
 

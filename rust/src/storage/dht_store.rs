@@ -4,7 +4,7 @@
 use super::image::CheckpointImage;
 use crate::net::bandwidth::LinkSpeed;
 use crate::net::overlay::{Overlay, PeerId};
-use std::collections::HashMap;
+use crate::util::detmap::DetMap;
 
 /// The seed's replication degree, kept as the default. The live degree is
 /// per-store state now, configured through the scenario `storage` axis
@@ -22,10 +22,11 @@ pub struct Placement {
 pub struct DhtStore {
     /// Replication degree for checkpoint images.
     replicas: usize,
-    /// (job, seq) -> (image, placement)
-    images: HashMap<(usize, u64), (CheckpointImage, Placement)>,
+    /// (job, seq) -> (image, placement). Iterated by `latest` / `gc` /
+    /// `audit`, so the container must be ordered (DetMap).
+    images: DetMap<(usize, u64), (CheckpointImage, Placement)>,
     /// Bytes stored per peer (diagnostics / GC pressure).
-    stored_bytes: HashMap<PeerId, f64>,
+    stored_bytes: DetMap<PeerId, f64>,
 }
 
 impl Default for DhtStore {
@@ -38,8 +39,8 @@ impl DhtStore {
     pub fn new(replicas: usize) -> Self {
         DhtStore {
             replicas: replicas.max(1),
-            images: HashMap::new(),
-            stored_bytes: HashMap::new(),
+            images: DetMap::new(),
+            stored_bytes: DetMap::new(),
         }
     }
 

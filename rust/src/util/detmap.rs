@@ -1,0 +1,170 @@
+//! `DetMap`: the deterministic associative container for sim-visible
+//! state.
+//!
+//! A thin wrapper over `BTreeMap` whose point is the *name*: state held in
+//! a `DetMap` iterates in key order, so folds over it are reproducible
+//! across runs, platforms, and thread counts. `simlint` rejects `HashMap`
+//! in `rust/src`; migrating a flagged map here (keys must be `Ord`) is the
+//! default fix. The API mirrors the subset of the std map API the
+//! simulation uses — extend it as call sites need, don't bypass it.
+
+use std::collections::btree_map;
+use std::collections::BTreeMap;
+use std::ops::Index;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DetMap<K: Ord, V> {
+    inner: BTreeMap<K, V>,
+}
+
+impl<K: Ord, V> Default for DetMap<K, V> {
+    fn default() -> Self {
+        DetMap::new()
+    }
+}
+
+impl<K: Ord, V> DetMap<K, V> {
+    pub fn new() -> Self {
+        DetMap { inner: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+
+    pub fn insert(&mut self, k: K, v: V) -> Option<V> {
+        self.inner.insert(k, v)
+    }
+
+    pub fn get(&self, k: &K) -> Option<&V> {
+        self.inner.get(k)
+    }
+
+    pub fn get_mut(&mut self, k: &K) -> Option<&mut V> {
+        self.inner.get_mut(k)
+    }
+
+    pub fn remove(&mut self, k: &K) -> Option<V> {
+        self.inner.remove(k)
+    }
+
+    pub fn contains_key(&self, k: &K) -> bool {
+        self.inner.contains_key(k)
+    }
+
+    pub fn entry(&mut self, k: K) -> btree_map::Entry<'_, K, V> {
+        self.inner.entry(k)
+    }
+
+    /// Key-ordered iteration — the whole point of the type.
+    pub fn iter(&self) -> btree_map::Iter<'_, K, V> {
+        self.inner.iter()
+    }
+
+    pub fn keys(&self) -> btree_map::Keys<'_, K, V> {
+        self.inner.keys()
+    }
+
+    pub fn values(&self) -> btree_map::Values<'_, K, V> {
+        self.inner.values()
+    }
+
+    pub fn values_mut(&mut self) -> btree_map::ValuesMut<'_, K, V> {
+        self.inner.values_mut()
+    }
+
+    pub fn retain<F: FnMut(&K, &mut V) -> bool>(&mut self, f: F) {
+        self.inner.retain(f)
+    }
+
+    pub fn clear(&mut self) {
+        self.inner.clear()
+    }
+}
+
+impl<K: Ord, V> Index<&K> for DetMap<K, V> {
+    type Output = V;
+
+    fn index(&self, k: &K) -> &V {
+        &self.inner[k]
+    }
+}
+
+impl<K: Ord, V> FromIterator<(K, V)> for DetMap<K, V> {
+    fn from_iter<I: IntoIterator<Item = (K, V)>>(iter: I) -> Self {
+        DetMap { inner: iter.into_iter().collect() }
+    }
+}
+
+impl<'a, K: Ord, V> IntoIterator for &'a DetMap<K, V> {
+    type Item = (&'a K, &'a V);
+    type IntoIter = btree_map::Iter<'a, K, V>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.inner.iter()
+    }
+}
+
+impl<K: Ord, V> IntoIterator for DetMap<K, V> {
+    type Item = (K, V);
+    type IntoIter = btree_map::IntoIter<K, V>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.inner.into_iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iteration_is_key_ordered_regardless_of_insertion_order() {
+        let mut a = DetMap::new();
+        for k in [9u64, 2, 7, 1, 5] {
+            a.insert(k, k * 10);
+        }
+        let mut b = DetMap::new();
+        for k in [5u64, 1, 7, 2, 9] {
+            b.insert(k, k * 10);
+        }
+        let ka: Vec<u64> = a.keys().copied().collect();
+        let kb: Vec<u64> = b.keys().copied().collect();
+        assert_eq!(ka, vec![1, 2, 5, 7, 9]);
+        assert_eq!(ka, kb);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn std_map_surface_works() {
+        let mut m: DetMap<u64, f64> = DetMap::new();
+        assert!(m.is_empty());
+        m.insert(3, 0.5);
+        *m.entry(3).or_insert(0.0) += 0.25;
+        *m.entry(4).or_insert(0.0) += 1.0;
+        assert_eq!(m.len(), 2);
+        assert_eq!(m[&3], 0.75);
+        assert!(m.contains_key(&4));
+        m.retain(|&k, _| k != 4);
+        assert_eq!(m.remove(&4), None);
+        assert_eq!(m.get(&3).copied(), Some(0.75));
+        m.clear();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn from_iterator_and_for_loops() {
+        let m: DetMap<u64, u64> = (0..4u64).map(|k| (k, k + 1)).collect();
+        let mut total = 0;
+        for (k, v) in &m {
+            total += k + v;
+        }
+        assert_eq!(total, 16);
+        let owned: Vec<(u64, u64)> = m.into_iter().collect();
+        assert_eq!(owned.len(), 4);
+    }
+}

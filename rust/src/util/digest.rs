@@ -1,0 +1,253 @@
+//! Streaming determinism digest: the runtime half of the determinism
+//! contract (the static half is `rust/tools/simlint`).
+//!
+//! A [`DeterminismDigest`] folds a labeled stream of metric values into an
+//! FNV-1a 64-bit hash while keeping the labeled values themselves, so two
+//! runs of the same scenario can be compared exactly — and when they
+//! differ, [`DeterminismDigest::first_divergence`] names the first
+//! diverging record instead of just "hashes differ".
+//!
+//! Floats are folded by canonical bit pattern (`-0.0` → `0.0`, all NaNs →
+//! one NaN), so equality is bit-exactness, not epsilon-closeness: the
+//! contract is *byte-identical* output for a given seed, across repeats
+//! and sweep thread counts.
+
+use std::fmt;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Canonical bit pattern for a float: collapses `-0.0` / `0.0` and all
+/// NaN payloads so logically-equal values always digest equally.
+pub fn canonical_f64_bits(x: f64) -> u64 {
+    if x.is_nan() {
+        f64::NAN.to_bits()
+    } else if x == 0.0 {
+        0u64
+    } else {
+        x.to_bits()
+    }
+}
+
+/// One record where two digests first disagree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Divergence {
+    pub index: usize,
+    pub left_label: String,
+    pub right_label: String,
+    pub left: u64,
+    pub right: u64,
+}
+
+impl fmt::Display for Divergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.left_label == self.right_label {
+            write!(
+                f,
+                "record #{} `{}`: {:#018x} vs {:#018x}",
+                self.index,
+                self.left_label,
+                self.left,
+                self.right
+            )
+        } else {
+            write!(
+                f,
+                "record #{}: label `{}` vs `{}`",
+                self.index,
+                self.left_label,
+                self.right_label
+            )
+        }
+    }
+}
+
+/// A labeled event/metric stream folded into a streaming hash.
+#[derive(Debug, Clone)]
+pub struct DeterminismDigest {
+    name: String,
+    records: Vec<(String, u64)>,
+    hash: u64,
+}
+
+impl DeterminismDigest {
+    pub fn new(name: &str) -> Self {
+        DeterminismDigest { name: name.to_string(), records: Vec::new(), hash: FNV_OFFSET }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn record(&mut self, label: &str, bits: u64) {
+        self.hash = fnv1a(self.hash, label.as_bytes());
+        self.hash = fnv1a(self.hash, &bits.to_le_bytes());
+        self.records.push((label.to_string(), bits));
+    }
+
+    pub fn record_f64(&mut self, label: &str, x: f64) {
+        self.record(label, canonical_f64_bits(x));
+    }
+
+    pub fn record_u64(&mut self, label: &str, x: u64) {
+        self.record(label, x);
+    }
+
+    pub fn record_usize(&mut self, label: &str, x: usize) {
+        self.record(label, x as u64);
+    }
+
+    pub fn record_bool(&mut self, label: &str, x: bool) {
+        self.record(label, x as u64);
+    }
+
+    /// Fold a string payload (e.g. a whole CSV table) as its FNV hash.
+    pub fn record_str(&mut self, label: &str, s: &str) {
+        self.record(label, fnv1a(FNV_OFFSET, s.as_bytes()));
+    }
+
+    /// The folded hash over everything recorded so far.
+    pub fn value(&self) -> u64 {
+        self.hash
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// The first record where `self` and `other` disagree (by label or
+    /// bits), or a synthetic length-mismatch divergence, or `None` when
+    /// the streams are identical.
+    pub fn first_divergence(&self, other: &DeterminismDigest) -> Option<Divergence> {
+        for (i, (a, b)) in self.records.iter().zip(other.records.iter()).enumerate() {
+            if a != b {
+                return Some(Divergence {
+                    index: i,
+                    left_label: a.0.clone(),
+                    right_label: b.0.clone(),
+                    left: a.1,
+                    right: b.1,
+                });
+            }
+        }
+        if self.records.len() != other.records.len() {
+            let i = self.records.len().min(other.records.len());
+            let miss = "<missing>".to_string();
+            let (ll, lv) = self.records.get(i).map_or((miss.clone(), 0), |r| (r.0.clone(), r.1));
+            let (rl, rv) = other.records.get(i).map_or((miss, 0), |r| (r.0.clone(), r.1));
+            return Some(Divergence {
+                index: i,
+                left_label: ll,
+                right_label: rl,
+                left: lv,
+                right: rv,
+            });
+        }
+        None
+    }
+
+    /// Assert two runs produced identical streams; panics naming the
+    /// first diverging metric otherwise.
+    pub fn assert_matches(&self, other: &DeterminismDigest) {
+        if let Some(d) = self.first_divergence(other) {
+            panic!(
+                "determinism divergence between `{}` and `{}`: {} \
+                 (hashes {:#018x} vs {:#018x}, {} vs {} records)",
+                self.name,
+                other.name,
+                d,
+                self.value(),
+                other.value(),
+                self.len(),
+                other.len()
+            );
+        }
+        assert_eq!(self.value(), other.value(), "record streams equal but hashes differ");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_streams_match() {
+        let mut a = DeterminismDigest::new("a");
+        let mut b = DeterminismDigest::new("b");
+        for d in [&mut a, &mut b] {
+            d.record_f64("x", 1.5);
+            d.record_u64("n", 7);
+            d.record_str("table", "p,q\n1,2\n");
+        }
+        assert_eq!(a.value(), b.value());
+        assert!(a.first_divergence(&b).is_none());
+        a.assert_matches(&b);
+    }
+
+    #[test]
+    fn first_divergence_names_the_metric() {
+        let mut a = DeterminismDigest::new("a");
+        let mut b = DeterminismDigest::new("b");
+        a.record_f64("wall_time", 10.0);
+        b.record_f64("wall_time", 10.0);
+        a.record_f64("efficiency", 0.5);
+        b.record_f64("efficiency", 0.75);
+        let d = a.first_divergence(&b).unwrap();
+        assert_eq!(d.index, 1);
+        assert_eq!(d.left_label, "efficiency");
+        assert_ne!(a.value(), b.value());
+    }
+
+    #[test]
+    fn length_mismatch_is_a_divergence() {
+        let mut a = DeterminismDigest::new("a");
+        let mut b = DeterminismDigest::new("b");
+        a.record_u64("n", 1);
+        b.record_u64("n", 1);
+        b.record_u64("extra", 2);
+        let d = a.first_divergence(&b).unwrap();
+        assert_eq!(d.index, 1);
+        assert_eq!(d.left_label, "<missing>");
+        assert_eq!(d.right_label, "extra");
+    }
+
+    #[test]
+    fn float_canonicalisation() {
+        assert_eq!(canonical_f64_bits(0.0), canonical_f64_bits(-0.0));
+        assert_eq!(canonical_f64_bits(f64::NAN), canonical_f64_bits(-f64::NAN));
+        assert_ne!(canonical_f64_bits(1.0), canonical_f64_bits(1.0 + f64::EPSILON));
+    }
+
+    #[test]
+    fn labels_are_part_of_the_stream() {
+        let mut a = DeterminismDigest::new("a");
+        let mut b = DeterminismDigest::new("b");
+        a.record_u64("x", 1);
+        b.record_u64("y", 1);
+        assert_ne!(a.value(), b.value());
+        let d = a.first_divergence(&b).unwrap();
+        assert_eq!(d.index, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "efficiency")]
+    fn assert_matches_panics_with_the_metric_name() {
+        let mut a = DeterminismDigest::new("run1");
+        let mut b = DeterminismDigest::new("run2");
+        a.record_f64("efficiency", 0.5);
+        b.record_f64("efficiency", 0.6);
+        a.assert_matches(&b);
+    }
+}

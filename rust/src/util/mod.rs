@@ -1,10 +1,16 @@
 //! Shared utilities: deterministic RNG + distributions, statistics,
-//! Lambert W, minimal JSON/CSV emitters, and an in-repo property-testing
-//! mini-framework (the offline crate cache has no `proptest`).
+//! Lambert W, minimal JSON/CSV emitters, an in-repo property-testing
+//! mini-framework (the offline crate cache has no `proptest`), and the
+//! determinism-contract pieces — the ordered `detmap::DetMap`, the
+//! dual-run `digest::DeterminismDigest`, and the allowlisted
+//! `wall_clock` host boundary (see DESIGN.md §Determinism contract).
 
 pub mod csv;
+pub mod detmap;
+pub mod digest;
 pub mod json;
 pub mod lambertw;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod wall_clock;

@@ -20,7 +20,8 @@ use crate::util::rng::Pcg64;
 
 /// Number of cases per property (override with `P2PCP_PROP_CASES`).
 pub fn default_cases() -> usize {
-    std::env::var("P2PCP_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(64)
+    let var = crate::util::wall_clock::env_var("P2PCP_PROP_CASES");
+    var.and_then(|s| s.parse().ok()).unwrap_or(64)
 }
 
 /// Randomness handle passed to each property case.

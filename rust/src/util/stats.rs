@@ -108,7 +108,8 @@ impl Histogram {
         } else if x >= self.hi {
             self.overflow += 1;
         } else {
-            let idx = ((x - self.lo) / (self.hi - self.lo) * self.bins.len() as f64) as usize;
+            let frac = (x - self.lo) / (self.hi - self.lo);
+            let idx = (frac * self.bins.len() as f64).floor() as usize;
             let idx = idx.min(self.bins.len() - 1);
             self.bins[idx] += 1;
         }

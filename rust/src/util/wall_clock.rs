@@ -1,0 +1,76 @@
+//! The audited host-environment boundary: wall-clock timing and process
+//! environment/args, in one allowlisted module.
+//!
+//! Simulation code must be a pure function of its seed, so `simlint`
+//! (`rust/tools/simlint`) rejects `Instant` / `SystemTime` / `std::env`
+//! everywhere in `rust/src` except `main.rs`, `cli.rs`, and this module.
+//! Benches and the runtime layer route their host access through these
+//! helpers; nothing here may be called from inside a simulation step.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Wall-clock stopwatch for bench timing (the only sanctioned clock).
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    started: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { started: Instant::now() }
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.started.elapsed().as_secs_f64()
+    }
+}
+
+/// Read an environment variable (None when unset or non-UTF-8).
+pub fn env_var(name: &str) -> Option<String> {
+    std::env::var(name).ok()
+}
+
+/// Is an environment variable set at all?
+pub fn env_flag(name: &str) -> bool {
+    std::env::var_os(name).is_some()
+}
+
+/// Was `flag` passed on the process command line?
+pub fn cli_flag(flag: &str) -> bool {
+    std::env::args().any(|a| a == flag)
+}
+
+/// The process working directory (`.` when unavailable).
+pub fn current_dir() -> PathBuf {
+    std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."))
+}
+
+/// The host temp directory.
+pub fn temp_dir() -> PathBuf {
+    std::env::temp_dir()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_moves_forward() {
+        let sw = Stopwatch::start();
+        std::hint::black_box((0..10_000).sum::<u64>());
+        assert!(sw.elapsed_secs() >= 0.0);
+    }
+
+    #[test]
+    fn env_helpers_agree_on_unset_vars() {
+        assert_eq!(env_var("P2PCP_DEFINITELY_UNSET_VAR"), None);
+        assert!(!env_flag("P2PCP_DEFINITELY_UNSET_VAR"));
+    }
+
+    #[test]
+    fn current_dir_is_usable() {
+        assert!(!current_dir().as_os_str().is_empty());
+        assert!(!temp_dir().as_os_str().is_empty());
+    }
+}

@@ -11,7 +11,7 @@ use p2pcp::scenario::Scenario;
 use p2pcp::storage::dht_store::DhtStore;
 use p2pcp::storage::image::CheckpointImage;
 use p2pcp::util::prop::{check, Gen};
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 // ------------------------------------------------------------ conservation
 
@@ -196,7 +196,7 @@ fn prop_dht_store_byte_conservation() {
         let n = g.usize(8, 40);
         let mut overlay = Overlay::new(n, g.rng());
         let mut s = DhtStore::new(replicas);
-        let mut bytes_of: HashMap<u64, f64> = HashMap::new();
+        let mut bytes_of: BTreeMap<u64, f64> = BTreeMap::new();
         let mut seq = 0u64;
         let ops = g.usize(5, 40);
         for step in 0..ops {

@@ -1,0 +1,217 @@
+//! Dual-run determinism harness: the runtime half of the determinism
+//! contract (the static half is `rust/tools/simlint`).
+//!
+//! Every test here runs the same seeded simulation twice (or across
+//! several sweep thread counts), folds the full metric stream of each run
+//! into a [`DeterminismDigest`], and asserts the streams are
+//! *byte-identical*. On divergence the harness panics naming the first
+//! diverging metric — "record `gauge.utilization` differs" — instead of
+//! an opaque hash mismatch.
+
+use p2pcp::config::{ChurnSpec, PolicySpec, SimConfig};
+use p2pcp::coordinator::world::World;
+use p2pcp::dataplane::{DataPlane, StorageSpec, DEFAULT_CHUNK_BYTES, DEFAULT_SERVER_BPS};
+use p2pcp::experiments::server_offload::{run_sweep, to_table, OffloadConfig, OffloadRow};
+use p2pcp::mpi::program::{CommPattern, Program};
+use p2pcp::net::bandwidth::BandwidthModel;
+use p2pcp::net::overlay::Overlay;
+use p2pcp::planner::NativePlanner;
+use p2pcp::policy;
+use p2pcp::storage::image::CheckpointImage;
+use p2pcp::util::digest::DeterminismDigest;
+use p2pcp::util::rng::Pcg64;
+
+// ------------------------------------------------------------------
+// A. Full-stack churny world: run the identical seeded scenario twice
+//    and fold the job outcome plus the whole metrics registry.
+// ------------------------------------------------------------------
+
+fn churny_world_digest(name: &str, seed: u64) -> DeterminismDigest {
+    let cfg = SimConfig {
+        n_peers: 1000,
+        k: 16,
+        job_runtime: 1800.0,
+        v: Some(25.0),
+        td: Some(60.0),
+        churn: ChurnSpec::Exponential { mtbf: 5400.0 },
+        seed,
+        max_sim_time: 10.0 * 24.0 * 3600.0,
+        ..SimConfig::default()
+    };
+    let mut w = World::new(cfg).unwrap();
+    w.warmup(1800.0);
+    let program = Program::new(CommPattern::Ring, 16);
+    let pol = policy::from_spec(&PolicySpec::Adaptive, || Box::new(NativePlanner::new()));
+    let outcome = w.run_job(program, pol).unwrap();
+    let mut d = DeterminismDigest::new(name);
+    outcome.fold_digest("job", &mut d);
+    w.metrics.fold_digest(&mut d);
+    d
+}
+
+#[test]
+fn churny_world_dual_run_is_byte_identical() {
+    let a = churny_world_digest("world-run1", 42);
+    let b = churny_world_digest("world-run2", 42);
+    assert!(!a.is_empty(), "digest must fold a non-trivial metric stream");
+    a.assert_matches(&b);
+}
+
+#[test]
+fn digest_harness_detects_seed_divergence() {
+    // Sanity on the harness itself: different seeds must diverge, and the
+    // divergence report must name a concrete metric.
+    let a = dataplane_digest("seed-3", 3);
+    let b = dataplane_digest("seed-4", 4);
+    assert_ne!(a.value(), b.value(), "distinct seeds produced identical streams");
+    let d = a.first_divergence(&b).expect("distinct seeds must diverge somewhere");
+    assert!(!d.left_label.is_empty());
+}
+
+// ------------------------------------------------------------------
+// B. Server-offload sweep: rows (and the emitted CSV) must be
+//    byte-identical across 1 / 2 / 4 worker threads.
+// ------------------------------------------------------------------
+
+fn offload_cfg() -> OffloadConfig {
+    OffloadConfig {
+        peer_counts: vec![64, 96],
+        image_bytes: vec![4e6],
+        storages: vec![
+            StorageSpec::Replicate { replicas: 3 },
+            StorageSpec::Erasure { data: 4, parity: 2 },
+        ],
+        horizon: 1800.0,
+        seed: 11,
+        ..OffloadConfig::default()
+    }
+}
+
+fn fold_rows(name: &str, rows: &[OffloadRow]) -> DeterminismDigest {
+    let mut d = DeterminismDigest::new(name);
+    for (i, r) in rows.iter().enumerate() {
+        let p = format!("cell{i}");
+        d.record_usize(&format!("{p}.peers"), r.cell.peers);
+        d.record_f64(&format!("{p}.image_bytes"), r.cell.image_bytes);
+        d.record_u64(&format!("{p}.checkpoints"), r.checkpoints);
+        d.record_u64(&format!("{p}.restores"), r.restores);
+        d.record_f64(&format!("{p}.server_bytes_per_s"), r.server_bytes_per_s);
+        d.record_f64(&format!("{p}.peer_bytes_per_s"), r.peer_bytes_per_s);
+        d.record_f64(&format!("{p}.repair_bytes_per_s"), r.repair_bytes_per_s);
+        d.record_f64(&format!("{p}.mean_upload_s"), r.mean_upload_s);
+        d.record_f64(&format!("{p}.p95_upload_s"), r.p95_upload_s);
+        d.record_f64(&format!("{p}.restore_success_frac"), r.restore_success_frac);
+        d.record_f64(&format!("{p}.mean_server_backlog_s"), r.mean_server_backlog_s);
+    }
+    d.record_str("csv", &to_table(rows).to_csv());
+    d
+}
+
+#[test]
+fn offload_sweep_is_thread_count_invariant() {
+    let cfg = offload_cfg();
+    let d1 = fold_rows("threads-1", &run_sweep(&cfg, 1));
+    let d2 = fold_rows("threads-2", &run_sweep(&cfg, 2));
+    let d4 = fold_rows("threads-4", &run_sweep(&cfg, 4));
+    assert!(!d1.is_empty(), "sweep produced no rows");
+    d1.assert_matches(&d2);
+    d1.assert_matches(&d4);
+}
+
+// ------------------------------------------------------------------
+// C. Data-plane repair/restore loop: a churn-driven put / repair /
+//    restore workload replayed twice must charge identical bytes.
+// ------------------------------------------------------------------
+
+fn dataplane_digest(name: &str, seed: u64) -> DeterminismDigest {
+    let n = 80usize;
+    let k = 16usize;
+    let jobs = n / k;
+    let step = 60.0;
+    let horizon = 1800.0;
+    let mtbf = 1200.0;
+    let rejoin_mean = 600.0;
+
+    let mut rng = Pcg64::new(seed, 7);
+    let mut overlay = Overlay::new(n, &mut rng);
+    let links = BandwidthModel::default().sample_population(n, &mut rng);
+    let spec = StorageSpec::Erasure { data: 4, parity: 2 };
+    let mut dp = DataPlane::with_config(spec, DEFAULT_CHUNK_BYTES, DEFAULT_SERVER_BPS);
+
+    let mut d = DeterminismDigest::new(name);
+    let mut seq = vec![0u64; jobs];
+    let mut checkpoints = 0u64;
+    let mut restores_ok = 0u64;
+    let steps = (horizon / step) as usize;
+    for s in 1..=steps {
+        let t = s as f64 * step;
+        let mut departed: Vec<usize> = Vec::new();
+        for p in 0..n {
+            if overlay.is_online(p) {
+                if rng.next_f64() < step / mtbf {
+                    overlay.depart(p, t);
+                    departed.push(p);
+                }
+            } else if rng.next_f64() < step / rejoin_mean {
+                overlay.join(p, t);
+            }
+        }
+        let repaired = dp.repair_sweep(t, &overlay, &links);
+        overlay.compact_churn(dp.churn_cursor());
+        d.record_usize(&format!("step{s}.repaired"), repaired);
+        for &p in &departed {
+            let j = p / k;
+            if j >= jobs {
+                continue;
+            }
+            let members = j * k..((j + 1) * k).min(n);
+            if let Some(dl) = members.clone().find(|&m| overlay.is_online(m)) {
+                if let Some((img, done)) = dp.restore(t, &overlay, &links, dl, j) {
+                    restores_ok += 1;
+                    d.record_u64(&format!("step{s}.restore.job{j}.seq"), img.seq);
+                    d.record_f64(&format!("step{s}.restore.job{j}.done"), done);
+                }
+            }
+        }
+        if s % 5 == 0 {
+            for (j, seq_j) in seq.iter_mut().enumerate() {
+                let members = j * k..((j + 1) * k).min(n);
+                let Some(up) = members.clone().find(|&m| overlay.is_online(m)) else {
+                    continue;
+                };
+                *seq_j += 1;
+                let img = CheckpointImage::new(j, *seq_j, t, 4e6);
+                if let Some(done) = dp.put(t, &overlay, &links, up, img) {
+                    checkpoints += 1;
+                    d.record_f64(&format!("step{s}.put.job{j}.done"), done);
+                    dp.gc(j, seq_j.saturating_sub(1));
+                } else {
+                    *seq_j -= 1;
+                }
+            }
+        }
+        d.record_f64(&format!("step{s}.backlog"), dp.sched.server_backlog(t));
+    }
+
+    let c = dp.counters();
+    d.record_f64("io.server_in", c.server_in);
+    d.record_f64("io.server_out", c.server_out);
+    d.record_f64("io.peer_in", c.peer_in);
+    d.record_f64("io.peer_out", c.peer_out);
+    d.record_f64("io.repair_bytes", c.repair_bytes);
+    d.record_u64("io.transfers", c.transfers);
+    let (incremental, recomputed) = dp.audit();
+    d.record_f64("audit.incremental", incremental);
+    d.record_f64("audit.recomputed", recomputed);
+    d.record_u64("checkpoints", checkpoints);
+    d.record_u64("restores_ok", restores_ok);
+    d
+}
+
+#[test]
+fn dataplane_repair_restore_dual_run_is_byte_identical() {
+    let a = dataplane_digest("dp-run1", 9);
+    let b = dataplane_digest("dp-run2", 9);
+    assert!(a.len() > 30, "data-plane digest should stream per-step records, got {}", a.len());
+    a.assert_matches(&b);
+}

@@ -1,0 +1,32 @@
+//! Everything here follows the determinism contract: the linter must
+//! stay silent on this file.
+
+use std::collections::{BTreeMap, HashMap};
+
+pub struct Clean {
+    ordered: BTreeMap<u64, f64>,
+    // simlint: allow(unordered, reason = "ticket lookup table, never iterated")
+    tickets: HashMap<u64, u64>,
+}
+
+impl Clean {
+    pub fn new() -> Self {
+        Clean {
+            ordered: BTreeMap::new(),
+            // simlint: allow(unordered, reason = "ticket lookup table, never iterated")
+            tickets: HashMap::new(),
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.ordered.values().sum()
+    }
+
+    pub fn micros(t: f64) -> u64 {
+        (t * 1e6).round() as u64
+    }
+
+    pub fn has(&self, ticket: u64) -> bool {
+        self.tickets.contains_key(&ticket)
+    }
+}

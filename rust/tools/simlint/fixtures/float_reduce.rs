@@ -1,0 +1,9 @@
+//! Seeded violation: float reduction over an unordered-container
+//! iterator (rule `float_reduce`).
+
+use std::collections::HashMap;
+
+pub fn total(stored: HashMap<u64, f64>) -> f64 {
+    // The bare decl above also trips `unordered`; the reduction is the point:
+    stored.values().sum()
+}

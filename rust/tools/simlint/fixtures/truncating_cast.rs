@@ -1,0 +1,6 @@
+//! Seeded violation: bare truncating float→int cast in accounting code
+//! (rule `truncating_cast`).
+
+pub fn micros(t: f64) -> u64 {
+    (t * 1e6) as u64
+}

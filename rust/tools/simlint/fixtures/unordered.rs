@@ -1,0 +1,18 @@
+//! Seeded violation: a bare `HashMap` in sim-visible code (rule
+//! `unordered`). The `use` line itself is not a usage site.
+
+use std::collections::HashMap;
+
+pub struct ResultPool {
+    by_unit: HashMap<u64, u64>,
+}
+
+impl ResultPool {
+    pub fn new() -> Self {
+        ResultPool { by_unit: HashMap::new() }
+    }
+
+    pub fn record(&mut self, unit: u64, peer: u64) {
+        self.by_unit.insert(unit, peer);
+    }
+}

@@ -1,0 +1,15 @@
+//! Seeded violation: a container annotated allow(unordered) that is then
+//! iterated — the annotation only covers never-iterated use.
+
+use std::collections::HashMap;
+
+// simlint: allow(unordered, reason = "claimed lookup-only, but see below")
+pub fn tally(scores: HashMap<u64, f64>) -> u64 {
+    let mut best = 0;
+    let mut n = 0;
+    for (peer, _) in &scores {
+        best = best.max(*peer);
+        n += 1;
+    }
+    best + n
+}

@@ -1,0 +1,10 @@
+//! Seeded violation: wall-clock and environment reads outside the
+//! allowlisted host boundary (rule `wall_clock`).
+
+use std::time::Instant;
+
+pub fn elapsed_secs() -> f64 {
+    let start = Instant::now();
+    let _quick = std::env::var("QUICK").is_ok();
+    start.elapsed().as_secs_f64()
+}

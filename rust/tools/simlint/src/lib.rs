@@ -1,0 +1,988 @@
+//! simlint — the determinism lint pass for the p2pcp simulation core.
+//!
+//! Every figure this repro emits rests on the simulation being strictly
+//! deterministic (seed in → bytes out, for any thread count). This pass
+//! enforces the static half of that contract over sim-visible modules
+//! (everything under `rust/src`); the runtime half is the dual-run digest
+//! harness in `rust/tests/determinism.rs` (see DESIGN.md §Determinism
+//! contract).
+//!
+//! ## Rules
+//!
+//! * `unordered` — no `HashMap` / `HashSet`: their iteration order is
+//!   nondeterministic and silently leaks into simulation state the moment
+//!   anyone iterates. Use `BTreeMap` / `p2pcp::util::detmap::DetMap` /
+//!   `Vec` slabs, or annotate a genuinely never-iterated map with
+//!   `// simlint: allow(unordered, reason = "…")` — the pass then verifies
+//!   the annotated container is never iterated or folded.
+//! * `wall_clock` — no wall-clock or OS-environment reads (`Instant`,
+//!   `SystemTime`, `thread_rng`, `from_entropy`, `std::env::…`) outside
+//!   the allowlisted host boundary (`src/main.rs`, `src/cli.rs`,
+//!   `src/util/wall_clock.rs`).
+//! * `float_reduce` — no `.sum()` / `.product()` / `.fold()` over an
+//!   unordered-container iterator: float addition is not associative, so
+//!   the result depends on iteration order.
+//! * `truncating_cast` — no bare `f64 as u64`-style truncating casts in
+//!   accounting code: make the rounding explicit (`.floor()`, `.ceil()`,
+//!   `.round()`, `.trunc()`) or annotate the deliberate truncation.
+//!
+//! ## Implementation
+//!
+//! The offline crate cache has no `syn`, so the pass runs on its own
+//! comment/string-aware token scanner: comments and string literals are
+//! blanked (annotations are read from the line comments first), the rest
+//! is tokenized, and the rules are syntactic patterns over the token
+//! stream. That makes the pass an approximation by construction — the
+//! dual-run digest harness is the backstop for whatever it misses.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// The rule classes the pass enforces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    Unordered,
+    WallClock,
+    FloatReduce,
+    TruncatingCast,
+    /// A simlint annotation comment that does not parse — always an
+    /// error, so a typo can never silently disable a real rule.
+    BadAnnotation,
+}
+
+impl Rule {
+    pub fn key(self) -> &'static str {
+        match self {
+            Rule::Unordered => "unordered",
+            Rule::WallClock => "wall_clock",
+            Rule::FloatReduce => "float_reduce",
+            Rule::TruncatingCast => "truncating_cast",
+            Rule::BadAnnotation => "bad_annotation",
+        }
+    }
+}
+
+/// One finding, with the span it anchors to.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub rule: Rule,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}:{}: {}: {}",
+            self.file,
+            self.line,
+            self.col,
+            self.rule.key(),
+            self.msg
+        )
+    }
+}
+
+/// Modules allowed to touch the wall clock / process environment: the CLI
+/// boundary plus the audited `util::wall_clock` helper everything else
+/// must route through.
+pub const WALL_CLOCK_EXEMPT: &[&str] =
+    &["src/main.rs", "src/cli.rs", "src/util/wall_clock.rs"];
+
+/// True if `path` is inside the wall-clock allowlist (suffix match on
+/// `/`-normalized paths).
+pub fn wall_clock_exempt(path: &str) -> bool {
+    let p = path.replace('\\', "/");
+    WALL_CLOCK_EXEMPT.iter().any(|s| p.ends_with(s))
+}
+
+// --------------------------------------------------------------- scanner
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    Ident,
+    Num,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+struct Tok {
+    text: String,
+    kind: Kind,
+    line: u32,
+    col: u32,
+}
+
+struct Stripped {
+    /// Source with comments and string/char literals blanked to spaces
+    /// (newlines preserved, so token line/col stay true).
+    code: String,
+    /// Line comments, keyed by starting line (annotation carriers).
+    comments: Vec<(u32, String)>,
+}
+
+/// Does a raw-string literal start at `chars[i]`? Returns
+/// `(hash_count, prefix_len)` covering `(b?)r#*"`.
+fn raw_string_start(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j - i + 1))
+    } else {
+        None
+    }
+}
+
+fn strip(src: &str) -> Stripped {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code = String::with_capacity(src.len());
+    let mut comments: Vec<(u32, String)> = Vec::new();
+    let mut line: u32 = 1;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        let prev_ident = i > 0 && (chars[i - 1].is_ascii_alphanumeric() || chars[i - 1] == '_');
+        if c == '\n' {
+            code.push('\n');
+            line += 1;
+            i += 1;
+        } else if c == '/' && next == Some('/') {
+            let start = line;
+            let mut text = String::new();
+            while i < n && chars[i] != '\n' {
+                text.push(chars[i]);
+                code.push(' ');
+                i += 1;
+            }
+            comments.push((start, text));
+        } else if c == '/' && next == Some('*') {
+            // Block comments nest in Rust.
+            let mut depth = 1u32;
+            code.push(' ');
+            code.push(' ');
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                    depth += 1;
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                    depth -= 1;
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                } else {
+                    if chars[i] == '\n' {
+                        code.push('\n');
+                        line += 1;
+                    } else {
+                        code.push(' ');
+                    }
+                    i += 1;
+                }
+            }
+        } else if !prev_ident && raw_string_start(&chars, i).is_some() {
+            let (hashes, prefix) = raw_string_start(&chars, i).expect("checked above");
+            for _ in 0..prefix {
+                code.push(' ');
+            }
+            i += prefix;
+            while i < n {
+                let closes = chars[i] == '"'
+                    && i + hashes < n
+                    && chars[i + 1..=i + hashes].iter().all(|&h| h == '#');
+                if closes {
+                    for _ in 0..=hashes {
+                        code.push(' ');
+                    }
+                    i += 1 + hashes;
+                    break;
+                }
+                if chars[i] == '\n' {
+                    code.push('\n');
+                    line += 1;
+                } else {
+                    code.push(' ');
+                }
+                i += 1;
+            }
+        } else if c == 'b' && next == Some('"') && !prev_ident {
+            // Plain byte string: blank the prefix, let the `"` branch run.
+            code.push(' ');
+            i += 1;
+        } else if c == '"' {
+            code.push(' ');
+            i += 1;
+            while i < n {
+                if chars[i] == '\\' {
+                    code.push(' ');
+                    code.push(' ');
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    code.push(' ');
+                    i += 1;
+                    break;
+                }
+                if chars[i] == '\n' {
+                    code.push('\n');
+                    line += 1;
+                } else {
+                    code.push(' ');
+                }
+                i += 1;
+            }
+        } else if c == '\'' {
+            if next == Some('\\') {
+                // Escaped char literal: '\n', '\\', '\u{41}', '\'' …
+                code.push(' ');
+                code.push(' ');
+                code.push(' ');
+                i += 3; // quote, backslash, escaped char
+                while i < n && chars[i] != '\'' {
+                    code.push(' ');
+                    i += 1;
+                }
+                if i < n {
+                    code.push(' ');
+                    i += 1;
+                }
+            } else if chars.get(i + 2) == Some(&'\'') && next.is_some() {
+                // Plain char literal 'x'.
+                code.push(' ');
+                code.push(' ');
+                code.push(' ');
+                i += 3;
+            } else {
+                // Lifetime: keep the apostrophe as punctuation.
+                code.push('\'');
+                i += 1;
+            }
+        } else {
+            code.push(c);
+            i += 1;
+        }
+    }
+    Stripped { code, comments }
+}
+
+fn tokenize(code: &str) -> Vec<Tok> {
+    let chars: Vec<char> = code.chars().collect();
+    let n = chars.len();
+    let mut toks = Vec::new();
+    let mut line: u32 = 1;
+    let mut col: u32 = 1;
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            col = 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            col += 1;
+            i += 1;
+            continue;
+        }
+        let (tline, tcol) = (line, col);
+        if c.is_ascii_alphabetic() || c == '_' {
+            let mut s = String::new();
+            while i < n && (chars[i].is_ascii_alphanumeric() || chars[i] == '_') {
+                s.push(chars[i]);
+                i += 1;
+                col += 1;
+            }
+            toks.push(Tok { text: s, kind: Kind::Ident, line: tline, col: tcol });
+        } else if c.is_ascii_digit() {
+            let mut s = String::new();
+            while i < n {
+                let ch = chars[i];
+                if ch.is_ascii_alphanumeric() || ch == '_' {
+                    s.push(ch);
+                    i += 1;
+                    col += 1;
+                    continue;
+                }
+                let next_digit = chars.get(i + 1).is_some_and(|d| d.is_ascii_digit());
+                if ch == '.' && next_digit && !s.contains('.') {
+                    s.push('.');
+                    i += 1;
+                    col += 1;
+                    continue;
+                }
+                let exp = matches!(s.chars().last(), Some('e') | Some('E'))
+                    && !s.starts_with("0x")
+                    && !s.starts_with("0X");
+                if (ch == '+' || ch == '-') && exp && next_digit {
+                    s.push(ch);
+                    i += 1;
+                    col += 1;
+                    continue;
+                }
+                break;
+            }
+            toks.push(Tok { text: s, kind: Kind::Num, line: tline, col: tcol });
+        } else if c == ':' && chars.get(i + 1) == Some(&':') {
+            toks.push(Tok { text: "::".to_string(), kind: Kind::Punct, line: tline, col: tcol });
+            i += 2;
+            col += 2;
+        } else {
+            toks.push(Tok { text: c.to_string(), kind: Kind::Punct, line: tline, col: tcol });
+            i += 1;
+            col += 1;
+        }
+    }
+    toks
+}
+
+// ----------------------------------------------------------- annotations
+
+#[derive(Debug, Clone)]
+struct Allow {
+    rule: Rule,
+    line: u32,
+}
+
+/// Parse `allow(<rule>, reason = "…")` after the annotation marker.
+fn parse_allow(rest: &str) -> Result<Rule, String> {
+    let Some(body) = rest.strip_prefix("allow(") else {
+        return Err("expected `allow(<rule>, reason = \"…\")` after `simlint:`".to_string());
+    };
+    let Some(stop) = body.find([',', ')']) else {
+        return Err("unterminated `allow(…` annotation".to_string());
+    };
+    let rule_name = body[..stop].trim();
+    let rule = match rule_name {
+        "unordered" => Rule::Unordered,
+        "wall_clock" => Rule::WallClock,
+        "float_reduce" => Rule::FloatReduce,
+        "truncating_cast" => Rule::TruncatingCast,
+        other => {
+            return Err(format!(
+                "unknown rule `{other}` (expected unordered | wall_clock | \
+                 float_reduce | truncating_cast)"
+            ))
+        }
+    };
+    let Some(after) = body[stop..].strip_prefix(',') else {
+        return Err(format!("allow({rule_name}) is missing `, reason = \"…\"`"));
+    };
+    let after = after.trim_start();
+    let Some(after) = after.strip_prefix("reason") else {
+        return Err("expected `reason = \"…\"` after the rule name".to_string());
+    };
+    let after = after.trim_start();
+    let Some(after) = after.strip_prefix('=') else {
+        return Err("expected `=` after `reason`".to_string());
+    };
+    let after = after.trim_start();
+    let Some(after) = after.strip_prefix('"') else {
+        return Err("the reason must be a quoted string".to_string());
+    };
+    let Some(endq) = after.find('"') else {
+        return Err("unterminated reason string".to_string());
+    };
+    if after[..endq].trim().is_empty() {
+        return Err("the reason must be non-empty — say *why* the rule is safe here".to_string());
+    }
+    if !after[endq + 1..].trim_start().starts_with(')') {
+        return Err("expected `)` after the reason".to_string());
+    }
+    Ok(rule)
+}
+
+fn parse_annotations(
+    file: &str,
+    comments: &[(u32, String)],
+    violations: &mut Vec<Violation>,
+) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (line, text) in comments {
+        let Some(pos) = text.find("simlint:") else { continue };
+        let rest = text[pos + "simlint:".len()..].trim_start();
+        match parse_allow(rest) {
+            Ok(rule) => out.push(Allow { rule, line: *line }),
+            Err(msg) => violations.push(Violation {
+                file: file.to_string(),
+                line: *line,
+                col: 1,
+                rule: Rule::BadAnnotation,
+                msg,
+            }),
+        }
+    }
+    out
+}
+
+/// Map each allow annotation to the code line it governs: its own line if
+/// that line has code, else the next line that does.
+fn coverage(allows: &[Allow], token_lines: &BTreeSet<u32>) -> BTreeSet<(Rule, u32)> {
+    let mut cov = BTreeSet::new();
+    for a in allows {
+        let target = if token_lines.contains(&a.line) {
+            Some(a.line)
+        } else {
+            token_lines.range(a.line + 1..).next().copied()
+        };
+        if let Some(t) = target {
+            cov.insert((a.rule, t));
+        }
+    }
+    cov
+}
+
+// ----------------------------------------------------------------- rules
+
+const ITER_METHODS: &[&str] = &[
+    "iter",
+    "iter_mut",
+    "into_iter",
+    "keys",
+    "into_keys",
+    "values",
+    "values_mut",
+    "into_values",
+    "drain",
+    "retain",
+];
+
+const REDUCERS: &[&str] = &["sum", "product", "fold"];
+
+const INT_TYPES: &[&str] = &[
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize",
+];
+
+const ROUNDERS: &[&str] = &["round", "floor", "ceil", "trunc"];
+
+/// Is token `i` part of a `use …;` declaration? (A `use` alone is not a
+/// usage site — any real usage is caught where it happens.)
+fn in_use_statement(toks: &[Tok], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        if toks[j - 1].text == ";" {
+            break;
+        }
+        j -= 1;
+    }
+    toks.get(j).is_some_and(|t| t.text == "use")
+}
+
+/// Name bound to an unordered container at token `i` (the `HashMap` /
+/// `HashSet` ident): `name: HashMap<…>` field/ascription or
+/// `let name = HashMap::new()` binding.
+fn binding_name(toks: &[Tok], i: usize) -> Option<String> {
+    if i >= 2 && toks[i - 1].text == ":" && toks[i - 2].kind == Kind::Ident {
+        return Some(toks[i - 2].text.clone());
+    }
+    if i >= 2 && toks[i - 1].text == "=" && toks[i - 2].kind == Kind::Ident {
+        return Some(toks[i - 2].text.clone());
+    }
+    None
+}
+
+/// Backward scan from a closing `)` / `]` to its opener (same bracket
+/// type).
+fn matching_open(toks: &[Tok], close: usize) -> Option<usize> {
+    let (open_s, close_s) = match toks[close].text.as_str() {
+        ")" => ("(", ")"),
+        "]" => ("[", "]"),
+        _ => return None,
+    };
+    let mut depth = 0i32;
+    let mut j = close as isize;
+    while j >= 0 {
+        let t = toks[j as usize].text.as_str();
+        if t == close_s {
+            depth += 1;
+        } else if t == open_s {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j as usize);
+            }
+        }
+        j -= 1;
+    }
+    None
+}
+
+/// Start index of the postfix expression a cast at `as_idx` applies to
+/// (`as` binds tighter than binary operators, so this walks back over one
+/// literal / path / call / index / paren chain).
+fn cast_expr_start(toks: &[Tok], as_idx: usize) -> usize {
+    let mut j = as_idx as isize - 1;
+    loop {
+        if j < 0 {
+            break;
+        }
+        let t = &toks[j as usize];
+        if t.text == ")" || t.text == "]" {
+            match matching_open(toks, j as usize) {
+                Some(open) => {
+                    j = open as isize - 1;
+                    if j >= 0 && matches!(toks[j as usize].kind, Kind::Ident | Kind::Num) {
+                        j -= 1;
+                    }
+                }
+                None => break,
+            }
+        } else if matches!(t.kind, Kind::Ident | Kind::Num) {
+            j -= 1;
+        } else {
+            break;
+        }
+        if j >= 0 && (toks[j as usize].text == "." || toks[j as usize].text == "::") {
+            j -= 1;
+            continue;
+        }
+        break;
+    }
+    (j + 1) as usize
+}
+
+fn num_is_float(s: &str) -> bool {
+    if s.starts_with("0x") || s.starts_with("0X") || s.starts_with("0b") || s.starts_with("0o") {
+        return false;
+    }
+    if s.ends_with("f32") || s.ends_with("f64") {
+        return true;
+    }
+    s.contains('.') || s.contains('e') || s.contains('E')
+}
+
+/// Does the cast-source span carry textual evidence of a float value?
+fn span_has_float_evidence(span: &[Tok]) -> bool {
+    span.iter().any(|t| match t.kind {
+        Kind::Num => num_is_float(&t.text),
+        Kind::Ident => matches!(
+            t.text.as_str(),
+            "f64" | "f32" | "sqrt" | "powf" | "powi" | "exp" | "ln" | "mean" | "as_secs_f64"
+        ),
+        Kind::Punct => false,
+    })
+}
+
+/// Lint one source file. `path` is used for reporting and for the
+/// wall-clock allowlist (suffix match).
+pub fn lint_source(path: &str, src: &str) -> Vec<Violation> {
+    let mut violations: Vec<Violation> = Vec::new();
+    let stripped = strip(src);
+    let toks = tokenize(&stripped.code);
+    let allows = parse_annotations(path, &stripped.comments, &mut violations);
+    let token_lines: BTreeSet<u32> = toks.iter().map(|t| t.line).collect();
+    let cov = coverage(&allows, &token_lines);
+    let covered = |rule: Rule, line: u32| cov.contains(&(rule, line));
+    let push = |violations: &mut Vec<Violation>, t: &Tok, rule: Rule, msg: String| {
+        violations.push(Violation {
+            file: path.to_string(),
+            line: t.line,
+            col: t.col,
+            rule,
+            msg,
+        });
+    };
+
+    // Rule 1: unordered containers. Collect bound names as we go so the
+    // later passes can check annotated maps for iteration.
+    let mut containers: BTreeMap<String, bool> = BTreeMap::new();
+    for (i, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Ident || (t.text != "HashMap" && t.text != "HashSet") {
+            continue;
+        }
+        if in_use_statement(&toks, i) {
+            continue;
+        }
+        let allowed = covered(Rule::Unordered, t.line);
+        if let Some(name) = binding_name(&toks, i) {
+            let e = containers.entry(name).or_insert(false);
+            *e = *e || allowed;
+        }
+        if !allowed {
+            push(
+                &mut violations,
+                t,
+                Rule::Unordered,
+                format!(
+                    "`{}` in a sim-visible module: unordered iteration is \
+                     nondeterministic; use BTreeMap / util::detmap::DetMap / a Vec \
+                     slab, or annotate `// simlint: allow(unordered, reason = \"…\")`",
+                    t.text
+                ),
+            );
+        }
+    }
+
+    // Rule 1b + Rule 3: iteration of annotated containers, and float
+    // reductions chained onto any unordered-container iterator.
+    let mut i = 0;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == Kind::Ident {
+            if let Some(&annotated) = containers.get(&t.text) {
+                let dotted = toks.get(i + 1).is_some_and(|d| d.text == ".");
+                if dotted {
+                    if let Some(m) = toks.get(i + 2) {
+                        if m.kind == Kind::Ident && ITER_METHODS.contains(&m.text.as_str()) {
+                            if annotated {
+                                push(
+                                    &mut violations,
+                                    m,
+                                    Rule::Unordered,
+                                    format!(
+                                        "container `{}` is annotated allow(unordered) but is \
+                                         iterated via `.{}()` — the annotation only covers \
+                                         never-iterated use",
+                                        t.text,
+                                        m.text
+                                    ),
+                                );
+                            }
+                            // Scan the rest of the statement for a fold.
+                            let mut j = i + 3;
+                            let mut steps = 0;
+                            while let Some(tj) = toks.get(j) {
+                                if tj.text == ";" || steps > 120 {
+                                    break;
+                                }
+                                if tj.text == "." {
+                                    if let Some(r) = toks.get(j + 1) {
+                                        if r.kind == Kind::Ident
+                                            && REDUCERS.contains(&r.text.as_str())
+                                            && !covered(Rule::FloatReduce, r.line)
+                                        {
+                                            push(
+                                                &mut violations,
+                                                r,
+                                                Rule::FloatReduce,
+                                                format!(
+                                                    "`{}.{}()` feeds `.{}()`: reducing an \
+                                                     unordered iterator is order-sensitive \
+                                                     (float addition is not associative)",
+                                                    t.text,
+                                                    m.text,
+                                                    r.text
+                                                ),
+                                            );
+                                            break;
+                                        }
+                                    }
+                                }
+                                j += 1;
+                                steps += 1;
+                            }
+                        }
+                    }
+                }
+            }
+            if t.text == "in" {
+                let mut j = i + 1;
+                if toks.get(j).is_some_and(|x| x.text == "&") {
+                    j += 1;
+                }
+                if toks.get(j).is_some_and(|x| x.text == "mut") {
+                    j += 1;
+                }
+                if let Some(name_tok) = toks.get(j) {
+                    if name_tok.kind == Kind::Ident {
+                        if let Some(&annotated) = containers.get(&name_tok.text) {
+                            let direct = !toks.get(j + 1).is_some_and(|x| x.text == ".");
+                            if annotated && direct {
+                                push(
+                                    &mut violations,
+                                    name_tok,
+                                    Rule::Unordered,
+                                    format!(
+                                        "container `{}` is annotated allow(unordered) but is \
+                                         iterated by this for-loop — the annotation only \
+                                         covers never-iterated use",
+                                        name_tok.text
+                                    ),
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+
+    // Rule 2: wall clock / OS entropy / process environment.
+    if !wall_clock_exempt(path) {
+        for (i, t) in toks.iter().enumerate() {
+            if t.kind != Kind::Ident {
+                continue;
+            }
+            let msg = match t.text.as_str() {
+                "Instant" | "SystemTime" => Some(format!(
+                    "wall-clock type `{}` in a sim-visible module; route timing \
+                     through util::wall_clock (allowlisted host boundary)",
+                    t.text
+                )),
+                "thread_rng" | "from_entropy" => Some(format!(
+                    "OS entropy `{}` in a sim-visible module; all randomness must \
+                     flow through the seeded util::rng::Pcg64",
+                    t.text
+                )),
+                "env" if toks.get(i + 1).is_some_and(|n| n.text == "::") => Some(
+                    "process-environment read (`env::…`) in a sim-visible module; \
+                     route host access through util::wall_clock"
+                        .to_string(),
+                ),
+                _ => None,
+            };
+            if let Some(msg) = msg {
+                if !covered(Rule::WallClock, t.line) {
+                    push(&mut violations, t, Rule::WallClock, msg);
+                }
+            }
+        }
+    }
+
+    // Rule 4: truncating float→int casts.
+    let mut i = 0;
+    while i + 1 < toks.len() {
+        let is_cast = toks[i].kind == Kind::Ident
+            && toks[i].text == "as"
+            && toks[i + 1].kind == Kind::Ident
+            && INT_TYPES.contains(&toks[i + 1].text.as_str());
+        if is_cast {
+            let explicit_rounding = i >= 3
+                && toks[i - 1].text == ")"
+                && toks[i - 2].text == "("
+                && ROUNDERS.contains(&toks[i - 3].text.as_str());
+            if !explicit_rounding {
+                let start = cast_expr_start(&toks, i);
+                if span_has_float_evidence(&toks[start..i])
+                    && !covered(Rule::TruncatingCast, toks[i].line)
+                {
+                    push(
+                        &mut violations,
+                        &toks[i],
+                        Rule::TruncatingCast,
+                        format!(
+                            "truncating float→{} `as` cast; make the rounding explicit \
+                             (`.floor()` / `.ceil()` / `.round()` / `.trunc()`) or annotate \
+                             `// simlint: allow(truncating_cast, reason = \"…\")`",
+                            toks[i + 1].text
+                        ),
+                    );
+                }
+            }
+        }
+        i += 1;
+    }
+
+    violations.sort_by_key(|v| (v.line, v.col));
+    violations
+}
+
+// ------------------------------------------------------------ tree walk
+
+fn collect_rs(path: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let meta = fs::metadata(path)?;
+    if meta.is_dir() {
+        let mut entries: Vec<PathBuf> = fs::read_dir(path)?
+            .map(|e| e.map(|d| d.path()))
+            .collect::<io::Result<Vec<_>>>()?;
+        entries.sort();
+        for p in entries {
+            collect_rs(&p, out)?;
+        }
+    } else if path.extension().is_some_and(|e| e == "rs") {
+        out.push(path.to_path_buf());
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (file or directory). Returns the
+/// number of files scanned and all findings in path order.
+pub fn lint_tree(root: &Path) -> io::Result<(usize, Vec<Violation>)> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        let label = f.to_string_lossy().replace('\\', "/");
+        out.extend(lint_source(&label, &src));
+    }
+    Ok((files.len(), out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(vs: &[Violation]) -> Vec<Rule> {
+        vs.iter().map(|v| v.rule).collect()
+    }
+
+    // ------------------------------------------------------ fixture suite
+
+    const FIX_UNORDERED: &str = include_str!("../fixtures/unordered.rs");
+    const FIX_ALLOW_ITERATED: &str = include_str!("../fixtures/unordered_allow_iterated.rs");
+    const FIX_WALL_CLOCK: &str = include_str!("../fixtures/wall_clock.rs");
+    const FIX_FLOAT_REDUCE: &str = include_str!("../fixtures/float_reduce.rs");
+    const FIX_TRUNCATING_CAST: &str = include_str!("../fixtures/truncating_cast.rs");
+    const FIX_CLEAN: &str = include_str!("../fixtures/clean.rs");
+
+    #[test]
+    fn fixture_unordered_is_caught() {
+        let vs = lint_source("fixtures/unordered.rs", FIX_UNORDERED);
+        assert_eq!(rules(&vs), vec![Rule::Unordered, Rule::Unordered], "{vs:?}");
+        assert_eq!(vs[0].line, 7, "struct field span: {vs:?}");
+        assert_eq!(vs[1].line, 12, "constructor span: {vs:?}");
+    }
+
+    #[test]
+    fn fixture_annotated_but_iterated_is_caught() {
+        let vs = lint_source("fixtures/unordered_allow_iterated.rs", FIX_ALLOW_ITERATED);
+        assert_eq!(rules(&vs), vec![Rule::Unordered], "{vs:?}");
+        assert_eq!(vs[0].line, 10, "for-loop span: {vs:?}");
+        assert!(vs[0].msg.contains("allow(unordered)"), "{}", vs[0].msg);
+    }
+
+    #[test]
+    fn fixture_wall_clock_is_caught() {
+        let vs = lint_source("fixtures/wall_clock.rs", FIX_WALL_CLOCK);
+        assert_eq!(
+            rules(&vs),
+            vec![Rule::WallClock, Rule::WallClock, Rule::WallClock],
+            "{vs:?}"
+        );
+        assert_eq!(vs[0].line, 4, "use-line Instant span: {vs:?}");
+        assert_eq!(vs[1].line, 7, "Instant::now span: {vs:?}");
+        assert_eq!(vs[2].line, 8, "env::var span: {vs:?}");
+    }
+
+    #[test]
+    fn fixture_float_reduce_is_caught() {
+        let vs = lint_source("fixtures/float_reduce.rs", FIX_FLOAT_REDUCE);
+        assert!(rules(&vs).contains(&Rule::FloatReduce), "{vs:?}");
+        let fr = vs.iter().find(|v| v.rule == Rule::FloatReduce).unwrap();
+        assert_eq!(fr.line, 8, "sum() span: {vs:?}");
+    }
+
+    #[test]
+    fn fixture_truncating_cast_is_caught() {
+        let vs = lint_source("fixtures/truncating_cast.rs", FIX_TRUNCATING_CAST);
+        assert_eq!(rules(&vs), vec![Rule::TruncatingCast], "{vs:?}");
+        assert_eq!(vs[0].line, 5, "cast span: {vs:?}");
+    }
+
+    #[test]
+    fn fixture_clean_has_no_findings() {
+        let vs = lint_source("fixtures/clean.rs", FIX_CLEAN);
+        assert!(vs.is_empty(), "clean fixture must lint clean: {vs:?}");
+    }
+
+    // --------------------------------------------------- the real source
+
+    #[test]
+    fn repo_sim_core_is_clean() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src");
+        let (files, violations) = lint_tree(&root).unwrap();
+        assert!(files > 50, "expected the full sim core, found {files} files");
+        assert!(
+            violations.is_empty(),
+            "the sim core must lint clean:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+
+    // ------------------------------------------------------- unit checks
+
+    #[test]
+    fn comments_and_strings_are_not_code() {
+        let src = "fn f() {\n    // a HashMap in a comment\n    let s = \"HashMap\";\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn use_declarations_are_not_usage_sites() {
+        let src = "use std::collections::HashMap;\nfn f() {}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+        let multi = "use std::collections::{\n    HashMap,\n    HashSet,\n};\nfn f() {}\n";
+        assert!(lint_source("x.rs", multi).is_empty());
+    }
+
+    #[test]
+    fn annotation_suppresses_and_registers_the_container() {
+        let src = "struct S {\n    // simlint: allow(unordered, reason = \"lookup only\")\n    \
+                   m: HashMap<u64, u64>,\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn annotated_container_methods_that_look_up_are_fine() {
+        let src = "// simlint: allow(unordered, reason = \"lookup only\")\n\
+                   fn f(m: HashMap<u64, u64>) -> bool {\n    m.contains_key(&1)\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn bad_annotations_are_violations() {
+        for bad in [
+            "// simlint: allow(unordered)\nfn f() {}\n",
+            "// simlint: allow(unordered, reason = \"\")\nfn f() {}\n",
+            "// simlint: allow(sloppy, reason = \"x\")\nfn f() {}\n",
+            "// simlint: deny(unordered)\nfn f() {}\n",
+        ] {
+            let vs = lint_source("x.rs", bad);
+            assert_eq!(rules(&vs), vec![Rule::BadAnnotation], "{bad:?} -> {vs:?}");
+        }
+    }
+
+    #[test]
+    fn explicit_rounding_exempts_the_cast() {
+        let ok = "fn f(x: f64) -> u64 {\n    (x * 1e6).floor() as u64\n}\n";
+        assert!(lint_source("x.rs", ok).is_empty());
+        let bad = "fn f(x: f64) -> u64 {\n    (x * 1e6) as u64\n}\n";
+        assert_eq!(rules(&lint_source("x.rs", bad)), vec![Rule::TruncatingCast]);
+    }
+
+    #[test]
+    fn integer_casts_do_not_trip_the_cast_rule() {
+        let src = "fn f(n: usize) -> u64 {\n    (n >> 3) as u64\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_allowlist_is_suffix_matched() {
+        let src = "use std::time::Instant;\nfn f() {}\n";
+        assert!(!lint_source("rust/src/sim/engine.rs", src).is_empty());
+        assert!(lint_source("rust/src/util/wall_clock.rs", src).is_empty());
+        assert!(lint_source("rust/src/cli.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_do_not_confuse_the_scanner() {
+        let src = "fn f() -> usize {\n    let s = r#\"HashMap \"quoted\" text\"#;\n    \
+                   let c = '\\'';\n    let l = 'x';\n    \
+                   s.len() + (c as usize) + (l as usize)\n}\n";
+        assert!(lint_source("x.rs", src).is_empty());
+    }
+}

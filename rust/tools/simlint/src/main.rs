@@ -1,0 +1,44 @@
+//! CLI driver: `cargo run -p simlint -- rust/src [more paths…]`.
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 I/O error.
+
+use std::path::PathBuf;
+
+fn main() {
+    let mut paths: Vec<PathBuf> = Vec::new();
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "-h" | "--help" => {
+                println!("usage: simlint <path>…  (lints every .rs file under each path)");
+                println!("rules: unordered, wall_clock, float_reduce, truncating_cast");
+                println!("see DESIGN.md §Determinism contract for the rule text");
+                return;
+            }
+            _ => paths.push(PathBuf::from(arg)),
+        }
+    }
+    if paths.is_empty() {
+        paths.push(PathBuf::from("rust/src"));
+    }
+    let mut files = 0usize;
+    let mut violations = Vec::new();
+    for p in &paths {
+        match simlint::lint_tree(p) {
+            Ok((f, mut v)) => {
+                files += f;
+                violations.append(&mut v);
+            }
+            Err(e) => {
+                eprintln!("simlint: {}: {e}", p.display());
+                std::process::exit(2);
+            }
+        }
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    println!("simlint: {files} file(s) scanned, {} violation(s)", violations.len());
+    if !violations.is_empty() {
+        std::process::exit(1);
+    }
+}
