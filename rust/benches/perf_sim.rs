@@ -11,7 +11,14 @@
 //! cargo bench --bench perf_sim                        # full tiers
 //! cargo bench --bench perf_sim -- --quick             # smoke tier
 //! cargo bench --bench perf_sim -- --json BENCH_perf_sim.json
+//! cargo bench --bench perf_sim -- --check BENCH_perf_sim.json
 //! ```
+//!
+//! `--check <baseline.json>` compares the fresh run's `*_per_s` rates
+//! against a previously written doc with a relative tolerance
+//! (`--check-tol`, default 0.25) and prints `PERF-CHECK` warnings for
+//! regressions. It never fails the run — wall-clock rates are
+//! machine-dependent, so CI wires it as a soft step.
 //!
 //! Iteration counts are env-pinnable for comparable CI runs:
 //! `P2PCP_PERF_REPEATS` (timed repeats per section, default 3 full /
@@ -22,7 +29,9 @@ use p2pcp::coordinator::job::JobSimulator;
 use p2pcp::dataplane::{
     DataPlane, Endpoint, StorageSpec, TransferScheduler, DEFAULT_SERVER_BPS,
 };
-use p2pcp::experiments::bench_support::{is_quick, report_throughput, report_timing, time_it};
+use p2pcp::experiments::bench_support::{
+    compare_perf_json, is_quick, report_throughput, report_timing, time_it,
+};
 use p2pcp::net::bandwidth::BandwidthModel;
 use p2pcp::net::overlay::Overlay;
 use p2pcp::net::routing::{route, HopLatency};
@@ -36,11 +45,21 @@ fn env_usize(name: &str, default: usize) -> usize {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
-fn json_path() -> Option<String> {
+fn arg_value(flag: &str) -> Option<String> {
     let args: Vec<String> = std::env::args().collect();
-    args.iter()
-        .position(|a| a == "--json")
-        .and_then(|i| args.get(i + 1).cloned())
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+}
+
+/// Anchor a relative path at the workspace root when cargo exports
+/// `CARGO_MANIFEST_DIR` (bench CWD is the package root `rust/`, while CI
+/// and the committed trajectory live one level up).
+fn anchor_path(path: &str) -> std::path::PathBuf {
+    match std::env::var("CARGO_MANIFEST_DIR") {
+        Ok(manifest) if !std::path::Path::new(path).is_absolute() => {
+            std::path::Path::new(&manifest).join("..").join(path)
+        }
+        _ => std::path::PathBuf::from(path),
+    }
 }
 
 fn main() {
@@ -257,43 +276,65 @@ fn main() {
     report_throughput("routes", n_routes as f64, &r_routes);
 
     // --- machine-readable trajectory ---------------------------------------
-    if let Some(path) = json_path() {
-        let doc = Json::obj(vec![
-            ("bench", Json::Str("perf_sim".into())),
-            ("quick", Json::Bool(quick)),
-            ("repeats", Json::Num(repeats as f64)),
-            (
-                "fastpath",
-                Json::obj(vec![
-                    ("fixed_job_s_mean", Json::Num(r_fixed.mean())),
-                    ("fixed_jobs_per_s", Json::Num(1.0 / r_fixed.mean())),
-                    ("adaptive_job_s_mean", Json::Num(r_adaptive.mean())),
-                    ("adaptive_jobs_per_s", Json::Num(1.0 / r_adaptive.mean())),
-                ]),
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_sim".into())),
+        ("quick", Json::Bool(quick)),
+        ("repeats", Json::Num(repeats as f64)),
+        (
+            "fastpath",
+            Json::obj(vec![
+                ("fixed_job_s_mean", Json::Num(r_fixed.mean())),
+                ("fixed_jobs_per_s", Json::Num(1.0 / r_fixed.mean())),
+                ("adaptive_job_s_mean", Json::Num(r_adaptive.mean())),
+                ("adaptive_jobs_per_s", Json::Num(1.0 / r_adaptive.mean())),
+            ]),
+        ),
+        ("world", Json::Arr(world_rows)),
+        ("dataplane", Json::Arr(dataplane_rows)),
+        (
+            "routing",
+            Json::obj(vec![
+                ("routes", Json::Num(n_routes as f64)),
+                ("routes_per_s", Json::Num(n_routes as f64 / r_routes.mean())),
+            ]),
+        ),
+    ]);
+
+    // Soft baseline comparison: print warnings, never fail the run. Runs
+    // before the `--json` write so `--check X --json X` compares against
+    // the *previous* trajectory, then refreshes it.
+    if let Some(path) = arg_value("--check") {
+        let tol = arg_value("--check-tol").and_then(|t| t.parse::<f64>().ok()).unwrap_or(0.25);
+        let baseline_path = anchor_path(&path);
+        match std::fs::read_to_string(&baseline_path) {
+            Ok(text) => match p2pcp::util::json::parse(&text) {
+                Ok(baseline) => {
+                    let warns = compare_perf_json(&doc, &baseline, tol);
+                    if warns.is_empty() {
+                        println!(
+                            "PERF-CHECK ok: no rate more than {:.0}% below {}",
+                            tol * 100.0,
+                            baseline_path.display(),
+                        );
+                    }
+                    for w in &warns {
+                        println!("PERF-CHECK warn: {w}");
+                    }
+                }
+                Err(e) => println!(
+                    "PERF-CHECK warn: baseline {} is not valid JSON: {e}",
+                    baseline_path.display(),
+                ),
+            },
+            Err(e) => println!(
+                "PERF-CHECK warn: cannot read baseline {}: {e}",
+                baseline_path.display(),
             ),
-            ("world", Json::Arr(world_rows)),
-            ("dataplane", Json::Arr(dataplane_rows)),
-            (
-                "routing",
-                Json::obj(vec![
-                    ("routes", Json::Num(n_routes as f64)),
-                    ("routes_per_s", Json::Num(n_routes as f64 / r_routes.mean())),
-                ]),
-            ),
-        ]);
-        // Cargo runs bench binaries with CWD set to the *package* root
-        // (rust/), while CI and the committed trajectory live at the
-        // workspace root — anchor relative paths there (via the runtime
-        // CARGO_MANIFEST_DIR cargo exports to bench processes, so no
-        // build-machine path is baked in) so `--json BENCH_perf_sim.json`
-        // lands at the repo root; direct binary invocation keeps plain
-        // CWD-relative semantics.
-        let out = match std::env::var("CARGO_MANIFEST_DIR") {
-            Ok(manifest) if !std::path::Path::new(&path).is_absolute() => {
-                std::path::Path::new(&manifest).join("..").join(&path)
-            }
-            _ => std::path::PathBuf::from(&path),
-        };
+        }
+    }
+
+    if let Some(path) = arg_value("--json") {
+        let out = anchor_path(&path);
         match std::fs::write(&out, doc.to_pretty() + "\n") {
             Ok(()) => println!("[perf json written to {}]", out.display()),
             Err(e) => {

@@ -30,7 +30,19 @@ use crate::sim::event::{EventKind, JobTimerKind};
 use crate::sim::{EventId, SimEngine, SimTime};
 use crate::storage::dht_store::{download_time, upload_time};
 use crate::storage::image::CheckpointImage;
+use crate::trace::{SpanKind, Subsystem, TracePayload, Tracer};
 use crate::util::rng::Pcg64;
+
+/// Emit a trace record stamped with the engine clock and current job
+/// epoch. A macro (not a method) so the borrow stays field-precise:
+/// only `tracer` + `engine` + `job_epoch` are touched, which lets call
+/// sites keep disjoint `&mut` borrows of `job` / `store` / `metrics`
+/// alive around them. With the sink off this is a single branch.
+macro_rules! trace_emit {
+    ($w:expr, $sub:expr, $peer:expr, $payload:expr) => {
+        $w.tracer.emit($w.engine.now(), $w.job_epoch as u32, $sub, $peer, $payload)
+    };
+}
 
 /// Job phase in the world.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -86,6 +98,8 @@ pub struct World {
     /// never fire into job N+1.
     job_epoch: usize,
     pub metrics: Metrics,
+    /// Structured event tracer (off by default; see [`crate::trace`]).
+    pub tracer: Tracer,
 }
 
 impl World {
@@ -145,6 +159,7 @@ impl World {
             job: None,
             job_epoch: 0,
             metrics: Metrics::new(),
+            tracer: Tracer::off(),
         })
     }
 
@@ -216,6 +231,7 @@ impl World {
         // straight from the estimator — no per-decide clone.
         let (v_eff, td_eff) = self.effective_overheads(&job);
         let true_rate = self.churn.rate(start);
+        let mut decided = None;
         {
             let ctx = PolicyCtx {
                 now: start,
@@ -227,9 +243,28 @@ impl World {
             };
             if let Ok(d) = job.policy.decide(&ctx) {
                 job.interval = d.interval;
+                decided = Some(d.interval);
             }
         }
         self.job = Some(job);
+        if let Some(interval) = decided {
+            if self.tracer.enabled() {
+                let est_rate = self.estimator.rate().unwrap_or(0.0);
+                let window = self.estimator.lifetimes().len() as u32;
+                trace_emit!(
+                    self,
+                    Subsystem::Coordinator,
+                    None,
+                    TracePayload::Decision {
+                        interval_s: interval.unwrap_or(f64::INFINITY),
+                        est_rate,
+                        true_rate,
+                        window,
+                        trigger: "initial",
+                    }
+                );
+            }
+        }
         self.schedule_compute_timers();
         if self.job.as_ref().unwrap().policy.wants_replanning() {
             self.engine.schedule_in_secs(
@@ -345,6 +380,10 @@ impl World {
                 return;
             }
         }
+        if self.tracer.enabled() {
+            let peer = ev.peer().map(|p| p as u32);
+            trace_emit!(self, Subsystem::Sim, peer, TracePayload::Dispatch { kind: ev.name() });
+        }
         match ev {
             EventKind::PeerFail { peer } => self.on_peer_fail(peer),
             EventKind::PeerJoin { peer } => self.on_peer_join(peer),
@@ -367,8 +406,14 @@ impl World {
             return;
         }
         let now = self.now();
-        self.overlay.depart(peer, now);
+        let lifetime = self.overlay.depart(peer, now);
         self.metrics.inc("churn.failures");
+        trace_emit!(
+            self,
+            Subsystem::Overlay,
+            Some(peer as u32),
+            TracePayload::PeerDepart { lifetime_s: lifetime }
+        );
         // Rejoin later (population held constant in expectation).
         let delay = self.churn.rejoin_delay(&mut self.rng);
         self.engine.schedule_in_secs(delay, EventKind::PeerJoin { peer });
@@ -397,6 +442,7 @@ impl World {
         }
         let now = self.now();
         self.overlay.join(peer, now);
+        trace_emit!(self, Subsystem::Overlay, Some(peer as u32), TracePayload::PeerJoin);
         let s = self.churn.session(now, &mut self.rng);
         self.engine.schedule_in_secs(s, EventKind::PeerFail { peer });
     }
@@ -419,6 +465,12 @@ impl World {
             }
             if observed > 0 {
                 self.metrics.add("stabilize.observations", observed);
+                trace_emit!(
+                    self,
+                    Subsystem::Stabilize,
+                    Some(peer as u32),
+                    TracePayload::Observations { observed: observed as u32 }
+                );
             }
             // Data-plane maintenance rides the stabilization cadence —
             // throttled to one sweep per period (every peer fires its own
@@ -428,6 +480,22 @@ impl World {
             // it never outgrows one period of churn.
             if now - self.last_repair >= self.cfg.stab_period {
                 self.last_repair = now;
+                let traced = self.tracer.enabled();
+                let repair_bytes_before = self.store.counters().repair_bytes;
+                if traced {
+                    trace_emit!(
+                        self,
+                        Subsystem::Stabilize,
+                        None,
+                        TracePayload::Begin { span: SpanKind::StabilizeRound }
+                    );
+                    trace_emit!(
+                        self,
+                        Subsystem::DataPlane,
+                        None,
+                        TracePayload::Begin { span: SpanKind::RepairSweep }
+                    );
+                }
                 let repaired = self.store.repair_sweep(now, &self.overlay, &self.links);
                 if repaired > 0 {
                     self.metrics.add("dataplane.chunks_repaired", repaired as u64);
@@ -436,8 +504,58 @@ impl World {
                 // Fig. 1's server-queue signal, sampled on the same
                 // cadence so sweeps expose it without a dedicated
                 // offload experiment.
-                self.metrics
-                    .set("dataplane.server_backlog", self.store.sched.server_backlog(now));
+                let backlog = self.store.sched.server_backlog(now);
+                self.metrics.set("dataplane.server_backlog", backlog);
+                self.metrics.set("churn.online", self.overlay.online_count() as f64);
+                // Extend every gauge's time series on the same cadence so
+                // exports show *when* a signal moved, not just its final
+                // value.
+                self.metrics.sample_gauges(now);
+                if traced {
+                    let moved = self.store.counters().repair_bytes - repair_bytes_before;
+                    trace_emit!(
+                        self,
+                        Subsystem::DataPlane,
+                        None,
+                        TracePayload::End {
+                            span: SpanKind::RepairSweep,
+                            ok: true,
+                            v0: repaired as f64,
+                            v1: moved,
+                        }
+                    );
+                    trace_emit!(
+                        self,
+                        Subsystem::Stabilize,
+                        None,
+                        TracePayload::End {
+                            span: SpanKind::StabilizeRound,
+                            ok: true,
+                            v0: backlog,
+                            v1: 0.0,
+                        }
+                    );
+                }
+                // Debug builds cross-check the data plane's incremental
+                // byte accounting every round; on a conservation mismatch
+                // the flight recorder is dumped before panicking, which is
+                // exactly the failure the ring sink exists for.
+                #[cfg(debug_assertions)]
+                {
+                    let (incremental, recomputed) = self.store.audit();
+                    if (incremental - recomputed).abs() > 1e-6 * recomputed.abs().max(1.0) {
+                        let dump = crate::trace::export::to_jsonl(&self.tracer.snapshot());
+                        eprintln!(
+                            "--- flight recorder ({} records, {} overwritten) ---\n{dump}",
+                            self.tracer.len(),
+                            self.tracer.dropped()
+                        );
+                        panic!(
+                            "dataplane byte-conservation audit failed at t={now}: \
+                             incremental {incremental} vs recomputed {recomputed}"
+                        );
+                    }
+                }
             }
         }
         self.engine
@@ -456,6 +574,7 @@ impl World {
         job.pending_detections.retain(|&p| p != peer);
         // Roll back.
         job.outcome.failures += 1;
+        let prior_phase = job.phase;
         match job.phase {
             Phase::Checkpointing { started } => {
                 job.outcome.overhead_checkpoint += now - started;
@@ -469,7 +588,30 @@ impl World {
         for id in [job.cp_due.take(), job.done_at.take(), job.xfer.take()].into_iter().flatten() {
             self.engine.cancel(id);
         }
-        job.outcome.wasted += job.progress - job.committed;
+        let wasted = job.progress - job.committed;
+        job.outcome.wasted += wasted;
+        trace_emit!(
+            self,
+            Subsystem::Coordinator,
+            Some(peer as u32),
+            TracePayload::FailureDetected { job: 0, wasted_s: wasted }
+        );
+        // Close the span the failure interrupted so begin/end stay paired.
+        match prior_phase {
+            Phase::Checkpointing { .. } => trace_emit!(
+                self,
+                Subsystem::Coordinator,
+                None,
+                TracePayload::End { span: SpanKind::CheckpointWrite, ok: false, v0: 0.0, v1: 0.0 }
+            ),
+            Phase::Restarting { .. } => trace_emit!(
+                self,
+                Subsystem::Coordinator,
+                None,
+                TracePayload::End { span: SpanKind::Restore, ok: false, v0: 0.0, v1: 0.0 }
+            ),
+            _ => {}
+        }
         // Replacement peer: one uniform draw from the dense online set
         // (was: collect every online id, then index — O(n) per failure).
         let replacement = {
@@ -517,11 +659,24 @@ impl World {
         job.work_since_commit = 0.0;
         job.phase = Phase::Restarting { started: now };
         let epoch = self.job_epoch;
+        let from_seq = job.seq;
         job.xfer = Some(
             self.engine
                 .schedule_in_secs(dl, EventKind::DownloadDone { job: epoch, seq: job.seq }),
         );
         self.metrics.inc("job.restarts");
+        trace_emit!(
+            self,
+            Subsystem::Coordinator,
+            None,
+            TracePayload::Restart { job: 0, from_seq, progress_s: restore_to }
+        );
+        trace_emit!(
+            self,
+            Subsystem::Coordinator,
+            None,
+            TracePayload::Begin { span: SpanKind::Restore }
+        );
     }
 
     fn on_checkpoint_due(&mut self) {
@@ -560,6 +715,12 @@ impl World {
             self.engine
                 .schedule_in_secs(v_eff, EventKind::UploadDone { job: epoch, seq }),
         );
+        trace_emit!(
+            self,
+            Subsystem::Coordinator,
+            None,
+            TracePayload::Begin { span: SpanKind::CheckpointWrite }
+        );
     }
 
     fn on_upload_done(&mut self, seq: u64) {
@@ -570,8 +731,10 @@ impl World {
         if !matches!(job.phase, Phase::Checkpointing { .. }) || job.seq != seq {
             return;
         }
+        let mut write_s = 0.0;
         if let Phase::Checkpointing { started } = job.phase {
-            job.outcome.overhead_checkpoint += now - started;
+            write_s = now - started;
+            job.outcome.overhead_checkpoint += write_s;
         }
         // Commit: persist the image through the data-plane (placement per
         // the configured storage strategy; transfer bytes charged to the
@@ -580,14 +743,42 @@ impl World {
         job.work_since_commit = 0.0;
         job.outcome.checkpoints += 1;
         let uploader = job.members.first().copied().unwrap_or(0);
-        let img = CheckpointImage::new(0, seq, job.committed, job.program.image_bytes());
+        let bytes = job.program.image_bytes();
+        let img = CheckpointImage::new(0, seq, job.committed, bytes);
         let _ = self.store.put(now, &self.overlay, &self.links, uploader, img);
-        self.store.gc(0, seq.saturating_sub(1)); // keep previous as backup
+        trace_emit!(
+            self,
+            Subsystem::DataPlane,
+            Some(uploader as u32),
+            TracePayload::Put { job: 0, seq, bytes }
+        );
+        let dropped = self.store.gc(0, seq.saturating_sub(1)); // keep previous as backup
+        if dropped > 0 {
+            trace_emit!(
+                self,
+                Subsystem::DataPlane,
+                None,
+                TracePayload::Gc { job: 0, dropped: dropped as u32 }
+            );
+        }
         let job = self.job.as_mut().unwrap();
         job.phase = Phase::Computing;
         job.xfer = None;
         self.schedule_compute_timers();
         self.metrics.inc("job.commits");
+        self.metrics.observe("job.checkpoint_write_s", write_s);
+        trace_emit!(self, Subsystem::Coordinator, None, TracePayload::Commit { job: 0, seq });
+        trace_emit!(
+            self,
+            Subsystem::Coordinator,
+            None,
+            TracePayload::End {
+                span: SpanKind::CheckpointWrite,
+                ok: true,
+                v0: seq as f64,
+                v1: bytes,
+            }
+        );
     }
 
     fn on_download_done(&mut self) {
@@ -598,10 +789,18 @@ impl World {
         let Phase::Restarting { started } = job.phase else {
             return;
         };
-        job.outcome.overhead_restart += now - started;
+        let restore_s = now - started;
+        job.outcome.overhead_restart += restore_s;
         job.phase = Phase::Computing;
         job.xfer = None;
         self.schedule_compute_timers();
+        self.metrics.observe("job.restore_s", restore_s);
+        trace_emit!(
+            self,
+            Subsystem::Coordinator,
+            None,
+            TracePayload::End { span: SpanKind::Restore, ok: true, v0: restore_s, v1: 0.0 }
+        );
     }
 
     fn on_replan(&mut self) {
@@ -618,7 +817,7 @@ impl World {
         };
         let true_rate = self.churn.rate(now);
         let k = self.cfg.k as f64;
-        let computing = {
+        let (computing, decided) = {
             // Split borrows: the decision context borrows the estimator's
             // window while the policy lives in the (disjoint) job field.
             let estimator = &self.estimator;
@@ -631,12 +830,32 @@ impl World {
                 lifetimes: estimator.lifetimes(),
                 true_rate: Some(true_rate),
             };
+            let mut decided = None;
             if let Ok(d) = job.policy.decide(&ctx) {
                 job.interval = d.interval;
                 job.outcome.replans += 1;
+                decided = Some(d.interval);
             }
-            job.phase == Phase::Computing
+            (job.phase == Phase::Computing, decided)
         };
+        if let Some(interval) = decided {
+            if self.tracer.enabled() {
+                let est_rate = self.estimator.rate().unwrap_or(0.0);
+                let window = self.estimator.lifetimes().len() as u32;
+                trace_emit!(
+                    self,
+                    Subsystem::Coordinator,
+                    None,
+                    TracePayload::Decision {
+                        interval_s: interval.unwrap_or(f64::INFINITY),
+                        est_rate,
+                        true_rate,
+                        window,
+                        trigger: "replan",
+                    }
+                );
+            }
+        }
         if computing {
             self.schedule_compute_timers();
         }

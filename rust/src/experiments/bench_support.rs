@@ -6,6 +6,7 @@
 //! write their CSVs under `target/bench-results/`.
 
 use crate::util::csv::Table;
+use crate::util::json::Json;
 use crate::util::stats::Running;
 use crate::util::wall_clock::{self, Stopwatch};
 use std::path::PathBuf;
@@ -70,6 +71,97 @@ pub fn is_quick() -> bool {
     wall_clock::cli_flag("--quick") || wall_clock::env_flag("P2PCP_BENCH_QUICK")
 }
 
+/// Compare a freshly measured perf JSON doc against a committed baseline
+/// (`perf_sim --check BENCH_perf_sim.json`). Only throughput keys — numeric
+/// fields ending `_per_s` — present in *both* docs are compared; a
+/// regression is `current < baseline * (1 - tol)`. Array rows (the world
+/// and dataplane tiers) are matched by their `n_peers`/`storage` labels,
+/// not by index, so adding a tier never misaligns the rest.
+///
+/// Returns one human-readable warning line per regression (empty = clean).
+/// Wall-clock throughput is machine-dependent, so callers treat these as
+/// soft warnings, never hard failures.
+pub fn compare_perf_json(current: &Json, baseline: &Json, tol: f64) -> Vec<String> {
+    if count_rate_keys(baseline) == 0 {
+        return vec![
+            "baseline has no *_per_s measurements (stub baseline?) — nothing to compare"
+                .to_string(),
+        ];
+    }
+    let mut out = Vec::new();
+    walk_compare(current, baseline, "", tol, &mut out);
+    out
+}
+
+fn count_rate_keys(j: &Json) -> usize {
+    match j {
+        Json::Obj(m) => m
+            .iter()
+            .map(|(k, v)| {
+                usize::from(k.ends_with("_per_s") && v.as_f64().is_some()) + count_rate_keys(v)
+            })
+            .sum(),
+        Json::Arr(a) => a.iter().map(count_rate_keys).sum(),
+        _ => 0,
+    }
+}
+
+/// Identity label for a tier row: `n_peers=…[,storage=…]` when present.
+fn row_label(row: &Json) -> String {
+    let mut parts = Vec::new();
+    if let Some(n) = row.get("n_peers").and_then(Json::as_f64) {
+        parts.push(format!("n_peers={n}"));
+    }
+    if let Some(s) = row.get("storage").and_then(Json::as_str) {
+        parts.push(format!("storage={s}"));
+    }
+    parts.join(",")
+}
+
+fn walk_compare(cur: &Json, base: &Json, path: &str, tol: f64, out: &mut Vec<String>) {
+    match (cur, base) {
+        (Json::Obj(cm), Json::Obj(bm)) => {
+            for (k, cv) in cm {
+                let Some(bv) = bm.get(k) else { continue };
+                let sub =
+                    if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                if k.ends_with("_per_s") {
+                    if let (Some(c), Some(b)) = (cv.as_f64(), bv.as_f64()) {
+                        if b.is_finite() && b > 0.0 && c < b * (1.0 - tol) {
+                            out.push(format!(
+                                "{sub}: {c:.0}/s is {:.1}% below baseline {b:.0}/s \
+                                 (tolerance {:.0}%)",
+                                (1.0 - c / b) * 100.0,
+                                tol * 100.0,
+                            ));
+                        }
+                    }
+                } else {
+                    walk_compare(cv, bv, &sub, tol, out);
+                }
+            }
+        }
+        (Json::Arr(ca), Json::Arr(ba)) => {
+            for (i, cv) in ca.iter().enumerate() {
+                let label = row_label(cv);
+                let bv = if label.is_empty() {
+                    ba.get(i)
+                } else {
+                    ba.iter().find(|b| row_label(b) == label)
+                };
+                let Some(bv) = bv else { continue };
+                let sub = if label.is_empty() {
+                    format!("{path}[{i}]")
+                } else {
+                    format!("{path}[{label}]")
+                };
+                walk_compare(cv, bv, &sub, tol, out);
+            }
+        }
+        _ => {}
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -81,5 +173,71 @@ mod tests {
         });
         assert_eq!(r.count(), 5);
         assert!(r.mean() >= 0.0);
+    }
+
+    fn perf_doc(events_per_s: f64, sweeps_per_s: f64) -> Json {
+        Json::obj(vec![
+            ("bench", Json::Str("perf_sim".into())),
+            (
+                "world",
+                Json::Arr(vec![Json::obj(vec![
+                    ("n_peers", Json::Num(1000.0)),
+                    ("events", Json::Num(5e6)),
+                    ("events_per_s", Json::Num(events_per_s)),
+                ])]),
+            ),
+            (
+                "dataplane",
+                Json::Arr(vec![Json::obj(vec![
+                    ("n_peers", Json::Num(1000.0)),
+                    ("storage", Json::Str("replicate:3".into())),
+                    ("sweeps_per_s_incremental", Json::Num(sweeps_per_s)),
+                ])]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn perf_check_flags_regressions_only() {
+        let base = perf_doc(1_000_000.0, 500.0);
+        // Within tolerance + an outright improvement: clean.
+        assert!(compare_perf_json(&perf_doc(900_000.0, 800.0), &base, 0.25).is_empty());
+        // 50% world regression: exactly one warning, labeled by tier.
+        let warns = compare_perf_json(&perf_doc(500_000.0, 500.0), &base, 0.25);
+        assert_eq!(warns.len(), 1, "{warns:?}");
+        assert!(warns[0].contains("world[n_peers=1000].events_per_s"), "{}", warns[0]);
+        // Both sections regressed: two warnings, dataplane row labeled by
+        // n_peers + storage.
+        let warns = compare_perf_json(&perf_doc(100_000.0, 10.0), &base, 0.25);
+        assert_eq!(warns.len(), 2, "{warns:?}");
+        assert!(
+            warns.iter().any(|w| w.contains("storage=replicate:3")),
+            "{warns:?}"
+        );
+    }
+
+    #[test]
+    fn perf_check_skips_unmatched_and_non_rate_keys() {
+        let base = perf_doc(1_000_000.0, 500.0);
+        // A current doc with a new tier the baseline lacks: no warning for
+        // it, and differing non-rate keys (events) are never compared.
+        let mut cur = perf_doc(1_000_000.0, 500.0);
+        if let Json::Obj(m) = &mut cur {
+            if let Some(Json::Arr(rows)) = m.get_mut("world") {
+                rows.push(Json::obj(vec![
+                    ("n_peers", Json::Num(10_000.0)),
+                    ("events_per_s", Json::Num(1.0)),
+                ]));
+            }
+        }
+        assert!(compare_perf_json(&cur, &base, 0.25).is_empty());
+    }
+
+    #[test]
+    fn perf_check_notes_stub_baseline() {
+        let stub = Json::obj(vec![("bench", Json::Str("perf_sim".into()))]);
+        let warns = compare_perf_json(&perf_doc(1.0, 1.0), &stub, 0.25);
+        assert_eq!(warns.len(), 1);
+        assert!(warns[0].contains("stub baseline"), "{}", warns[0]);
     }
 }

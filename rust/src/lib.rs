@@ -62,6 +62,7 @@ pub mod runtime;
 pub mod scenario;
 pub mod sim;
 pub mod storage;
+pub mod trace;
 pub mod util;
 pub mod workflow;
 

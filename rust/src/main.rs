@@ -13,9 +13,13 @@
 //!                 [--intervals csv] [--threads N] [--oracle] [--out file.csv]
 //! p2pcp plan      [--mtbf S] [--k N] [--v S] [--td S] [--sweep-k]
 //!                 [--planner native|xla]
-//! p2pcp trace     [--network gnutella|overnet|bittorrent] [--sessions N]
+//! p2pcp sessions  [--network gnutella|overnet|bittorrent] [--sessions N]
 //! p2pcp world     [--churn KEY | --mtbf S] [--k N] [--runtime S] [--peers N]
 //!                 [--policy KEY] [--estimator KEY] [--storage KEY]
+//! p2pcp trace     [world flags] [--warmup S] [--flight N]
+//!                 [--trace-out f.jsonl] [--chrome-out f.json]
+//!                 [--metrics-out f.json] [--subsystems csv] [--peer N]
+//!                 [--from S] [--to S]
 //! p2pcp fleet     [--mtbf S] [--jobs N] [--arrival S] [--planner KEY] ...
 //! p2pcp server-offload [--peers csv] [--image-mb csv] [--storages csv]
 //!                 [--k N] [--period S] [--horizon S] [--mtbf S]
@@ -39,7 +43,10 @@ use p2pcp::model::optimal::optimal_lambda_checked;
 use p2pcp::planner::{NativePlanner, PlanRequest, Planner, XlaPlanner};
 use p2pcp::runtime::PjrtRuntime;
 use p2pcp::scenario::{registry, ComparisonSweep, PlannerSpec, Scenario, SweepRunner};
+use p2pcp::sim::SimTime;
+use p2pcp::trace::{export, Subsystem, TraceFilter, Tracer};
 use p2pcp::util::csv::Table;
+use p2pcp::util::digest::DeterminismDigest;
 use p2pcp::util::stats::Running;
 
 fn main() {
@@ -60,6 +67,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "simulate" => cmd_simulate(args),
         "sweep" => cmd_sweep(args),
         "plan" => cmd_plan(args),
+        "sessions" => cmd_sessions(args),
         "trace" => cmd_trace(args),
         "world" => cmd_world(args),
         "fleet" => cmd_fleet(args),
@@ -84,8 +92,10 @@ COMMANDS:
   sweep      adaptive-vs-fixed relative-runtime sweep (Fig. 4/5 harness);
              --mtbfs runs a multi-series grid, --threads parallelizes
   plan       evaluate the closed-form planner (lambda*, U) once or over k
-  trace      synthesize a P2P session trace and analyze it (Fig. 2)
+  sessions   synthesize a P2P session trace and analyze it (Fig. 2)
   world      run the full-stack world (overlay + Chandy-Lamport + DHT store)
+  trace      run a traced world and export the event timeline
+             (JSONL / Chrome trace JSON, deterministic digest)
   fleet      serve many concurrent jobs with shared batched planning
   server-offload  sweep peers x image size x storage strategy and report
              server vs peer bytes/s (the paper's Fig. 1 motivation)
@@ -332,7 +342,7 @@ fn cmd_plan(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_trace(args: &Args) -> Result<()> {
+fn cmd_sessions(args: &Args) -> Result<()> {
     args.check_unknown(&["network", "sessions", "seed"])?;
     let kind = match args.get_str("network", "gnutella")?.as_str() {
         "gnutella" => TraceKind::Gnutella,
@@ -352,6 +362,88 @@ fn cmd_trace(args: &Args) -> Result<()> {
         "hourly-rate CV   : {:.3}  (homogeneous control: {:.3})",
         b.cv, b.control_cv
     );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    args.check_unknown(&with_scenario_flags(&[
+        "warmup", "flight", "trace-out", "chrome-out", "metrics-out", "subsystems", "peer",
+        "from", "to",
+    ]))?;
+    let mut s = scenario_from_args(args, 256)?;
+    if !args.has("runtime") {
+        s.runtime = 3600.0; // match the world demo default: a 1 h job
+    }
+    let warmup = args.get_f64("warmup", 3600.0)?;
+    let mut world = s.build_world()?;
+    // --flight N switches the full-capture sink for the bounded flight
+    // recorder (keep the most recent N records).
+    world.tracer = if args.has("flight") {
+        Tracer::ring(args.get_usize("flight", 4096)?.max(1))
+    } else {
+        Tracer::full()
+    };
+    world.warmup(warmup);
+    let outcome = world.run_job(s.program(), s.build_policy()?)?;
+
+    let mut filter = TraceFilter::default();
+    if let Some(csv) = args.get("subsystems")? {
+        let subs = csv
+            .split(',')
+            .map(|x| {
+                Subsystem::parse(x.trim()).ok_or_else(|| {
+                    Error::Config(format!(
+                        "unknown subsystem '{}' (expected one of: {})",
+                        x.trim(),
+                        Subsystem::ALL.map(|s| s.name()).join(" | ")
+                    ))
+                })
+            })
+            .collect::<Result<Vec<Subsystem>>>()?;
+        filter.subsystems = Some(subs);
+    }
+    if args.has("peer") {
+        filter.peer = Some(args.get_usize("peer", 0)? as u32);
+    }
+    if args.has("from") {
+        filter.from = Some(SimTime::from_secs_f64(args.get_f64("from", 0.0)?));
+    }
+    if args.has("to") {
+        filter.to = Some(SimTime::from_secs_f64(args.get_f64("to", f64::MAX)?));
+    }
+    let events = filter.apply(world.tracer.snapshot());
+
+    println!("job completed    : {}", outcome.completed);
+    println!("job wall time    : {:.0} s", outcome.wall_time);
+    println!(
+        "records emitted  : {} ({} held, {} overwritten)",
+        world.tracer.emitted(),
+        world.tracer.len(),
+        world.tracer.dropped()
+    );
+    println!("records exported : {} (after filters)", events.len());
+    for (kind, n) in world.tracer.counts_by_kind() {
+        println!("  {kind:<18} {n}");
+    }
+    // The digest is printed unconditionally so two runs (or two thread
+    // counts driving the same seed) can be compared byte-for-byte from
+    // the shell.
+    let mut d = DeterminismDigest::new("cli-trace");
+    world.tracer.fold_digest("trace", &mut d);
+    println!("trace digest     : {:#018x} over {} records", d.value(), d.len());
+
+    if let Some(path) = args.get("trace-out")? {
+        std::fs::write(path, export::to_jsonl(&events))?;
+        println!("[written {path}]");
+    }
+    if let Some(path) = args.get("chrome-out")? {
+        std::fs::write(path, export::to_chrome(&events).to_string())?;
+        println!("[written {path}]");
+    }
+    if let Some(path) = args.get("metrics-out")? {
+        std::fs::write(path, world.metrics.to_json().to_pretty())?;
+        println!("[written {path}]");
+    }
     Ok(())
 }
 

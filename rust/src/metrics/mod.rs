@@ -1,17 +1,50 @@
 //! Metrics: counters + a recorder the simulator and coordinator write to,
 //! with JSON export for experiment post-processing.
+//!
+//! Distributions keep both Welford moments ([`Running`]) and a
+//! deterministic log-bucketed histogram ([`LogHistogram`]) so tail
+//! quantiles (p50/p90/p99) are available without storing samples.
+//! Gauges can additionally be sampled into time series
+//! ([`Metrics::sample_gauges`], called by the world once per
+//! stabilization period) so runs export *when* a gauge moved, not just
+//! its final value.
 
 use crate::util::digest::DeterminismDigest;
 use crate::util::json::Json;
-use crate::util::stats::Running;
+use crate::util::stats::{LogHistogram, Running};
 use std::collections::BTreeMap;
+
+/// One distribution: running moments plus a quantile histogram.
+#[derive(Debug, Default)]
+struct Dist {
+    running: Running,
+    hist: LogHistogram,
+}
+
+/// A sampled gauge time series (parallel time/value vectors).
+#[derive(Debug, Default, Clone)]
+pub struct Series {
+    pub t: Vec<f64>,
+    pub v: Vec<f64>,
+}
+
+impl Series {
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+}
 
 /// A metrics registry (string-keyed counters and distributions).
 #[derive(Debug, Default)]
 pub struct Metrics {
     counters: BTreeMap<String, u64>,
     gauges: BTreeMap<String, f64>,
-    dists: BTreeMap<String, Running>,
+    dists: BTreeMap<String, Dist>,
+    series: BTreeMap<String, Series>,
 }
 
 impl Metrics {
@@ -44,11 +77,30 @@ impl Metrics {
 
     pub fn observe(&mut self, key: &str, v: f64) {
         match self.dists.get_mut(key) {
-            Some(d) => d.push(v),
+            Some(d) => {
+                d.running.push(v);
+                d.hist.push(v);
+            }
             None => {
-                let mut d = Running::new();
-                d.push(v);
+                let mut d = Dist::default();
+                d.running.push(v);
+                d.hist.push(v);
                 self.dists.insert(key.to_string(), d);
+            }
+        }
+    }
+
+    /// Append the current value of every gauge to its time series.
+    pub fn sample_gauges(&mut self, now: f64) {
+        for (k, &v) in &self.gauges {
+            match self.series.get_mut(k) {
+                Some(s) => {
+                    s.t.push(now);
+                    s.v.push(v);
+                }
+                None => {
+                    self.series.insert(k.clone(), Series { t: vec![now], v: vec![v] });
+                }
             }
         }
     }
@@ -62,13 +114,23 @@ impl Metrics {
     }
 
     pub fn dist(&self, key: &str) -> Option<&Running> {
-        self.dists.get(key)
+        self.dists.get(key).map(|d| &d.running)
+    }
+
+    /// Histogram quantile of a distribution (`q` in [0,1]).
+    pub fn quantile(&self, key: &str, q: f64) -> Option<f64> {
+        self.dists.get(key).map(|d| d.hist.quantile(q))
+    }
+
+    pub fn series(&self, key: &str) -> Option<&Series> {
+        self.series.get(key)
     }
 
     /// Fold the full registry — counters, gauges, distribution summaries
-    /// — into a determinism digest, in key order. Two runs of the same
-    /// seeded scenario must produce identical folds (the dual-run harness
-    /// in `rust/tests/determinism.rs` asserts exactly this).
+    /// (moments *and* quantiles), sampled series — into a determinism
+    /// digest, in key order. Two runs of the same seeded scenario must
+    /// produce identical folds (the dual-run harness in
+    /// `rust/tests/determinism.rs` asserts exactly this).
     pub fn fold_digest(&self, d: &mut DeterminismDigest) {
         for (k, v) in &self.counters {
             d.record_u64(&format!("counter.{k}"), *v);
@@ -76,11 +138,23 @@ impl Metrics {
         for (k, v) in &self.gauges {
             d.record_f64(&format!("gauge.{k}"), *v);
         }
-        for (k, r) in &self.dists {
+        for (k, dist) in &self.dists {
+            let r = &dist.running;
             d.record_u64(&format!("dist.{k}.count"), r.count());
             d.record_f64(&format!("dist.{k}.mean"), r.mean());
+            d.record_f64(&format!("dist.{k}.stddev"), r.stddev());
             d.record_f64(&format!("dist.{k}.min"), r.min());
             d.record_f64(&format!("dist.{k}.max"), r.max());
+            d.record_f64(&format!("dist.{k}.p50"), dist.hist.quantile(0.5));
+            d.record_f64(&format!("dist.{k}.p90"), dist.hist.quantile(0.9));
+            d.record_f64(&format!("dist.{k}.p99"), dist.hist.quantile(0.99));
+        }
+        for (k, s) in &self.series {
+            d.record_usize(&format!("series.{k}.len"), s.len());
+            for (i, (&t, &v)) in s.t.iter().zip(&s.v).enumerate() {
+                d.record_f64(&format!("series.{k}.{i}.t"), t);
+                d.record_f64(&format!("series.{k}.{i}.v"), v);
+            }
         }
     }
 
@@ -93,7 +167,8 @@ impl Metrics {
         for (k, v) in &self.gauges {
             obj.insert(format!("gauge.{k}"), Json::Num(*v));
         }
-        for (k, d) in &self.dists {
+        for (k, dist) in &self.dists {
+            let d = &dist.running;
             obj.insert(
                 format!("dist.{k}"),
                 Json::obj(vec![
@@ -102,7 +177,16 @@ impl Metrics {
                     ("stddev", Json::Num(d.stddev())),
                     ("min", Json::Num(d.min())),
                     ("max", Json::Num(d.max())),
+                    ("p50", Json::Num(dist.hist.quantile(0.5))),
+                    ("p90", Json::Num(dist.hist.quantile(0.9))),
+                    ("p99", Json::Num(dist.hist.quantile(0.99))),
                 ]),
+            );
+        }
+        for (k, s) in &self.series {
+            obj.insert(
+                format!("series.{k}"),
+                Json::obj(vec![("t", Json::arr_f64(&s.t)), ("v", Json::arr_f64(&s.v))]),
             );
         }
         Json::Obj(obj)
@@ -136,5 +220,59 @@ mod tests {
         let s = j.to_string();
         let back = crate::util::json::parse(&s).unwrap();
         assert_eq!(back.get("counter.x").and_then(Json::as_f64), Some(1.0));
+        let d = back.get("dist.d").unwrap();
+        assert!(d.get("p99").and_then(Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn digest_folds_stddev() {
+        // Same count/mean/min-max-free prefix, different variance: the
+        // fold must diverge exactly at `dist.<key>.stddev` — the record
+        // the pre-satellite digest omitted.
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        for x in [2.0, 4.0] {
+            a.observe("lat", x);
+        }
+        for x in [1.0, 5.0] {
+            b.observe("lat", x);
+        }
+        assert_eq!(a.dist("lat").unwrap().mean(), b.dist("lat").unwrap().mean());
+        let mut da = DeterminismDigest::new("a");
+        let mut db = DeterminismDigest::new("b");
+        a.fold_digest(&mut da);
+        b.fold_digest(&mut db);
+        let div = da.first_divergence(&db).expect("variance-only change must diverge");
+        assert_eq!(div.left_label, "dist.lat.stddev");
+    }
+
+    #[test]
+    fn digest_folds_quantiles_and_series() {
+        let mut m = Metrics::new();
+        m.observe("lat", 10.0);
+        m.set("backlog", 3.0);
+        m.sample_gauges(30.0);
+        m.set("backlog", 5.0);
+        m.sample_gauges(60.0);
+        let mut d = DeterminismDigest::new("m");
+        m.fold_digest(&mut d);
+        let s = m.series("backlog").unwrap();
+        assert_eq!(s.t, vec![30.0, 60.0]);
+        assert_eq!(s.v, vec![3.0, 5.0]);
+        let j = m.to_json().to_string();
+        let back = crate::util::json::parse(&j).unwrap();
+        let sv = back.get("series.backlog").unwrap().get("v").unwrap();
+        assert_eq!(sv.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn quantile_accessor() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.observe("restore", i as f64);
+        }
+        let p99 = m.quantile("restore", 0.99).unwrap();
+        assert!((p99 - 99.0).abs() / 99.0 < 0.1, "p99 = {p99}");
+        assert!(m.quantile("missing", 0.5).is_none());
     }
 }

@@ -64,6 +64,35 @@ impl EventKind {
             | EventKind::Deliver { .. } => None,
         }
     }
+
+    /// Stable variant name (trace dispatch records, diagnostics).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::PeerJoin { .. } => "PeerJoin",
+            EventKind::PeerFail { .. } => "PeerFail",
+            EventKind::Stabilize { .. } => "Stabilize",
+            EventKind::Deliver { .. } => "Deliver",
+            EventKind::JobTimer { what: JobTimerKind::CheckpointDue, .. } => "CheckpointDue",
+            EventKind::JobTimer { what: JobTimerKind::CalibrationEnd, .. } => "CalibrationEnd",
+            EventKind::JobTimer { what: JobTimerKind::Replan, .. } => "Replan",
+            EventKind::MemberFailDetected { .. } => "MemberFailDetected",
+            EventKind::UploadDone { .. } => "UploadDone",
+            EventKind::DownloadDone { .. } => "DownloadDone",
+            EventKind::JobDone { .. } => "JobDone",
+        }
+    }
+
+    /// The peer an event concerns, when it is peer-addressed.
+    pub fn peer(&self) -> Option<usize> {
+        match self {
+            EventKind::PeerJoin { peer }
+            | EventKind::PeerFail { peer }
+            | EventKind::Stabilize { peer }
+            | EventKind::MemberFailDetected { peer, .. } => Some(*peer),
+            EventKind::Deliver { dst, .. } => Some(*dst),
+            _ => None,
+        }
+    }
 }
 
 /// What a job timer means when it fires.

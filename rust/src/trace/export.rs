@@ -1,0 +1,154 @@
+//! Trace exporters: JSONL (one record per line) and Chrome trace-event
+//! JSON (loadable in Perfetto / `chrome://tracing`). Sim time is encoded
+//! as microseconds in the Chrome `ts` field — exactly the engine's
+//! native `SimTime` unit — so one simulated second reads as one
+//! millisecond on the timeline ruler.
+
+use super::{FieldVal, Subsystem, TraceEvent, TracePayload};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+fn field_json(val: FieldVal) -> Json {
+    match val {
+        FieldVal::U64(x) => Json::Num(x as f64),
+        FieldVal::F64(x) => Json::Num(x),
+        FieldVal::Str(s) => Json::Str(s.to_string()),
+        FieldVal::Bool(b) => Json::Bool(b),
+    }
+}
+
+/// One record as a flat JSON object (`t` in sim seconds).
+pub fn event_json(ev: &TraceEvent) -> Json {
+    let mut obj = BTreeMap::new();
+    obj.insert("t".to_string(), Json::Num(ev.time.as_secs_f64()));
+    obj.insert("seq".to_string(), Json::Num(ev.seq as f64));
+    obj.insert("epoch".to_string(), Json::Num(ev.epoch as f64));
+    obj.insert("sub".to_string(), Json::Str(ev.subsystem.name().to_string()));
+    if let Some(p) = ev.peer {
+        obj.insert("peer".to_string(), Json::Num(p as f64));
+    }
+    obj.insert("kind".to_string(), Json::Str(ev.kind().to_string()));
+    ev.payload.visit(&mut |name, val| {
+        obj.insert(name.to_string(), field_json(val));
+    });
+    Json::Obj(obj)
+}
+
+/// JSONL: one compact JSON object per line, in `seq` order.
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&event_json(ev).to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Chrome trace-event timeline. Span `Begin`/`End` payloads become
+/// `ph:"B"`/`ph:"E"` pairs; everything else is an instant (`ph:"i"`).
+/// Peers map to `tid` (peer index + 1; coordinator-wide records on
+/// tid 0), subsystems to `cat`.
+pub fn to_chrome(events: &[TraceEvent]) -> Json {
+    let mut rows = Vec::with_capacity(events.len() + Subsystem::ALL.len());
+    rows.push(Json::obj(vec![
+        ("name", Json::Str("process_name".to_string())),
+        ("ph", Json::Str("M".to_string())),
+        ("pid", Json::Num(1.0)),
+        ("args", Json::obj(vec![("name", Json::Str("p2pcp sim".to_string()))])),
+    ]));
+    for ev in events {
+        let tid = ev.peer.map_or(0.0, |p| (p + 1) as f64);
+        let (ph, name) = match ev.payload {
+            TracePayload::Begin { span } => ("B", span.name()),
+            TracePayload::End { span, .. } => ("E", span.name()),
+            _ => ("i", ev.kind()),
+        };
+        let mut args = BTreeMap::new();
+        args.insert("seq".to_string(), Json::Num(ev.seq as f64));
+        args.insert("epoch".to_string(), Json::Num(ev.epoch as f64));
+        ev.payload.visit(&mut |fname, val| {
+            args.insert(fname.to_string(), field_json(val));
+        });
+        let mut obj = BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(name.to_string()));
+        obj.insert("cat".to_string(), Json::Str(ev.subsystem.name().to_string()));
+        obj.insert("ph".to_string(), Json::Str(ph.to_string()));
+        obj.insert("ts".to_string(), Json::Num(ev.time.as_micros() as f64));
+        obj.insert("pid".to_string(), Json::Num(1.0));
+        obj.insert("tid".to_string(), Json::Num(tid));
+        if ph == "i" {
+            obj.insert("s".to_string(), Json::Str("t".to_string()));
+        }
+        obj.insert("args".to_string(), Json::Obj(args));
+        rows.push(Json::Obj(obj));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(rows)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::SimTime;
+    use crate::trace::{SpanKind, Tracer};
+    use crate::util::json;
+
+    fn sample() -> Vec<TraceEvent> {
+        let mut t = Tracer::full();
+        t.emit(
+            SimTime::from_secs_f64(1.0),
+            0,
+            Subsystem::Coordinator,
+            Some(3),
+            TracePayload::Begin { span: SpanKind::CheckpointWrite },
+        );
+        t.emit(
+            SimTime::from_secs_f64(2.5),
+            0,
+            Subsystem::Coordinator,
+            Some(3),
+            TracePayload::End { span: SpanKind::CheckpointWrite, ok: true, v0: 1.0, v1: 4e6 },
+        );
+        t.emit(
+            SimTime::from_secs_f64(3.0),
+            0,
+            Subsystem::Overlay,
+            Some(9),
+            TracePayload::PeerDepart { lifetime_s: 1234.5 },
+        );
+        t.snapshot()
+    }
+
+    #[test]
+    fn jsonl_lines_parse_individually() {
+        let s = to_jsonl(&sample());
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in lines {
+            let v = json::parse(line).unwrap();
+            assert!(v.get("kind").is_some());
+            assert!(v.get("t").and_then(Json::as_f64).is_some());
+        }
+    }
+
+    #[test]
+    fn chrome_trace_parses_and_pairs_spans() {
+        let doc = to_chrome(&sample());
+        let back = json::parse(&doc.to_string()).unwrap();
+        let rows = back.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let phs: Vec<&str> =
+            rows.iter().filter_map(|r| r.get("ph").and_then(Json::as_str)).collect();
+        let b = phs.iter().filter(|p| **p == "B").count();
+        let e = phs.iter().filter(|p| **p == "E").count();
+        assert_eq!(b, e, "span begin/end must pair up");
+        // ts is sim-microseconds: 2.5 s -> 2_500_000.
+        let ts: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.get("ph").and_then(Json::as_str) == Some("E"))
+            .filter_map(|r| r.get("ts").and_then(Json::as_f64))
+            .collect();
+        assert_eq!(ts, vec![2_500_000.0]);
+    }
+}

@@ -1,0 +1,536 @@
+//! Deterministic sim-time structured tracing.
+//!
+//! Every record is stamped with `(sim_time, seq, job_epoch, subsystem,
+//! peer)` plus a typed, `Copy`-only payload — no wall-clock, no
+//! allocation on the emit path, no formatting until export. The stream
+//! is totally ordered by the tracer's own monotone `seq`, so a traced
+//! run folds into a [`DeterminismDigest`] and must be byte-identical
+//! across reruns and sweep thread counts (the same contract
+//! `rust/tests/determinism.rs` enforces for metrics).
+//!
+//! Sinks ([`TraceSink`]):
+//! - `Off` — the zero-cost default: `emit` is a single discriminant
+//!   branch, payload construction is `Copy` scalars only (proven
+//!   allocation-free by `rust/tests/trace_alloc.rs`).
+//! - `Ring` — a bounded flight recorder keeping the most recent `cap`
+//!   events; dumped on audit/invariant failure and on demand.
+//! - `Full` — capture everything, for exports and determinism tests.
+//!
+//! Exporters (JSONL and Chrome trace-event JSON) live in
+//! [`crate::trace::export`]; the CLI surface is `p2pcp trace`.
+
+pub mod export;
+
+use crate::sim::time::SimTime;
+use crate::util::digest::{canonical_f64_bits, DeterminismDigest};
+use std::collections::BTreeMap;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Which layer of the stack emitted a record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Subsystem {
+    /// Event-engine dispatch (`World::handle`).
+    Sim,
+    /// Job lifecycle: checkpoints, failure detection, replans, restarts.
+    Coordinator,
+    /// Checkpoint storage: put / restore / repair / GC.
+    DataPlane,
+    /// Membership: joins and departures.
+    Overlay,
+    /// Periodic stabilization rounds and estimator observations.
+    Stabilize,
+}
+
+impl Subsystem {
+    pub const ALL: [Subsystem; 5] = [
+        Subsystem::Sim,
+        Subsystem::Coordinator,
+        Subsystem::DataPlane,
+        Subsystem::Overlay,
+        Subsystem::Stabilize,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Subsystem::Sim => "sim",
+            Subsystem::Coordinator => "coordinator",
+            Subsystem::DataPlane => "dataplane",
+            Subsystem::Overlay => "overlay",
+            Subsystem::Stabilize => "stabilize",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Subsystem> {
+        Subsystem::ALL.iter().copied().find(|sub| sub.name() == s)
+    }
+}
+
+/// Long operations traced as begin/end span pairs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    CheckpointWrite,
+    Restore,
+    RepairSweep,
+    StabilizeRound,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::CheckpointWrite => "checkpoint_write",
+            SpanKind::Restore => "restore",
+            SpanKind::RepairSweep => "repair_sweep",
+            SpanKind::StabilizeRound => "stabilize_round",
+        }
+    }
+}
+
+/// A scalar payload field, surfaced uniformly to the digest fold and the
+/// exporters so both walk the exact same data.
+#[derive(Debug, Clone, Copy)]
+pub enum FieldVal {
+    U64(u64),
+    F64(f64),
+    Str(&'static str),
+    Bool(bool),
+}
+
+/// Typed per-event payload. Every variant is `Copy` and free of heap
+/// data: constructing one on a disabled tracer costs a couple of moves
+/// and a discriminant branch, nothing else.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TracePayload {
+    /// The engine popped an event and the coordinator dispatched it.
+    Dispatch { kind: &'static str },
+    /// A peer (re)joined the overlay.
+    PeerJoin,
+    /// A peer departed; `lifetime_s` is its completed online session.
+    PeerDepart { lifetime_s: f64 },
+    /// The coordinator noticed a job member's departure; `wasted_s` is
+    /// the uncommitted progress rolled back by the failure.
+    FailureDetected { job: u32, wasted_s: f64 },
+    /// A stabilization tick streamed `observed` lifetime observations
+    /// into the churn estimator.
+    Observations { observed: u32 },
+    /// The adaptive policy recomputed the checkpoint interval (Eq. 1);
+    /// carries the estimator inputs that produced it.
+    Decision { interval_s: f64, est_rate: f64, true_rate: f64, window: u32, trigger: &'static str },
+    /// Span open (paired with `End` of the same kind).
+    Begin { span: SpanKind },
+    /// Span close. `ok=false` marks a span aborted by a failure mid-way.
+    /// `v0`/`v1` are span-specific results (seq/bytes, repaired count…).
+    End { span: SpanKind, ok: bool, v0: f64, v1: f64 },
+    /// A checkpoint image was scheduled onto the data plane.
+    Put { job: u32, seq: u64, bytes: f64 },
+    /// Epoch GC dropped superseded images.
+    Gc { job: u32, dropped: u32 },
+    /// A committed checkpoint became the job's rollback point.
+    Commit { job: u32, seq: u64 },
+    /// The job rolled back and restarted from `from_seq` with
+    /// `progress_s` of recovered work.
+    Restart { job: u32, from_seq: u64, progress_s: f64 },
+}
+
+impl TracePayload {
+    /// Stable kind name: digest labels, JSONL `kind`, CLI summaries.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TracePayload::Dispatch { .. } => "dispatch",
+            TracePayload::PeerJoin => "peer_join",
+            TracePayload::PeerDepart { .. } => "peer_depart",
+            TracePayload::FailureDetected { .. } => "failure_detected",
+            TracePayload::Observations { .. } => "observations",
+            TracePayload::Decision { .. } => "decision",
+            TracePayload::Begin { .. } => "span_begin",
+            TracePayload::End { .. } => "span_end",
+            TracePayload::Put { .. } => "put",
+            TracePayload::Gc { .. } => "gc",
+            TracePayload::Commit { .. } => "commit",
+            TracePayload::Restart { .. } => "restart",
+        }
+    }
+
+    /// Walk every payload field in declaration order.
+    pub fn visit(&self, f: &mut dyn FnMut(&'static str, FieldVal)) {
+        match *self {
+            TracePayload::Dispatch { kind } => f("kind", FieldVal::Str(kind)),
+            TracePayload::PeerJoin => {}
+            TracePayload::PeerDepart { lifetime_s } => f("lifetime_s", FieldVal::F64(lifetime_s)),
+            TracePayload::FailureDetected { job, wasted_s } => {
+                f("job", FieldVal::U64(job as u64));
+                f("wasted_s", FieldVal::F64(wasted_s));
+            }
+            TracePayload::Observations { observed } => {
+                f("observed", FieldVal::U64(observed as u64))
+            }
+            TracePayload::Decision { interval_s, est_rate, true_rate, window, trigger } => {
+                f("interval_s", FieldVal::F64(interval_s));
+                f("est_rate", FieldVal::F64(est_rate));
+                f("true_rate", FieldVal::F64(true_rate));
+                f("window", FieldVal::U64(window as u64));
+                f("trigger", FieldVal::Str(trigger));
+            }
+            TracePayload::Begin { span } => f("span", FieldVal::Str(span.name())),
+            TracePayload::End { span, ok, v0, v1 } => {
+                f("span", FieldVal::Str(span.name()));
+                f("ok", FieldVal::Bool(ok));
+                f("v0", FieldVal::F64(v0));
+                f("v1", FieldVal::F64(v1));
+            }
+            TracePayload::Put { job, seq, bytes } => {
+                f("job", FieldVal::U64(job as u64));
+                f("seq", FieldVal::U64(seq));
+                f("bytes", FieldVal::F64(bytes));
+            }
+            TracePayload::Gc { job, dropped } => {
+                f("job", FieldVal::U64(job as u64));
+                f("dropped", FieldVal::U64(dropped as u64));
+            }
+            TracePayload::Commit { job, seq } => {
+                f("job", FieldVal::U64(job as u64));
+                f("seq", FieldVal::U64(seq));
+            }
+            TracePayload::Restart { job, from_seq, progress_s } => {
+                f("job", FieldVal::U64(job as u64));
+                f("from_seq", FieldVal::U64(from_seq));
+                f("progress_s", FieldVal::F64(progress_s));
+            }
+        }
+    }
+}
+
+/// One trace record: the stamp tuple plus a typed payload.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    pub time: SimTime,
+    pub seq: u64,
+    pub epoch: u32,
+    pub subsystem: Subsystem,
+    pub peer: Option<u32>,
+    pub payload: TracePayload,
+}
+
+impl TraceEvent {
+    pub fn kind(&self) -> &'static str {
+        self.payload.name()
+    }
+
+    /// Canonical 64-bit fold of the whole record (floats by canonical bit
+    /// pattern), used as the digest value for this record.
+    pub fn digest_bits(&self) -> u64 {
+        let mut h = FNV_OFFSET;
+        h = fnv1a(h, &self.time.as_micros().to_le_bytes());
+        h = fnv1a(h, &self.seq.to_le_bytes());
+        h = fnv1a(h, &(self.epoch as u64).to_le_bytes());
+        h = fnv1a(h, self.subsystem.name().as_bytes());
+        let peer = self.peer.map_or(u64::MAX, |p| p as u64);
+        h = fnv1a(h, &peer.to_le_bytes());
+        h = fnv1a(h, self.payload.name().as_bytes());
+        self.payload.visit(&mut |name, val| {
+            h = fnv1a(h, name.as_bytes());
+            let bits = match val {
+                FieldVal::U64(x) => x,
+                FieldVal::F64(x) => canonical_f64_bits(x),
+                FieldVal::Str(s) => fnv1a(FNV_OFFSET, s.as_bytes()),
+                FieldVal::Bool(b) => b as u64,
+            };
+            h = fnv1a(h, &bits.to_le_bytes());
+        });
+        h
+    }
+}
+
+/// Where emitted records go.
+#[derive(Debug, Default)]
+pub enum TraceSink {
+    /// Tracing disabled: `emit` is one branch, nothing is stored.
+    #[default]
+    Off,
+    /// Bounded flight recorder: keeps the most recent `cap` records,
+    /// overwriting the oldest; the storage is preallocated so steady-state
+    /// emits never allocate.
+    Ring { buf: Vec<TraceEvent>, cap: usize, next: usize, dropped: u64 },
+    /// Unbounded capture of the whole stream.
+    Full { buf: Vec<TraceEvent> },
+}
+
+/// The tracer owned by a `World`: a sink plus the monotone sequence
+/// counter that totally orders the stream.
+#[derive(Debug, Default)]
+pub struct Tracer {
+    sink: TraceSink,
+    seq: u64,
+}
+
+impl Tracer {
+    pub fn off() -> Self {
+        Tracer::default()
+    }
+
+    /// Flight recorder keeping the most recent `cap` records.
+    pub fn ring(cap: usize) -> Self {
+        assert!(cap > 0, "flight recorder capacity must be positive");
+        Tracer {
+            sink: TraceSink::Ring { buf: Vec::with_capacity(cap), cap, next: 0, dropped: 0 },
+            seq: 0,
+        }
+    }
+
+    /// Capture every record.
+    pub fn full() -> Self {
+        Tracer { sink: TraceSink::Full { buf: Vec::new() }, seq: 0 }
+    }
+
+    /// Hot-path guard: callers gate payload construction on this so the
+    /// disabled tracer costs a single branch.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        !matches!(self.sink, TraceSink::Off)
+    }
+
+    #[inline]
+    pub fn emit(
+        &mut self,
+        time: SimTime,
+        epoch: u32,
+        subsystem: Subsystem,
+        peer: Option<u32>,
+        payload: TracePayload,
+    ) {
+        match &mut self.sink {
+            TraceSink::Off => {}
+            TraceSink::Ring { buf, cap, next, dropped } => {
+                let ev = TraceEvent { time, seq: self.seq, epoch, subsystem, peer, payload };
+                self.seq += 1;
+                if buf.len() < *cap {
+                    buf.push(ev);
+                } else {
+                    buf[*next] = ev;
+                    *dropped += 1;
+                }
+                *next = (*next + 1) % *cap;
+            }
+            TraceSink::Full { buf } => {
+                buf.push(TraceEvent { time, seq: self.seq, epoch, subsystem, peer, payload });
+                self.seq += 1;
+            }
+        }
+    }
+
+    /// Records currently held (ring: up to `cap`; full: everything).
+    pub fn len(&self) -> usize {
+        match &self.sink {
+            TraceSink::Off => 0,
+            TraceSink::Ring { buf, .. } => buf.len(),
+            TraceSink::Full { buf } => buf.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Records overwritten by the flight recorder (always 0 for `Full`).
+    pub fn dropped(&self) -> u64 {
+        match &self.sink {
+            TraceSink::Ring { dropped, .. } => *dropped,
+            _ => 0,
+        }
+    }
+
+    /// Total records ever emitted (including ring overwrites).
+    pub fn emitted(&self) -> u64 {
+        self.seq
+    }
+
+    /// The held records in `seq` order (a ring is unrotated here).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        match &self.sink {
+            TraceSink::Off => Vec::new(),
+            TraceSink::Ring { buf, cap, next, .. } => {
+                if buf.len() < *cap || buf.is_empty() {
+                    buf.clone()
+                } else {
+                    let mut out = Vec::with_capacity(buf.len());
+                    out.extend_from_slice(&buf[*next..]);
+                    out.extend_from_slice(&buf[..*next]);
+                    out
+                }
+            }
+            TraceSink::Full { buf } => buf.clone(),
+        }
+    }
+
+    /// Per-kind record counts (CLI summary).
+    pub fn counts_by_kind(&self) -> BTreeMap<&'static str, u64> {
+        let mut out = BTreeMap::new();
+        for ev in self.snapshot() {
+            *out.entry(ev.kind()).or_insert(0u64) += 1;
+        }
+        out
+    }
+
+    /// Fold the whole held stream into a determinism digest, one record
+    /// per event labeled `{prefix}.{kind}`, then the stream totals. On a
+    /// divergence the harness names the first differing record.
+    pub fn fold_digest(&self, prefix: &str, d: &mut DeterminismDigest) {
+        for ev in self.snapshot() {
+            d.record_u64(&format!("{prefix}.{}", ev.kind()), ev.digest_bits());
+        }
+        d.record_u64(&format!("{prefix}.emitted"), self.emitted());
+        d.record_u64(&format!("{prefix}.dropped"), self.dropped());
+    }
+}
+
+/// Subsystem / peer / time-range record filter (the `p2pcp trace` CLI
+/// flags construct one of these).
+#[derive(Debug, Clone, Default)]
+pub struct TraceFilter {
+    pub subsystems: Option<Vec<Subsystem>>,
+    pub peer: Option<u32>,
+    pub from: Option<SimTime>,
+    pub to: Option<SimTime>,
+}
+
+impl TraceFilter {
+    pub fn is_pass_through(&self) -> bool {
+        self.subsystems.is_none() && self.peer.is_none() && self.from.is_none() && self.to.is_none()
+    }
+
+    pub fn matches(&self, ev: &TraceEvent) -> bool {
+        if let Some(subs) = &self.subsystems {
+            if !subs.contains(&ev.subsystem) {
+                return false;
+            }
+        }
+        if let Some(p) = self.peer {
+            if ev.peer != Some(p) {
+                return false;
+            }
+        }
+        if let Some(from) = self.from {
+            if ev.time < from {
+                return false;
+            }
+        }
+        if let Some(to) = self.to {
+            if ev.time > to {
+                return false;
+            }
+        }
+        true
+    }
+
+    pub fn apply(&self, events: Vec<TraceEvent>) -> Vec<TraceEvent> {
+        if self.is_pass_through() {
+            return events;
+        }
+        events.into_iter().filter(|ev| self.matches(ev)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(tracer: &mut Tracer, t: f64, sub: Subsystem, peer: Option<u32>, p: TracePayload) {
+        tracer.emit(SimTime::from_secs_f64(t), 1, sub, peer, p);
+    }
+
+    #[test]
+    fn off_sink_records_nothing() {
+        let mut t = Tracer::off();
+        assert!(!t.enabled());
+        ev(&mut t, 1.0, Subsystem::Sim, None, TracePayload::PeerJoin);
+        assert_eq!(t.len(), 0);
+        assert_eq!(t.emitted(), 0);
+        assert!(t.snapshot().is_empty());
+    }
+
+    #[test]
+    fn ring_keeps_most_recent_in_seq_order() {
+        let mut t = Tracer::ring(3);
+        for i in 0..5 {
+            ev(&mut t, i as f64, Subsystem::Overlay, Some(i), TracePayload::PeerJoin);
+        }
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.emitted(), 5);
+        assert_eq!(t.dropped(), 2);
+        let seqs: Vec<u64> = t.snapshot().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn full_sink_keeps_everything() {
+        let mut t = Tracer::full();
+        for i in 0..100 {
+            ev(&mut t, i as f64, Subsystem::Sim, None, TracePayload::Dispatch { kind: "Deliver" });
+        }
+        assert_eq!(t.len(), 100);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn digest_bits_cover_every_field() {
+        let base = TraceEvent {
+            time: SimTime::from_secs_f64(10.0),
+            seq: 3,
+            epoch: 2,
+            subsystem: Subsystem::DataPlane,
+            peer: Some(7),
+            payload: TracePayload::Put { job: 0, seq: 5, bytes: 4e6 },
+        };
+        let mut tweaked = base;
+        tweaked.payload = TracePayload::Put { job: 0, seq: 5, bytes: 5e6 };
+        assert_ne!(base.digest_bits(), tweaked.digest_bits());
+        let mut other_peer = base;
+        other_peer.peer = None;
+        assert_ne!(base.digest_bits(), other_peer.digest_bits());
+        let mut other_time = base;
+        other_time.time = SimTime::from_secs_f64(10.5);
+        assert_ne!(base.digest_bits(), other_time.digest_bits());
+    }
+
+    #[test]
+    fn filter_selects_by_subsystem_peer_and_time() {
+        let mut t = Tracer::full();
+        ev(&mut t, 1.0, Subsystem::Overlay, Some(1), TracePayload::PeerJoin);
+        ev(&mut t, 2.0, Subsystem::Sim, Some(2), TracePayload::Dispatch { kind: "Stabilize" });
+        ev(&mut t, 3.0, Subsystem::Overlay, Some(2), TracePayload::PeerDepart { lifetime_s: 9.0 });
+        let f = TraceFilter {
+            subsystems: Some(vec![Subsystem::Overlay]),
+            peer: Some(2),
+            from: None,
+            to: None,
+        };
+        let kept = f.apply(t.snapshot());
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].kind(), "peer_depart");
+        let tf = TraceFilter {
+            from: Some(SimTime::from_secs_f64(1.5)),
+            to: Some(SimTime::from_secs_f64(2.5)),
+            ..TraceFilter::default()
+        };
+        let kept = tf.apply(t.snapshot());
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].subsystem, Subsystem::Sim);
+    }
+
+    #[test]
+    fn subsystem_parse_round_trips() {
+        for s in Subsystem::ALL {
+            assert_eq!(Subsystem::parse(s.name()), Some(s));
+        }
+        assert_eq!(Subsystem::parse("nope"), None);
+    }
+}

@@ -140,6 +140,82 @@ impl Histogram {
     }
 }
 
+/// Deterministic log-bucketed quantile histogram.
+///
+/// Bucket indexing is pure bit manipulation on the IEEE-754 pattern —
+/// the sign-exponent-plus-top-3-mantissa-bits prefix (`bits >> 49`) —
+/// giving 8 sub-buckets per power-of-two octave (~9% relative bucket
+/// width) with no `log2` call, so quantiles are bit-identical across
+/// platforms and libm versions. Counts live in a sparse ordered map;
+/// non-positive and non-finite observations are tallied out-of-band
+/// below every bucket (distributions here are latencies/durations, so
+/// they are effectively never hit).
+#[derive(Debug, Clone, Default)]
+pub struct LogHistogram {
+    counts: std::collections::BTreeMap<u32, u64>,
+    low: u64,
+    total: u64,
+}
+
+/// Bits of the positive-float prefix kept as the bucket index: sign (0)
+/// + 11 exponent bits + 3 mantissa bits.
+const LOG_BUCKET_SHIFT: u32 = 49;
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bucket index for a finite positive value. For positive floats the
+    /// bit pattern is monotone in the value, so so is the truncated
+    /// prefix.
+    fn bucket_of(x: f64) -> u32 {
+        (x.to_bits() >> LOG_BUCKET_SHIFT) as u32
+    }
+
+    /// Geometric bucket midpoint (average of the exact bucket edges).
+    fn representative(bucket: u32) -> f64 {
+        let lo = f64::from_bits((bucket as u64) << LOG_BUCKET_SHIFT);
+        let hi = f64::from_bits(((bucket as u64) + 1) << LOG_BUCKET_SHIFT);
+        0.5 * (lo + hi)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.total += 1;
+        if x.is_finite() && x > 0.0 {
+            *self.counts.entry(Self::bucket_of(x)).or_insert(0) += 1;
+        } else {
+            self.low += 1;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Quantile `q` in [0,1] as the representative value of the bucket
+    /// holding the rank-`ceil(q*n)` observation (nearest-rank). Returns
+    /// 0.0 for an empty histogram or when the rank lands out-of-band.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.total as f64).max(1.0).ceil() as u64;
+        let mut cum = self.low;
+        if rank <= cum {
+            return 0.0;
+        }
+        for (&bucket, &c) in &self.counts {
+            cum += c;
+            if rank <= cum {
+                return Self::representative(bucket);
+            }
+        }
+        // Unreachable: cum == total after the loop and rank <= total.
+        0.0
+    }
+}
+
 /// Kolmogorov–Smirnov distance between an empirical sample and the
 /// exponential CDF with the given rate. Used by the Fig. 2(a) "loosely
 /// fits the exponential distribution" reproduction.
@@ -214,6 +290,54 @@ mod tests {
         let d = h.density();
         let integral: f64 = d.iter().sum::<f64>() * 1.0;
         assert!((integral - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn log_histogram_quantiles_track_exact_percentiles() {
+        // Uniform 1..=10_000: bucket width is ~9%, so the nearest-rank
+        // bucket representative must land within ~10% of the exact value.
+        let mut h = LogHistogram::new();
+        let xs: Vec<f64> = (1..=10_000).map(|i| i as f64).collect();
+        for &x in &xs {
+            h.push(x);
+        }
+        assert_eq!(h.count(), 10_000);
+        for (q, p) in [(0.5, 50.0), (0.9, 90.0), (0.99, 99.0)] {
+            let exact = percentile_sorted(&xs, p);
+            let est = h.quantile(q);
+            let rel = (est - exact).abs() / exact;
+            assert!(rel < 0.1, "q{q}: est {est} vs exact {exact} (rel {rel})");
+        }
+    }
+
+    #[test]
+    fn log_histogram_is_order_independent() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let xs = [3.0, 0.001, 250.0, 1e9, 7.5, 0.001, 42.0];
+        for &x in &xs {
+            a.push(x);
+        }
+        for &x in xs.iter().rev() {
+            b.push(x);
+        }
+        for q in [0.0, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            assert_eq!(a.quantile(q).to_bits(), b.quantile(q).to_bits(), "q={q}");
+        }
+    }
+
+    #[test]
+    fn log_histogram_out_of_band_and_edge_cases() {
+        let mut h = LogHistogram::new();
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.push(0.0);
+        h.push(-3.0);
+        h.push(5.0);
+        assert_eq!(h.count(), 3);
+        // Ranks 1-2 are out-of-band (non-positive), rank 3 is the 5.0.
+        assert_eq!(h.quantile(0.3), 0.0);
+        let q1 = h.quantile(1.0);
+        assert!((q1 - 5.0).abs() / 5.0 < 0.1, "q1 = {q1}");
     }
 
     #[test]

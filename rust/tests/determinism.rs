@@ -18,16 +18,20 @@ use p2pcp::net::overlay::Overlay;
 use p2pcp::planner::NativePlanner;
 use p2pcp::policy;
 use p2pcp::storage::image::CheckpointImage;
+use p2pcp::trace::Tracer;
 use p2pcp::util::digest::DeterminismDigest;
 use p2pcp::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 // ------------------------------------------------------------------
 // A. Full-stack churny world: run the identical seeded scenario twice
 //    and fold the job outcome plus the whole metrics registry.
 // ------------------------------------------------------------------
 
-fn churny_world_digest(name: &str, seed: u64) -> DeterminismDigest {
-    let cfg = SimConfig {
+fn churny_cfg(seed: u64) -> SimConfig {
+    SimConfig {
         n_peers: 1000,
         k: 16,
         job_runtime: 1800.0,
@@ -37,8 +41,11 @@ fn churny_world_digest(name: &str, seed: u64) -> DeterminismDigest {
         seed,
         max_sim_time: 10.0 * 24.0 * 3600.0,
         ..SimConfig::default()
-    };
-    let mut w = World::new(cfg).unwrap();
+    }
+}
+
+fn churny_world_digest(name: &str, seed: u64) -> DeterminismDigest {
+    let mut w = World::new(churny_cfg(seed)).unwrap();
     w.warmup(1800.0);
     let program = Program::new(CommPattern::Ring, 16);
     let pol = policy::from_spec(&PolicySpec::Adaptive, || Box::new(NativePlanner::new()));
@@ -214,4 +221,121 @@ fn dataplane_repair_restore_dual_run_is_byte_identical() {
     let b = dataplane_digest("dp-run2", 9);
     assert!(a.len() > 30, "data-plane digest should stream per-step records, got {}", a.len());
     a.assert_matches(&b);
+}
+
+// ------------------------------------------------------------------
+// D. Traced world: the *trace stream itself* is part of the determinism
+//    contract. Folding every event of a fully-captured run into the
+//    digest must be byte-identical across reruns and across sweep
+//    thread counts, and enabling the tracer must not perturb the
+//    simulation it observes.
+// ------------------------------------------------------------------
+
+/// A shorter churny 1k-peer scenario for the multi-run sweep tests.
+fn traced_cfg(seed: u64) -> SimConfig {
+    SimConfig {
+        n_peers: 1000,
+        k: 16,
+        job_runtime: 900.0,
+        v: Some(25.0),
+        td: Some(60.0),
+        churn: ChurnSpec::Exponential { mtbf: 3600.0 },
+        seed,
+        max_sim_time: 10.0 * 24.0 * 3600.0,
+        ..SimConfig::default()
+    }
+}
+
+/// Run one churny world, optionally traced, and fold the outcome + full
+/// metrics registry (+ the whole trace stream when `fold_trace`).
+fn traced_world_digest(
+    name: &str,
+    cfg: SimConfig,
+    tracer: Tracer,
+    fold_trace: bool,
+) -> (DeterminismDigest, BTreeMap<&'static str, u64>) {
+    let mut w = World::new(cfg).unwrap();
+    w.tracer = tracer;
+    w.warmup(900.0);
+    let program = Program::new(CommPattern::Ring, 16);
+    let pol = policy::from_spec(&PolicySpec::Adaptive, || Box::new(NativePlanner::new()));
+    let outcome = w.run_job(program, pol).unwrap();
+    let mut d = DeterminismDigest::new(name);
+    outcome.fold_digest("job", &mut d);
+    w.metrics.fold_digest(&mut d);
+    if fold_trace {
+        w.tracer.fold_digest("trace", &mut d);
+    }
+    (d, w.tracer.counts_by_kind())
+}
+
+#[test]
+fn traced_churny_world_dual_run_is_byte_identical() {
+    let (a, counts) =
+        traced_world_digest("trace-run1", churny_cfg(42), Tracer::full(), true);
+    let (b, _) = traced_world_digest("trace-run2", churny_cfg(42), Tracer::full(), true);
+    // The capture must be non-trivial: dispatch records plus every
+    // instrumented layer (coordinator decisions, dataplane puts, span
+    // pairs, overlay churn).
+    for kind in ["dispatch", "decision", "put", "commit", "span_begin", "span_end", "peer_depart"]
+    {
+        assert!(
+            counts.get(kind).copied().unwrap_or(0) > 0,
+            "traced run captured no `{kind}` events: {counts:?}"
+        );
+    }
+    a.assert_matches(&b);
+}
+
+/// Run `n_worlds` traced worlds (seed = 100 + index) on a pool of
+/// `threads` workers and return the per-index digest values.
+fn sweep_traced_digests(threads: usize, n_worlds: usize) -> Vec<u64> {
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<u64>>> = (0..n_worlds).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_worlds {
+                    break;
+                }
+                let (d, _) = traced_world_digest(
+                    "trace-sweep",
+                    traced_cfg(100 + i as u64),
+                    Tracer::full(),
+                    true,
+                );
+                *slots[i].lock().unwrap() = Some(d.value());
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every sweep slot must be filled"))
+        .collect()
+}
+
+#[test]
+fn traced_world_sweep_is_thread_count_invariant() {
+    let n_worlds = 3;
+    let d1 = sweep_traced_digests(1, n_worlds);
+    let d2 = sweep_traced_digests(2, n_worlds);
+    let d4 = sweep_traced_digests(4, n_worlds);
+    assert_eq!(d1, d2, "trace digests differ between 1 and 2 sweep threads");
+    assert_eq!(d1, d4, "trace digests differ between 1 and 4 sweep threads");
+    // Distinct seeds must not collide — otherwise the digest is vacuous.
+    assert_ne!(d1[0], d1[1]);
+}
+
+#[test]
+fn tracer_is_observer_neutral() {
+    // Identical scenario with the tracer off vs fully capturing: the
+    // outcome and the *entire* metrics registry (counters, gauges,
+    // quantiles, sampled series) must not move by a single bit.
+    let (off, off_counts) =
+        traced_world_digest("neutral-off", traced_cfg(7), Tracer::off(), false);
+    let (on, on_counts) = traced_world_digest("neutral-on", traced_cfg(7), Tracer::full(), false);
+    assert!(off_counts.is_empty(), "off sink must record nothing: {off_counts:?}");
+    assert!(!on_counts.is_empty(), "full sink must record events");
+    off.assert_matches(&on);
 }

@@ -1,0 +1,191 @@
+//! End-to-end tests for the sim-time tracing layer: a real churny world
+//! is run with each sink and the resulting capture is checked for
+//! structure (span pairing, Eq. 1 decision inputs, quantile metrics),
+//! exporter validity (JSONL + Chrome trace JSON round-trip through the
+//! in-tree parser), flight-recorder ring semantics, and digest
+//! diagnosability (a diverging trace names its first differing record).
+
+use p2pcp::config::{ChurnSpec, PolicySpec, SimConfig};
+use p2pcp::coordinator::world::World;
+use p2pcp::mpi::program::{CommPattern, Program};
+use p2pcp::planner::NativePlanner;
+use p2pcp::policy;
+use p2pcp::trace::{export, Subsystem, TraceEvent, TraceFilter, TracePayload, Tracer};
+use p2pcp::util::digest::DeterminismDigest;
+use p2pcp::util::json::{self, Json};
+
+fn small_cfg(seed: u64) -> SimConfig {
+    SimConfig {
+        n_peers: 300,
+        k: 8,
+        job_runtime: 900.0,
+        v: Some(25.0),
+        td: Some(60.0),
+        churn: ChurnSpec::Exponential { mtbf: 2700.0 },
+        seed,
+        max_sim_time: 10.0 * 24.0 * 3600.0,
+        ..SimConfig::default()
+    }
+}
+
+/// Run one adaptive job on a churny world with the given sink; return the
+/// world (for metrics) — its tracer holds the capture.
+fn run_traced(seed: u64, tracer: Tracer) -> World {
+    let mut w = World::new(small_cfg(seed)).unwrap();
+    w.tracer = tracer;
+    w.warmup(900.0);
+    let program = Program::new(CommPattern::Ring, 8);
+    let pol = policy::from_spec(&PolicySpec::Adaptive, || Box::new(NativePlanner::new()));
+    w.run_job(program, pol).unwrap();
+    w
+}
+
+#[test]
+fn full_capture_exports_parse_and_spans_pair() {
+    let w = run_traced(5, Tracer::full());
+    let events = w.tracer.snapshot();
+    assert!(!events.is_empty(), "traced run captured nothing");
+
+    // Every JSONL line is a standalone JSON object.
+    let jsonl = export::to_jsonl(&events);
+    let mut lines = 0usize;
+    for line in jsonl.lines() {
+        let v = json::parse(line).expect("JSONL line must parse");
+        assert!(v.get("kind").and_then(Json::as_str).is_some());
+        assert!(v.get("t").and_then(Json::as_f64).is_some());
+        assert!(v.get("seq").and_then(Json::as_f64).is_some());
+        lines += 1;
+    }
+    assert_eq!(lines, events.len());
+
+    // The Chrome doc parses and every span begin has a matching end.
+    let chrome = export::to_chrome(&events).to_string();
+    let back = json::parse(&chrome).expect("chrome trace must parse");
+    let rows = back.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert_eq!(rows.len(), events.len() + 1, "one metadata row plus one row per event");
+    let count_ph = |ph: &str| {
+        rows.iter().filter(|r| r.get("ph").and_then(Json::as_str) == Some(ph)).count()
+    };
+    let begins = count_ph("B");
+    assert!(begins > 0, "a churny run must open spans");
+    assert_eq!(begins, count_ph("E"), "span begin/end must pair up over a real run");
+}
+
+#[test]
+fn decision_records_carry_eq1_inputs() {
+    let w = run_traced(6, Tracer::full());
+    let mut decisions = 0usize;
+    for ev in w.tracer.snapshot() {
+        if let TracePayload::Decision { interval_s, est_rate, true_rate, window, trigger } =
+            ev.payload
+        {
+            decisions += 1;
+            assert_eq!(ev.subsystem, Subsystem::Coordinator);
+            assert!(interval_s > 0.0, "decided interval must be positive: {interval_s}");
+            assert!(est_rate >= 0.0);
+            assert!(true_rate > 0.0, "scenario has churn, true rate must be positive");
+            assert!(window as usize <= w.cfg.n_peers * 64, "window is a sample count");
+            assert!(
+                trigger == "initial" || trigger == "replan",
+                "unknown decision trigger {trigger}"
+            );
+        }
+    }
+    assert!(decisions > 0, "adaptive run must trace at least the initial decision");
+}
+
+#[test]
+fn world_metrics_expose_quantiles_and_series() {
+    let w = run_traced(7, Tracer::full());
+    // The checkpoint-write distribution must expose histogram quantiles.
+    let p50 = w.metrics.quantile("job.checkpoint_write_s", 0.5).expect("dist must exist");
+    let p99 = w.metrics.quantile("job.checkpoint_write_s", 0.99).unwrap();
+    assert!(p50 > 0.0 && p99 >= p50, "p50 {p50} / p99 {p99}");
+    // Gauges were sampled into time series once per stabilization period.
+    let online = w.metrics.series("churn.online").expect("sampled series must exist");
+    assert!(online.len() > 1, "expected multiple samples, got {}", online.len());
+    assert!(online.t.windows(2).all(|p| p[0] < p[1]), "sample times must increase");
+}
+
+#[test]
+fn flight_recorder_ring_keeps_most_recent_tail() {
+    let cap = 64usize;
+    let w = run_traced(5, Tracer::ring(cap));
+    let t = &w.tracer;
+    assert!(t.emitted() > cap as u64, "run too quiet to exercise the ring");
+    assert_eq!(t.len(), cap);
+    assert_eq!(t.dropped(), t.emitted() - cap as u64);
+    let events = t.snapshot();
+    let seqs: Vec<u64> = events.iter().map(|e| e.seq).collect();
+    assert!(seqs.windows(2).all(|p| p[1] == p[0] + 1), "ring snapshot must be seq-ordered");
+    assert_eq!(seqs.last().copied(), Some(t.emitted() - 1), "ring must hold the newest events");
+
+    // The ring capture matches the tail of an identically-seeded full
+    // capture bit for bit — the flight recorder is a suffix, not a sample.
+    let full = run_traced(5, Tracer::full());
+    let tail: Vec<TraceEvent> =
+        full.tracer.snapshot().into_iter().rev().take(cap).rev().collect();
+    assert_eq!(export::to_jsonl(&events), export::to_jsonl(&tail));
+}
+
+#[test]
+fn filters_narrow_exports() {
+    let w = run_traced(5, Tracer::full());
+    let events = w.tracer.snapshot();
+    let total = events.len();
+
+    let dataplane_only = TraceFilter {
+        subsystems: Some(vec![Subsystem::DataPlane]),
+        ..TraceFilter::default()
+    };
+    assert!(!dataplane_only.is_pass_through());
+    let kept = dataplane_only.apply(events.clone());
+    assert!(!kept.is_empty() && kept.len() < total);
+    assert!(kept.iter().all(|e| e.subsystem == Subsystem::DataPlane));
+
+    // Time-range filter: nothing before `from`, nothing after `to`.
+    let mid = events[total / 2].time;
+    let late = TraceFilter { from: Some(mid), ..TraceFilter::default() };
+    let kept = late.apply(events.clone());
+    assert!(kept.iter().all(|e| e.time >= mid));
+    assert!(kept.len() < total);
+
+    assert!(TraceFilter::default().is_pass_through());
+    assert_eq!(TraceFilter::default().apply(events.clone()).len(), total);
+}
+
+#[test]
+fn trace_digest_divergence_names_first_record() {
+    let a = run_traced(21, Tracer::full());
+    let b = run_traced(22, Tracer::full());
+    let mut da = DeterminismDigest::new("trace-a");
+    let mut db = DeterminismDigest::new("trace-b");
+    a.tracer.fold_digest("trace", &mut da);
+    b.tracer.fold_digest("trace", &mut db);
+    let div = da.first_divergence(&db).expect("different seeds must diverge");
+    assert!(
+        div.left_label.starts_with("trace."),
+        "divergence must name a trace record, got {}",
+        div.left_label
+    );
+}
+
+#[test]
+fn overlay_filter_selects_churn_events() {
+    // Overlay events carry the departing/joining peer; a peer filter on
+    // top of the subsystem filter must keep only that peer's records.
+    let w = run_traced(5, Tracer::full());
+    let events = w.tracer.snapshot();
+    let overlay: Vec<&TraceEvent> =
+        events.iter().filter(|e| e.subsystem == Subsystem::Overlay).collect();
+    assert!(!overlay.is_empty(), "churny run must trace overlay events");
+    let peer = overlay[0].peer.expect("overlay events are peer-addressed");
+    let f = TraceFilter {
+        subsystems: Some(vec![Subsystem::Overlay]),
+        peer: Some(peer),
+        ..TraceFilter::default()
+    };
+    let kept = f.apply(events.clone());
+    assert!(!kept.is_empty());
+    assert!(kept.iter().all(|e| e.peer == Some(peer) && e.subsystem == Subsystem::Overlay));
+}

@@ -1,0 +1,124 @@
+//! Allocation audit for the trace emit path.
+//!
+//! The tracing layer's zero-overhead contract: with the sink `Off`,
+//! `Tracer::emit` is a discriminant branch over `Copy` scalars — no
+//! allocation, ever. With a `Ring` sink at steady state (buffer full),
+//! emits overwrite in place, so the flight recorder also never allocates
+//! once warmed. A counting global allocator pins both down. This lives in
+//! its own integration-test binary so no concurrently-running test can
+//! perturb the counter.
+
+use p2pcp::sim::SimTime;
+use p2pcp::trace::{SpanKind, Subsystem, TracePayload, Tracer};
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// A representative mix of every payload shape the world emits.
+fn emit_mix(t: &mut Tracer, base: u64) {
+    for i in 0..200u64 {
+        let time = SimTime(base + i * 1_000);
+        t.emit(
+            time,
+            1,
+            Subsystem::Sim,
+            Some((i % 64) as u32),
+            TracePayload::Dispatch { kind: "Stabilize" },
+        );
+        t.emit(
+            time,
+            1,
+            Subsystem::Overlay,
+            Some((i % 64) as u32),
+            TracePayload::PeerDepart { lifetime_s: i as f64 },
+        );
+        t.emit(
+            time,
+            1,
+            Subsystem::Coordinator,
+            None,
+            TracePayload::Decision {
+                interval_s: 300.0,
+                est_rate: 1e-4,
+                true_rate: 2e-4,
+                window: 50,
+                trigger: "replan",
+            },
+        );
+        t.emit(time, 1, Subsystem::Coordinator, None, TracePayload::Begin {
+            span: SpanKind::CheckpointWrite,
+        });
+        t.emit(time, 1, Subsystem::Coordinator, None, TracePayload::End {
+            span: SpanKind::CheckpointWrite,
+            ok: true,
+            v0: i as f64,
+            v1: 4e6,
+        });
+    }
+}
+
+#[test]
+fn off_sink_emit_is_allocation_free() {
+    let mut t = Tracer::off();
+    assert!(!t.enabled());
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    emit_mix(&mut t, 0);
+    let allocated = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    assert_eq!(allocated, 0, "disabled tracer allocated {allocated}x on emit");
+    assert_eq!(t.len(), 0, "off sink must hold nothing");
+    assert_eq!(t.emitted(), 0, "off sink must not even advance seq");
+    assert!(t.snapshot().is_empty());
+}
+
+#[test]
+fn warm_ring_emit_is_allocation_free() {
+    let cap = 256usize;
+    let mut t = Tracer::ring(cap);
+    // Warm the ring past capacity so every further emit overwrites.
+    emit_mix(&mut t, 0);
+    assert_eq!(t.len(), cap, "ring must be full after warmup");
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    emit_mix(&mut t, 10_000_000);
+    let allocated = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    assert_eq!(allocated, 0, "warm flight recorder allocated {allocated}x on emit");
+    assert_eq!(t.len(), cap);
+    assert_eq!(t.dropped(), 2 * 1000 - cap as u64);
+}
+
+#[test]
+fn cold_ring_never_reallocates_past_preallocation() {
+    // Even the *cold* ring only ever uses its preallocated buffer: pushes
+    // up to `cap` must not grow the Vec (with_capacity up front).
+    let cap = 64usize;
+    let mut t = Tracer::ring(cap);
+    let before = ALLOCATIONS.load(Ordering::Relaxed);
+    for i in 0..cap as u64 {
+        t.emit(SimTime(i), 0, Subsystem::Sim, None, TracePayload::PeerJoin);
+    }
+    let allocated = ALLOCATIONS.load(Ordering::Relaxed) - before;
+    assert_eq!(allocated, 0, "cold ring fill allocated {allocated}x");
+    assert_eq!(t.len(), cap);
+    assert_eq!(t.dropped(), 0);
+}

@@ -1,0 +1,21 @@
+//! Seeded violation: a tracer that stamps records with the host clock
+//! instead of sim time (rule `wall_clock`). The real tracer
+//! (`rust/src/trace/`) stamps `SimTime` + a monotone `seq`, so its
+//! stream folds into the determinism digest; a `SystemTime` stamp would
+//! make every rerun's trace diverge.
+
+use std::time::SystemTime;
+
+pub struct WallClockTracer {
+    pub records: Vec<(f64, &'static str)>,
+}
+
+impl WallClockTracer {
+    pub fn emit(&mut self, kind: &'static str) {
+        let now = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .unwrap()
+            .as_secs_f64();
+        self.records.push((now, kind));
+    }
+}

@@ -845,6 +845,7 @@ mod tests {
     const FIX_UNORDERED: &str = include_str!("../fixtures/unordered.rs");
     const FIX_ALLOW_ITERATED: &str = include_str!("../fixtures/unordered_allow_iterated.rs");
     const FIX_WALL_CLOCK: &str = include_str!("../fixtures/wall_clock.rs");
+    const FIX_TRACE_WALL_CLOCK: &str = include_str!("../fixtures/trace_wall_clock.rs");
     const FIX_FLOAT_REDUCE: &str = include_str!("../fixtures/float_reduce.rs");
     const FIX_TRUNCATING_CAST: &str = include_str!("../fixtures/truncating_cast.rs");
     const FIX_CLEAN: &str = include_str!("../fixtures/clean.rs");
@@ -876,6 +877,37 @@ mod tests {
         assert_eq!(vs[0].line, 4, "use-line Instant span: {vs:?}");
         assert_eq!(vs[1].line, 7, "Instant::now span: {vs:?}");
         assert_eq!(vs[2].line, 8, "env::var span: {vs:?}");
+    }
+
+    #[test]
+    fn fixture_wall_clock_tracer_is_caught() {
+        // A tracer stamping records with the host clock instead of sim
+        // time is exactly the regression the trace module must never
+        // grow; the pass flags every `SystemTime` touch point.
+        let vs = lint_source("rust/src/trace/bad.rs", FIX_TRACE_WALL_CLOCK);
+        assert_eq!(
+            rules(&vs),
+            vec![Rule::WallClock, Rule::WallClock, Rule::WallClock],
+            "{vs:?}"
+        );
+        assert_eq!(vs[0].line, 7, "use-line SystemTime span: {vs:?}");
+        assert_eq!(vs[1].line, 15, "SystemTime::now span: {vs:?}");
+        assert_eq!(vs[2].line, 16, "UNIX_EPOCH span: {vs:?}");
+    }
+
+    #[test]
+    fn trace_module_is_linted_and_clean() {
+        // The satellite guarantee: rust/src/trace/ is inside the linted
+        // tree (no allowlist entry covers it) and currently lints clean.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src/trace");
+        let (files, violations) = lint_tree(&root).unwrap();
+        assert!(files >= 2, "trace module should have mod.rs + export.rs, found {files}");
+        assert!(
+            violations.is_empty(),
+            "the trace module must lint clean:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+        assert!(!wall_clock_exempt("rust/src/trace/mod.rs"));
     }
 
     #[test]
