@@ -4,7 +4,10 @@
 //!    replication factor r;
 //! 2. §5 history+online hybrid estimation: cold-start error vs pure MLE;
 //! 3. fleet serving: shared-batch planner occupancy and job latency under
-//!    Poisson arrivals with §3.2.3 admission control.
+//!    Poisson arrivals with §3.2.3 admission control;
+//! 4. imperfect failure detection: the cost of SWIM detection lag
+//!    (suspicion timeout) under injected probe loss + a mid-job
+//!    partition, adaptive vs fixed-interval checkpointing.
 //!
 //! `cargo bench --bench extensions` (add `-- --quick` for a smoke run).
 
@@ -145,4 +148,50 @@ fn main() {
         ]);
     }
     emit_table("ext_fleet", &t);
+
+    // ---- 4. detection lag under injected faults ------------------------------
+    println!("\n-- imperfect detection: SWIM suspicion timeout vs fixed baseline --");
+    println!("   (probe loss 10%, partition 900 s mid-job, MTBF 3600 s, 256 peers)");
+    let suspicions: &[f64] = if is_quick() { &[45.0] } else { &[20.0, 60.0, 180.0] };
+    let mut t = Table::new(&[
+        "suspicion_s",
+        "adaptive_wall_s",
+        "fixed_wall_s",
+        "dead_declared",
+        "false_positives",
+    ]);
+    for &susp in suspicions {
+        let mk = |policy_key: &str| -> Scenario {
+            Scenario::builder()
+                .peers(256)
+                .mtbf(3600.0)
+                .k(16)
+                .runtime(1800.0)
+                .seed(4_242)
+                .detector_key(&format!("swim:15:{susp}:3"))
+                .faults_key("loss:0.1+partition:2400:900:0.3")
+                .policy_key(policy_key)
+                .build()
+                .expect("valid scenario")
+        };
+        let run = |s: &Scenario| {
+            let mut w = s.build_world().expect("world");
+            w.warmup(1800.0);
+            let o = w
+                .run_job(s.program(), s.build_policy().expect("policy"))
+                .expect("job");
+            (
+                o.wall_time,
+                w.metrics.counter("swim.dead_declared"),
+                w.metrics.counter("swim.false_positives"),
+            )
+        };
+        let (adaptive_wall, dead, fp) = run(&mk("adaptive"));
+        let (fixed_wall, _, _) = run(&mk("fixed:600"));
+        println!(
+            "suspicion {susp:>4.0} s: adaptive {adaptive_wall:>7.0} s   fixed {fixed_wall:>7.0} s   dead {dead:>4}  fp {fp:>4}"
+        );
+        t.push_f64(&[susp, adaptive_wall, fixed_wall, dead as f64, fp as f64]);
+    }
+    emit_table("ext_detection_lag", &t);
 }

@@ -3,6 +3,8 @@
 //! offline crate cache has no serde/toml).
 
 use crate::error::{Error, Result};
+use crate::net::detector::DetectorSpec;
+use crate::net::faults::FaultSpec;
 use std::collections::BTreeMap;
 
 /// Churn specification (resolved to a `ChurnModel` by the coordinator).
@@ -84,6 +86,11 @@ pub struct SimConfig {
     /// Hard wall-clock cap for one simulated job (seconds of sim time);
     /// guards against non-terminating configurations (U = 0 regimes).
     pub max_sim_time: f64,
+    /// Failure-detection scheme (oracle = instantaneous, the seed
+    /// behaviour; swim = probed, with latency and false positives).
+    pub detector: DetectorSpec,
+    /// Injected faults on the control/data planes (default: none).
+    pub faults: FaultSpec,
 }
 
 impl Default for SimConfig {
@@ -101,6 +108,8 @@ impl Default for SimConfig {
             estimator_window: 64,
             replan_period: 300.0,
             max_sim_time: 60.0 * 24.0 * 3600.0,
+            detector: DetectorSpec::default(),
+            faults: FaultSpec::default(),
         }
     }
 }
@@ -128,6 +137,8 @@ impl SimConfig {
         if self.estimator_window == 0 {
             return Err(Error::Config("estimator_window must be >= 1".into()));
         }
+        self.detector.validated()?;
+        self.faults.validated()?;
         Ok(self)
     }
 
@@ -188,6 +199,8 @@ impl SimConfig {
                 "policy.interval" => {} // consumed above
                 "estimator.window" => cfg.estimator_window = parse_num(key, val)? as usize,
                 "estimator.replan_period" => cfg.replan_period = parse_num(key, val)?,
+                "detector.key" => cfg.detector = DetectorSpec::parse(val)?,
+                "faults.key" => cfg.faults = FaultSpec::parse(val)?,
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
         }
@@ -281,6 +294,25 @@ mod tests {
         assert!(SimConfig::from_toml_lite("[job]\nk = banana\n").is_err());
         assert!(SimConfig::from_toml_lite("[policy]\nkind = \"nope\"\n").is_err());
         assert!(SimConfig::from_toml_lite("[job]\nk = 0\n").is_err());
+    }
+
+    #[test]
+    fn parses_detector_and_faults_keys() {
+        let text = r#"
+            [detector]
+            key = "swim:10:30:3"
+            [faults]
+            key = "loss:0.05+partition:600:300:0.3"
+        "#;
+        let cfg = SimConfig::from_toml_lite(text).unwrap();
+        assert_eq!(cfg.detector.key(), "swim:10:30:3");
+        assert_eq!(cfg.faults.key(), "loss:0.05+partition:600:300:0.3");
+        // Defaults stay the seed behaviour: oracle detection, no faults.
+        assert_eq!(SimConfig::default().detector, DetectorSpec::Oracle);
+        assert!(SimConfig::default().faults.is_none());
+        // Out-of-range keys are rejected at validation time.
+        assert!(SimConfig::from_toml_lite("[faults]\nkey = \"loss:1.5\"\n").is_err());
+        assert!(SimConfig::from_toml_lite("[detector]\nkey = \"swim:0:30:3\"\n").is_err());
     }
 
     #[test]

@@ -22,6 +22,8 @@ use crate::mpi::program::Program;
 #[cfg(test)]
 use crate::mpi::program::CommPattern;
 use crate::net::bandwidth::{BandwidthModel, LinkSpeed};
+use crate::net::detector::SwimDetector;
+use crate::net::faults::{FaultPlane, TransferFaults};
 use crate::net::overlay::{Overlay, PeerId};
 use crate::net::routing::HopLatency;
 use crate::net::stabilize::Stabilizer;
@@ -91,6 +93,13 @@ pub struct World {
     churn: Box<dyn ChurnModel>,
     rng: Pcg64,
     estimator: Box<dyn WindowEstimator>,
+    /// SWIM prober (`detector: swim:..`); `None` under the oracle
+    /// detector, whose instantaneous detection path is untouched.
+    swim: Option<SwimDetector>,
+    /// Control-plane fault injector. Always present, but with
+    /// `faults: none` it never draws from its stream and every check is
+    /// a cheap no.
+    faults: FaultPlane,
     job: Option<RunningJob>,
     /// Monotonic `run_job` counter. Every job-scoped event is stamped
     /// with the epoch that scheduled it and dropped on mismatch, so a
@@ -145,17 +154,37 @@ impl World {
             engine.schedule_in_secs(jitter, EventKind::Stabilize { peer: p });
         }
         let stab = Stabilizer::new(cfg.n_peers, cfg.stab_period);
+        // Detector / fault plane: both draw only from their own dedicated
+        // streams, so the oracle + fault-free defaults add zero draws and
+        // zero events — bit-exact with the tree before this axis existed.
+        let swim = SwimDetector::new(cfg.detector, cfg.n_peers, cfg.seed);
+        let mut faults = FaultPlane::new(cfg.faults, cfg.n_peers, cfg.seed);
+        if let Some(sw) = &swim {
+            engine.schedule_in_secs(sw.period, EventKind::SwimTick);
+        }
+        if let Some(ps) = faults.partition() {
+            engine.schedule_in_secs(ps.start, EventKind::PartitionStart);
+            engine.schedule_in_secs(ps.heal_at(), EventKind::PartitionHeal);
+        }
+        if let Some(c) = faults.spec().crash {
+            let first = faults.draw_exp(1.0 / c.mtbf);
+            engine.schedule_in_secs(first, EventKind::CrashTick);
+        }
+        let mut store = DataPlane::new(storage);
+        store.sched.set_faults(TransferFaults::new(&cfg.faults, cfg.n_peers, cfg.seed));
         Ok(World {
             cfg,
             engine,
             overlay,
             stab,
             links,
-            store: DataPlane::new(storage),
+            store,
             last_repair: f64::NEG_INFINITY,
             churn,
             rng,
             estimator,
+            swim,
+            faults,
             job: None,
             job_epoch: 0,
             metrics: Metrics::new(),
@@ -398,10 +427,22 @@ impl World {
             EventKind::DownloadDone { .. } => self.on_download_done(),
             EventKind::JobDone { .. } => self.on_job_done(),
             EventKind::Deliver { .. } => {}
+            EventKind::SwimTick => self.on_swim_tick(),
+            EventKind::SwimExpire { peer, gen } => self.on_swim_expire(peer, gen),
+            EventKind::PartitionStart => self.on_partition_start(),
+            EventKind::PartitionHeal => self.on_partition_heal(),
+            EventKind::CrashTick => self.on_crash_tick(),
         }
     }
 
     fn on_peer_fail(&mut self, peer: PeerId) {
+        self.peer_fail_with_rejoin(peer, None);
+    }
+
+    /// Shared failure path. `rejoin` overrides the churn model's rejoin
+    /// delay (the crash injector's fixed downtime); `None` draws it in
+    /// the historical RNG order.
+    fn peer_fail_with_rejoin(&mut self, peer: PeerId, rejoin: Option<f64>) {
         if !self.overlay.is_online(peer) {
             return;
         }
@@ -415,16 +456,21 @@ impl World {
             TracePayload::PeerDepart { lifetime_s: lifetime }
         );
         // Rejoin later (population held constant in expectation).
-        let delay = self.churn.rejoin_delay(&mut self.rng);
+        let delay = match rejoin {
+            Some(d) => d,
+            None => self.churn.rejoin_delay(&mut self.rng),
+        };
         self.engine.schedule_in_secs(delay, EventKind::PeerJoin { peer });
-        // If a job member died: the coordinator finds out at the next
-        // stabilization opportunity (uniform within one period).
+        // Oracle detector: the coordinator finds out about a member death
+        // at the next stabilization opportunity (uniform within one
+        // period). Under SWIM the prober has to notice on its own — no
+        // draw, no scheduled detection.
         let is_member = self
             .job
             .as_ref()
             .map(|j| j.members.contains(&peer) && j.phase != Phase::Done)
             .unwrap_or(false);
-        if is_member {
+        if is_member && self.swim.is_none() {
             let epoch = self.job_epoch;
             let j = self.job.as_mut().unwrap();
             if !j.pending_detections.contains(&peer) {
@@ -442,9 +488,125 @@ impl World {
         }
         let now = self.now();
         self.overlay.join(peer, now);
+        if let Some(swim) = &mut self.swim {
+            swim.note_join(peer, now);
+        }
         trace_emit!(self, Subsystem::Overlay, Some(peer as u32), TracePayload::PeerJoin);
         let s = self.churn.session(now, &mut self.rng);
         self.engine.schedule_in_secs(s, EventKind::PeerFail { peer });
+    }
+
+    fn on_swim_tick(&mut self) {
+        let now = self.now();
+        let (suspects, period, suspicion) = {
+            let Some(swim) = self.swim.as_mut() else {
+                return;
+            };
+            let suspects = swim.probe_round(&self.overlay, &mut self.faults, now);
+            (suspects, swim.period, swim.suspicion)
+        };
+        for &(peer, gen) in &suspects {
+            self.metrics.inc("swim.suspects");
+            trace_emit!(self, Subsystem::Overlay, Some(peer as u32), TracePayload::Suspect);
+            self.engine.schedule_in_secs(suspicion, EventKind::SwimExpire { peer, gen });
+        }
+        self.engine.schedule_in_secs(period, EventKind::SwimTick);
+    }
+
+    fn on_swim_expire(&mut self, peer: PeerId, gen: u64) {
+        let now = self.now();
+        let decl = {
+            let Some(swim) = self.swim.as_mut() else {
+                return;
+            };
+            swim.expire(peer, gen, now, &self.overlay)
+        };
+        let Some(decl) = decl else {
+            return; // refuted or cleared by a rejoin in the meantime
+        };
+        // Under SWIM the detector's declarations are the estimator's only
+        // lifetime source — false positives feed truncated sessions into
+        // the MLE window exactly as a real deployment's detector would.
+        self.estimator.observe(decl.lifetime);
+        self.metrics.inc("swim.dead_declared");
+        if decl.false_positive {
+            self.metrics.inc("swim.false_positives");
+        }
+        trace_emit!(
+            self,
+            Subsystem::Overlay,
+            Some(peer as u32),
+            TracePayload::DeadDeclared {
+                false_positive: decl.false_positive,
+                lifetime_s: decl.lifetime,
+            }
+        );
+        // The coordinator believes its detector: a declared member —
+        // false positive or not — triggers the rollback/replacement
+        // machinery (the spurious-replan cost of imperfect detection).
+        let is_member = self
+            .job
+            .as_ref()
+            .map(|j| j.members.contains(&peer) && j.phase != Phase::Done)
+            .unwrap_or(false);
+        if is_member {
+            let epoch = self.job_epoch;
+            let j = self.job.as_mut().unwrap();
+            if !j.pending_detections.contains(&peer) {
+                j.pending_detections.push(peer);
+                self.engine
+                    .schedule_in_secs(0.0, EventKind::MemberFailDetected { job: epoch, peer });
+            }
+        }
+    }
+
+    fn on_partition_start(&mut self) {
+        let minority = self.faults.partition().map(|p| p.minority_count()).unwrap_or(0);
+        self.metrics.inc("faults.partitions");
+        trace_emit!(
+            self,
+            Subsystem::Overlay,
+            None,
+            TracePayload::PartitionStart { minority: minority as u32 }
+        );
+    }
+
+    fn on_partition_heal(&mut self) {
+        trace_emit!(self, Subsystem::Overlay, None, TracePayload::PartitionHeal);
+    }
+
+    fn on_crash_tick(&mut self) {
+        let Some(crash) = self.faults.spec().crash else {
+            return;
+        };
+        // Victim: bounded draws from the fault stream, skipping peers
+        // already offline (a fixed budget keeps consumption per tick
+        // deterministic and O(1)).
+        let n = self.cfg.n_peers as u64;
+        let mut victim = None;
+        for _ in 0..8 {
+            let p = self.faults.draw_below(n) as usize;
+            if self.overlay.is_online(p) {
+                victim = Some(p);
+                break;
+            }
+        }
+        if let Some(p) = victim {
+            self.metrics.inc("faults.crashes");
+            trace_emit!(
+                self,
+                Subsystem::Overlay,
+                Some(p as u32),
+                TracePayload::Crash { downtime_s: crash.downtime }
+            );
+            // The crashed peer's stored chunks survive: on rejoin the
+            // data-plane churn journal revives its holder groups. Its
+            // original session-end PeerFail stays queued and fires as
+            // ordinary extra churn.
+            self.peer_fail_with_rejoin(p, Some(crash.downtime));
+        }
+        let next = self.faults.draw_exp(1.0 / crash.mtbf);
+        self.engine.schedule_in_secs(next, EventKind::CrashTick);
     }
 
     fn on_stabilize(&mut self, peer: PeerId) {
@@ -452,15 +614,20 @@ impl World {
         if self.overlay.is_online(peer) {
             // Stream observations straight into the shared
             // (global-average) estimator — no per-tick Vec, one batched
-            // metrics update.
+            // metrics update. Under SWIM the detector's dead declarations
+            // are the only estimator source, so the stabilizer still
+            // tracks neighbour liveness but its observations are dropped.
             let mut observed = 0u64;
             {
                 let stab = &mut self.stab;
                 let overlay = &self.overlay;
                 let estimator = &mut self.estimator;
+                let oracle = self.swim.is_none();
                 stab.tick_with(overlay, peer, now, |obs| {
-                    estimator.observe(obs.lifetime);
-                    observed += 1;
+                    if oracle {
+                        estimator.observe(obs.lifetime);
+                        observed += 1;
+                    }
                 });
             }
             if observed > 0 {
@@ -891,6 +1058,21 @@ impl World {
         &self.store
     }
 
+    /// The overlay (membership view) — read-only, for audits and tests.
+    pub fn overlay(&self) -> &Overlay {
+        &self.overlay
+    }
+
+    /// The control-plane fault injector (partition schedule inspection).
+    pub fn fault_plane(&self) -> &FaultPlane {
+        &self.faults
+    }
+
+    /// Peers currently under (unexpired) SWIM suspicion; 0 under oracle.
+    pub fn suspected_count(&self) -> usize {
+        self.swim.as_ref().map_or(0, |s| s.suspected_count())
+    }
+
     pub fn online_count(&self) -> usize {
         self.overlay.online_count()
     }
@@ -1053,6 +1235,42 @@ mod tests {
             o2.replans, 0,
             "job 2 consumed job 1's stale replan timers"
         );
+    }
+
+    #[test]
+    fn swim_detector_drives_detection_and_estimation() {
+        use crate::net::detector::DetectorSpec;
+        let mut c = cfg(3600.0);
+        c.detector = DetectorSpec::Swim { period: 10.0, suspicion: 30.0, k_probes: 3 };
+        let mut w = World::new(c).unwrap();
+        w.warmup(6.0 * 3600.0);
+        // Fault-free probing: real deaths get declared (feeding the
+        // estimator), nothing false-positive.
+        assert!(w.metrics.counter("swim.dead_declared") > 0, "no dead declared");
+        assert_eq!(w.metrics.counter("swim.false_positives"), 0);
+        let est = w.estimated_rate().expect("SWIM declarations must warm the estimator");
+        let true_rate = 1.0 / 3600.0;
+        // Detection lag truncates nothing but adds ~suspicion seconds to
+        // every observed lifetime; the estimate stays in the ballpark.
+        assert!((est - true_rate).abs() < true_rate * 0.5, "est {est} vs {true_rate}");
+        // A job under SWIM still completes, with detection latency.
+        let program = Program::new(CommPattern::Ring, 8);
+        let o = w.run_job(program, mk_policy(&PolicySpec::Adaptive)).unwrap();
+        assert!(o.completed, "job must finish under SWIM detection");
+    }
+
+    #[test]
+    fn crash_injection_is_extra_churn_with_fixed_downtime() {
+        use crate::net::faults::FaultSpec;
+        let mut c = cfg(1e12); // churn off: every failure is injected
+        c.faults = FaultSpec::parse("crash:1800:120").unwrap();
+        let mut w = World::new(c).unwrap();
+        w.warmup(4.0 * 3600.0);
+        let crashes = w.metrics.counter("faults.crashes");
+        assert!(crashes > 0, "4 h at MTBF 1800 s must crash someone");
+        assert_eq!(w.metrics.counter("churn.failures"), crashes);
+        // Fixed 120 s downtime: everyone is back online by warmup end.
+        assert_eq!(w.online_count(), 128);
     }
 
     #[test]

@@ -427,6 +427,12 @@ impl DataPlane {
             .unwrap_or(false)
     }
 
+    /// Keys of every stored image, ascending `(job, seq)` (audit /
+    /// retrievability checks over the whole store).
+    pub fn image_keys(&self) -> Vec<(usize, u64)> {
+        self.images.keys().copied().collect()
+    }
+
     /// Fetch an image if it is retrievable and integrity-verified.
     pub fn get(&self, overlay: &Overlay, job: usize, seq: u64) -> Option<&CheckpointImage> {
         let si = self.images.get(&(job, seq))?;
@@ -473,19 +479,29 @@ impl DataPlane {
     ) -> Option<f64> {
         self.sync_churn(overlay);
         let chunks = chunk_image(&img, self.chunk_bytes, &self.spec);
-        let placement = place_chunks(overlay, img.key(), &chunks, &self.spec)?;
+        let mut placement = place_chunks(overlay, img.key(), &chunks, &self.spec)?;
         // Replacing an existing (job, seq): reclaim its copies first.
         self.drop_image(img.job, img.seq);
         let src = Endpoint::Peer(uploader);
         let mut finish = now;
-        for (c, holders) in chunks.iter().zip(&placement.holders) {
-            for &h in holders {
-                let t = self.sched.transfer(now, src, h, c.bytes, links, false);
-                finish = finish.max(t);
-            }
+        let mut aborted = false;
+        for (c, holders) in chunks.iter().zip(placement.holders.iter_mut()) {
+            // A copy the fault plane refuses to deliver is dropped from
+            // the placement — the image lands under-replicated and the
+            // repair sweep tops it up once the copy is deliverable again.
+            holders.retain(|&h| match self.sched.transfer(now, src, h, c.bytes, links, false) {
+                Some(t) => {
+                    finish = finish.max(t);
+                    true
+                }
+                None => {
+                    aborted = true;
+                    false
+                }
+            });
             // Placement registration: control-plane bytes to the server
             // (excluded from the data-path completion time).
-            self.sched.transfer(now, src, Endpoint::Server, CHUNK_META_BYTES, links, false);
+            let _ = self.sched.transfer(now, src, Endpoint::Server, CHUNK_META_BYTES, links, false);
         }
         let key = (img.job, img.seq);
         for (i, (c, holders)) in chunks.iter().zip(&placement.holders).enumerate() {
@@ -498,9 +514,9 @@ impl DataPlane {
         }
         let live = LiveState::build(&self.spec, overlay, &chunks, &placement);
         // A birth-under-replicated image (overlay smaller than the
-        // replica degree) needs periodic top-up attempts, exactly like
-        // the rescan gave it.
-        let retry = Self::repair_retry_needed(&self.spec, &live);
+        // replica degree, or copies lost to the fault plane) needs
+        // periodic top-up attempts, exactly like the rescan gave it.
+        let retry = aborted || Self::repair_retry_needed(&self.spec, &live);
         self.images.insert(key, StoredImage { image: img, chunks, placement, live });
         if retry {
             self.dirty.insert(key);
@@ -569,11 +585,23 @@ impl DataPlane {
         }
         let dst = Endpoint::Peer(downloader);
         let mut finish = now;
+        let mut aborted = false;
         for &(src, bytes) in &scratch.plan {
-            let t = self.sched.transfer(now, src, dst, bytes, links, false);
-            finish = finish.max(t);
+            match self.sched.transfer(now, src, dst, bytes, links, false) {
+                Some(t) => finish = finish.max(t),
+                None => {
+                    // The fault plane cut this fetch off from its holder;
+                    // without the full read set the restore fails (the
+                    // image stays stored — a later attempt can succeed).
+                    aborted = true;
+                    break;
+                }
+            }
         }
         self.scratch = scratch;
+        if aborted {
+            return None;
+        }
         let image = &self.images.get(&key).expect("image just found").image;
         Some((image, finish))
     }
@@ -634,6 +662,10 @@ impl DataPlane {
         };
         let mut scratch = std::mem::take(&mut self.scratch);
         let mut restored = 0usize;
+        // Set when the fault plane aborted a repair transfer: the image
+        // still has work outstanding, so it must stay on the dirty queue
+        // even when the usual retry predicate would drop it.
+        let mut fault_aborted = false;
         match self.spec {
             StorageSpec::Server => {}
             StorageSpec::Replicate { replicas } => {
@@ -672,7 +704,13 @@ impl DataPlane {
                             continue;
                         }
                         let src = scratch.live[restored % scratch.live.len()];
-                        self.sched.transfer(now, src, e, bytes, links, true);
+                        if self.sched.transfer(now, src, e, bytes, links, true).is_none() {
+                            // Undeliverable right now (cut or lossy);
+                            // the chunk stays under-replicated and the
+                            // dirty queue retries on a later sweep.
+                            fault_aborted = true;
+                            continue;
+                        }
                         self.credit(e, bytes);
                         self.index_add(cand, key, i as u32);
                         si.live.holder_flip(i, 1);
@@ -745,8 +783,22 @@ impl DataPlane {
                     let Some(new) = new else {
                         continue;
                     };
-                    // Reclaim the dead copies, read the reconstruction
-                    // set to the new holder, store the rebuilt chunk.
+                    // Read the reconstruction set to the new holder first:
+                    // if the fault plane aborts any read the chunk is left
+                    // untouched (dead holders still recorded) for a later
+                    // sweep, keeping the byte accounting coherent.
+                    let mut delivered = true;
+                    for &src in &scratch.sources {
+                        if self.sched.transfer(now, src, new, bytes, links, true).is_none() {
+                            delivered = false;
+                            break;
+                        }
+                    }
+                    if !delivered {
+                        fault_aborted = true;
+                        continue;
+                    }
+                    // Reclaim the dead copies and store the rebuilt chunk.
                     scratch.old_holders.clear();
                     scratch.old_holders.extend_from_slice(&si.placement.holders[i]);
                     for &h in &scratch.old_holders {
@@ -762,9 +814,6 @@ impl DataPlane {
                             self.index_remove(p, key, i as u32);
                         }
                     }
-                    for &src in &scratch.sources {
-                        self.sched.transfer(now, src, new, bytes, links, true);
-                    }
                     self.credit(new, bytes);
                     if let Endpoint::Peer(p) = new {
                         self.index_add(p, key, i as u32);
@@ -777,7 +826,7 @@ impl DataPlane {
             }
         }
         self.scratch = scratch;
-        let retry = Self::repair_retry_needed(&self.spec, &si.live);
+        let retry = fault_aborted || Self::repair_retry_needed(&self.spec, &si.live);
         self.images.insert(key, si);
         if retry {
             self.dirty.insert(key);
@@ -885,6 +934,8 @@ impl DataPlane {
         m.set("dataplane.peer_bytes_out", c.peer_out);
         m.set("dataplane.repair_bytes", c.repair_bytes);
         m.set("dataplane.transfers", c.transfers as f64);
+        m.set("dataplane.transfer_retries", c.transfer_retries as f64);
+        m.set("dataplane.transfer_aborts", c.transfer_aborts as f64);
         m.set("dataplane.stored_bytes", self.total_stored_bytes());
         m.set("dataplane.server_stored_bytes", self.server_stored_bytes());
     }

@@ -17,6 +17,7 @@
 
 use super::placement::Endpoint;
 use crate::net::bandwidth::{BandwidthModel, LinkSpeed};
+use crate::net::faults::TransferFaults;
 
 /// Default work-pool-server NIC capacity: 1 Gbit/s, in bytes/second
 /// (volunteer peers default to ~1 Mbit/s up — see
@@ -38,6 +39,10 @@ pub struct IoCounters {
     pub repair_bytes: f64,
     /// Number of individual transfers charged.
     pub transfers: u64,
+    /// Attempts dropped by the fault plane and retried after backoff.
+    pub transfer_retries: u64,
+    /// Transfers that exhausted their retry budget and were abandoned.
+    pub transfer_aborts: u64,
 }
 
 impl IoCounters {
@@ -69,6 +74,9 @@ pub struct TransferScheduler {
     down_busy: Vec<f64>,
     /// Charged byte counters.
     pub counters: IoCounters,
+    /// Injected data-plane faults (`None` = the historical always-deliver
+    /// path, byte-for-byte).
+    faults: Option<TransferFaults>,
 }
 
 impl TransferScheduler {
@@ -79,7 +87,15 @@ impl TransferScheduler {
             up_busy: Vec::new(),
             down_busy: Vec::new(),
             counters: IoCounters::default(),
+            faults: None,
         }
+    }
+
+    /// Install (or clear) the data-plane fault injector. With `None` the
+    /// scheduler never consults a fault stream and [`Self::transfer`]
+    /// always succeeds — the pre-fault-plane behaviour.
+    pub fn set_faults(&mut self, faults: Option<TransferFaults>) {
+        self.faults = faults;
     }
 
     pub fn server_bps(&self) -> f64 {
@@ -140,7 +156,16 @@ impl TransferScheduler {
     }
 
     /// Schedule `bytes` from `src` to `dst`, starting no earlier than
-    /// `now`, charging both links. Returns the completion time.
+    /// `now`, charging both links. Returns the completion time, or `None`
+    /// when the fault plane dropped every attempt (the retry budget ran
+    /// out — the caller treats the movement as not having happened;
+    /// failed attempts charge no bytes).
+    ///
+    /// Under injected faults each attempt is checked against the fault
+    /// plane; a dropped attempt is retried after bounded exponential
+    /// backoff with deterministic jitter, so a transfer blocked by a
+    /// partition can succeed on a later attempt that lands after the
+    /// heal.
     pub fn transfer(
         &mut self,
         now: f64,
@@ -149,7 +174,25 @@ impl TransferScheduler {
         bytes: f64,
         links: &[LinkSpeed],
         repair: bool,
-    ) -> f64 {
+    ) -> Option<f64> {
+        let mut now = now;
+        if let Some(tf) = self.faults.as_mut() {
+            let ep = |e: Endpoint| match e {
+                Endpoint::Server => None,
+                Endpoint::Peer(p) => Some(p),
+            };
+            let (s, d) = (ep(src), ep(dst));
+            let mut attempt = 1u32;
+            while tf.blocks(now, s, d) {
+                if attempt > tf.max_retries {
+                    self.counters.transfer_aborts += 1;
+                    return None;
+                }
+                self.counters.transfer_retries += 1;
+                now += tf.backoff(attempt);
+                attempt += 1;
+            }
+        }
         let rate = self.src_rate(src, links).min(self.dst_rate(dst, links)).max(1.0);
         let start = now.max(self.busy(true, src)).max(self.busy(false, dst));
         let finish = start + bytes / rate;
@@ -167,7 +210,7 @@ impl TransferScheduler {
             self.counters.repair_bytes += bytes;
         }
         self.counters.transfers += 1;
-        finish
+        Some(finish)
     }
 
     /// How far behind `now` the server link's queue is (0 when idle) —
@@ -193,7 +236,9 @@ mod tests {
     fn rate_is_bottleneck_of_the_two_links() {
         let mut s = TransferScheduler::new(1e8);
         // Peer 0 -> peer 1: min(1 MB/s up, 4 MB/s down) = 1 MB/s.
-        let t = s.transfer(0.0, Endpoint::Peer(0), Endpoint::Peer(1), 2e6, &links(), false);
+        let t = s
+            .transfer(0.0, Endpoint::Peer(0), Endpoint::Peer(1), 2e6, &links(), false)
+            .unwrap();
         assert!((t - 2.0).abs() < 1e-9, "{t}");
         assert_eq!(s.counters.peer_out, 2e6);
         assert_eq!(s.counters.peer_in, 2e6);
@@ -205,8 +250,12 @@ mod tests {
         let mut s = TransferScheduler::new(1e6); // 1 MB/s server NIC
         // Two peers each push 1 MB to the server at t=0: the second
         // transfer queues behind the first on the server link.
-        let t0 = s.transfer(0.0, Endpoint::Peer(0), Endpoint::Server, 1e6, &links(), false);
-        let t1 = s.transfer(0.0, Endpoint::Peer(1), Endpoint::Server, 1e6, &links(), false);
+        let t0 = s
+            .transfer(0.0, Endpoint::Peer(0), Endpoint::Server, 1e6, &links(), false)
+            .unwrap();
+        let t1 = s
+            .transfer(0.0, Endpoint::Peer(1), Endpoint::Server, 1e6, &links(), false)
+            .unwrap();
         assert!((t0 - 1.0).abs() < 1e-9);
         assert!((t1 - 2.0).abs() < 1e-9, "second upload must queue: {t1}");
         assert!((s.server_backlog(0.0) - 2.0).abs() < 1e-9);
@@ -219,8 +268,12 @@ mod tests {
         let mut s = TransferScheduler::new(1e8);
         // Peer 0 -> peer 1 and (conceptually) peer 1 -> peer 0 overlap:
         // they use disjoint (up, down) link pairs.
-        let a = s.transfer(0.0, Endpoint::Peer(0), Endpoint::Peer(1), 1e6, &links(), false);
-        let b = s.transfer(0.0, Endpoint::Peer(1), Endpoint::Peer(0), 2e6, &links(), false);
+        let a = s
+            .transfer(0.0, Endpoint::Peer(0), Endpoint::Peer(1), 1e6, &links(), false)
+            .unwrap();
+        let b = s
+            .transfer(0.0, Endpoint::Peer(1), Endpoint::Peer(0), 2e6, &links(), false)
+            .unwrap();
         assert!((a - 1.0).abs() < 1e-9);
         assert!((b - 1.0).abs() < 1e-9, "reverse direction must not queue: {b}");
     }
@@ -232,16 +285,83 @@ mod tests {
         // Peer 9 has no sampled link: debug builds assert; release builds
         // charge the model's median uplink (125 kB/s -> 1 s), not the old
         // 1 B/s that made the transfer look ~infinite.
-        let t = s.transfer(0.0, Endpoint::Peer(9), Endpoint::Server, 125_000.0, &links(), false);
+        let t = s
+            .transfer(0.0, Endpoint::Peer(9), Endpoint::Server, 125_000.0, &links(), false)
+            .unwrap();
         assert!((t - 1.0).abs() < 1e-9, "{t}");
     }
 
     #[test]
     fn repair_bytes_tracked_separately() {
         let mut s = TransferScheduler::new(1e8);
-        s.transfer(0.0, Endpoint::Peer(0), Endpoint::Peer(1), 5e5, &links(), true);
-        s.transfer(0.0, Endpoint::Peer(1), Endpoint::Peer(0), 5e5, &links(), false);
+        s.transfer(0.0, Endpoint::Peer(0), Endpoint::Peer(1), 5e5, &links(), true).unwrap();
+        s.transfer(0.0, Endpoint::Peer(1), Endpoint::Peer(0), 5e5, &links(), false).unwrap();
         assert_eq!(s.counters.repair_bytes, 5e5);
         assert_eq!(s.counters.peer_out, 1e6);
+    }
+
+    #[test]
+    fn lossy_transfers_retry_with_backoff_and_charge_once() {
+        use crate::net::faults::FaultSpec;
+        let mut s = TransferScheduler::new(1e8);
+        s.set_faults(TransferFaults::new(&FaultSpec::parse("loss:0.5").unwrap(), 4, 7));
+        let mut retries_seen = false;
+        for i in 0..50 {
+            let t0 = i as f64 * 1000.0;
+            match s.transfer(t0, Endpoint::Peer(0), Endpoint::Peer(1), 1e6, &links(), false) {
+                Some(t) => {
+                    // Completion = (start + accumulated backoff) + 1 s of
+                    // wire time at the 1 MB/s bottleneck, queued behind
+                    // earlier transfers on the same links.
+                    assert!(t >= t0 + 1.0, "{t} vs start {t0}");
+                }
+                None => {} // retry budget exhausted — legal under 50% loss
+            }
+        }
+        retries_seen |= s.counters.transfer_retries > 0;
+        assert!(retries_seen, "50% loss over 50 transfers must retry at least once");
+        // Bytes charged equal successful transfers only.
+        let ok = s.counters.transfers as f64;
+        assert_eq!(s.counters.peer_out, ok * 1e6);
+        assert_eq!(s.counters.peer_in, ok * 1e6);
+    }
+
+    #[test]
+    fn partitioned_transfer_aborts_then_succeeds_after_heal() {
+        use crate::net::faults::FaultSpec;
+        // Partition the whole run window; no loss, so drops are purely
+        // the cut and consume no RNG.
+        let spec = FaultSpec::parse("partition:0:100:0.5").unwrap();
+        let mut s = TransferScheduler::new(1e8);
+        let tf = TransferFaults::new(&spec, 64, 3).unwrap();
+        // Find a minority/majority pair so the transfer crosses the cut.
+        let sched = crate::net::faults::PartitionSchedule::new(
+            &crate::net::faults::PartitionSpec { start: 0.0, duration: 100.0, frac: 0.5 },
+            64,
+            3,
+        );
+        let minority = (0..64).find(|&p| sched.minority(p)).unwrap();
+        let majority = (0..64).find(|&p| !sched.minority(p)).unwrap();
+        s.set_faults(Some(tf));
+        let many_links = vec![LinkSpeed { up_bps: 1e6, down_bps: 1e7 }; 64];
+        // Deep inside the partition the retry budget (max 6 retries,
+        // backoff capped ~1.5 * 2^5 s per step) cannot reach the heal.
+        let r = s.transfer(0.0, Endpoint::Peer(minority), Endpoint::Peer(majority), 1e6, &many_links, false);
+        assert!(r.is_none(), "cut transfer must abort: {r:?}");
+        assert_eq!(s.counters.transfer_aborts, 1);
+        assert_eq!(s.counters.peer_out, 0.0, "aborted attempts charge nothing");
+        // Same-side traffic is unaffected mid-partition.
+        let same = (minority + 1..64).find(|&p| sched.minority(p)).unwrap();
+        assert!(s
+            .transfer(10.0, Endpoint::Peer(minority), Endpoint::Peer(same), 1e6, &many_links, false)
+            .is_some());
+        // After the heal everything flows again.
+        assert!(s
+            .transfer(200.0, Endpoint::Peer(minority), Endpoint::Peer(majority), 1e6, &many_links, false)
+            .is_some());
+        // A retry started just before the heal crosses it via backoff.
+        let near_heal = s.transfer(99.5, Endpoint::Peer(majority), Endpoint::Peer(minority), 1e6, &many_links, false);
+        assert!(near_heal.is_some(), "backoff must carry the retry past the heal");
+        assert!(s.counters.transfer_retries >= 1);
     }
 }

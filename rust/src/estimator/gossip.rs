@@ -6,6 +6,7 @@
 //! bytes on existing ones — and the coordinated checkpoint rate stops
 //! being hostage to the single most pessimistic local μ estimate.
 
+use super::{mle::MleEstimator, RateEstimator};
 use crate::net::overlay::PeerId;
 
 /// One peer's piggybacked estimate triple.
@@ -76,6 +77,85 @@ impl GossipAggregator {
     }
 }
 
+/// Samples never age out inside the estimator — observation count stands
+/// in for time, and every local view re-publishes on each new lifetime.
+const NEVER_STALE: f64 = f64::MAX;
+
+/// [`RateEstimator`] over the Section 3.1.4 scheme: `fanout` independent
+/// local Eq. 1 MLE views fed round-robin (standing in for the distinct
+/// peers a member hears from), each piggybacking its estimate into a
+/// [`GossipAggregator`] whose global average is the reported rate. On
+/// homogeneous churn this reproduces the single-MLE answer; on noisy
+/// churn the averaging tightens the estimate ~√fanout (see
+/// `global_tighter_than_local`).
+#[derive(Debug, Clone)]
+pub struct GossipEstimator {
+    locals: Vec<MleEstimator>,
+    agg: GossipAggregator,
+    next: usize,
+    n: u64,
+}
+
+impl GossipEstimator {
+    /// `fanout` local views sharing the scenario's window K between them
+    /// (each holds `max(K / fanout, 1)` lifetimes).
+    pub fn new(fanout: usize, window: usize) -> Self {
+        assert!(fanout >= 1);
+        let per = (window / fanout).max(1);
+        GossipEstimator {
+            locals: (0..fanout).map(|_| MleEstimator::new(per)).collect(),
+            agg: GossipAggregator::new(fanout, NEVER_STALE),
+            next: 0,
+            n: 0,
+        }
+    }
+}
+
+impl RateEstimator for GossipEstimator {
+    fn observe(&mut self, lifetime: f64) {
+        let i = self.next;
+        self.next = (self.next + 1) % self.locals.len();
+        self.n += 1;
+        self.locals[i].observe(lifetime);
+        if let Some(mu) = self.locals[i].rate() {
+            self.agg
+                .receive(Piggyback { from: i, mu, v: 0.0, td: 0.0 }, self.n as f64);
+        }
+    }
+
+    fn rate(&self) -> Option<f64> {
+        // First warm local view is "us"; the aggregator skips its own
+        // piggybacked echo, so each warm view counts exactly once.
+        let (from, mu) = self
+            .locals
+            .iter()
+            .enumerate()
+            .find_map(|(i, l)| l.rate().map(|mu| (i, mu)))?;
+        Some(
+            self.agg
+                .global(Piggyback { from, mu, v: 0.0, td: 0.0 }, self.n as f64)
+                .0,
+        )
+    }
+
+    fn reset(&mut self) {
+        for l in &mut self.locals {
+            l.reset();
+        }
+        self.agg = GossipAggregator::new(self.locals.len(), NEVER_STALE);
+        self.next = 0;
+        self.n = 0;
+    }
+
+    fn n_observed(&self) -> u64 {
+        self.n
+    }
+
+    fn name(&self) -> &'static str {
+        "gossip"
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -129,6 +209,32 @@ mod tests {
         g.receive(pb(0, 100.0), 0.0); // our own echo
         let (mu, _, _) = g.global(pb(0, 2.0), 1.0);
         assert!((mu - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gossip_estimator_averages_local_views() {
+        let mut e = GossipEstimator::new(4, 32);
+        for _ in 0..32 {
+            e.observe(500.0);
+        }
+        // Each of the 4 views holds 8 lifetimes of 500 s; the global
+        // average is exactly the MLE answer.
+        assert!((e.rate().unwrap() - 1.0 / 500.0).abs() < 1e-12);
+        assert_eq!(e.n_observed(), 32);
+        assert_eq!(e.name(), "gossip");
+    }
+
+    #[test]
+    fn gossip_estimator_cold_until_one_view_is_warm() {
+        // fanout 2, window 32 -> 16 per view, min_obs 8: view 0 sees its
+        // 8th lifetime on the 15th observation overall.
+        let mut e = GossipEstimator::new(2, 32);
+        for _ in 0..14 {
+            e.observe(100.0);
+            assert!(e.rate().is_none());
+        }
+        e.observe(100.0);
+        assert!(e.rate().is_some());
     }
 
     #[test]

@@ -64,6 +64,9 @@ pub enum EstimatorSpec {
     /// session length of `mean` seconds worth `confidence`
     /// pseudo-observations, over a windowed likelihood.
     Hybrid { mean: f64, confidence: f64 },
+    /// Section 3.1.4 piggyback scheme: `fanout` local MLE views averaged
+    /// through a [`gossip::GossipAggregator`] into a global estimate.
+    Gossip { fanout: usize },
 }
 
 impl Default for EstimatorSpec {
@@ -214,6 +217,9 @@ pub fn build_window_estimator(spec: &EstimatorSpec, window: usize) -> Box<dyn Wi
         EstimatorSpec::Hybrid { mean, confidence } => Box::new(RateWindow::new(
             hybrid::HybridEstimator::from_history(1.0 / mean.max(1e-9), *confidence, window),
         )),
+        EstimatorSpec::Gossip { fanout } => {
+            Box::new(RateWindow::new(gossip::GossipEstimator::new(*fanout, window)))
+        }
     }
 }
 
@@ -241,6 +247,7 @@ mod tests {
             EstimatorSpec::Ewma { alpha: 0.2 },
             EstimatorSpec::Count,
             EstimatorSpec::Hybrid { mean: 7200.0, confidence: 16.0 },
+            EstimatorSpec::Gossip { fanout: 4 },
         ] {
             let mut reused = build_window_estimator(&spec, 16);
             for i in 0..40 {
@@ -283,6 +290,7 @@ mod tests {
             EstimatorSpec::Ewma { alpha: 0.2 },
             EstimatorSpec::Count,
             EstimatorSpec::Hybrid { mean: 7200.0, confidence: 16.0 },
+            EstimatorSpec::Gossip { fanout: 4 },
         ] {
             let mut e = build_window_estimator(&spec, 32);
             for _ in 0..32 {

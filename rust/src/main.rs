@@ -16,6 +16,9 @@
 //! p2pcp sessions  [--network gnutella|overnet|bittorrent] [--sessions N]
 //! p2pcp world     [--churn KEY | --mtbf S] [--k N] [--runtime S] [--peers N]
 //!                 [--policy KEY] [--estimator KEY] [--storage KEY]
+//!                 [--detector KEY] [--faults KEY]
+//! p2pcp detection-lag [world flags] [--suspicions csv] [--interval S]
+//!                 [--warmup S] [--out file.csv]
 //! p2pcp trace     [world flags] [--warmup S] [--flight N]
 //!                 [--trace-out f.jsonl] [--chrome-out f.json]
 //!                 [--metrics-out f.json] [--subsystems csv] [--peer N]
@@ -32,7 +35,7 @@
 
 use p2pcp::churn::trace::TraceKind;
 use p2pcp::cli::Args;
-use p2pcp::config::ChurnSpec;
+use p2pcp::config::{ChurnSpec, PolicySpec};
 use p2pcp::coordinator::fleet::{run_fleet, FleetConfig};
 use p2pcp::dataplane::StorageSpec;
 use p2pcp::error::{Error, Result};
@@ -70,6 +73,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "sessions" => cmd_sessions(args),
         "trace" => cmd_trace(args),
         "world" => cmd_world(args),
+        "detection-lag" => cmd_detection_lag(args),
         "fleet" => cmd_fleet(args),
         "server-offload" => cmd_server_offload(args),
         "help" | "--help" | "-h" => {
@@ -94,6 +98,8 @@ COMMANDS:
   plan       evaluate the closed-form planner (lambda*, U) once or over k
   sessions   synthesize a P2P session trace and analyze it (Fig. 2)
   world      run the full-stack world (overlay + Chandy-Lamport + DHT store)
+  detection-lag  sweep the SWIM suspicion timeout under injected faults,
+             adaptive vs fixed, verified byte-identical across 1/2/4 threads
   trace      run a traced world and export the event timeline
              (JSONL / Chrome trace JSON, deterministic digest)
   fleet      serve many concurrent jobs with shared batched planning
@@ -108,8 +114,14 @@ COMPONENT KEYS (shared by flags and config files):
   --planner   {}
   --workload  {}
   --storage   {}
+  --detector  {}
+  --faults    {}
 
 Run a command with wrong flags to see its allowed flag list.
+
+Example — measure the cost of detection lag under probe loss:
+  p2pcp detection-lag --peers 1000 --mtbf 3600 --suspicions 20,45,90,180 \\
+      --faults loss:0.1+partition:2400:900:0.3
 ",
         registry::churn_keys().join(" | "),
         registry::policy_keys().join(" | "),
@@ -117,6 +129,8 @@ Run a command with wrong flags to see its allowed flag list.
         registry::planner_keys().join(" | "),
         registry::workload_keys().join(" | "),
         registry::storage_keys().join(" | "),
+        registry::detector_keys().join(" | "),
+        registry::faults_keys().join(" | "),
     )
 }
 
@@ -143,6 +157,8 @@ fn scenario_from_args(args: &Args, default_peers: usize) -> Result<Scenario> {
         .planner_key(&args.get_str("planner", "native")?)
         .workload_key(&args.get_str("workload", "ring")?)
         .storage_key(&args.get_str("storage", "replicate:3")?)
+        .detector_key(&args.get_str("detector", "oracle")?)
+        .faults_key(&args.get_str("faults", "none")?)
         .policy_key(&policy_key_from_args(args)?);
     b = match args.get("churn")? {
         Some(key) => b.churn_key(key),
@@ -162,7 +178,7 @@ fn scenario_from_args(args: &Args, default_peers: usize) -> Result<Scenario> {
 
 const SCENARIO_FLAGS: &[&str] = &[
     "churn", "mtbf", "double-time", "k", "runtime", "v", "td", "policy", "interval",
-    "estimator", "planner", "workload", "storage", "seed", "peers",
+    "estimator", "planner", "workload", "storage", "detector", "faults", "seed", "peers",
 ];
 
 fn with_scenario_flags(extra: &[&str]) -> Vec<&str> {
@@ -532,6 +548,154 @@ fn cmd_server_offload(args: &Args) -> Result<()> {
     for line in server_offload::summarize(&rows, cfg.storages.len()) {
         println!("{line}");
     }
+    if let Some(out) = args.get("out")? {
+        table.write_to(std::path::Path::new(out))?;
+        println!("[written {out}]");
+    }
+    Ok(())
+}
+
+/// One detection-lag cell result: wall time, wasted seconds, completion,
+/// dead declarations, false positives, full-stream determinism digest.
+type DetectionCell = (f64, f64, bool, u64, u64, u64);
+
+fn run_detection_cell(s: &Scenario, warmup: f64) -> Result<DetectionCell> {
+    let mut w = s.build_world()?;
+    w.tracer = Tracer::full();
+    w.warmup(warmup);
+    let o = w.run_job(s.program(), s.build_policy()?)?;
+    let mut d = DeterminismDigest::new("detection-lag");
+    o.fold_digest("job", &mut d);
+    w.metrics.fold_digest(&mut d);
+    w.tracer.fold_digest("trace", &mut d);
+    Ok((
+        o.wall_time,
+        o.wasted,
+        o.completed,
+        w.metrics.counter("swim.dead_declared"),
+        w.metrics.counter("swim.false_positives"),
+        d.value(),
+    ))
+}
+
+/// Run every cell on a pool of `threads` workers (work-stealing index,
+/// results in cell order regardless of which worker ran what).
+fn run_detection_cells(
+    cells: &[Scenario],
+    warmup: f64,
+    threads: usize,
+) -> Result<Vec<DetectionCell>> {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Mutex;
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<DetectionCell>>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads.max(1) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let out = run_detection_cell(&cells[i], warmup);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every detection cell must be run"))
+        .collect()
+}
+
+/// Detection-lag sweep: the SWIM suspicion timeout is the x-axis; each
+/// setting runs the same faulty world under the adaptive policy and a
+/// fixed-interval baseline, and the whole grid is executed three times
+/// (1 / 2 / 4 worker threads) to prove the full job + metrics + trace
+/// stream is byte-identical regardless of scheduling.
+fn cmd_detection_lag(args: &Args) -> Result<()> {
+    let allowed: Vec<&str> =
+        with_scenario_flags(&["suspicions", "warmup", "out"])
+            .into_iter()
+            .filter(|f| *f != "policy" && *f != "detector")
+            .collect();
+    args.check_unknown(&allowed)?;
+    let mut base = scenario_from_args(args, 256)?;
+    if !args.has("runtime") {
+        base.runtime = 1800.0;
+    }
+    if !args.has("mtbf") && !args.has("churn") {
+        base.churn = ChurnSpec::Exponential { mtbf: 3600.0 };
+    }
+    // The demo defaults to an adversarial plane: probe loss plus a
+    // mid-job partition-and-heal. An explicit --faults key wins.
+    if !args.has("faults") {
+        base.faults = registry::parse_faults("loss:0.1+partition:2400:900:0.3")?;
+    }
+    let warmup = args.get_f64("warmup", 1800.0)?;
+    let fixed_interval = args.get_f64("interval", 600.0)?;
+    let suspicions: Vec<f64> = match args.get("suspicions")? {
+        Some(csv) => parse_csv_f64("suspicions", csv)?,
+        None => vec![20.0, 45.0, 90.0, 180.0],
+    };
+
+    let mut cells: Vec<Scenario> = Vec::new();
+    for &susp in &suspicions {
+        let det = registry::parse_detector(&format!("swim:15:{susp}:3"))?;
+        for adaptive in [true, false] {
+            let mut s = base.clone();
+            s.detector = det;
+            s.policy = if adaptive {
+                PolicySpec::Adaptive
+            } else {
+                PolicySpec::Fixed { interval: fixed_interval }
+            };
+            cells.push(s);
+        }
+    }
+
+    let r1 = run_detection_cells(&cells, warmup, 1)?;
+    let r2 = run_detection_cells(&cells, warmup, 2)?;
+    let r4 = run_detection_cells(&cells, warmup, 4)?;
+    let digests: Vec<u64> = r1.iter().map(|c| c.5).collect();
+    if digests != r2.iter().map(|c| c.5).collect::<Vec<u64>>()
+        || digests != r4.iter().map(|c| c.5).collect::<Vec<u64>>()
+    {
+        return Err(Error::Config(
+            "detection-lag sweep diverged across 1/2/4 worker threads — determinism bug".into(),
+        ));
+    }
+    println!(
+        "determinism      : {} cells byte-identical across 1/2/4 threads",
+        cells.len()
+    );
+    println!("faults           : {}", registry::faults_key(&base.faults));
+
+    let mut table = Table::new(&[
+        "suspicion_s",
+        "adaptive_wall_s",
+        "fixed_wall_s",
+        "adaptive_wasted_s",
+        "fixed_wasted_s",
+        "dead_declared",
+        "false_positives",
+    ]);
+    let mut wins = 0usize;
+    for (i, &susp) in suspicions.iter().enumerate() {
+        let a = &r1[2 * i];
+        let f = &r1[2 * i + 1];
+        wins += (a.0 < f.0) as usize;
+        println!(
+            "suspicion {susp:>5.0} s: adaptive {:>7.0} s  fixed {:>7.0} s   dead {:>4}  fp {:>4}",
+            a.0, f.0, a.3, a.4
+        );
+        table.push_f64(&[susp, a.0, f.0, a.1, f.1, a.3 as f64, a.4 as f64]);
+    }
+    print!("{}", table.to_pretty());
+    println!(
+        "adaptive beats fixed({fixed_interval}s) in {wins}/{} suspicion settings",
+        suspicions.len()
+    );
     if let Some(out) = args.get("out")? {
         table.write_to(std::path::Path::new(out))?;
         println!("[written {out}]");

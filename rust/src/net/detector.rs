@@ -1,0 +1,366 @@
+//! Pluggable failure detection (the `detector:` registry axis).
+//!
+//! * `oracle` (default) — the historical behaviour: the coordinator
+//!   learns of a member death within one stabilization period of the
+//!   true departure. Bit-exact with the tree before this axis existed.
+//! * `swim:PERIOD:SUSPICION:K` — a SWIM-style prober on sim-time
+//!   events: every `PERIOD` seconds each online peer pings one random
+//!   target; on a failed direct probe it asks `K` random relays to
+//!   probe indirectly; if all fail the target becomes *suspect*, and
+//!   unless a later round refutes the suspicion (a probe gets through —
+//!   the incarnation-bump analogue) the suspect is declared *dead*
+//!   after `SUSPICION` seconds. Detection therefore has real latency,
+//!   and injected probe loss ([`crate::net::faults::FaultPlane`])
+//!   produces a tunable false-positive rate: a live peer can be
+//!   declared dead, feeding a truncated lifetime into the estimator
+//!   window and a spurious rollback into the coordinator.
+//!
+//! All randomness comes from a dedicated seeded stream (`0x5317`), so
+//! the oracle default consumes nothing and probe-order determinism
+//! holds: probers iterate in peer-id order each round.
+
+use super::faults::FaultPlane;
+use super::overlay::{Overlay, PeerId};
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// RNG stream for the SWIM prober.
+pub const SWIM_STREAM: u64 = 0x5317;
+
+/// Which failure detector feeds the coordinator and the estimator.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DetectorSpec {
+    /// Perfect detection within one stabilization period (historical).
+    Oracle,
+    /// SWIM-style probing with the given probe period, suspicion
+    /// timeout (both seconds) and indirect probe fan-out.
+    Swim { period: f64, suspicion: f64, k_probes: usize },
+}
+
+impl Default for DetectorSpec {
+    fn default() -> Self {
+        DetectorSpec::Oracle
+    }
+}
+
+impl DetectorSpec {
+    /// Canonical registry key: `oracle` or `swim:PERIOD:SUSPICION:K`.
+    pub fn key(&self) -> String {
+        match self {
+            DetectorSpec::Oracle => "oracle".into(),
+            DetectorSpec::Swim { period, suspicion, k_probes } => {
+                format!("swim:{period}:{suspicion}:{k_probes}")
+            }
+        }
+    }
+
+    /// Parse a detector key.
+    pub fn parse(key: &str) -> Result<DetectorSpec> {
+        let fields: Vec<&str> = key.split(':').collect();
+        let bad = |part: &str| {
+            Error::Config(format!("detector key `{key}`: `{part}` is not a number"))
+        };
+        match fields.as_slice() {
+            ["oracle"] => Ok(DetectorSpec::Oracle),
+            ["swim", period, suspicion, k] => {
+                let spec = DetectorSpec::Swim {
+                    period: period.parse().map_err(|_| bad(period))?,
+                    suspicion: suspicion.parse().map_err(|_| bad(suspicion))?,
+                    k_probes: k.parse().map_err(|_| bad(k))?,
+                };
+                spec.validated()
+            }
+            _ => Err(Error::Config(format!(
+                "unknown detector key `{key}` — want oracle | swim:PERIOD:SUSPICION:K"
+            ))),
+        }
+    }
+
+    pub fn validated(self) -> Result<DetectorSpec> {
+        if let DetectorSpec::Swim { period, suspicion, k_probes } = self {
+            if !(period > 0.0) || !(suspicion > 0.0) {
+                return Err(Error::Config(format!(
+                    "swim period {period} and suspicion {suspicion} must be > 0"
+                )));
+            }
+            if k_probes == 0 {
+                return Err(Error::Config("swim k_probes must be >= 1".into()));
+            }
+        }
+        Ok(self)
+    }
+}
+
+/// A dead declaration produced by [`SwimDetector::expire`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Declaration {
+    /// Observed lifetime: time since the peer's last (re)join. For a
+    /// real death this includes the detection lag; for a false positive
+    /// it is a truncated (still-running) session. Both feed the
+    /// estimator the way a real deployment's detector would.
+    pub lifetime: f64,
+    /// The peer was actually still online at declaration time.
+    pub false_positive: bool,
+}
+
+/// SWIM-style prober state. Driven by the world's `SwimTick` /
+/// `SwimExpire` events; owns no event machinery itself.
+#[derive(Debug)]
+pub struct SwimDetector {
+    pub period: f64,
+    pub suspicion: f64,
+    k_probes: usize,
+    rng: Pcg64,
+    /// Non-zero while a suspicion timer is pending: the generation the
+    /// pending `SwimExpire` event carries. A refutation or rejoin
+    /// clears it, invalidating the in-flight expiry.
+    suspect_gen: Vec<u64>,
+    gen_counter: u64,
+    /// Declared dead and not seen rejoining since.
+    declared_dead: Vec<bool>,
+    /// Last (re)join time, for observed-lifetime accounting.
+    joined_at: Vec<f64>,
+}
+
+impl SwimDetector {
+    pub fn new(spec: DetectorSpec, n_peers: usize, seed: u64) -> Option<SwimDetector> {
+        let DetectorSpec::Swim { period, suspicion, k_probes } = spec else {
+            return None;
+        };
+        Some(SwimDetector {
+            period,
+            suspicion,
+            k_probes,
+            rng: Pcg64::new(seed, SWIM_STREAM),
+            suspect_gen: vec![0; n_peers],
+            gen_counter: 0,
+            declared_dead: vec![false; n_peers],
+            joined_at: vec![0.0; n_peers],
+        })
+    }
+
+    /// One probe round: every online peer (in id order) probes one
+    /// random target; unreachable targets become suspects. Returns the
+    /// newly suspected peers with their suspicion generations — the
+    /// caller schedules a `SwimExpire { peer, gen }` for each.
+    pub fn probe_round(
+        &mut self,
+        overlay: &Overlay,
+        faults: &mut FaultPlane,
+        now: f64,
+    ) -> Vec<(PeerId, u64)> {
+        let n = overlay.len();
+        let window = self.period * 0.5;
+        let mut suspects = Vec::new();
+        for prober in 0..n {
+            if !overlay.is_online(prober) {
+                continue;
+            }
+            // Probe target: bounded random draws skipping self and
+            // already-declared peers (a fixed draw budget keeps RNG
+            // consumption O(n) per round).
+            let mut target = None;
+            for _ in 0..4 {
+                let t = self.rng.next_below(n as u64) as usize;
+                if t != prober && !self.declared_dead[t] {
+                    target = Some(t);
+                    break;
+                }
+            }
+            let Some(t) = target else { continue };
+            let reached = (overlay.is_online(t) && !faults.drop_probe(now, prober, t, window))
+                || self.indirect_probe(overlay, faults, now, prober, t, window);
+            if reached {
+                // Alive: refute any pending suspicion (incarnation bump).
+                self.suspect_gen[t] = 0;
+                continue;
+            }
+            if self.suspect_gen[t] != 0 {
+                continue; // already under suspicion, expiry pending
+            }
+            self.gen_counter += 1;
+            self.suspect_gen[t] = self.gen_counter;
+            suspects.push((t, self.gen_counter));
+        }
+        suspects
+    }
+
+    /// `k_probes` indirect probes via random relays; true if any relay
+    /// reaches the target and reports back.
+    fn indirect_probe(
+        &mut self,
+        overlay: &Overlay,
+        faults: &mut FaultPlane,
+        now: f64,
+        prober: PeerId,
+        target: PeerId,
+        window: f64,
+    ) -> bool {
+        let n = overlay.len();
+        for _ in 0..self.k_probes {
+            let relay = self.rng.next_below(n as u64) as usize;
+            if relay == prober || relay == target || !overlay.is_online(relay) {
+                continue;
+            }
+            let hop1 = !faults.drop_probe(now, prober, relay, window);
+            let hop2 = overlay.is_online(target)
+                && !faults.drop_probe(now, relay, target, window);
+            if hop1 && hop2 {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Suspicion timeout fired for `(peer, gen)`. Returns the dead
+    /// declaration if the suspicion is still standing (not refuted by a
+    /// later probe, not cleared by a rejoin).
+    pub fn expire(
+        &mut self,
+        peer: PeerId,
+        gen: u64,
+        now: f64,
+        overlay: &Overlay,
+    ) -> Option<Declaration> {
+        if self.suspect_gen.get(peer).copied() != Some(gen) {
+            return None;
+        }
+        self.suspect_gen[peer] = 0;
+        let false_positive = overlay.is_online(peer);
+        // A false positive clears immediately (the live peer's next
+        // incarnation refutes the declaration); a real death stays
+        // declared until the peer's rejoin is observed.
+        if !false_positive {
+            self.declared_dead[peer] = true;
+        }
+        Some(Declaration { lifetime: (now - self.joined_at[peer]).max(0.0), false_positive })
+    }
+
+    /// A peer (re)joined: reset its detector state and lifetime clock.
+    pub fn note_join(&mut self, peer: PeerId, now: f64) {
+        if peer < self.joined_at.len() {
+            self.suspect_gen[peer] = 0;
+            self.declared_dead[peer] = false;
+            self.joined_at[peer] = now;
+        }
+    }
+
+    /// Number of peers currently under (unexpired) suspicion.
+    pub fn suspected_count(&self) -> usize {
+        self.suspect_gen.iter().filter(|&&g| g != 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::faults::FaultSpec;
+
+    fn mk(n: usize) -> (Overlay, FaultPlane, SwimDetector) {
+        let mut rng = Pcg64::new(5, 1);
+        let overlay = Overlay::new(n, &mut rng);
+        let faults = FaultPlane::new(FaultSpec::default(), n, 5);
+        let swim = SwimDetector::new(
+            DetectorSpec::Swim { period: 10.0, suspicion: 30.0, k_probes: 3 },
+            n,
+            5,
+        )
+        .unwrap();
+        (overlay, faults, swim)
+    }
+
+    #[test]
+    fn key_round_trips() {
+        for key in ["oracle", "swim:10:30:3", "swim:5:12.5:2"] {
+            let spec = DetectorSpec::parse(key).unwrap();
+            assert_eq!(spec.key(), key);
+        }
+        for bad in ["swim", "swim:10:30", "swim:0:30:3", "swim:10:30:0", "gossip", ""] {
+            assert!(DetectorSpec::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn oracle_builds_no_detector() {
+        assert!(SwimDetector::new(DetectorSpec::Oracle, 10, 1).is_none());
+    }
+
+    #[test]
+    fn dead_peer_is_suspected_then_declared() {
+        let (mut overlay, mut faults, mut swim) = mk(64);
+        overlay.depart(7, 100.0);
+        // A 64-peer population probing once per round finds the corpse
+        // within a few rounds with overwhelming probability.
+        let mut suspected = Vec::new();
+        for round in 0..20 {
+            let t = 100.0 + 10.0 * round as f64;
+            suspected = swim.probe_round(&overlay, &mut faults, t);
+            if suspected.iter().any(|&(p, _)| p == 7) {
+                break;
+            }
+        }
+        let &(_, gen) = suspected.iter().find(|&&(p, _)| p == 7).expect("7 never suspected");
+        let decl = swim.expire(7, gen, 400.0, &overlay).expect("suspicion must stand");
+        assert!(!decl.false_positive);
+        assert!(decl.lifetime > 0.0);
+        // Double-expiry is a no-op.
+        assert!(swim.expire(7, gen, 401.0, &overlay).is_none());
+    }
+
+    #[test]
+    fn no_false_positives_without_faults() {
+        let (overlay, mut faults, mut swim) = mk(64);
+        for round in 0..50 {
+            let s = swim.probe_round(&overlay, &mut faults, 10.0 * round as f64);
+            assert!(s.is_empty(), "all-online fault-free round suspected {s:?}");
+        }
+    }
+
+    #[test]
+    fn rejoin_clears_suspicion_and_resets_lifetime() {
+        let (mut overlay, mut faults, mut swim) = mk(64);
+        overlay.depart(3, 50.0);
+        let mut gen = 0;
+        for round in 0..20 {
+            let s = swim.probe_round(&overlay, &mut faults, 50.0 + 10.0 * round as f64);
+            if let Some(&(_, g)) = s.iter().find(|&&(p, _)| p == 3) {
+                gen = g;
+                break;
+            }
+        }
+        assert!(gen != 0, "3 never suspected");
+        overlay.join(3, 200.0);
+        swim.note_join(3, 200.0);
+        assert!(
+            swim.expire(3, gen, 230.0, &overlay).is_none(),
+            "rejoin must invalidate the in-flight expiry"
+        );
+    }
+
+    #[test]
+    fn lossy_probes_produce_false_positives_eventually() {
+        let n = 64;
+        let mut rng = Pcg64::new(9, 1);
+        let overlay = Overlay::new(n, &mut rng);
+        // Extreme loss so the FP path triggers quickly and determinism
+        // of the test does not hinge on a rare event.
+        let mut faults = FaultPlane::new(FaultSpec::parse("loss:0.9").unwrap(), n, 9);
+        let mut swim = SwimDetector::new(
+            DetectorSpec::Swim { period: 10.0, suspicion: 30.0, k_probes: 2 },
+            n,
+            9,
+        )
+        .unwrap();
+        let mut fp = 0;
+        for round in 0..40 {
+            let t = 10.0 * round as f64;
+            for (p, gen) in swim.probe_round(&overlay, &mut faults, t) {
+                if let Some(d) = swim.expire(p, gen, t + 30.0, &overlay) {
+                    assert!(d.false_positive, "everyone is online");
+                    fp += 1;
+                }
+            }
+        }
+        assert!(fp > 0, "90% probe loss must yield false positives");
+    }
+}

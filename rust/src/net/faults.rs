@@ -1,0 +1,464 @@
+//! Deterministic fault-injection plane.
+//!
+//! Every fault draws from a *dedicated* seeded RNG stream (never the
+//! world's main `0xB0B` stream), so the `faults: none` default consumes
+//! nothing and the fault-free world is bit-exact with the tree before
+//! this module existed. Fault kinds compose through the registry key
+//! grammar (`loss:0.05+partition:600:300:0.3`):
+//!
+//! * `loss:P` — each control-plane probe / data-plane transfer attempt
+//!   is independently dropped with probability `P`.
+//! * `delay:MEAN` — control-plane probes pick up an exponential
+//!   round-trip delay with the given mean; a probe whose round trip
+//!   exceeds its implicit ack window counts as failed (no extra event
+//!   machinery, but delay gets a real effect on detection).
+//! * `partition:START:DUR:FRAC` — at sim-time `START` (measured from
+//!   world construction) a random `FRAC` of the population is cut off
+//!   from the rest (and from the server, which sits on the majority
+//!   side) for `DUR` seconds, then the cut heals. Membership of the
+//!   minority side comes from its own seeded stream, so it is a pure
+//!   function of `(seed, n_peers)`.
+//! * `crash:MTBF:DOWN` — Poisson crash-restarts on top of the churn
+//!   model: a random online peer hard-crashes (exponential inter-crash
+//!   time with mean `MTBF`) and rejoins after exactly `DOWN` seconds
+//!   with its stored chunks intact — the data-plane's churn-journal
+//!   replay revives the rejoining holder's groups automatically. The
+//!   crashed peer's original session-end `PeerFail` timer is left in
+//!   place and treated as ordinary extra churn when it fires.
+//!
+//! Transfer-level loss is retried with bounded exponential backoff
+//! (deterministic jitter from the transfer fault stream); see
+//! [`TransferFaults::backoff`] and `dataplane/transfer.rs`.
+
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// RNG stream ids — distinct from the world's `0xB0B` main stream.
+pub const FAULT_PLANE_STREAM: u64 = 0xFA17;
+pub const TRANSFER_FAULT_STREAM: u64 = 0xDA7A;
+pub const PARTITION_SIDE_STREAM: u64 = 0x51DE;
+
+/// A scheduled network partition (`partition:START:DUR:FRAC`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionSpec {
+    /// Seconds after world construction the cut opens.
+    pub start: f64,
+    /// Seconds the cut stays open.
+    pub duration: f64,
+    /// Expected fraction of the population on the minority side.
+    pub frac: f64,
+}
+
+/// Poisson crash-restart injection (`crash:MTBF:DOWN`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrashSpec {
+    /// Mean seconds between injected crashes (population-wide).
+    pub mtbf: f64,
+    /// Fixed downtime before the crashed peer rejoins with its image.
+    pub downtime: f64,
+}
+
+/// Composable fault-injection configuration (the `faults:` registry
+/// axis). The default is no faults at all.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Independent drop probability per probe / transfer attempt.
+    pub loss: Option<f64>,
+    /// Mean one-way exponential probe delay (control plane only).
+    pub delay: Option<f64>,
+    pub partition: Option<PartitionSpec>,
+    pub crash: Option<CrashSpec>,
+}
+
+fn num(x: f64) -> String {
+    format!("{x}")
+}
+
+fn parse_num(key: &str, part: &str) -> Result<f64> {
+    part.parse::<f64>().map_err(|_| {
+        Error::Config(format!("faults key `{key}`: `{part}` is not a number"))
+    })
+}
+
+impl FaultSpec {
+    /// Is this the fault-free default?
+    pub fn is_none(&self) -> bool {
+        *self == FaultSpec::default()
+    }
+
+    /// Canonical registry key. Round-trips exactly through [`parse`]
+    /// (`FaultSpec::parse`): fault kinds always serialize in
+    /// loss, delay, partition, crash order.
+    pub fn key(&self) -> String {
+        if self.is_none() {
+            return "none".into();
+        }
+        let mut parts = Vec::new();
+        if let Some(p) = self.loss {
+            parts.push(format!("loss:{}", num(p)));
+        }
+        if let Some(d) = self.delay {
+            parts.push(format!("delay:{}", num(d)));
+        }
+        if let Some(p) = self.partition {
+            parts.push(format!(
+                "partition:{}:{}:{}",
+                num(p.start),
+                num(p.duration),
+                num(p.frac)
+            ));
+        }
+        if let Some(c) = self.crash {
+            parts.push(format!("crash:{}:{}", num(c.mtbf), num(c.downtime)));
+        }
+        parts.join("+")
+    }
+
+    /// Parse a composable fault key: `none`, or `+`-joined parts of
+    /// `loss:P`, `delay:MEAN`, `partition:START:DUR:FRAC`,
+    /// `crash:MTBF:DOWN`. Each kind may appear at most once.
+    pub fn parse(key: &str) -> Result<FaultSpec> {
+        if key == "none" {
+            return Ok(FaultSpec::default());
+        }
+        let mut spec = FaultSpec::default();
+        for part in key.split('+') {
+            let fields: Vec<&str> = part.split(':').collect();
+            let dup = |name: &str| {
+                Error::Config(format!("faults key `{key}`: `{name}` given twice"))
+            };
+            match fields.as_slice() {
+                ["loss", p] => {
+                    if spec.loss.is_some() {
+                        return Err(dup("loss"));
+                    }
+                    spec.loss = Some(parse_num(key, p)?);
+                }
+                ["delay", d] => {
+                    if spec.delay.is_some() {
+                        return Err(dup("delay"));
+                    }
+                    spec.delay = Some(parse_num(key, d)?);
+                }
+                ["partition", start, dur, frac] => {
+                    if spec.partition.is_some() {
+                        return Err(dup("partition"));
+                    }
+                    spec.partition = Some(PartitionSpec {
+                        start: parse_num(key, start)?,
+                        duration: parse_num(key, dur)?,
+                        frac: parse_num(key, frac)?,
+                    });
+                }
+                ["crash", mtbf, down] => {
+                    if spec.crash.is_some() {
+                        return Err(dup("crash"));
+                    }
+                    spec.crash = Some(CrashSpec {
+                        mtbf: parse_num(key, mtbf)?,
+                        downtime: parse_num(key, down)?,
+                    });
+                }
+                _ => {
+                    return Err(Error::Config(format!(
+                        "unknown faults key part `{part}` in `{key}` — want none | loss:P | \
+                         delay:MEAN | partition:START:DUR:FRAC | crash:MTBF:DOWN, joined with `+`"
+                    )))
+                }
+            }
+        }
+        spec.validated()
+    }
+
+    /// Range-check every configured fault kind.
+    pub fn validated(self) -> Result<FaultSpec> {
+        if let Some(p) = self.loss {
+            if !(0.0..1.0).contains(&p) {
+                return Err(Error::Config(format!("faults loss {p} must be in [0, 1)")));
+            }
+        }
+        if let Some(d) = self.delay {
+            if !(d > 0.0) {
+                return Err(Error::Config(format!("faults delay mean {d} must be > 0")));
+            }
+        }
+        if let Some(p) = self.partition {
+            if p.start < 0.0 || !(p.duration > 0.0) || !(p.frac > 0.0 && p.frac < 1.0) {
+                return Err(Error::Config(format!(
+                    "faults partition start {} / duration {} / frac {} out of range \
+                     (start >= 0, duration > 0, 0 < frac < 1)",
+                    p.start, p.duration, p.frac
+                )));
+            }
+        }
+        if let Some(c) = self.crash {
+            if !(c.mtbf > 0.0) || c.downtime < 0.0 {
+                return Err(Error::Config(format!(
+                    "faults crash mtbf {} must be > 0 and downtime {} >= 0",
+                    c.mtbf, c.downtime
+                )));
+            }
+        }
+        Ok(self)
+    }
+}
+
+/// Materialized partition: which peers sit on the minority side, as a
+/// pure function of `(seed, n_peers)` via the dedicated side stream.
+/// The server is always on the majority side.
+#[derive(Debug, Clone)]
+pub struct PartitionSchedule {
+    pub start: f64,
+    pub duration: f64,
+    side: Vec<bool>,
+}
+
+impl PartitionSchedule {
+    pub fn new(spec: &PartitionSpec, n_peers: usize, seed: u64) -> PartitionSchedule {
+        let mut rng = Pcg64::new(seed, PARTITION_SIDE_STREAM);
+        let side = (0..n_peers).map(|_| rng.next_f64() < spec.frac).collect();
+        PartitionSchedule { start: spec.start, duration: spec.duration, side }
+    }
+
+    /// Is the cut open at `now`?
+    pub fn active(&self, now: f64) -> bool {
+        now >= self.start && now < self.start + self.duration
+    }
+
+    /// Absolute sim-time the cut heals.
+    pub fn heal_at(&self) -> f64 {
+        self.start + self.duration
+    }
+
+    /// Is `p` on the minority side?
+    pub fn minority(&self, p: usize) -> bool {
+        self.side.get(p).copied().unwrap_or(false)
+    }
+
+    pub fn minority_count(&self) -> usize {
+        self.side.iter().filter(|&&s| s).count()
+    }
+
+    /// Does traffic between `a` and `b` cross the cut at `now`?
+    /// `None` is the server (majority side).
+    pub fn cuts(&self, now: f64, a: Option<usize>, b: Option<usize>) -> bool {
+        if !self.active(now) {
+            return false;
+        }
+        let sa = a.map(|p| self.minority(p)).unwrap_or(false);
+        let sb = b.map(|p| self.minority(p)).unwrap_or(false);
+        sa != sb
+    }
+}
+
+/// Control-plane fault injector: probe drops for the SWIM detector plus
+/// the crash-restart schedule. One dedicated RNG stream (`0xFA17`);
+/// draws happen only for the fault kinds actually configured, in event
+/// order, so consumption is deterministic.
+#[derive(Debug)]
+pub struct FaultPlane {
+    spec: FaultSpec,
+    partition: Option<PartitionSchedule>,
+    rng: Pcg64,
+}
+
+impl FaultPlane {
+    pub fn new(spec: FaultSpec, n_peers: usize, seed: u64) -> FaultPlane {
+        let partition =
+            spec.partition.as_ref().map(|p| PartitionSchedule::new(p, n_peers, seed));
+        FaultPlane { spec, partition, rng: Pcg64::new(seed, FAULT_PLANE_STREAM) }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    pub fn partition(&self) -> Option<&PartitionSchedule> {
+        self.partition.as_ref()
+    }
+
+    /// Does a control-plane probe from `src` to `dst` fail? A probe
+    /// fails on a partition cut, an independent loss draw, or (with
+    /// `delay:` configured) a round trip exceeding the prober's implicit
+    /// ack window of `window` seconds.
+    pub fn drop_probe(&mut self, now: f64, src: usize, dst: usize, window: f64) -> bool {
+        if let Some(ps) = &self.partition {
+            if ps.cuts(now, Some(src), Some(dst)) {
+                return true;
+            }
+        }
+        if let Some(p) = self.spec.loss {
+            if self.rng.next_f64() < p {
+                return true;
+            }
+        }
+        if let Some(mean) = self.spec.delay {
+            let rtt = self.rng.exp(1.0 / mean) + self.rng.exp(1.0 / mean);
+            if rtt > window {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Uniform draw from the fault stream (crash victim selection).
+    pub fn draw_below(&mut self, n: u64) -> u64 {
+        self.rng.next_below(n)
+    }
+
+    /// Exponential draw from the fault stream (crash inter-arrival).
+    pub fn draw_exp(&mut self, rate: f64) -> f64 {
+        self.rng.exp(rate)
+    }
+}
+
+/// Data-plane fault injector: per-attempt transfer drops + the bounded
+/// exponential backoff schedule. `None` when neither loss nor a
+/// partition is configured, so the fault-free transfer path stays
+/// exactly the pre-fault-plane code.
+#[derive(Debug, Clone)]
+pub struct TransferFaults {
+    loss: f64,
+    partition: Option<PartitionSchedule>,
+    /// Attempts beyond the first before a transfer aborts.
+    pub max_retries: u32,
+    /// Base backoff (seconds) for the first retry.
+    pub backoff_base: f64,
+    rng: Pcg64,
+}
+
+impl TransferFaults {
+    pub fn new(spec: &FaultSpec, n_peers: usize, seed: u64) -> Option<TransferFaults> {
+        if spec.loss.is_none() && spec.partition.is_none() {
+            return None;
+        }
+        Some(TransferFaults {
+            loss: spec.loss.unwrap_or(0.0),
+            partition: spec.partition.as_ref().map(|p| PartitionSchedule::new(p, n_peers, seed)),
+            max_retries: 6,
+            backoff_base: 1.0,
+            rng: Pcg64::new(seed, TRANSFER_FAULT_STREAM),
+        })
+    }
+
+    /// Is this transfer attempt blocked? `None` endpoints are the
+    /// server. A partition cut blocks without consuming a draw; loss
+    /// consumes exactly one draw per attempt.
+    pub fn blocks(&mut self, now: f64, src: Option<usize>, dst: Option<usize>) -> bool {
+        if let Some(ps) = &self.partition {
+            if ps.cuts(now, src, dst) {
+                return true;
+            }
+        }
+        self.loss > 0.0 && self.rng.next_f64() < self.loss
+    }
+
+    /// Backoff before retry `attempt` (1-based): bounded exponential
+    /// with deterministic jitter in `[1.0, 1.5)` from the seeded stream.
+    pub fn backoff(&mut self, attempt: u32) -> f64 {
+        let exp = 2f64.powi(attempt.saturating_sub(1).min(16) as i32);
+        self.backoff_base * exp * (1.0 + 0.5 * self.rng.next_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_round_trips_every_composition() {
+        for key in [
+            "none",
+            "loss:0.05",
+            "delay:2",
+            "partition:600:300:0.3",
+            "crash:1800:120",
+            "loss:0.1+delay:1.5",
+            "loss:0.05+partition:600:300:0.3",
+            "loss:0.02+delay:0.5+partition:100:50:0.25+crash:3600:60",
+        ] {
+            let spec = FaultSpec::parse(key).unwrap();
+            assert_eq!(spec.key(), key, "canonical key must round-trip");
+            assert_eq!(FaultSpec::parse(&spec.key()).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_and_out_of_range() {
+        for bad in [
+            "loss",
+            "loss:2",
+            "loss:x",
+            "delay:0",
+            "partition:600:300",
+            "partition:-1:300:0.3",
+            "partition:600:300:1.5",
+            "crash:0:60",
+            "loss:0.1+loss:0.2",
+            "jitter:5",
+            "",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn partition_sides_are_seed_stable_and_server_is_majority() {
+        let spec = PartitionSpec { start: 100.0, duration: 50.0, frac: 0.3 };
+        let a = PartitionSchedule::new(&spec, 500, 42);
+        let b = PartitionSchedule::new(&spec, 500, 42);
+        let m = a.minority_count();
+        assert!(m > 500 * 15 / 100 && m < 500 * 45 / 100, "minority {m}/500 far from 30%");
+        for p in 0..500 {
+            assert_eq!(a.minority(p), b.minority(p), "side of {p} must be seed-stable");
+        }
+        // Cut semantics: active window only, server on the majority side.
+        let minority = (0..500).find(|&p| a.minority(p)).unwrap();
+        let majority = (0..500).find(|&p| !a.minority(p)).unwrap();
+        assert!(a.cuts(120.0, Some(minority), Some(majority)));
+        assert!(a.cuts(120.0, Some(minority), None), "minority cut off from the server");
+        assert!(!a.cuts(120.0, Some(majority), None));
+        assert!(!a.cuts(99.0, Some(minority), Some(majority)), "before start");
+        assert!(!a.cuts(151.0, Some(minority), Some(majority)), "after heal");
+        assert!(!a.cuts(120.0, Some(minority), Some(minority)), "same side");
+    }
+
+    #[test]
+    fn fault_plane_probe_drops_follow_the_spec() {
+        let spec = FaultSpec::parse("loss:0.2").unwrap();
+        let mut fp = FaultPlane::new(spec, 100, 7);
+        let drops = (0..10_000).filter(|_| fp.drop_probe(0.0, 1, 2, 5.0)).count();
+        let frac = drops as f64 / 10_000.0;
+        assert!((frac - 0.2).abs() < 0.02, "loss frac {frac} vs 0.2");
+        // No faults -> no drops and no RNG consumption.
+        let mut quiet = FaultPlane::new(FaultSpec::default(), 100, 7);
+        assert!((0..1000).all(|_| !quiet.drop_probe(0.0, 1, 2, 5.0)));
+    }
+
+    #[test]
+    fn transfer_faults_none_for_fault_free_and_delay_only() {
+        assert!(TransferFaults::new(&FaultSpec::default(), 10, 1).is_none());
+        let delay_only = FaultSpec::parse("delay:2").unwrap();
+        assert!(
+            TransferFaults::new(&delay_only, 10, 1).is_none(),
+            "probe delay must not touch the data-plane transfer path"
+        );
+        assert!(TransferFaults::new(&FaultSpec::parse("loss:0.1").unwrap(), 10, 1).is_some());
+    }
+
+    #[test]
+    fn backoff_is_bounded_exponential_with_jitter() {
+        let spec = FaultSpec::parse("loss:0.5").unwrap();
+        let mut tf = TransferFaults::new(&spec, 10, 3).unwrap();
+        let b1 = tf.backoff(1);
+        let b2 = tf.backoff(2);
+        let b3 = tf.backoff(3);
+        assert!((1.0..1.5).contains(&b1), "attempt 1 backoff {b1}");
+        assert!((2.0..3.0).contains(&b2), "attempt 2 backoff {b2}");
+        assert!((4.0..6.0).contains(&b3), "attempt 3 backoff {b3}");
+        // Identical seed => identical jitter sequence.
+        let mut tf2 = TransferFaults::new(&spec, 10, 3).unwrap();
+        assert_eq!(tf2.backoff(1), b1);
+        assert_eq!(tf2.backoff(2), b2);
+    }
+}

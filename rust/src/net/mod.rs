@@ -7,11 +7,15 @@
 //! Eq. 1 estimator), messages routed in multiple decentralized hops.
 
 pub mod bandwidth;
+pub mod detector;
+pub mod faults;
 pub mod overlay;
 pub mod routing;
 pub mod stabilize;
 
 pub use bandwidth::{BandwidthModel, LinkSpeed};
+pub use detector::{DetectorSpec, SwimDetector};
+pub use faults::{FaultPlane, FaultSpec, TransferFaults};
 pub use overlay::{Overlay, PeerId, PeerState};
 pub use routing::RouteOutcome;
 pub use stabilize::{FailureObservation, Stabilizer};

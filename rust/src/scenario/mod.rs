@@ -47,6 +47,8 @@ use crate::error::{Error, Result};
 use crate::estimator::{build_window_estimator, EstimatorSpec, WindowEstimator};
 use crate::mpi::program::{CommPattern, Program};
 use crate::net::bandwidth::BandwidthModel;
+use crate::net::detector::DetectorSpec;
+use crate::net::faults::FaultSpec;
 use crate::net::overlay::Overlay;
 use crate::planner::{NativePlanner, Planner, XlaPlanner};
 use crate::policy::{self, CheckpointPolicy};
@@ -123,6 +125,11 @@ pub struct Scenario {
     pub max_sim_time: f64,
     /// Estimator pre-warm observations (fast path).
     pub warm_observations: usize,
+    /// Failure-detection scheme (`oracle` = the seed's instantaneous
+    /// detection; `swim:PERIOD:SUSPICION:K` = probed).
+    pub detector: DetectorSpec,
+    /// Injected faults (`none`, or `loss/delay/partition/crash` parts).
+    pub faults: FaultSpec,
 }
 
 impl Default for Scenario {
@@ -146,6 +153,8 @@ impl Default for Scenario {
             replan_period: 300.0,
             max_sim_time: 60.0 * 24.0 * 3600.0,
             warm_observations: 32,
+            detector: DetectorSpec::default(),
+            faults: FaultSpec::default(),
         }
     }
 }
@@ -156,9 +165,11 @@ impl Scenario {
         ScenarioBuilder { scenario: Scenario::default(), err: None }
     }
 
-    /// Short human/CSV label: `churn|policy|estimator|k..|v..|td..`.
+    /// Short human/CSV label: `churn|policy|estimator|k..|v..|td..`, with
+    /// `|det:..` / `|faults:..` suffixes only when those axes are
+    /// non-default (existing CSV labels stay byte-stable).
     pub fn label(&self) -> String {
-        format!(
+        let mut label = format!(
             "{}|{}|{}|k{}|v{}|td{}",
             registry::churn_key(&self.churn),
             registry::policy_key(&self.policy),
@@ -166,7 +177,14 @@ impl Scenario {
             self.k,
             self.job_params().v,
             self.job_params().td,
-        )
+        );
+        if self.detector != DetectorSpec::default() {
+            label.push_str(&format!("|det:{}", self.detector.key()));
+        }
+        if !self.faults.is_none() {
+            label.push_str(&format!("|faults:{}", self.faults.key()));
+        }
+        label
     }
 
     /// The full-stack simulation config this scenario corresponds to.
@@ -184,6 +202,8 @@ impl Scenario {
             estimator_window: self.estimator_window,
             replan_period: self.replan_period,
             max_sim_time: self.max_sim_time,
+            detector: self.detector,
+            faults: self.faults,
         }
     }
 
@@ -406,6 +426,18 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Failure-detection scheme (oracle / SWIM prober).
+    pub fn detector(mut self, spec: DetectorSpec) -> Self {
+        self.scenario.detector = spec;
+        self
+    }
+
+    /// Injected fault plane (loss / delay / partition / crash-restart).
+    pub fn faults(mut self, spec: FaultSpec) -> Self {
+        self.scenario.faults = spec;
+        self
+    }
+
     // ------------------------------------------------ registry-keyed setters
 
     fn record<T>(mut self, parsed: Result<T>, apply: impl FnOnce(&mut Scenario, T)) -> Self {
@@ -450,6 +482,18 @@ impl ScenarioBuilder {
     /// `"replicate:3"`, `"erasure:4:2"`).
     pub fn storage_key(self, key: &str) -> Self {
         self.record(registry::parse_storage(key), |s, v| s.storage = v)
+    }
+
+    /// Set the failure detector from a registry key (`"oracle"`,
+    /// `"swim:10:30:3"`).
+    pub fn detector_key(self, key: &str) -> Self {
+        self.record(registry::parse_detector(key), |s, v| s.detector = v)
+    }
+
+    /// Set the fault plane from a registry key (`"none"`, `"loss:0.05"`,
+    /// `"loss:0.05+partition:600:300:0.3"`, …).
+    pub fn faults_key(self, key: &str) -> Self {
+        self.record(registry::parse_faults(key), |s, v| s.faults = v)
     }
 
     /// Validate and return the scenario.
@@ -525,6 +569,28 @@ mod tests {
             .storage(StorageSpec::Erasure { data: 0, parity: 1 })
             .build()
             .is_err());
+    }
+
+    #[test]
+    fn detector_and_faults_axes_round_trip_through_builder() {
+        let s = Scenario::builder()
+            .detector_key("swim:10:30:3")
+            .faults_key("loss:0.05+partition:600:300:0.3")
+            .build()
+            .unwrap();
+        assert_eq!(
+            s.detector,
+            DetectorSpec::Swim { period: 10.0, suspicion: 30.0, k_probes: 3 }
+        );
+        assert_eq!(registry::detector_key(&s.detector), "swim:10:30:3");
+        assert_eq!(registry::faults_key(&s.faults), "loss:0.05+partition:600:300:0.3");
+        // Defaults keep the seed label byte-stable; non-defaults suffix it.
+        let default_label = Scenario::builder().build().unwrap().label();
+        assert!(!default_label.contains("det:") && !default_label.contains("faults:"));
+        assert!(s.label().ends_with("|det:swim:10:30:3|faults:loss:0.05+partition:600:300:0.3"));
+        // Bad keys surface from build(), like every other axis.
+        assert!(Scenario::builder().detector_key("swim:10").build().is_err());
+        assert!(Scenario::builder().faults_key("loss:1.5").build().is_err());
     }
 
     #[test]

@@ -8,10 +8,12 @@
 //! |-----------|---------------------------------------------------------------|
 //! | churn     | `exp:MTBF`, `doubling:MTBF0:DOUBLE_TIME`, `heavytail:MEAN:SHAPE`, `gnutella-trace`, `overnet-trace`, `bittorrent-trace` |
 //! | policy    | `adaptive`, `oracle`, `never`, `fixed:INTERVAL`               |
-//! | estimator | `mle`, `ewma:ALPHA`, `count`, `hybrid:MEAN:CONFIDENCE`        |
+//! | estimator | `mle`, `ewma:ALPHA`, `count`, `hybrid:MEAN:CONFIDENCE`, `gossip:FANOUT` |
 //! | planner   | `native`, `xla`                                               |
 //! | workload  | `pipeline`, `ring`, `stencil1d`, `allreduce`, `master_worker` |
 //! | storage   | `server`, `replicate:K`, `erasure:K:M`                        |
+//! | detector  | `oracle`, `swim:PERIOD:SUSPICION:K`                           |
+//! | faults    | `none`, `loss:P`, `delay:MEAN`, `partition:START:DUR:FRAC`, `crash:MTBF:DOWN` (composable with `+`) |
 
 use super::PlannerSpec;
 use crate::config::{ChurnSpec, PolicySpec};
@@ -19,6 +21,8 @@ use crate::dataplane::StorageSpec;
 use crate::error::{Error, Result};
 use crate::estimator::EstimatorSpec;
 use crate::mpi::program::CommPattern;
+use crate::net::detector::DetectorSpec;
+use crate::net::faults::FaultSpec;
 
 /// Format a number the way keys are written: shortest round-trip form
 /// (`7200`, `0.1`, `72000`).
@@ -49,6 +53,8 @@ fn arity_err(family: &str, key: &str, want: &str) -> Error {
             "planner" => planner_keys().join(", "),
             "workload" => workload_keys().join(", "),
             "storage" => storage_keys().join(", "),
+            "detector" => detector_keys().join(", "),
+            "faults" => faults_keys().join(", "),
             _ => String::new(),
         }
     ))
@@ -145,7 +151,13 @@ pub fn parse_policy(key: &str) -> Result<PolicySpec> {
 // -------------------------------------------------------------- estimator
 
 pub fn estimator_keys() -> Vec<String> {
-    vec!["mle".into(), "ewma:0.1".into(), "count".into(), "hybrid:7200:16".into()]
+    vec![
+        "mle".into(),
+        "ewma:0.1".into(),
+        "count".into(),
+        "hybrid:7200:16".into(),
+        "gossip:4".into(),
+    ]
 }
 
 pub fn estimator_key(spec: &EstimatorSpec) -> String {
@@ -156,6 +168,7 @@ pub fn estimator_key(spec: &EstimatorSpec) -> String {
         EstimatorSpec::Hybrid { mean, confidence } => {
             format!("hybrid:{}:{}", num(*mean), num(*confidence))
         }
+        EstimatorSpec::Gossip { fanout } => format!("gossip:{fanout}"),
     }
 }
 
@@ -183,7 +196,20 @@ pub fn parse_estimator(key: &str) -> Result<EstimatorSpec> {
             }
             Ok(EstimatorSpec::Hybrid { mean, confidence })
         }
-        _ => Err(arity_err("estimator", key, "mle | ewma:ALPHA | count | hybrid:MEAN:CONF")),
+        ("gossip", [fanout]) => {
+            let fanout = parse_count("estimator", key, fanout)?;
+            if fanout == 0 {
+                return Err(Error::Config(format!(
+                    "estimator key '{key}': fanout must be >= 1"
+                )));
+            }
+            Ok(EstimatorSpec::Gossip { fanout })
+        }
+        _ => Err(arity_err(
+            "estimator",
+            key,
+            "mle | ewma:ALPHA | count | hybrid:MEAN:CONF | gossip:FANOUT",
+        )),
     }
 }
 
@@ -246,6 +272,45 @@ pub fn parse_storage(key: &str) -> Result<StorageSpec> {
     spec.validated()
 }
 
+// --------------------------------------------------------------- detector
+
+/// Representative detector keys (the spec's own grammar lives in
+/// [`crate::net::detector`]; the registry is a thin veneer so `--help`
+/// and the round-trip tests see one list).
+pub fn detector_keys() -> Vec<String> {
+    vec!["oracle".into(), "swim:10:30:3".into()]
+}
+
+pub fn detector_key(spec: &DetectorSpec) -> String {
+    spec.key()
+}
+
+pub fn parse_detector(key: &str) -> Result<DetectorSpec> {
+    DetectorSpec::parse(key)
+}
+
+// ----------------------------------------------------------------- faults
+
+/// Representative fault keys, including one composite (`+`-joined).
+pub fn faults_keys() -> Vec<String> {
+    vec![
+        "none".into(),
+        "loss:0.05".into(),
+        "delay:2".into(),
+        "partition:600:300:0.3".into(),
+        "crash:1800:120".into(),
+        "loss:0.05+partition:600:300:0.3".into(),
+    ]
+}
+
+pub fn faults_key(spec: &FaultSpec) -> String {
+    spec.key()
+}
+
+pub fn parse_faults(key: &str) -> Result<FaultSpec> {
+    FaultSpec::parse(key)
+}
+
 // --------------------------------------------------------------- workload
 
 pub fn workload_keys() -> Vec<String> {
@@ -296,6 +361,12 @@ mod tests {
         for k in storage_keys() {
             assert_eq!(storage_key(&parse_storage(&k).unwrap()), k, "storage {k}");
         }
+        for k in detector_keys() {
+            assert_eq!(detector_key(&parse_detector(&k).unwrap()), k, "detector {k}");
+        }
+        for k in faults_keys() {
+            assert_eq!(faults_key(&parse_faults(&k).unwrap()), k, "faults {k}");
+        }
     }
 
     #[test]
@@ -318,6 +389,18 @@ mod tests {
         assert_eq!(
             parse_storage("erasure:8:3").unwrap(),
             StorageSpec::Erasure { data: 8, parity: 3 }
+        );
+        assert!(parse_estimator("gossip:0").is_err());
+        assert!(parse_estimator("gossip:2.5").is_err());
+        let e = parse_detector("swim:10").unwrap_err().to_string();
+        assert!(e.contains("swim:PERIOD:SUSPICION:K"), "{e}");
+        assert!(parse_detector("swim:0:30:3").is_err());
+        let e = parse_faults("jitter:5").unwrap_err().to_string();
+        assert!(e.contains("partition:START:DUR:FRAC"), "{e}");
+        assert!(parse_faults("loss:1.5").is_err());
+        assert_eq!(
+            parse_faults("loss:0.1+crash:3600:60").unwrap().key(),
+            "loss:0.1+crash:3600:60"
         );
     }
 

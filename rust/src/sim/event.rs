@@ -42,6 +42,18 @@ pub enum EventKind {
     DownloadDone { job: usize, seq: u64 },
     /// Job completed all its fault-free work.
     JobDone { job: usize },
+    /// SWIM prober round: every online peer pings one random target.
+    SwimTick,
+    /// A SWIM suspicion timer ran out; `gen` stamps the suspicion so a
+    /// refutation (or rejoin) in the meantime invalidates the expiry.
+    SwimExpire { peer: usize, gen: u64 },
+    /// A scheduled network partition begins.
+    PartitionStart,
+    /// The scheduled network partition heals.
+    PartitionHeal,
+    /// Crash-restart injector tick: pick a victim, crash it, schedule the
+    /// next tick.
+    CrashTick,
 }
 
 impl EventKind {
@@ -61,7 +73,12 @@ impl EventKind {
             EventKind::PeerJoin { .. }
             | EventKind::PeerFail { .. }
             | EventKind::Stabilize { .. }
-            | EventKind::Deliver { .. } => None,
+            | EventKind::Deliver { .. }
+            | EventKind::SwimTick
+            | EventKind::SwimExpire { .. }
+            | EventKind::PartitionStart
+            | EventKind::PartitionHeal
+            | EventKind::CrashTick => None,
         }
     }
 
@@ -79,6 +96,11 @@ impl EventKind {
             EventKind::UploadDone { .. } => "UploadDone",
             EventKind::DownloadDone { .. } => "DownloadDone",
             EventKind::JobDone { .. } => "JobDone",
+            EventKind::SwimTick => "SwimTick",
+            EventKind::SwimExpire { .. } => "SwimExpire",
+            EventKind::PartitionStart => "PartitionStart",
+            EventKind::PartitionHeal => "PartitionHeal",
+            EventKind::CrashTick => "CrashTick",
         }
     }
 
@@ -88,7 +110,8 @@ impl EventKind {
             EventKind::PeerJoin { peer }
             | EventKind::PeerFail { peer }
             | EventKind::Stabilize { peer }
-            | EventKind::MemberFailDetected { peer, .. } => Some(*peer),
+            | EventKind::MemberFailDetected { peer, .. }
+            | EventKind::SwimExpire { peer, .. } => Some(*peer),
             EventKind::Deliver { dst, .. } => Some(*dst),
             _ => None,
         }
@@ -135,6 +158,13 @@ mod tests {
         assert_eq!(EventKind::PeerJoin { peer: 1 }.job_scope(), None);
         assert_eq!(EventKind::Stabilize { peer: 1 }.job_scope(), None);
         assert_eq!(EventKind::Deliver { dst: 1, msg_id: 0 }.job_scope(), None);
+        // Detector/fault-plane events outlive any one job.
+        assert_eq!(EventKind::SwimTick.job_scope(), None);
+        assert_eq!(EventKind::SwimExpire { peer: 1, gen: 7 }.job_scope(), None);
+        assert_eq!(EventKind::SwimExpire { peer: 1, gen: 7 }.peer(), Some(1));
+        assert_eq!(EventKind::PartitionStart.job_scope(), None);
+        assert_eq!(EventKind::PartitionHeal.job_scope(), None);
+        assert_eq!(EventKind::CrashTick.job_scope(), None);
     }
 
     #[test]

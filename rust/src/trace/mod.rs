@@ -139,6 +139,26 @@ pub enum TracePayload {
     /// The job rolled back and restarted from `from_seq` with
     /// `progress_s` of recovered work.
     Restart { job: u32, from_seq: u64, progress_s: f64 },
+    /// The SWIM prober failed to reach a peer (directly and through its
+    /// relays) and started a suspicion timer.
+    Suspect,
+    /// A SWIM suspicion timer expired without refutation: the peer is
+    /// declared dead. `false_positive` marks a peer that was in fact
+    /// still online; `lifetime_s` is the session length the declaration
+    /// feeds into the estimator.
+    DeadDeclared { false_positive: bool, lifetime_s: f64 },
+    /// A scheduled network partition began, isolating `minority` peers.
+    PartitionStart { minority: u32 },
+    /// The scheduled network partition healed.
+    PartitionHeal,
+    /// The crash injector killed a peer; it restarts (with its checkpoint
+    /// image intact) after `downtime_s`.
+    Crash { downtime_s: f64 },
+    /// A data-plane transfer attempt was dropped by the fault plane and
+    /// will be retried after backoff.
+    TransferRetry { attempt: u32 },
+    /// A data-plane transfer exhausted its retry budget and was aborted.
+    TransferAbort,
 }
 
 impl TracePayload {
@@ -157,6 +177,13 @@ impl TracePayload {
             TracePayload::Gc { .. } => "gc",
             TracePayload::Commit { .. } => "commit",
             TracePayload::Restart { .. } => "restart",
+            TracePayload::Suspect => "suspect",
+            TracePayload::DeadDeclared { .. } => "dead_declared",
+            TracePayload::PartitionStart { .. } => "partition_start",
+            TracePayload::PartitionHeal => "partition_heal",
+            TracePayload::Crash { .. } => "crash",
+            TracePayload::TransferRetry { .. } => "transfer_retry",
+            TracePayload::TransferAbort => "transfer_abort",
         }
     }
 
@@ -205,6 +232,20 @@ impl TracePayload {
                 f("from_seq", FieldVal::U64(from_seq));
                 f("progress_s", FieldVal::F64(progress_s));
             }
+            TracePayload::Suspect => {}
+            TracePayload::DeadDeclared { false_positive, lifetime_s } => {
+                f("false_positive", FieldVal::Bool(false_positive));
+                f("lifetime_s", FieldVal::F64(lifetime_s));
+            }
+            TracePayload::PartitionStart { minority } => {
+                f("minority", FieldVal::U64(minority as u64))
+            }
+            TracePayload::PartitionHeal => {}
+            TracePayload::Crash { downtime_s } => f("downtime_s", FieldVal::F64(downtime_s)),
+            TracePayload::TransferRetry { attempt } => {
+                f("attempt", FieldVal::U64(attempt as u64))
+            }
+            TracePayload::TransferAbort => {}
         }
     }
 }

@@ -14,6 +14,8 @@ use p2pcp::dataplane::{DataPlane, StorageSpec, DEFAULT_CHUNK_BYTES, DEFAULT_SERV
 use p2pcp::experiments::server_offload::{run_sweep, to_table, OffloadConfig, OffloadRow};
 use p2pcp::mpi::program::{CommPattern, Program};
 use p2pcp::net::bandwidth::BandwidthModel;
+use p2pcp::net::detector::DetectorSpec;
+use p2pcp::net::faults::{FaultSpec, TransferFaults};
 use p2pcp::net::overlay::Overlay;
 use p2pcp::planner::NativePlanner;
 use p2pcp::policy;
@@ -287,9 +289,10 @@ fn traced_churny_world_dual_run_is_byte_identical() {
     a.assert_matches(&b);
 }
 
-/// Run `n_worlds` traced worlds (seed = 100 + index) on a pool of
-/// `threads` workers and return the per-index digest values.
-fn sweep_traced_digests(threads: usize, n_worlds: usize) -> Vec<u64> {
+/// Run `n_worlds` traced worlds (seed = 100 + index, configs built by
+/// `mk`) on a pool of `threads` workers and return the per-index digest
+/// values.
+fn sweep_traced_digests(threads: usize, n_worlds: usize, mk: fn(u64) -> SimConfig) -> Vec<u64> {
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<u64>>> = (0..n_worlds).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
@@ -301,7 +304,7 @@ fn sweep_traced_digests(threads: usize, n_worlds: usize) -> Vec<u64> {
                 }
                 let (d, _) = traced_world_digest(
                     "trace-sweep",
-                    traced_cfg(100 + i as u64),
+                    mk(100 + i as u64),
                     Tracer::full(),
                     true,
                 );
@@ -318,9 +321,9 @@ fn sweep_traced_digests(threads: usize, n_worlds: usize) -> Vec<u64> {
 #[test]
 fn traced_world_sweep_is_thread_count_invariant() {
     let n_worlds = 3;
-    let d1 = sweep_traced_digests(1, n_worlds);
-    let d2 = sweep_traced_digests(2, n_worlds);
-    let d4 = sweep_traced_digests(4, n_worlds);
+    let d1 = sweep_traced_digests(1, n_worlds, traced_cfg);
+    let d2 = sweep_traced_digests(2, n_worlds, traced_cfg);
+    let d4 = sweep_traced_digests(4, n_worlds, traced_cfg);
     assert_eq!(d1, d2, "trace digests differ between 1 and 2 sweep threads");
     assert_eq!(d1, d4, "trace digests differ between 1 and 4 sweep threads");
     // Distinct seeds must not collide — otherwise the digest is vacuous.
@@ -338,4 +341,153 @@ fn tracer_is_observer_neutral() {
     assert!(off_counts.is_empty(), "off sink must record nothing: {off_counts:?}");
     assert!(!on_counts.is_empty(), "full sink must record events");
     off.assert_matches(&on);
+}
+
+// ------------------------------------------------------------------
+// E. Fault plane + imperfect detection: injected loss, partitions and
+//    crashes plus the SWIM prober are covered by the same dual-run /
+//    thread-sweep byte-identity contract — and the default axes
+//    (oracle detector, no faults) must not perturb the baseline stream
+//    at all.
+// ------------------------------------------------------------------
+
+/// The traced churny scenario with a SWIM detector and the full fault
+/// menu: probe loss, a mid-job partition, occasional crash-restarts.
+fn faulty_cfg(seed: u64) -> SimConfig {
+    let mut cfg = traced_cfg(seed);
+    cfg.detector = DetectorSpec::parse("swim:15:45:3").unwrap();
+    cfg.faults = FaultSpec::parse("loss:0.05+partition:1200:400:0.3+crash:900:120").unwrap();
+    cfg
+}
+
+#[test]
+fn explicit_oracle_axes_reproduce_the_default_world_bit_exactly() {
+    // `detector: oracle` + `faults: none` parsed from registry keys must
+    // be byte-identical (outcome, metrics, full trace stream) to a world
+    // that never heard of either axis — the oracle path consumes the
+    // same RNG draws and schedules the same events as before the axis
+    // existed.
+    let base = traced_cfg(42);
+    let mut explicit = traced_cfg(42);
+    explicit.detector = DetectorSpec::parse("oracle").unwrap();
+    explicit.faults = FaultSpec::parse("none").unwrap();
+    let (a, _) = traced_world_digest("axes-default", base, Tracer::full(), true);
+    let (b, _) = traced_world_digest("axes-explicit", explicit, Tracer::full(), true);
+    assert!(!a.is_empty());
+    a.assert_matches(&b);
+}
+
+#[test]
+fn faulty_world_dual_run_is_byte_identical_with_trace() {
+    let (a, counts) = traced_world_digest("faulty-run1", faulty_cfg(42), Tracer::full(), true);
+    let (b, _) = traced_world_digest("faulty-run2", faulty_cfg(42), Tracer::full(), true);
+    // The faulty run must actually exercise the new machinery: SWIM
+    // suspicions and declarations, and the scheduled partition window.
+    for kind in ["suspect", "dead_declared", "partition_start", "partition_heal"] {
+        assert!(
+            counts.get(kind).copied().unwrap_or(0) > 0,
+            "faulty run captured no `{kind}` events: {counts:?}"
+        );
+    }
+    a.assert_matches(&b);
+}
+
+#[test]
+fn faulty_world_sweep_is_thread_count_invariant() {
+    let n_worlds = 2;
+    let d1 = sweep_traced_digests(1, n_worlds, faulty_cfg);
+    let d2 = sweep_traced_digests(2, n_worlds, faulty_cfg);
+    let d4 = sweep_traced_digests(4, n_worlds, faulty_cfg);
+    assert_eq!(d1, d2, "faulty trace digests differ between 1 and 2 sweep threads");
+    assert_eq!(d1, d4, "faulty trace digests differ between 1 and 4 sweep threads");
+    assert_ne!(d1[0], d1[1]);
+}
+
+/// 1k-peer store under a 200 s partition: fully-placed images lose
+/// holders mid-cut, cross-cut repairs abort and keep the images queued,
+/// and once the cut heals (and departed holders rejoin) every image is
+/// retrievable again with the byte audit intact. Run twice to fold the
+/// whole sequence into the dual-run identity contract.
+fn partition_heal_digest(name: &str) -> DeterminismDigest {
+    let n = 1000usize;
+    let jobs = 50usize;
+    let spec = FaultSpec::parse("partition:100:200:0.3").unwrap();
+    let mut rng = Pcg64::new(33, 7);
+    let mut overlay = Overlay::new(n, &mut rng);
+    let links = BandwidthModel::default().sample_population(n, &mut rng);
+    let mut dp = DataPlane::with_config(
+        StorageSpec::Replicate { replicas: 3 },
+        DEFAULT_CHUNK_BYTES,
+        DEFAULT_SERVER_BPS,
+    );
+    dp.sched.set_faults(TransferFaults::new(&spec, n, 33));
+    let mut d = DeterminismDigest::new(name);
+
+    // t = 0, pre-partition: every image fully placed, no faults yet.
+    for j in 0..jobs {
+        let up = j * (n / jobs);
+        let img = CheckpointImage::new(j, 1, 60.0, 16e6);
+        let done = dp.put(0.0, &overlay, &links, up, img).expect("placement must succeed");
+        d.record_f64(&format!("put.job{j}"), done);
+    }
+    assert_eq!(dp.counters().transfer_aborts, 0, "no aborts before the cut opens");
+
+    // t = 150, mid-partition: 30% of the population departs, dirtying
+    // most images. Cross-cut repair copies abort (max backoff ~94 s
+    // cannot reach the heal at t = 300) and keep those images queued.
+    for p in 0..n / 3 {
+        overlay.depart(p, 150.0);
+    }
+    let repaired_cut = dp.repair_sweep(150.0, &overlay, &links);
+    overlay.compact_churn(dp.churn_cursor());
+    d.record_usize("repaired.mid_partition", repaired_cut);
+    let mid_aborts = dp.counters().transfer_aborts;
+    assert!(
+        mid_aborts > 0,
+        "a 30% cut under hundreds of repairs must abort some transfers"
+    );
+
+    // t = 400, post-heal: the departed holders rejoin (reviving any
+    // chunk whose copies all sat on them) and the sweep tops the rest
+    // back up to full replication.
+    for p in 0..n / 3 {
+        overlay.join(p, 400.0);
+    }
+    let repaired_heal = dp.repair_sweep(400.0, &overlay, &links);
+    overlay.compact_churn(dp.churn_cursor());
+    d.record_usize("repaired.post_heal", repaired_heal);
+    assert!(
+        repaired_cut + repaired_heal > 0,
+        "the churned images must drive repair work across the two sweeps"
+    );
+    assert_eq!(
+        dp.counters().transfer_aborts,
+        mid_aborts,
+        "no further aborts once the cut has healed"
+    );
+
+    // Eventual retrievability: every stored image is available again.
+    for (job, seq) in dp.image_keys() {
+        assert!(
+            dp.available(&overlay, job, seq),
+            "image (job {job}, seq {seq}) not retrievable after heal + repair"
+        );
+    }
+    let (incremental, recomputed) = dp.audit();
+    assert!(
+        (incremental - recomputed).abs() <= 1e-6 * recomputed.max(1.0),
+        "byte-conservation violated across the partition: {incremental} vs {recomputed}"
+    );
+    d.record_f64("audit.incremental", incremental);
+    d.record_u64("io.retries", dp.counters().transfer_retries);
+    d.record_u64("io.aborts", dp.counters().transfer_aborts);
+    d
+}
+
+#[test]
+fn partition_heals_to_full_retrievability_at_1k_peers() {
+    let a = partition_heal_digest("partition-run1");
+    let b = partition_heal_digest("partition-run2");
+    assert!(!a.is_empty());
+    a.assert_matches(&b);
 }

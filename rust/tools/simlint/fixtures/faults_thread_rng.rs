@@ -1,0 +1,12 @@
+//! Seeded violation: a fault plane drawing its loss decisions from OS
+//! entropy and stamping injections with the host clock instead of the
+//! seeded Pcg64 streams + sim time (rule `wall_clock`).
+
+use std::time::Instant;
+
+pub fn probe_lost(loss: f64) -> bool {
+    let mut rng = rand::thread_rng();
+    let draw: f64 = rng.gen();
+    let _stamp = Instant::now();
+    draw < loss
+}

@@ -848,6 +848,7 @@ mod tests {
     const FIX_TRACE_WALL_CLOCK: &str = include_str!("../fixtures/trace_wall_clock.rs");
     const FIX_FLOAT_REDUCE: &str = include_str!("../fixtures/float_reduce.rs");
     const FIX_TRUNCATING_CAST: &str = include_str!("../fixtures/truncating_cast.rs");
+    const FIX_FAULTS_THREAD_RNG: &str = include_str!("../fixtures/faults_thread_rng.rs");
     const FIX_CLEAN: &str = include_str!("../fixtures/clean.rs");
 
     #[test]
@@ -923,6 +924,39 @@ mod tests {
         let vs = lint_source("fixtures/truncating_cast.rs", FIX_TRUNCATING_CAST);
         assert_eq!(rules(&vs), vec![Rule::TruncatingCast], "{vs:?}");
         assert_eq!(vs[0].line, 5, "cast span: {vs:?}");
+    }
+
+    #[test]
+    fn fixture_faults_thread_rng_is_caught() {
+        // A fault plane drawing from OS entropy would silently break the
+        // dual-run digest contract on every faulty scenario; the pass
+        // flags the entropy source and both host-clock touch points.
+        let vs = lint_source("rust/src/net/faults_bad.rs", FIX_FAULTS_THREAD_RNG);
+        assert_eq!(
+            rules(&vs),
+            vec![Rule::WallClock, Rule::WallClock, Rule::WallClock],
+            "{vs:?}"
+        );
+        assert_eq!(vs[0].line, 5, "use-line Instant span: {vs:?}");
+        assert_eq!(vs[1].line, 8, "thread_rng span: {vs:?}");
+        assert!(vs[1].msg.contains("Pcg64"), "{}", vs[1].msg);
+        assert_eq!(vs[2].line, 10, "Instant::now span: {vs:?}");
+    }
+
+    #[test]
+    fn net_faults_module_is_linted_and_clean() {
+        // The satellite guarantee for the fault plane: net/faults.rs is
+        // inside the linted tree (no allowlist entry covers it) and draws
+        // only from its seeded streams — it currently lints clean.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../src/net/faults.rs");
+        let (files, violations) = lint_tree(&root).unwrap();
+        assert_eq!(files, 1, "expected exactly net/faults.rs, found {files}");
+        assert!(
+            violations.is_empty(),
+            "net/faults.rs must lint clean:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+        assert!(!wall_clock_exempt("rust/src/net/faults.rs"));
     }
 
     #[test]
