@@ -10,9 +10,15 @@
 //! ```text
 //! cargo bench --bench perf_sim                        # full tiers
 //! cargo bench --bench perf_sim -- --quick             # smoke tier
+//! cargo bench --bench perf_sim -- --full              # + the 1M-peer sharded tier
 //! cargo bench --bench perf_sim -- --json BENCH_perf_sim.json
 //! cargo bench --bench perf_sim -- --check BENCH_perf_sim.json
 //! ```
+//!
+//! The sharded tier drives `coordinator::ShardedWorld` (SWIM + churn over
+//! N deterministic shards) and reports events/s, the analytic per-peer
+//! memory budget (`bytes_per_peer`), and the process peak RSS; `--full`
+//! adds the 1M-peer capacity proof.
 //!
 //! `--check <baseline.json>` compares the fresh run's `*_per_s` rates
 //! against a previously written doc with a relative tolerance
@@ -40,22 +46,31 @@ use p2pcp::scenario::Scenario;
 use p2pcp::storage::image::CheckpointImage;
 use p2pcp::util::json::Json;
 use p2pcp::util::rng::Pcg64;
+use p2pcp::util::wall_clock;
 
 fn env_usize(name: &str, default: usize) -> usize {
-    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+    wall_clock::env_var(name).and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
 fn arg_value(flag: &str) -> Option<String> {
-    let args: Vec<String> = std::env::args().collect();
-    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1).cloned())
+    wall_clock::cli_value(flag)
+}
+
+/// Peak resident set (`VmHWM`) of this process in bytes. Returns `None`
+/// off Linux (the procfs read simply fails) — the JSON then records -1.
+fn peak_rss_bytes() -> Option<f64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    let line = status.lines().find(|l| l.starts_with("VmHWM:"))?;
+    let kb: f64 = line.split_whitespace().nth(1)?.parse().ok()?;
+    Some(kb * 1024.0)
 }
 
 /// Anchor a relative path at the workspace root when cargo exports
 /// `CARGO_MANIFEST_DIR` (bench CWD is the package root `rust/`, while CI
 /// and the committed trajectory live one level up).
 fn anchor_path(path: &str) -> std::path::PathBuf {
-    match std::env::var("CARGO_MANIFEST_DIR") {
-        Ok(manifest) if !std::path::Path::new(path).is_absolute() => {
+    match wall_clock::env_var("CARGO_MANIFEST_DIR") {
+        Some(manifest) if !std::path::Path::new(path).is_absolute() => {
             std::path::Path::new(&manifest).join("..").join(path)
         }
         _ => std::path::PathBuf::from(path),
@@ -140,6 +155,66 @@ fn main() {
             ("wall_s_min", Json::Num(r.min())),
             ("job_completed", Json::Bool(completed)),
             ("job_wall_sim_s", Json::Num(job_wall_sim)),
+        ]));
+    }
+
+    // --- sharded substrate tier: events/s + bytes/peer + peak RSS ----------
+    // The ShardedWorld runs churn + SWIM detection + barrier repair over N
+    // deterministic shards. 100k x {1, 8} shards tracks single-shard
+    // throughput (the no-regression anchor) against the parallel speedup;
+    // `--full` adds the 1M-peer capacity proof, whose figure of merit is
+    // that it *completes* within a fixed per-peer memory budget.
+    let full = wall_clock::cli_flag("--full");
+    let sharded_tiers: &[(usize, usize, f64)] = if quick {
+        &[(10_000, 4, 300.0)]
+    } else if full {
+        &[(100_000, 1, 600.0), (100_000, 8, 600.0), (1_000_000, 16, 300.0)]
+    } else {
+        &[(100_000, 1, 600.0), (100_000, 8, 600.0)]
+    };
+    let mut sharded_rows: Vec<Json> = Vec::new();
+    for &(n_peers, shards, horizon) in sharded_tiers {
+        let scenario = Scenario::builder()
+            .peers(n_peers)
+            .k(8)
+            .mtbf(3600.0)
+            .seed(99)
+            .detector_key("swim:15:45:2")
+            .shards(shards)
+            .build()
+            .expect("valid scenario");
+        // The 1M tier is a single untimed-warmup-free pass: a capacity
+        // proof, not a rate sample.
+        let (warm, reps) = if n_peers >= 1_000_000 { (0, 1) } else { (warmup_iters, repeats) };
+        let mut last = (0u64, 0usize, 0usize);
+        let r = time_it(warm, reps, || {
+            let mut w = scenario.build_sharded_world().expect("sharded world");
+            w.run(horizon);
+            last = (w.events_processed(), w.bytes_per_peer(), w.online_count());
+            std::hint::black_box(&last);
+        });
+        let (events, bytes_per_peer, online) = last;
+        let peak_rss = peak_rss_bytes();
+        let label = format!("sharded: {n_peers} peers x {shards} shards x {horizon:.0}s");
+        report_timing(&label, &r);
+        report_throughput("sharded events", events as f64, &r);
+        println!(
+            "{label:<60} {bytes_per_peer:>6} B/peer budget, peak RSS {}",
+            match peak_rss {
+                Some(b) => format!("{:.0} MB", b / 1e6),
+                None => "n/a".into(),
+            }
+        );
+        sharded_rows.push(Json::obj(vec![
+            ("n_peers", Json::Num(n_peers as f64)),
+            ("shards", Json::Num(shards as f64)),
+            ("horizon_sim_s", Json::Num(horizon)),
+            ("events", Json::Num(events as f64)),
+            ("events_per_s", Json::Num(events as f64 / r.mean())),
+            ("bytes_per_peer", Json::Num(bytes_per_peer as f64)),
+            ("online", Json::Num(online as f64)),
+            ("peak_rss_mb", Json::Num(peak_rss.map(|b| b / 1e6).unwrap_or(-1.0))),
+            ("wall_s_mean", Json::Num(r.mean())),
         ]));
     }
 
@@ -290,6 +365,7 @@ fn main() {
             ]),
         ),
         ("world", Json::Arr(world_rows)),
+        ("sharded", Json::Arr(sharded_rows)),
         ("dataplane", Json::Arr(dataplane_rows)),
         (
             "routing",

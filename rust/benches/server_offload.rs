@@ -19,13 +19,11 @@
 use p2pcp::experiments::bench_support::{emit_table, is_quick};
 use p2pcp::experiments::server_offload::{run_sweep, summarize, to_table, OffloadConfig};
 use p2pcp::scenario::SweepRunner;
+use p2pcp::util::wall_clock;
 
 /// `-- --threads N` (defaults to one worker per core).
 fn threads_arg() -> usize {
-    let args: Vec<String> = std::env::args().collect();
-    args.iter()
-        .position(|a| a == "--threads")
-        .and_then(|i| args.get(i + 1))
+    wall_clock::cli_value("--threads")
         .and_then(|n| n.parse().ok())
         .unwrap_or(SweepRunner::auto().threads)
 }

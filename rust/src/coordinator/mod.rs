@@ -13,7 +13,10 @@
 //!   per-peer bandwidth. Slower, used by the end-to-end example and
 //!   integration tests.
 //!
-//! Plus [`leader`] (initiator election among job members) and
+//! Plus [`sharded`] — the *scale substrate*: the world's churn /
+//! detection / fault / repair layers partitioned into per-shard event
+//! engines that merge at stabilization barriers, byte-identical for any
+//! shard count — [`leader`] (initiator election among job members) and
 //! [`workpool`] (the BOINC-style work-pool server baseline of Fig. 1(a),
 //! with deadline reassignment and result scrutiny).
 
@@ -21,6 +24,7 @@ pub mod fleet;
 pub mod job;
 pub mod leader;
 pub mod replication;
+pub mod sharded;
 pub mod workpool;
 pub mod world;
 
@@ -28,5 +32,6 @@ pub use fleet::{run_fleet, FleetConfig, FleetOutcome};
 pub use job::{JobOutcome, JobParams, JobSimulator};
 pub use replication::{ReplicatedJobSimulator, ReplicatedParams};
 pub use leader::LeaderElection;
+pub use sharded::ShardedWorld;
 pub use workpool::{WorkPoolServer, WorkUnit};
 pub use world::World;

@@ -1,0 +1,775 @@
+//! Deterministic sharded worlds: the churn / detection / fault / repair
+//! substrate partitioned into per-shard event engines that synchronize
+//! at stabilization barriers.
+//!
+//! # Why
+//!
+//! The single-engine [`World`](crate::coordinator::World) pops every
+//! event of an `n`-peer population through one calendar wheel and one
+//! shared RNG. At 1M peers that is a single-core serial bottleneck and
+//! its per-peer state (boxed maps, shared streams) neither fits a cache
+//! nor admits parallelism. `ShardedWorld` makes the substrate scale
+//! while keeping the determinism contract *stronger* than
+//! thread-affinity: the full digest — metrics registry, trace stream,
+//! event totals — is **byte-identical for every shard count**, the same
+//! way `SweepRunner` merges trial cells seed-stably.
+//!
+//! # Partition-invariance rules
+//!
+//! Every shard owns a contiguous peer-id range `[lo, hi)` and runs its
+//! own [`SimEngine`] between barriers (one barrier per stabilization
+//! period). Three rules make the merged outcome independent of the
+//! partition:
+//!
+//! 1. **Per-peer randomness.** Every draw a peer's events consume comes
+//!    from that peer's *own* seeded stream (`seed`, stream
+//!    `SHARD_PEER_STREAM ^ peer`). No draw order is shared between
+//!    peers, so no draw order depends on which shard a peer landed in.
+//! 2. **Frozen reads, local writes.** Between barriers a shard may read
+//!    *other* peers only through the shared overlay snapshot (and the
+//!    detector's declared-dead column), both immutable until the next
+//!    barrier. A peer's own authoritative state (online flag, session
+//!    start, watch table) lives in dense shard-local columns.
+//! 3. **Canonical merge.** Cross-shard effects are emitted as value
+//!    records ([`Rec`]) and applied single-threaded at the barrier in
+//!    canonical `(time, peer, seq, kind, payload)` order, interleaved
+//!    in time order with the detector's suspicion-expiry queue.
+//!
+//! The struct-of-arrays layout (dense `Vec` columns indexed by peer
+//! slot) is what lets a 1M-peer world fit: [`Self::bytes_per_peer`]
+//! reports the fixed per-peer budget the perf tier asserts against.
+
+use crate::churn::{build_churn_model, ChurnModel};
+use crate::config::SimConfig;
+use crate::dataplane::{DataPlane, StorageSpec};
+use crate::error::{Error, Result};
+use crate::estimator::{MleWindow, WindowEstimator};
+use crate::metrics::Metrics;
+use crate::net::bandwidth::{BandwidthModel, LinkSpeed};
+use crate::net::detector::BarrierSwim;
+use crate::net::faults::{FaultSpec, PartitionSchedule, TransferFaults};
+use crate::net::overlay::Overlay;
+use crate::sim::{SimEngine, SimTime};
+use crate::storage::image::CheckpointImage;
+use crate::trace::{Subsystem, TracePayload, Tracer};
+use crate::util::digest::DeterminismDigest;
+use crate::util::rng::Pcg64;
+use std::collections::BTreeMap;
+
+/// Per-peer RNG stream base: a peer's stream id is
+/// `SHARD_PEER_STREAM ^ peer`, disjoint from every shared stream
+/// (`0xB0B`, `0x5317`, `0xFA17`, …) for any realistic population.
+pub const SHARD_PEER_STREAM: u64 = 0x5A8D_BA5E;
+
+/// Successor-watch width of the barrier stabilize table (the oracle
+/// detector's observation source), matching the overlay successor list.
+const WATCH_WIDTH: usize = 4;
+
+/// Events a shard schedules for the peers it owns. Plain `(peer, kind)`
+/// — all context is in the shard's columns and the frozen snapshot.
+#[derive(Debug, Clone, Copy)]
+struct ShardEvent {
+    peer: u32,
+    kind: ShardEventKind,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum ShardEventKind {
+    /// Session end from the churn model.
+    Fail,
+    /// Rejoin after a departure (churn rejoin delay or crash downtime).
+    Join,
+    /// SWIM probe tick for this peer.
+    Probe,
+    /// Stabilize-watch tick for this peer (oracle detector mode).
+    Watch,
+    /// Per-peer Poisson crash arrival (`faults: crash:MTBF:DOWN`).
+    Crash,
+}
+
+/// Cross-shard effect record, merged and applied at barriers. Derived
+/// `Ord` is the canonical order: `(t, peer, seq, kind, a, b)` — field
+/// order is load-bearing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Rec {
+    /// Event time in microseconds.
+    t: u64,
+    /// Subject peer (whose state the record concerns).
+    peer: u32,
+    /// Per-subject emission counter for state flips, so a same-microsecond
+    /// depart/rejoin pair applies in true order; observation records use
+    /// `u32::MAX` and sort after the flips of their tick.
+    seq: u32,
+    kind: RecKind,
+    /// Payload bits (lifetime f64 bits, prober id, downtime bits…).
+    a: u64,
+    b: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum RecKind {
+    /// Subject departed; `a` = observed lifetime bits.
+    Depart,
+    /// Subject (re)joined.
+    Join,
+    /// Stabilize-watch failure observation; `a` = lifetime bits,
+    /// `b` = observer.
+    Obs,
+    /// A probe by `a` failed to reach the subject.
+    Suspect,
+    /// The crash injector killed the subject; `a` = downtime bits.
+    Crash,
+}
+
+/// Everything a shard may read during an epoch, all frozen at the last
+/// barrier (rule 2).
+struct Frozen<'a> {
+    overlay: &'a Overlay,
+    swim: Option<&'a BarrierSwim>,
+    faults: &'a FaultSpec,
+    partition: Option<&'a PartitionSchedule>,
+    stab_period: f64,
+    n_peers: usize,
+}
+
+/// One shard: a contiguous peer range, its event engine, and the dense
+/// per-peer columns (struct-of-arrays — every field is a `Vec` indexed
+/// by `peer - lo`).
+struct Shard {
+    lo: usize,
+    engine: SimEngine<ShardEvent>,
+    /// Per-peer RNG streams (rule 1).
+    rngs: Vec<Pcg64>,
+    /// Authoritative online flag for owned peers.
+    online: Vec<bool>,
+    /// Authoritative session start for owned peers.
+    session_start: Vec<f64>,
+    /// Per-peer state-record emission counter (the `Rec::seq` source).
+    rec_seq: Vec<u32>,
+    /// Successor-watch table, `WATCH_WIDTH` slots per peer
+    /// (`u32::MAX` = empty slot). Only populated in oracle mode.
+    watch_subject: Vec<u32>,
+    watch_start: Vec<f64>,
+    churn: Box<dyn ChurnModel>,
+    /// Records emitted this epoch, drained at the barrier.
+    recs: Vec<Rec>,
+}
+
+impl Shard {
+    fn new(cfg: &SimConfig, lo: usize, hi: usize, swim: Option<&BarrierSwim>) -> Result<Shard> {
+        let churn = build_churn_model(&cfg.churn, cfg.seed)?;
+        let n = hi - lo;
+        let mut engine = SimEngine::new();
+        let mut rngs = Vec::with_capacity(n);
+        // Fixed per-peer draw order at init: session, tick jitter, first
+        // crash arrival — identical for every shard count.
+        for p in lo..hi {
+            let mut rng = Pcg64::new(cfg.seed, SHARD_PEER_STREAM ^ p as u64);
+            let peer = p as u32;
+            let s = churn.session(0.0, &mut rng);
+            engine.schedule_in_secs(s, ShardEvent { peer, kind: ShardEventKind::Fail });
+            match swim {
+                Some(sw) => {
+                    let jitter = rng.next_f64() * sw.period;
+                    engine.schedule_in_secs(jitter, ShardEvent { peer, kind: ShardEventKind::Probe });
+                }
+                None => {
+                    let jitter = rng.next_f64() * cfg.stab_period;
+                    engine.schedule_in_secs(jitter, ShardEvent { peer, kind: ShardEventKind::Watch });
+                }
+            }
+            if let Some(c) = cfg.faults.crash {
+                let first = rng.exp(1.0 / (c.mtbf * cfg.n_peers as f64));
+                engine.schedule_in_secs(first, ShardEvent { peer, kind: ShardEventKind::Crash });
+            }
+            rngs.push(rng);
+        }
+        let watch = if swim.is_none() { n * WATCH_WIDTH } else { 0 };
+        Ok(Shard {
+            lo,
+            engine,
+            rngs,
+            online: vec![true; n],
+            session_start: vec![0.0; n],
+            rec_seq: vec![0; n],
+            watch_subject: vec![u32::MAX; watch],
+            watch_start: vec![0.0; watch],
+            churn,
+            recs: Vec::new(),
+        })
+    }
+
+    /// Emit a state-flip record for an owned peer, stamping its
+    /// per-subject sequence number.
+    fn push_state_rec(&mut self, t: SimTime, peer: u32, kind: RecKind, a: u64, b: u64) {
+        let i = peer as usize - self.lo;
+        let seq = self.rec_seq[i];
+        self.rec_seq[i] += 1;
+        self.recs.push(Rec { t: t.as_micros(), peer, seq, kind, a, b });
+    }
+
+    /// Run this shard's engine up to the barrier at `limit`.
+    fn run_until(&mut self, limit: SimTime, ctx: &Frozen<'_>) {
+        while let Some(ev) = self.engine.pop_until(limit) {
+            self.handle(ev.time, ev.payload, ctx);
+        }
+        self.engine.advance_to(limit);
+    }
+
+    fn handle(&mut self, t: SimTime, ev: ShardEvent, ctx: &Frozen<'_>) {
+        let i = ev.peer as usize - self.lo;
+        match ev.kind {
+            ShardEventKind::Fail => {
+                if self.online[i] {
+                    self.depart(t, ev.peer, None);
+                }
+            }
+            ShardEventKind::Join => {
+                if !self.online[i] {
+                    let ts = t.as_secs_f64();
+                    self.online[i] = true;
+                    self.session_start[i] = ts;
+                    self.push_state_rec(t, ev.peer, RecKind::Join, 0, 0);
+                    let s = self.churn.session(ts, &mut self.rngs[i]);
+                    self.engine.schedule_in_secs(s, ShardEvent {
+                        peer: ev.peer,
+                        kind: ShardEventKind::Fail,
+                    });
+                }
+            }
+            ShardEventKind::Probe => {
+                let Some(sw) = ctx.swim else { return };
+                if self.online[i] {
+                    let ts = t.as_secs_f64();
+                    if let Some(target) = sw.probe(
+                        ctx.overlay,
+                        ctx.faults,
+                        ctx.partition,
+                        &mut self.rngs[i],
+                        ev.peer as usize,
+                        ts,
+                    ) {
+                        self.recs.push(Rec {
+                            t: t.as_micros(),
+                            peer: target as u32,
+                            seq: u32::MAX,
+                            kind: RecKind::Suspect,
+                            a: ev.peer as u64,
+                            b: 0,
+                        });
+                    }
+                }
+                self.engine.schedule_in_secs(sw.period, ShardEvent {
+                    peer: ev.peer,
+                    kind: ShardEventKind::Probe,
+                });
+            }
+            ShardEventKind::Watch => {
+                if self.online[i] {
+                    self.watch_tick(t, ev.peer, ctx);
+                }
+                self.engine.schedule_in_secs(ctx.stab_period, ShardEvent {
+                    peer: ev.peer,
+                    kind: ShardEventKind::Watch,
+                });
+            }
+            ShardEventKind::Crash => {
+                let Some(c) = ctx.faults.crash else { return };
+                if self.online[i] {
+                    self.depart(t, ev.peer, Some(c.downtime));
+                    self.push_state_rec(t, ev.peer, RecKind::Crash, c.downtime.to_bits(), 0);
+                }
+                let next = self.rngs[i].exp(1.0 / (c.mtbf * ctx.n_peers as f64));
+                self.engine.schedule_in_secs(next, ShardEvent {
+                    peer: ev.peer,
+                    kind: ShardEventKind::Crash,
+                });
+            }
+        }
+    }
+
+    /// Local departure of an owned peer: flip the column, record it,
+    /// schedule the rejoin (`downtime` fixed for crashes, drawn from the
+    /// peer's stream otherwise).
+    fn depart(&mut self, t: SimTime, peer: u32, downtime: Option<f64>) {
+        let i = peer as usize - self.lo;
+        let ts = t.as_secs_f64();
+        self.online[i] = false;
+        let lifetime = ts - self.session_start[i];
+        self.push_state_rec(t, peer, RecKind::Depart, lifetime.to_bits(), 0);
+        let delay = match downtime {
+            Some(d) => d,
+            None => self.churn.rejoin_delay(&mut self.rngs[i]),
+        };
+        self.engine.schedule_in_secs(delay, ShardEvent { peer, kind: ShardEventKind::Join });
+    }
+
+    /// Stabilize-watch tick: report watched subjects whose frozen-overlay
+    /// session ended, then re-adopt the current successors — the sharded
+    /// equivalent of [`crate::net::stabilize::Stabilizer::tick_with`].
+    fn watch_tick(&mut self, t: SimTime, peer: u32, ctx: &Frozen<'_>) {
+        let i = peer as usize - self.lo;
+        let base = i * WATCH_WIDTH;
+        let ts = t.as_secs_f64();
+        for w in 0..WATCH_WIDTH {
+            let subj = self.watch_subject[base + w];
+            if subj == u32::MAX {
+                continue;
+            }
+            let start = self.watch_start[base + w];
+            let same_session = ctx.overlay.is_online(subj as usize)
+                && ctx.overlay.session_start(subj as usize) <= start;
+            if !same_session {
+                let est_end = (ts - ctx.stab_period / 2.0).max(start);
+                self.recs.push(Rec {
+                    t: t.as_micros(),
+                    peer: subj,
+                    seq: u32::MAX,
+                    kind: RecKind::Obs,
+                    a: (est_end - start).to_bits(),
+                    b: peer as u64,
+                });
+            }
+        }
+        let mut w = 0;
+        for q in ctx.overlay.successors_iter(peer as usize) {
+            if w == WATCH_WIDTH {
+                break;
+            }
+            if ctx.overlay.is_online(q) {
+                self.watch_subject[base + w] = q as u32;
+                self.watch_start[base + w] = ctx.overlay.session_start(q);
+                w += 1;
+            }
+        }
+        for slot in w..WATCH_WIDTH {
+            self.watch_subject[base + slot] = u32::MAX;
+        }
+    }
+}
+
+/// The sharded substrate world: churn, failure detection (oracle watch
+/// or barrier-SWIM), fault injection, and data-plane repair, across any
+/// number of deterministic shards. Runs no coordinator job — it is the
+/// scale substrate whose digest must not depend on the shard count.
+pub struct ShardedWorld {
+    pub cfg: SimConfig,
+    shards: Vec<Shard>,
+    overlay: Overlay,
+    links: Vec<LinkSpeed>,
+    store: DataPlane,
+    estimator: Box<dyn WindowEstimator>,
+    swim: Option<BarrierSwim>,
+    partition: Option<PartitionSchedule>,
+    partition_started: bool,
+    partition_healed: bool,
+    /// Barrier time (seconds) — `epoch * stab_period`.
+    now: f64,
+    /// Completed barrier count; the trace epoch stamp.
+    epoch: u32,
+    pub metrics: Metrics,
+    pub tracer: Tracer,
+}
+
+impl ShardedWorld {
+    /// Build a sharded world over `n_shards` contiguous peer ranges.
+    /// The shared construction order (main stream: overlay, then links)
+    /// matches [`World`](crate::coordinator::World); per-peer session
+    /// scheduling moves onto the per-peer streams.
+    pub fn new(cfg: SimConfig, n_shards: usize) -> Result<ShardedWorld> {
+        let cfg = cfg.validated()?;
+        if n_shards == 0 || n_shards > cfg.n_peers {
+            return Err(Error::Config(format!(
+                "shards {} must be in 1..=n_peers {}",
+                n_shards, cfg.n_peers
+            )));
+        }
+        let mut rng = Pcg64::new(cfg.seed, 0xB0B);
+        let overlay = Overlay::new(cfg.n_peers, &mut rng);
+        let links = BandwidthModel::default().sample_population(cfg.n_peers, &mut rng);
+        let swim = BarrierSwim::new(cfg.detector, cfg.n_peers);
+        let partition =
+            cfg.faults.partition.map(|p| PartitionSchedule::new(&p, cfg.n_peers, cfg.seed));
+        let estimator: Box<dyn WindowEstimator> =
+            Box::new(MleWindow::new(cfg.estimator_window.max(1)));
+        let mut store = DataPlane::new(StorageSpec::default());
+        store.reserve_peers(cfg.n_peers);
+        store.sched.set_faults(TransferFaults::new(&cfg.faults, cfg.n_peers, cfg.seed));
+        // Seed a static image population so the barrier repair sweeps
+        // exercise the store and transfer scheduler under churn (capped:
+        // the image count is a workload knob, not a per-peer cost).
+        let jobs = (cfg.n_peers / 256).clamp(1, 4096);
+        for j in 0..jobs {
+            let uploader = (j * (cfg.n_peers / jobs)).min(cfg.n_peers - 1);
+            let img = CheckpointImage::new(j, 1, 0.0, 4e6);
+            let _ = store.put(0.0, &overlay, &links, uploader, img);
+        }
+        let mut shards = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let lo = cfg.n_peers * s / n_shards;
+            let hi = cfg.n_peers * (s + 1) / n_shards;
+            shards.push(Shard::new(&cfg, lo, hi, swim.as_ref())?);
+        }
+        Ok(ShardedWorld {
+            cfg,
+            shards,
+            overlay,
+            links,
+            store,
+            estimator,
+            swim,
+            partition,
+            partition_started: false,
+            partition_healed: false,
+            now: 0.0,
+            epoch: 0,
+            metrics: Metrics::new(),
+            tracer: Tracer::off(),
+        })
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn online_count(&self) -> usize {
+        self.overlay.online_count()
+    }
+
+    /// Total events popped across every shard engine — shard-count
+    /// invariant (each peer schedules the same events wherever it lives).
+    pub fn events_processed(&self) -> u64 {
+        self.shards.iter().map(|s| s.engine.processed()).sum()
+    }
+
+    /// Fixed per-peer memory budget of the dense columns (overlay SoA,
+    /// shard columns, detector columns, link/storage accounting) —
+    /// what the 1M-peer perf tier reports and gates on.
+    pub fn bytes_per_peer(&self) -> usize {
+        use std::mem::size_of;
+        let mut b = Overlay::bytes_per_peer();
+        // Shard columns: rng stream, online, session start, record seq.
+        b += size_of::<Pcg64>() + size_of::<bool>() + size_of::<f64>() + size_of::<u32>();
+        match &self.swim {
+            Some(_) => b += BarrierSwim::bytes_per_peer(),
+            None => b += WATCH_WIDTH * (size_of::<u32>() + size_of::<f64>()),
+        }
+        // Bandwidth population + data-plane accounting columns.
+        b += size_of::<LinkSpeed>();
+        b += size_of::<f64>(); // store.peer_stored
+        b += size_of::<BTreeMap<u64, Vec<u32>>>(); // store.holder_index headers
+        b += 2 * size_of::<f64>(); // transfer up/down busy slabs
+        b
+    }
+
+    /// Run barrier epochs until the barrier clock reaches `horizon_secs`
+    /// (the final epoch may overshoot to the next barrier).
+    pub fn run(&mut self, horizon_secs: f64) {
+        while self.now + 1e-9 < horizon_secs {
+            self.step_epoch();
+        }
+    }
+
+    /// One epoch: run every shard (in parallel) to the next stabilization
+    /// barrier, then merge and apply their records canonically.
+    fn step_epoch(&mut self) {
+        let tb_secs = (self.epoch as f64 + 1.0) * self.cfg.stab_period;
+        let tb = SimTime::from_secs_f64(tb_secs);
+        {
+            let ctx = Frozen {
+                overlay: &self.overlay,
+                swim: self.swim.as_ref(),
+                faults: &self.cfg.faults,
+                partition: self.partition.as_ref(),
+                stab_period: self.cfg.stab_period,
+                n_peers: self.cfg.n_peers,
+            };
+            let ctx = &ctx;
+            std::thread::scope(|scope| {
+                for shard in self.shards.iter_mut() {
+                    scope.spawn(move || shard.run_until(tb, ctx));
+                }
+            });
+        }
+        // Canonical merge (rule 3): concatenation order is irrelevant
+        // because the sort key covers every field.
+        let mut recs: Vec<Rec> = Vec::new();
+        for s in &mut self.shards {
+            recs.append(&mut s.recs);
+        }
+        recs.sort_unstable();
+        self.barrier(tb_secs, tb, &recs);
+        self.epoch += 1;
+        self.now = tb_secs;
+    }
+
+    fn barrier(&mut self, tb_secs: f64, tb: SimTime, recs: &[Rec]) {
+        // Scheduled partition edges that fell inside this epoch.
+        if let Some(ps) = &self.partition {
+            if !self.partition_started && ps.start <= tb_secs {
+                self.partition_started = true;
+                let minority = ps.minority_count() as u32;
+                self.metrics.inc("faults.partitions");
+                self.tracer.emit(
+                    SimTime::from_secs_f64(ps.start),
+                    self.epoch,
+                    Subsystem::Overlay,
+                    None,
+                    TracePayload::PartitionStart { minority },
+                );
+            }
+            if !self.partition_healed && ps.heal_at() <= tb_secs {
+                self.partition_healed = true;
+                self.tracer.emit(
+                    SimTime::from_secs_f64(ps.heal_at()),
+                    self.epoch,
+                    Subsystem::Overlay,
+                    None,
+                    TracePayload::PartitionHeal,
+                );
+            }
+        }
+        // Apply records and due suspicion expiries interleaved in time
+        // order; a same-instant expiry goes first (both orders would be
+        // deterministic — one is the contract).
+        let tb_us = tb.as_micros();
+        let mut observations = 0u64;
+        let mut i = 0;
+        loop {
+            let due_expiry = self
+                .swim
+                .as_ref()
+                .and_then(|s| s.next_expiry_micros())
+                .filter(|&t| t <= tb_us);
+            match (recs.get(i), due_expiry) {
+                (Some(r), Some(te)) if te <= r.t => self.apply_expiry(),
+                (Some(r), _) => {
+                    self.apply_rec(*r, &mut observations);
+                    i += 1;
+                }
+                (None, Some(_)) => self.apply_expiry(),
+                (None, None) => break,
+            }
+        }
+        if observations > 0 {
+            self.metrics.add("stabilize.observations", observations);
+        }
+        // Data-plane maintenance on the barrier cadence — the same
+        // sequence the unsharded world runs once per period.
+        let repaired = self.store.repair_sweep(tb_secs, &self.overlay, &self.links);
+        if repaired > 0 {
+            self.metrics.add("dataplane.chunks_repaired", repaired as u64);
+        }
+        self.metrics.set(
+            "overlay.churn_journal_len",
+            (self.overlay.churn_seq() - self.overlay.churn_horizon()) as f64,
+        );
+        self.overlay.compact_churn(self.store.churn_cursor());
+        self.metrics.set("dataplane.server_backlog", self.store.sched.server_backlog(tb_secs));
+        self.metrics.set("churn.online", self.overlay.online_count() as f64);
+        self.metrics.sample_gauges(tb_secs);
+        self.tracer.emit(
+            tb,
+            self.epoch,
+            Subsystem::Sim,
+            None,
+            TracePayload::ShardBarrier {
+                records: recs.len() as u32,
+                online: self.overlay.online_count() as u32,
+            },
+        );
+    }
+
+    fn apply_rec(&mut self, r: Rec, observations: &mut u64) {
+        let p = r.peer as usize;
+        let ts = SimTime::from_micros(r.t).as_secs_f64();
+        match r.kind {
+            RecKind::Depart => {
+                if self.overlay.is_online(p) {
+                    let lifetime = self.overlay.depart(p, ts);
+                    self.metrics.inc("churn.failures");
+                    self.tracer.emit(
+                        SimTime::from_micros(r.t),
+                        self.epoch,
+                        Subsystem::Overlay,
+                        Some(r.peer),
+                        TracePayload::PeerDepart { lifetime_s: lifetime },
+                    );
+                }
+            }
+            RecKind::Join => {
+                if !self.overlay.is_online(p) {
+                    self.overlay.join(p, ts);
+                    if let Some(sw) = &mut self.swim {
+                        sw.note_join(p, ts);
+                    }
+                    self.tracer.emit(
+                        SimTime::from_micros(r.t),
+                        self.epoch,
+                        Subsystem::Overlay,
+                        Some(r.peer),
+                        TracePayload::PeerJoin,
+                    );
+                }
+            }
+            RecKind::Obs => {
+                // Oracle-mode estimator feed, in canonical record order.
+                self.estimator.observe(f64::from_bits(r.a));
+                *observations += 1;
+            }
+            RecKind::Suspect => {
+                let Some(sw) = &mut self.swim else { return };
+                if sw.arm_suspect(p, ts) {
+                    self.metrics.inc("swim.suspects");
+                    self.tracer.emit(
+                        SimTime::from_micros(r.t),
+                        self.epoch,
+                        Subsystem::Overlay,
+                        Some(r.peer),
+                        TracePayload::Suspect,
+                    );
+                }
+            }
+            RecKind::Crash => {
+                self.metrics.inc("faults.crashes");
+                self.tracer.emit(
+                    SimTime::from_micros(r.t),
+                    self.epoch,
+                    Subsystem::Overlay,
+                    Some(r.peer),
+                    TracePayload::Crash { downtime_s: f64::from_bits(r.a) },
+                );
+            }
+        }
+    }
+
+    fn apply_expiry(&mut self) {
+        let Some(sw) = &mut self.swim else { return };
+        let Some((tus, peer, gen)) = sw.pop_expiry() else { return };
+        let ts = SimTime::from_micros(tus).as_secs_f64();
+        let online = self.overlay.is_online(peer as usize);
+        let Some(decl) = sw.expire(peer as usize, gen, ts, online) else {
+            return;
+        };
+        // SWIM mode: declarations are the estimator's lifetime source —
+        // false positives feed truncated sessions exactly as in the
+        // unsharded world.
+        self.estimator.observe(decl.lifetime);
+        self.metrics.inc("swim.dead_declared");
+        if decl.false_positive {
+            self.metrics.inc("swim.false_positives");
+        }
+        self.tracer.emit(
+            SimTime::from_micros(tus),
+            self.epoch,
+            Subsystem::Overlay,
+            Some(peer),
+            TracePayload::DeadDeclared {
+                false_positive: decl.false_positive,
+                lifetime_s: decl.lifetime,
+            },
+        );
+    }
+
+    /// Fold the run's full determinism surface — metrics registry, trace
+    /// stream, event totals, final membership — into one digest.
+    pub fn digest(&self, name: &str) -> DeterminismDigest {
+        let mut d = DeterminismDigest::new(name);
+        d.record_u64("sharded.events", self.events_processed());
+        d.record_usize("sharded.online", self.overlay.online_count());
+        d.record_u64("sharded.epochs", self.epoch as u64);
+        self.metrics.fold_digest(&mut d);
+        self.tracer.fold_digest("trace", &mut d);
+        d
+    }
+
+    /// The metrics registry as canonical JSON text (part of the
+    /// shard-invariance contract alongside the digest).
+    pub fn metrics_json(&self) -> String {
+        self.metrics.to_json().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChurnSpec;
+    use crate::net::detector::DetectorSpec;
+
+    fn substrate_cfg(seed: u64) -> SimConfig {
+        SimConfig {
+            n_peers: 300,
+            k: 8,
+            churn: ChurnSpec::Exponential { mtbf: 1200.0 },
+            seed,
+            ..SimConfig::default()
+        }
+    }
+
+    fn run_digest(cfg: SimConfig, shards: usize, horizon: f64) -> (u64, String) {
+        let mut w = ShardedWorld::new(cfg, shards).unwrap();
+        w.tracer = Tracer::full();
+        w.run(horizon);
+        (w.digest("sharded").value(), w.metrics_json())
+    }
+
+    #[test]
+    fn oracle_substrate_is_shard_count_invariant() {
+        let (d1, m1) = run_digest(substrate_cfg(42), 1, 600.0);
+        let (d3, m3) = run_digest(substrate_cfg(42), 3, 600.0);
+        let (d7, m7) = run_digest(substrate_cfg(42), 7, 600.0);
+        assert_eq!(d1, d3, "1-shard and 3-shard digests diverged");
+        assert_eq!(d1, d7, "1-shard and 7-shard digests diverged");
+        assert_eq!(m1, m3);
+        assert_eq!(m1, m7);
+    }
+
+    #[test]
+    fn faulty_swim_substrate_is_shard_count_invariant() {
+        let mut cfg = substrate_cfg(7);
+        cfg.detector = DetectorSpec::parse("swim:15:45:2").unwrap();
+        cfg.faults =
+            FaultSpec::parse("loss:0.05+partition:120:180:0.3+crash:600:60").unwrap();
+        let (d1, m1) = run_digest(cfg.clone(), 1, 600.0);
+        let (d4, m4) = run_digest(cfg, 4, 600.0);
+        assert_eq!(d1, d4, "swim+faults digests diverged across shard counts");
+        assert_eq!(m1, m4);
+    }
+
+    #[test]
+    fn substrate_actually_churns_and_repairs() {
+        let mut w = ShardedWorld::new(substrate_cfg(11), 2).unwrap();
+        w.tracer = Tracer::full();
+        w.run(900.0);
+        assert!(w.metrics.counter("churn.failures") > 0, "no churn at mtbf 1200");
+        assert!(w.events_processed() > 0);
+        let counts = w.tracer.counts_by_kind();
+        assert!(counts.get("shard_barrier").copied().unwrap_or(0) >= 30);
+        assert!(counts.get("peer_depart").copied().unwrap_or(0) > 0);
+        // The seeded images must pull repair traffic through the store.
+        assert!(w.store.counters().transfers > 0);
+    }
+
+    #[test]
+    fn seeds_diverge_and_bytes_per_peer_is_reported() {
+        let (a, _) = run_digest(substrate_cfg(1), 2, 300.0);
+        let (b, _) = run_digest(substrate_cfg(2), 2, 300.0);
+        assert_ne!(a, b, "distinct seeds must produce distinct streams");
+        let w = ShardedWorld::new(substrate_cfg(3), 2).unwrap();
+        let bpp = w.bytes_per_peer();
+        assert!(
+            (32..=512).contains(&bpp),
+            "per-peer budget {bpp} outside the plausible dense-column range"
+        );
+    }
+
+    #[test]
+    fn rejects_degenerate_shard_counts() {
+        assert!(ShardedWorld::new(substrate_cfg(1), 0).is_err());
+        assert!(ShardedWorld::new(substrate_cfg(1), 301).is_err());
+    }
+}

@@ -667,6 +667,13 @@ impl World {
                 if repaired > 0 {
                     self.metrics.add("dataplane.chunks_repaired", repaired as u64);
                 }
+                // Journal length *before* compaction: growth between
+                // sweeps (or shard barriers) is visible, not silently
+                // reclaimed.
+                self.metrics.set(
+                    "overlay.churn_journal_len",
+                    (self.overlay.churn_seq() - self.overlay.churn_horizon()) as f64,
+                );
                 self.overlay.compact_churn(self.store.churn_cursor());
                 // Fig. 1's server-queue signal, sampled on the same
                 // cadence so sweeps expose it without a dedicated

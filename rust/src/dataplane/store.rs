@@ -178,8 +178,12 @@ pub struct DataPlane {
     /// (job, seq) -> stored image. `BTreeMap` so sweeps, audits and float
     /// accumulations run in one deterministic order.
     images: BTreeMap<ImgKey, StoredImage>,
-    /// Incrementally-maintained stored bytes per peer.
-    peer_stored: BTreeMap<PeerId, f64>,
+    /// Incrementally-maintained stored bytes per peer — a dense column
+    /// indexed by peer id (grown on demand, like `holder_index`). The
+    /// ascending-index sum in `total_stored_bytes` visits peers in the
+    /// same order the old ascending-key `BTreeMap` did, so the float
+    /// accumulation is bit-identical.
+    peer_stored: Vec<f64>,
     /// Incrementally-maintained stored bytes at the server.
     server_stored: f64,
     /// Inverted holder index: peer id -> images -> chunk indices that
@@ -209,7 +213,7 @@ impl DataPlane {
             spec,
             chunk_bytes: chunk_bytes.max(1.0),
             images: BTreeMap::new(),
-            peer_stored: BTreeMap::new(),
+            peer_stored: Vec::new(),
             server_stored: 0.0,
             holder_index: Vec::new(),
             dirty: BTreeSet::new(),
@@ -241,7 +245,12 @@ impl DataPlane {
     fn credit(&mut self, e: Endpoint, bytes: f64) {
         match e {
             Endpoint::Server => self.server_stored += bytes,
-            Endpoint::Peer(p) => *self.peer_stored.entry(p).or_insert(0.0) += bytes,
+            Endpoint::Peer(p) => {
+                if p >= self.peer_stored.len() {
+                    self.peer_stored.resize(p + 1, 0.0);
+                }
+                self.peer_stored[p] += bytes;
+            }
         }
     }
 
@@ -249,7 +258,7 @@ impl DataPlane {
         match e {
             Endpoint::Server => self.server_stored = (self.server_stored - bytes).max(0.0),
             Endpoint::Peer(p) => {
-                if let Some(b) = self.peer_stored.get_mut(&p) {
+                if let Some(b) = self.peer_stored.get_mut(p) {
                     *b = (*b - bytes).max(0.0);
                 }
             }
@@ -258,7 +267,7 @@ impl DataPlane {
 
     /// Bytes currently stored on peer `p`.
     pub fn stored_bytes(&self, p: PeerId) -> f64 {
-        self.peer_stored.get(&p).copied().unwrap_or(0.0)
+        self.peer_stored.get(p).copied().unwrap_or(0.0)
     }
 
     /// Bytes currently stored at the server.
@@ -267,8 +276,24 @@ impl DataPlane {
     }
 
     /// Total stored bytes across every endpoint (incremental view).
+    /// Ascending peer index is the old map's ascending key order, and
+    /// never-credited slots hold `+0.0` (debits clamp with `max(0.0)`),
+    /// so the sum's float bits match the map-backed implementation.
     pub fn total_stored_bytes(&self) -> f64 {
-        self.server_stored + self.peer_stored.values().sum::<f64>()
+        self.server_stored + self.peer_stored.iter().sum::<f64>()
+    }
+
+    /// Pre-size the per-peer accounting columns (and the transfer
+    /// scheduler's busy maps) for a known population — one allocation at
+    /// world construction instead of grow-on-demand during the run.
+    pub fn reserve_peers(&mut self, n_peers: usize) {
+        if self.peer_stored.len() < n_peers {
+            self.peer_stored.resize(n_peers, 0.0);
+        }
+        if self.holder_index.len() < n_peers {
+            self.holder_index.resize_with(n_peers, BTreeMap::new);
+        }
+        self.sched.reserve(n_peers);
     }
 
     /// Byte-conservation audit: (incremental total, recomputed

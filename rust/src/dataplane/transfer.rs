@@ -102,6 +102,19 @@ impl TransferScheduler {
         self.server_bps
     }
 
+    /// Pre-size the per-peer link slabs for a known population so a
+    /// large world pays one allocation up front instead of on-demand
+    /// doubling mid-run (the values are the 0.0 idle state either way —
+    /// behaviour is identical, only allocation timing changes).
+    pub fn reserve(&mut self, n_peers: usize) {
+        if self.up_busy.len() < n_peers {
+            self.up_busy.resize(n_peers, 0.0);
+        }
+        if self.down_busy.len() < n_peers {
+            self.down_busy.resize(n_peers, 0.0);
+        }
+    }
+
     fn src_rate(&self, src: Endpoint, links: &[LinkSpeed]) -> f64 {
         match src {
             Endpoint::Server => self.server_bps,

@@ -23,6 +23,9 @@
 //!                 [--trace-out f.jsonl] [--chrome-out f.json]
 //!                 [--metrics-out f.json] [--subsystems csv] [--peer N]
 //!                 [--from S] [--to S]
+//! p2pcp sharded   [world flags] [--shards N] [--horizon S]
+//!                 [--shard-counts csv] — run the sharded substrate world
+//!                 at several shard counts and verify byte-identical digests
 //! p2pcp fleet     [--mtbf S] [--jobs N] [--arrival S] [--planner KEY] ...
 //! p2pcp server-offload [--peers csv] [--image-mb csv] [--storages csv]
 //!                 [--k N] [--period S] [--horizon S] [--mtbf S]
@@ -73,6 +76,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "sessions" => cmd_sessions(args),
         "trace" => cmd_trace(args),
         "world" => cmd_world(args),
+        "sharded" => cmd_sharded(args),
         "detection-lag" => cmd_detection_lag(args),
         "fleet" => cmd_fleet(args),
         "server-offload" => cmd_server_offload(args),
@@ -98,6 +102,9 @@ COMMANDS:
   plan       evaluate the closed-form planner (lambda*, U) once or over k
   sessions   synthesize a P2P session trace and analyze it (Fig. 2)
   world      run the full-stack world (overlay + Chandy-Lamport + DHT store)
+  sharded    run the sharded substrate world (churn + detection + faults +
+             repair over N deterministic shards), verified byte-identical
+             across every --shard-counts entry
   detection-lag  sweep the SWIM suspicion timeout under injected faults,
              adaptive vs fixed, verified byte-identical across 1/2/4 threads
   trace      run a traced world and export the event timeline
@@ -159,6 +166,7 @@ fn scenario_from_args(args: &Args, default_peers: usize) -> Result<Scenario> {
         .storage_key(&args.get_str("storage", "replicate:3")?)
         .detector_key(&args.get_str("detector", "oracle")?)
         .faults_key(&args.get_str("faults", "none")?)
+        .shards(args.get_usize("shards", 1)?)
         .policy_key(&policy_key_from_args(args)?);
     b = match args.get("churn")? {
         Some(key) => b.churn_key(key),
@@ -178,7 +186,8 @@ fn scenario_from_args(args: &Args, default_peers: usize) -> Result<Scenario> {
 
 const SCENARIO_FLAGS: &[&str] = &[
     "churn", "mtbf", "double-time", "k", "runtime", "v", "td", "policy", "interval",
-    "estimator", "planner", "workload", "storage", "detector", "faults", "seed", "peers",
+    "estimator", "planner", "workload", "storage", "detector", "faults", "shards",
+    "seed", "peers",
 ];
 
 fn with_scenario_flags(extra: &[&str]) -> Vec<&str> {
@@ -700,6 +709,75 @@ fn cmd_detection_lag(args: &Args) -> Result<()> {
         table.write_to(std::path::Path::new(out))?;
         println!("[written {out}]");
     }
+    Ok(())
+}
+
+/// Sharded substrate run: execute the same churny world at every
+/// `--shard-counts` entry and require the determinism digest, the metrics
+/// JSON, and the event totals to be byte-identical — the shard-invariance
+/// contract, checked from the shell (and by the CI `shard-matrix` job).
+fn cmd_sharded(args: &Args) -> Result<()> {
+    let allowed: Vec<&str> = with_scenario_flags(&["horizon", "shard-counts"])
+        .into_iter()
+        .filter(|f| *f != "policy" && *f != "interval")
+        .collect();
+    args.check_unknown(&allowed)?;
+    let mut base = scenario_from_args(args, 10_000)?;
+    if !args.has("mtbf") && !args.has("churn") {
+        // Substrate demo default: churny enough that every barrier merges
+        // real cross-shard traffic.
+        base.churn = ChurnSpec::Exponential { mtbf: 5400.0 };
+    }
+    let horizon = args.get_f64("horizon", 1800.0)?;
+    let counts: Vec<usize> = match args.get("shard-counts")? {
+        Some(csv) => parse_csv_usize("shard-counts", csv)?,
+        None => vec![base.shards.max(1), base.shards.max(1) * 2, base.shards.max(1) * 4],
+    };
+
+    let mut reference: Option<(u64, String, u64)> = None;
+    let mut bytes_per_peer = 0usize;
+    for &n in &counts {
+        let mut s = base.clone();
+        s.shards = n;
+        if n == 0 || n > s.n_peers {
+            return Err(Error::Config(format!(
+                "--shard-counts entry {n} must be in 1..=peers ({})",
+                s.n_peers
+            )));
+        }
+        let mut w = s.build_sharded_world()?;
+        w.tracer = Tracer::full();
+        let t0 = std::time::Instant::now();
+        w.run(horizon);
+        let wall = t0.elapsed().as_secs_f64();
+        let digest = w.digest("sharded").value();
+        let metrics_json = w.metrics_json();
+        let events = w.events_processed();
+        bytes_per_peer = w.bytes_per_peer();
+        println!(
+            "shards {n:>4}: digest {digest:#018x}  events {events:>10}  online {:>7}  \
+             {:>10.0} ev/s",
+            w.online_count(),
+            events as f64 / wall.max(1e-9),
+        );
+        match &reference {
+            None => reference = Some((digest, metrics_json, events)),
+            Some((d0, m0, e0)) => {
+                if digest != *d0 || metrics_json != *m0 || events != *e0 {
+                    return Err(Error::Config(format!(
+                        "sharded world diverged at shards:{n} (vs shards:{}) — \
+                         determinism bug",
+                        counts[0]
+                    )));
+                }
+            }
+        }
+    }
+    println!(
+        "determinism      : {} shard counts byte-identical over {horizon:.0} s",
+        counts.len()
+    );
+    println!("bytes/peer       : {bytes_per_peer}");
     Ok(())
 }
 

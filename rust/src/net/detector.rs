@@ -19,10 +19,13 @@
 //! the oracle default consumes nothing and probe-order determinism
 //! holds: probers iterate in peer-id order each round.
 
-use super::faults::FaultPlane;
+use super::faults::{FaultPlane, FaultSpec, PartitionSchedule};
 use super::overlay::{Overlay, PeerId};
 use crate::error::{Error, Result};
+use crate::sim::SimTime;
 use crate::util::rng::Pcg64;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
 /// RNG stream for the SWIM prober.
 pub const SWIM_STREAM: u64 = 0x5317;
@@ -251,6 +254,177 @@ impl SwimDetector {
     }
 }
 
+/// Shard-count-invariant SWIM state for the sharded world
+/// ([`crate::coordinator::ShardedWorld`]).
+///
+/// The probe side ([`Self::probe`]) is a **pure function** of frozen
+/// barrier inputs — the overlay snapshot, this struct's declared-dead
+/// column (immutable between barriers), the fault spec — plus the
+/// *prober's own* RNG stream, so shard threads can evaluate probes
+/// concurrently and the outcome cannot depend on how peers are
+/// partitioned. Every mutable column (suspicion generations, the expiry
+/// queue, declared-dead flags, join clocks) is struct-of-arrays state
+/// touched only at barriers, in canonical merged-record order.
+#[derive(Debug)]
+pub struct BarrierSwim {
+    pub period: f64,
+    pub suspicion: f64,
+    pub k_probes: usize,
+    /// Non-zero while a suspicion is pending (the generation its queued
+    /// expiry carries); dense column indexed by peer id.
+    suspect_gen: Vec<u64>,
+    gen_counter: u64,
+    /// Declared dead and not seen rejoining since; frozen between
+    /// barriers so probe target selection is partition-invariant.
+    declared_dead: Vec<bool>,
+    /// Last (re)join time, for observed-lifetime accounting.
+    joined_at: Vec<f64>,
+    /// Pending suspicion expiries as `(expiry µs, peer, gen)`, drained
+    /// at barriers interleaved with merged shard records in time order.
+    expiries: BinaryHeap<Reverse<(u64, u32, u64)>>,
+}
+
+impl BarrierSwim {
+    pub fn new(spec: DetectorSpec, n_peers: usize) -> Option<BarrierSwim> {
+        let DetectorSpec::Swim { period, suspicion, k_probes } = spec else {
+            return None;
+        };
+        Some(BarrierSwim {
+            period,
+            suspicion,
+            k_probes,
+            suspect_gen: vec![0; n_peers],
+            gen_counter: 0,
+            declared_dead: vec![false; n_peers],
+            joined_at: vec![0.0; n_peers],
+            expiries: BinaryHeap::new(),
+        })
+    }
+
+    /// Fixed per-peer detector footprint (the dense columns above,
+    /// excluding the transient expiry queue).
+    pub fn bytes_per_peer() -> usize {
+        std::mem::size_of::<u64>()   // suspect_gen
+            + std::mem::size_of::<bool>() // declared_dead
+            + std::mem::size_of::<f64>()  // joined_at
+    }
+
+    /// One probe by `prober` at `now`, against frozen barrier inputs
+    /// and the prober's own RNG stream. Returns the target the prober
+    /// failed to reach (directly and via `k_probes` relays), or `None`
+    /// when the probe got through or found no target. Draw order per
+    /// prober is fixed: up to 4 target draws, a direct-probe fault
+    /// check, then per relay one draw plus two hop fault checks.
+    pub fn probe(
+        &self,
+        overlay: &Overlay,
+        spec: &FaultSpec,
+        partition: Option<&PartitionSchedule>,
+        rng: &mut Pcg64,
+        prober: PeerId,
+        now: f64,
+    ) -> Option<PeerId> {
+        let n = overlay.len();
+        let window = self.period * 0.5;
+        let mut target = None;
+        for _ in 0..4 {
+            let t = rng.next_below(n as u64) as usize;
+            if t != prober && !self.declared_dead[t] {
+                target = Some(t);
+                break;
+            }
+        }
+        let t = target?;
+        if overlay.is_online(t) && !spec.drop_probe_with(partition, rng, now, prober, t, window)
+        {
+            return None;
+        }
+        for _ in 0..self.k_probes {
+            let relay = rng.next_below(n as u64) as usize;
+            if relay == prober || relay == t || !overlay.is_online(relay) {
+                continue;
+            }
+            let hop1 = !spec.drop_probe_with(partition, rng, now, prober, relay, window);
+            let hop2 = overlay.is_online(t)
+                && !spec.drop_probe_with(partition, rng, now, relay, t, window);
+            if hop1 && hop2 {
+                return None;
+            }
+        }
+        Some(t)
+    }
+
+    /// Arm a suspicion for `peer` at barrier application time `now`
+    /// (seconds). No-op (returns false) when the peer is already under
+    /// suspicion or already declared dead.
+    pub fn arm_suspect(&mut self, peer: PeerId, now: f64) -> bool {
+        if peer >= self.suspect_gen.len()
+            || self.suspect_gen[peer] != 0
+            || self.declared_dead[peer]
+        {
+            return false;
+        }
+        self.gen_counter += 1;
+        self.suspect_gen[peer] = self.gen_counter;
+        let expiry = SimTime::from_secs_f64(now + self.suspicion).as_micros();
+        self.expiries.push(Reverse((expiry, peer as u32, self.gen_counter)));
+        true
+    }
+
+    /// Earliest pending suspicion expiry in microseconds, if any.
+    pub fn next_expiry_micros(&self) -> Option<u64> {
+        self.expiries.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    /// Pop the earliest pending expiry as `(µs, peer, gen)`.
+    pub fn pop_expiry(&mut self) -> Option<(u64, u32, u64)> {
+        self.expiries.pop().map(|Reverse(e)| e)
+    }
+
+    /// A popped expiry fired for `(peer, gen)`. Same semantics as
+    /// [`SwimDetector::expire`]: the declaration stands unless a rejoin
+    /// cleared the generation in the meantime; a live peer is a false
+    /// positive and clears immediately.
+    pub fn expire(
+        &mut self,
+        peer: PeerId,
+        gen: u64,
+        now: f64,
+        online: bool,
+    ) -> Option<Declaration> {
+        if self.suspect_gen.get(peer).copied() != Some(gen) {
+            return None;
+        }
+        self.suspect_gen[peer] = 0;
+        if !online {
+            self.declared_dead[peer] = true;
+        }
+        Some(Declaration {
+            lifetime: (now - self.joined_at[peer]).max(0.0),
+            false_positive: online,
+        })
+    }
+
+    /// A peer (re)joined: reset its detector state and lifetime clock.
+    pub fn note_join(&mut self, peer: PeerId, now: f64) {
+        if peer < self.joined_at.len() {
+            self.suspect_gen[peer] = 0;
+            self.declared_dead[peer] = false;
+            self.joined_at[peer] = now;
+        }
+    }
+
+    /// Number of peers currently under (unexpired) suspicion.
+    pub fn suspected_count(&self) -> usize {
+        self.suspect_gen.iter().filter(|&&g| g != 0).count()
+    }
+
+    /// Number of peers currently declared dead.
+    pub fn declared_count(&self) -> usize {
+        self.declared_dead.iter().filter(|&&d| d).count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -335,6 +509,67 @@ mod tests {
             swim.expire(3, gen, 230.0, &overlay).is_none(),
             "rejoin must invalidate the in-flight expiry"
         );
+    }
+
+    #[test]
+    fn barrier_swim_probe_is_prober_order_invariant() {
+        let n = 64;
+        let mut rng = Pcg64::new(5, 1);
+        let mut overlay = Overlay::new(n, &mut rng);
+        overlay.depart(7, 100.0);
+        let spec = FaultSpec::parse("loss:0.2").unwrap();
+        let swim = BarrierSwim::new(
+            DetectorSpec::Swim { period: 10.0, suspicion: 30.0, k_probes: 3 },
+            n,
+        )
+        .unwrap();
+        let run = |order: &[usize]| {
+            let mut out = vec![None; n];
+            for &p in order {
+                let mut prng = Pcg64::new(5, 0x9000 + p as u64);
+                out[p] = swim.probe(&overlay, &spec, None, &mut prng, p, 100.0);
+            }
+            out
+        };
+        let forward: Vec<usize> = (0..n).collect();
+        let reverse: Vec<usize> = (0..n).rev().collect();
+        assert_eq!(
+            run(&forward),
+            run(&reverse),
+            "per-prober streams must make probe outcomes independent of eval order"
+        );
+    }
+
+    #[test]
+    fn barrier_swim_suspect_expire_and_rejoin() {
+        let mut swim = BarrierSwim::new(
+            DetectorSpec::Swim { period: 10.0, suspicion: 30.0, k_probes: 3 },
+            16,
+        )
+        .unwrap();
+        assert!(swim.arm_suspect(3, 100.0));
+        assert!(!swim.arm_suspect(3, 101.0), "double-arm must be a no-op");
+        assert_eq!(swim.suspected_count(), 1);
+        let (t, peer, gen) = swim.pop_expiry().expect("expiry queued");
+        assert_eq!((t, peer), (SimTime::from_secs_f64(130.0).as_micros(), 3));
+        // Dead at expiry: declared, lifetime runs from joined_at (0.0).
+        let d = swim.expire(peer as usize, gen, 130.0, false).expect("stands");
+        assert!(!d.false_positive);
+        assert!((d.lifetime - 130.0).abs() < 1e-9);
+        assert_eq!(swim.declared_count(), 1);
+        // Rejoin clears the declaration and invalidates stale expiries.
+        swim.note_join(3, 200.0);
+        assert_eq!(swim.declared_count(), 0);
+        assert!(swim.arm_suspect(3, 210.0));
+        let (_, _, gen2) = swim.pop_expiry().unwrap();
+        swim.note_join(3, 220.0);
+        assert!(swim.expire(3, gen2, 240.0, true).is_none(), "rejoin refutes");
+        // False positive: declaration emitted but peer stays undeclared.
+        assert!(swim.arm_suspect(5, 300.0));
+        let (_, _, g5) = swim.pop_expiry().unwrap();
+        let fp = swim.expire(5, g5, 330.0, true).unwrap();
+        assert!(fp.false_positive);
+        assert_eq!(swim.declared_count(), 0);
     }
 
     #[test]

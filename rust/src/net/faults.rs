@@ -170,6 +170,41 @@ impl FaultSpec {
         spec.validated()
     }
 
+    /// Probe-drop decision against a *caller-supplied* RNG stream — the
+    /// sharded world evaluates probe faults on each prober's own
+    /// per-peer stream so the outcome is independent of how the world
+    /// is partitioned. Draw order mirrors [`FaultPlane::drop_probe`]
+    /// exactly: partition cut (pure, consumes nothing), then loss (one
+    /// uniform draw), then delay (two exponential draws checked against
+    /// the implicit ack `window`).
+    pub fn drop_probe_with(
+        &self,
+        partition: Option<&PartitionSchedule>,
+        rng: &mut Pcg64,
+        now: f64,
+        src: usize,
+        dst: usize,
+        window: f64,
+    ) -> bool {
+        if let Some(ps) = partition {
+            if ps.cuts(now, Some(src), Some(dst)) {
+                return true;
+            }
+        }
+        if let Some(p) = self.loss {
+            if rng.next_f64() < p {
+                return true;
+            }
+        }
+        if let Some(mean) = self.delay {
+            let rtt = rng.exp(1.0 / mean) + rng.exp(1.0 / mean);
+            if rtt > window {
+                return true;
+            }
+        }
+        false
+    }
+
     /// Range-check every configured fault kind.
     pub fn validated(self) -> Result<FaultSpec> {
         if let Some(p) = self.loss {
@@ -282,23 +317,8 @@ impl FaultPlane {
     /// `delay:` configured) a round trip exceeding the prober's implicit
     /// ack window of `window` seconds.
     pub fn drop_probe(&mut self, now: f64, src: usize, dst: usize, window: f64) -> bool {
-        if let Some(ps) = &self.partition {
-            if ps.cuts(now, Some(src), Some(dst)) {
-                return true;
-            }
-        }
-        if let Some(p) = self.spec.loss {
-            if self.rng.next_f64() < p {
-                return true;
-            }
-        }
-        if let Some(mean) = self.spec.delay {
-            let rtt = self.rng.exp(1.0 / mean) + self.rng.exp(1.0 / mean);
-            if rtt > window {
-                return true;
-            }
-        }
-        false
+        let spec = self.spec;
+        spec.drop_probe_with(self.partition.as_ref(), &mut self.rng, now, src, dst, window)
     }
 
     /// Uniform draw from the fault stream (crash victim selection).
@@ -433,6 +453,21 @@ mod tests {
         // No faults -> no drops and no RNG consumption.
         let mut quiet = FaultPlane::new(FaultSpec::default(), 100, 7);
         assert!((0..1000).all(|_| !quiet.drop_probe(0.0, 1, 2, 5.0)));
+    }
+
+    #[test]
+    fn drop_probe_with_matches_fault_plane_stream_for_stream() {
+        let spec = FaultSpec::parse("loss:0.1+delay:1.5+partition:50:100:0.3").unwrap();
+        let mut fp = FaultPlane::new(spec, 64, 11);
+        let schedule = PartitionSchedule::new(&spec.partition.unwrap(), 64, 11);
+        let mut rng = Pcg64::new(11, FAULT_PLANE_STREAM);
+        for i in 0..2000usize {
+            let now = i as f64 * 0.1;
+            let (src, dst) = (i % 64, (i * 7 + 1) % 64);
+            let a = fp.drop_probe(now, src, dst, 5.0);
+            let b = spec.drop_probe_with(Some(&schedule), &mut rng, now, src, dst, 5.0);
+            assert_eq!(a, b, "probe {i}: plane and caller-rng helper diverged");
+        }
     }
 
     #[test]

@@ -57,8 +57,10 @@ pub struct ChurnEvent {
     pub online: bool,
 }
 
-/// Per-peer state.
-#[derive(Debug, Clone)]
+/// Per-peer state snapshot, assembled on demand from the overlay's
+/// struct-of-arrays columns (see [`Overlay::peer`]). Cheap to copy; the
+/// authoritative storage is the dense per-field `Vec`s.
+#[derive(Debug, Clone, Copy)]
 pub struct PeerState {
     /// Position on the 64-bit ring.
     pub ring_id: u64,
@@ -183,9 +185,22 @@ impl<'a> Iterator for RingIter<'a> {
 
 /// The overlay: peer table plus the two online indices (sorted ring,
 /// dense sampling set).
+///
+/// The peer table is stored struct-of-arrays: one dense `Vec` column per
+/// field, indexed by peer id. At 1M peers that is four cache-friendly
+/// columns (~25 B/peer of authoritative state) instead of a million
+/// scattered structs, and sharded worlds can hand each shard a disjoint
+/// range of the columns.
 #[derive(Debug)]
 pub struct Overlay {
-    peers: Vec<PeerState>,
+    /// Column: ring position of each peer (fixed at construction).
+    ring_ids: Vec<u64>,
+    /// Column: online flag.
+    online_flags: Vec<bool>,
+    /// Column: start of the current session (secs), if online.
+    session_starts: Vec<f64>,
+    /// Column: sessions completed so far (diagnostics).
+    session_counts: Vec<u64>,
     /// Online peers sorted by ring id.
     ring: RingIndex,
     /// Online peers in swap-remove order (uniform O(1) sampling).
@@ -206,7 +221,7 @@ impl Overlay {
     /// Create an overlay of `n` peers, all initially online with random
     /// ring positions, sessions starting at time 0.
     pub fn new(n: usize, rng: &mut Pcg64) -> Overlay {
-        let mut peers = Vec::with_capacity(n);
+        let mut ring_ids = Vec::with_capacity(n);
         let mut ring = RingIndex::with_capacity(n);
         for i in 0..n {
             // Distinct ring ids (collisions are ~impossible but be strict).
@@ -215,15 +230,13 @@ impl Overlay {
                 rid = rng.next_u64();
             }
             ring.insert(rid, i);
-            peers.push(PeerState {
-                ring_id: rid,
-                online: true,
-                session_start: 0.0,
-                sessions: 1,
-            });
+            ring_ids.push(rid);
         }
         Overlay {
-            peers,
+            ring_ids,
+            online_flags: vec![true; n],
+            session_starts: vec![0.0; n],
+            session_counts: vec![1; n],
             ring,
             online: (0..n).collect(),
             online_pos: (0..n).collect(),
@@ -276,11 +289,11 @@ impl Overlay {
     }
 
     pub fn len(&self) -> usize {
-        self.peers.len()
+        self.ring_ids.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.peers.is_empty()
+        self.ring_ids.is_empty()
     }
 
     pub fn online_count(&self) -> usize {
@@ -288,20 +301,52 @@ impl Overlay {
         self.online.len()
     }
 
-    pub fn peer(&self, p: PeerId) -> &PeerState {
-        &self.peers[p]
+    /// Snapshot of peer `p`, gathered from the columns (by value — the
+    /// columns are the authoritative storage).
+    pub fn peer(&self, p: PeerId) -> PeerState {
+        PeerState {
+            ring_id: self.ring_ids[p],
+            online: self.online_flags[p],
+            session_start: self.session_starts[p],
+            sessions: self.session_counts[p],
+        }
     }
 
     pub fn is_online(&self, p: PeerId) -> bool {
-        self.peers[p].online
+        self.online_flags[p]
+    }
+
+    /// Ring position of peer `p` (column read; hot-path twin of
+    /// `peer(p).ring_id`).
+    pub fn ring_id(&self, p: PeerId) -> u64 {
+        self.ring_ids[p]
+    }
+
+    /// Start of `p`'s current session (column read).
+    pub fn session_start(&self, p: PeerId) -> f64 {
+        self.session_starts[p]
+    }
+
+    /// Authoritative per-peer bytes of the overlay's dense state: the
+    /// four SoA columns plus the two online indices and the ring
+    /// index's `(u64, u32)` entries. Reported by the 1M-peer perf tier
+    /// so layout regressions show up as a number, not an OOM.
+    pub fn bytes_per_peer() -> usize {
+        use std::mem::size_of;
+        size_of::<u64>()            // ring_ids
+            + size_of::<bool>()     // online_flags
+            + size_of::<f64>()      // session_starts
+            + size_of::<u64>()      // session_counts
+            + size_of::<usize>()    // online
+            + size_of::<usize>()    // online_pos
+            + size_of::<(u64, u32)>() // ring index entry
     }
 
     /// Mark `p` offline (session end). Returns the session length.
     pub fn depart(&mut self, p: PeerId, now: f64) -> f64 {
-        let st = &mut self.peers[p];
-        debug_assert!(st.online, "departing an offline peer");
-        st.online = false;
-        self.ring.remove(st.ring_id);
+        debug_assert!(self.online_flags[p], "departing an offline peer");
+        self.online_flags[p] = false;
+        self.ring.remove(self.ring_ids[p]);
         let i = self.online_pos[p];
         debug_assert!(i != OFFLINE && self.online[i] == p);
         self.online.swap_remove(i);
@@ -310,17 +355,16 @@ impl Overlay {
         }
         self.online_pos[p] = OFFLINE;
         self.churn_log.push(ChurnEvent { peer: p as u32, online: false });
-        now - self.peers[p].session_start
+        now - self.session_starts[p]
     }
 
     /// Bring `p` back online at `now` with a fresh session.
     pub fn join(&mut self, p: PeerId, now: f64) {
-        let st = &mut self.peers[p];
-        debug_assert!(!st.online, "joining an online peer");
-        st.online = true;
-        st.session_start = now;
-        st.sessions += 1;
-        self.ring.insert(st.ring_id, p);
+        debug_assert!(!self.online_flags[p], "joining an online peer");
+        self.online_flags[p] = true;
+        self.session_starts[p] = now;
+        self.session_counts[p] += 1;
+        self.ring.insert(self.ring_ids[p], p);
         self.online_pos[p] = self.online.len();
         self.online.push(p);
         self.churn_log.push(ChurnEvent { peer: p as u32, online: true });
@@ -346,7 +390,7 @@ impl Overlay {
     /// `p` (generic-arity twin of [`Overlay::successors`], used by the
     /// data-plane's candidate selection).
     pub fn successors_from(&self, p: PeerId, k: usize) -> impl Iterator<Item = PeerId> + '_ {
-        let start = self.peers[p].ring_id;
+        let start = self.ring_ids[p];
         self.ring
             .iter_from(start.wrapping_add(1))
             .filter(move |&q| q != p)
@@ -417,7 +461,7 @@ impl Overlay {
 
     /// Finger targets for routing: the owners of ring_id + 2^i.
     pub fn fingers(&self, p: PeerId) -> Vec<PeerId> {
-        let base = self.peers[p].ring_id;
+        let base = self.ring_ids[p];
         let mut out = Vec::with_capacity(64);
         for i in 0..64 {
             let key = base.wrapping_add(1u64 << i);

@@ -130,6 +130,10 @@ pub struct Scenario {
     pub detector: DetectorSpec,
     /// Injected faults (`none`, or `loss/delay/partition/crash` parts).
     pub faults: FaultSpec,
+    /// Deterministic world shards for the scale substrate
+    /// ([`crate::coordinator::ShardedWorld`]); `1` = the classic
+    /// single-engine world partitioning. Digest-invariant by contract.
+    pub shards: usize,
 }
 
 impl Default for Scenario {
@@ -155,6 +159,7 @@ impl Default for Scenario {
             warm_observations: 32,
             detector: DetectorSpec::default(),
             faults: FaultSpec::default(),
+            shards: 1,
         }
     }
 }
@@ -183,6 +188,9 @@ impl Scenario {
         }
         if !self.faults.is_none() {
             label.push_str(&format!("|faults:{}", self.faults.key()));
+        }
+        if self.shards != 1 {
+            label.push_str(&format!("|{}", registry::shards_key(self.shards)));
         }
         label
     }
@@ -273,6 +281,13 @@ impl Scenario {
     /// need the DHT topology without the full world).
     pub fn build_overlay(&self, rng: &mut Pcg64) -> Overlay {
         Overlay::new(self.n_peers, rng)
+    }
+
+    /// Compose the sharded substrate world (churn / detection / faults /
+    /// repair across `self.shards` deterministic shards). The digest of
+    /// the result is shard-count invariant.
+    pub fn build_sharded_world(&self) -> Result<crate::coordinator::ShardedWorld> {
+        crate::coordinator::ShardedWorld::new(self.sim_config(), self.shards)
     }
 
     /// Compose the full-stack world from this scenario's components.
@@ -438,6 +453,12 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Deterministic shard count for the sharded substrate world.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.scenario.shards = n;
+        self
+    }
+
     // ------------------------------------------------ registry-keyed setters
 
     fn record<T>(mut self, parsed: Result<T>, apply: impl FnOnce(&mut Scenario, T)) -> Self {
@@ -496,6 +517,11 @@ impl ScenarioBuilder {
         self.record(registry::parse_faults(key), |s, v| s.faults = v)
     }
 
+    /// Set the shard count from a registry key (`"shards:4"`).
+    pub fn shards_key(self, key: &str) -> Self {
+        self.record(registry::parse_shards(key), |s, v| s.shards = v)
+    }
+
     /// Validate and return the scenario.
     pub fn build(self) -> Result<Scenario> {
         if let Some(e) = self.err {
@@ -509,6 +535,12 @@ impl ScenarioBuilder {
             return Err(Error::Config(format!(
                 "warm_observations={} is absurd (max 100000)",
                 s.warm_observations
+            )));
+        }
+        if s.shards == 0 || s.shards > s.n_peers {
+            return Err(Error::Config(format!(
+                "shards={} must be in 1..=n_peers ({})",
+                s.shards, s.n_peers
             )));
         }
         Ok(s)
@@ -591,6 +623,21 @@ mod tests {
         // Bad keys surface from build(), like every other axis.
         assert!(Scenario::builder().detector_key("swim:10").build().is_err());
         assert!(Scenario::builder().faults_key("loss:1.5").build().is_err());
+    }
+
+    #[test]
+    fn shards_axis_round_trips_through_builder() {
+        let s = Scenario::builder().shards_key("shards:4").build().unwrap();
+        assert_eq!(s.shards, 4);
+        assert_eq!(registry::shards_key(s.shards), "shards:4");
+        // Default (1 shard) keeps existing labels byte-stable.
+        assert_eq!(Scenario::builder().build().unwrap().shards, 1);
+        assert!(!Scenario::builder().build().unwrap().label().contains("shards:"));
+        assert!(Scenario::builder().shards(16).build().unwrap().label().ends_with("|shards:16"));
+        // Degenerate counts fail validation like any other axis.
+        assert!(Scenario::builder().shards(0).build().is_err());
+        assert!(Scenario::builder().peers(8).k(4).shards(9).build().is_err());
+        assert!(Scenario::builder().shards_key("shards:0:9").build().is_err());
     }
 
     #[test]

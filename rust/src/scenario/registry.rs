@@ -14,6 +14,7 @@
 //! | storage   | `server`, `replicate:K`, `erasure:K:M`                        |
 //! | detector  | `oracle`, `swim:PERIOD:SUSPICION:K`                           |
 //! | faults    | `none`, `loss:P`, `delay:MEAN`, `partition:START:DUR:FRAC`, `crash:MTBF:DOWN` (composable with `+`) |
+//! | shards    | `shards:N` (deterministic sharded-world partition count)      |
 
 use super::PlannerSpec;
 use crate::config::{ChurnSpec, PolicySpec};
@@ -55,6 +56,7 @@ fn arity_err(family: &str, key: &str, want: &str) -> Error {
             "storage" => storage_keys().join(", "),
             "detector" => detector_keys().join(", "),
             "faults" => faults_keys().join(", "),
+            "shards" => shards_keys().join(", "),
             _ => String::new(),
         }
     ))
@@ -311,6 +313,34 @@ pub fn parse_faults(key: &str) -> Result<FaultSpec> {
     FaultSpec::parse(key)
 }
 
+// ----------------------------------------------------------------- shards
+
+/// Representative shard-count keys.
+pub fn shards_keys() -> Vec<String> {
+    vec!["shards:1".into(), "shards:4".into()]
+}
+
+/// Canonical key of a shard count.
+pub fn shards_key(n: usize) -> String {
+    format!("shards:{n}")
+}
+
+/// Parse a `shards:N` key (N >= 1; the population-dependent upper bound
+/// is checked at scenario build time).
+pub fn parse_shards(key: &str) -> Result<usize> {
+    let (name, args) = split(key);
+    match (name, args.as_slice()) {
+        ("shards", [n]) => {
+            let n = parse_count("shards", key, n)?;
+            if n == 0 {
+                return Err(Error::Config(format!("shards key '{key}': N must be >= 1")));
+            }
+            Ok(n)
+        }
+        _ => Err(arity_err("shards", key, "shards:N")),
+    }
+}
+
 // --------------------------------------------------------------- workload
 
 pub fn workload_keys() -> Vec<String> {
@@ -367,6 +397,9 @@ mod tests {
         for k in faults_keys() {
             assert_eq!(faults_key(&parse_faults(&k).unwrap()), k, "faults {k}");
         }
+        for k in shards_keys() {
+            assert_eq!(shards_key(parse_shards(&k).unwrap()), k, "shards {k}");
+        }
     }
 
     #[test]
@@ -402,6 +435,12 @@ mod tests {
             parse_faults("loss:0.1+crash:3600:60").unwrap().key(),
             "loss:0.1+crash:3600:60"
         );
+        let e = parse_shards("shards").unwrap_err().to_string();
+        assert!(e.contains("shards:N"), "{e}");
+        assert!(parse_shards("shards:0").is_err());
+        assert!(parse_shards("shards:2.5").is_err());
+        assert!(parse_shards("shards:4:2").is_err());
+        assert_eq!(parse_shards("shards:8").unwrap(), 8);
     }
 
     #[test]

@@ -100,6 +100,12 @@ impl SweepRunner {
 
     /// Run every cell for `trials` trials; results come back in cell
     /// order regardless of worker scheduling.
+    ///
+    /// Workers claim cells in chunks of `max(1, cells/workers/4)` off a
+    /// shared index — one atomic RMW per chunk instead of per cell, which
+    /// matters when fanning thousands of shard cells — while results
+    /// still land in their cell-index slots, so the output is
+    /// byte-identical to the one-at-a-time scheduler.
     pub fn run_cells(&self, cells: &[Scenario], trials: u64) -> Result<Vec<CellResult>> {
         if cells.is_empty() {
             return Ok(Vec::new());
@@ -108,18 +114,21 @@ impl SweepRunner {
         if workers <= 1 {
             return cells.iter().map(|s| run_cell(s, trials)).collect();
         }
+        let chunk = (cells.len() / workers / 4).max(1);
         let next = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<Result<CellResult>>>> =
             cells.iter().map(|_| Mutex::new(None)).collect();
         std::thread::scope(|scope| {
             for _ in 0..workers {
                 scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= cells.len() {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= cells.len() {
                         break;
                     }
-                    let r = run_cell(&cells[i], trials);
-                    *slots[i].lock().expect("cell slot poisoned") = Some(r);
+                    for i in start..(start + chunk).min(cells.len()) {
+                        let r = run_cell(&cells[i], trials);
+                        *slots[i].lock().expect("cell slot poisoned") = Some(r);
+                    }
                 });
             }
         });
@@ -415,6 +424,31 @@ mod tests {
         let seq = SweepRunner::new(1).run_grid(&grid).unwrap();
         let par = SweepRunner::new(4).run_grid(&grid).unwrap();
         assert_eq!(grid_table(&seq).to_csv(), grid_table(&par).to_csv());
+    }
+
+    #[test]
+    fn chunked_claim_is_byte_identical_across_thread_counts() {
+        // 3 mtbfs x 2 policies x 2 vs x 2 tds = 24 cells, so the chunked
+        // claim path runs with chunk > 1 at low thread counts.
+        let grid = ScenarioGrid::new(quick_base())
+            .mtbfs(&[3600.0, 5400.0, 7200.0])
+            .policies(vec![
+                PolicySpec::Adaptive,
+                PolicySpec::Fixed { interval: 300.0 },
+            ])
+            .vs(vec![10.0, 20.0])
+            .tds(vec![30.0, 50.0])
+            .trials(2);
+        assert_eq!(grid.len(), 24);
+        let seq = SweepRunner::new(1).run_grid(&grid).unwrap();
+        for threads in [2, 3, 8] {
+            let par = SweepRunner::new(threads).run_grid(&grid).unwrap();
+            assert_eq!(
+                grid_table(&seq).to_csv(),
+                grid_table(&par).to_csv(),
+                "{threads} threads"
+            );
+        }
     }
 
     #[test]

@@ -159,6 +159,9 @@ pub enum TracePayload {
     TransferRetry { attempt: u32 },
     /// A data-plane transfer exhausted its retry budget and was aborted.
     TransferAbort,
+    /// A sharded world crossed a stabilization barrier: `records` merged
+    /// cross-shard records were applied, leaving `online` peers.
+    ShardBarrier { records: u32, online: u32 },
 }
 
 impl TracePayload {
@@ -184,6 +187,7 @@ impl TracePayload {
             TracePayload::Crash { .. } => "crash",
             TracePayload::TransferRetry { .. } => "transfer_retry",
             TracePayload::TransferAbort => "transfer_abort",
+            TracePayload::ShardBarrier { .. } => "shard_barrier",
         }
     }
 
@@ -246,6 +250,10 @@ impl TracePayload {
                 f("attempt", FieldVal::U64(attempt as u64))
             }
             TracePayload::TransferAbort => {}
+            TracePayload::ShardBarrier { records, online } => {
+                f("records", FieldVal::U64(records as u64));
+                f("online", FieldVal::U64(online as u64));
+            }
         }
     }
 }

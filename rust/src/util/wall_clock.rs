@@ -41,6 +41,14 @@ pub fn cli_flag(flag: &str) -> bool {
     std::env::args().any(|a| a == flag)
 }
 
+/// The operand following `flag` on the process command line
+/// (`--threads 4` → `Some("4")`; None when absent or trailing).
+pub fn cli_value(flag: &str) -> Option<String> {
+    let args: Vec<String> = std::env::args().collect();
+    let i = args.iter().position(|a| a == flag)?;
+    args.get(i + 1).cloned()
+}
+
 /// The process working directory (`.` when unavailable).
 pub fn current_dir() -> PathBuf {
     std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."))

@@ -10,6 +10,7 @@
 
 use p2pcp::config::{ChurnSpec, PolicySpec, SimConfig};
 use p2pcp::coordinator::world::World;
+use p2pcp::coordinator::ShardedWorld;
 use p2pcp::dataplane::{DataPlane, StorageSpec, DEFAULT_CHUNK_BYTES, DEFAULT_SERVER_BPS};
 use p2pcp::experiments::server_offload::{run_sweep, to_table, OffloadConfig, OffloadRow};
 use p2pcp::mpi::program::{CommPattern, Program};
@@ -490,4 +491,59 @@ fn partition_heals_to_full_retrievability_at_1k_peers() {
     let b = partition_heal_digest("partition-run2");
     assert!(!a.is_empty());
     a.assert_matches(&b);
+}
+
+// ------------------------------------------------------------------
+// F. Sharded-world invariance: the same churny 10k-peer substrate —
+//    SWIM detection, probe loss, a partition-and-heal — must produce a
+//    byte-identical digest, metrics JSON, and trace stream whether it
+//    runs on 1, 2, or 4 shards. This is the partition-invariance
+//    contract of `coordinator::sharded` end-to-end.
+// ------------------------------------------------------------------
+
+fn sharded_cfg(seed: u64) -> SimConfig {
+    SimConfig {
+        n_peers: 10_000,
+        k: 16,
+        churn: ChurnSpec::Exponential { mtbf: 5400.0 },
+        detector: DetectorSpec::parse("swim:15:45:3").unwrap(),
+        faults: FaultSpec::parse("loss:0.05+partition:120:240:0.3").unwrap(),
+        seed,
+        ..SimConfig::default()
+    }
+}
+
+/// Run the sharded substrate and capture its full determinism surface:
+/// digest, canonical metrics JSON, and the exported trace stream.
+fn sharded_run(name: &str, seed: u64, shards: usize) -> (DeterminismDigest, String, String) {
+    let mut w = ShardedWorld::new(sharded_cfg(seed), shards).unwrap();
+    w.tracer = Tracer::full();
+    w.run(600.0);
+    let trace = p2pcp::trace::export::to_jsonl(&w.tracer.snapshot());
+    (w.digest(name), w.metrics_json(), trace)
+}
+
+#[test]
+fn sharded_world_is_invariant_across_1_2_4_shards() {
+    let (d1, m1, t1) = sharded_run("shards-1", 42, 1);
+    let (d2, m2, t2) = sharded_run("shards-2", 42, 2);
+    let (d4, m4, t4) = sharded_run("shards-4", 42, 4);
+    assert!(!d1.is_empty(), "sharded digest must fold a non-trivial stream");
+    d1.assert_matches(&d2);
+    d1.assert_matches(&d4);
+    assert_eq!(m1, m2, "metrics JSON diverged between 1 and 2 shards");
+    assert_eq!(m1, m4, "metrics JSON diverged between 1 and 4 shards");
+    assert_eq!(t1, t2, "trace stream diverged between 1 and 2 shards");
+    assert_eq!(t1, t4, "trace stream diverged between 1 and 4 shards");
+    // The run must exercise the faulty substrate, not a quiet world.
+    assert!(!t1.is_empty());
+    assert!(t1.contains("partition_start"), "partition never started");
+    assert!(t1.contains("dead_declared"), "SWIM never declared a death");
+}
+
+#[test]
+fn sharded_world_seeds_diverge() {
+    let (a, _, _) = sharded_run("shards-seed-1", 1, 2);
+    let (b, _, _) = sharded_run("shards-seed-2", 2, 2);
+    assert_ne!(a.value(), b.value(), "distinct seeds produced identical sharded streams");
 }

@@ -1,0 +1,18 @@
+//! Fixture: a bench target reading the host environment directly and
+//! keying results by an unordered map — both must be caught even though
+//! benches are exempt from the float-reduce / truncating-cast rules.
+
+use std::collections::HashMap;
+
+fn tier_sizes() -> usize {
+    std::env::var("PERF_TIER").map(|v| v.len()).unwrap_or(0)
+}
+
+fn main() {
+    let rows: HashMap<String, f64> = HashMap::new();
+    // Reducing measurement floats and bucketing them is legitimate in a
+    // bench driver (skipped there, flagged in sim modules).
+    let total: f64 = rows.values().sum();
+    let bucket = (total * 10.0) as u64;
+    println!("{} {bucket}", tier_sizes());
+}

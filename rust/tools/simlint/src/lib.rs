@@ -102,6 +102,17 @@ pub fn wall_clock_exempt(path: &str) -> bool {
     WALL_CLOCK_EXEMPT.iter().any(|s| p.ends_with(s))
 }
 
+/// True if `path` is a bench target (`rust/benches/…`). Benches are
+/// measurement drivers, not sim modules, so only the `unordered` and
+/// `wall_clock` rules apply there: a bench may legitimately time and
+/// aggregate, but it must not smuggle in OS entropy, ad-hoc environment
+/// reads (route them through `util::wall_clock`), or unordered
+/// containers whose iteration order could leak into emitted tables.
+pub fn bench_path(path: &str) -> bool {
+    let p = path.replace('\\', "/");
+    p.starts_with("benches/") || p.contains("/benches/")
+}
+
 // --------------------------------------------------------------- scanner
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -588,6 +599,10 @@ fn span_has_float_evidence(span: &[Tok]) -> bool {
 /// wall-clock allowlist (suffix match).
 pub fn lint_source(path: &str, src: &str) -> Vec<Violation> {
     let mut violations: Vec<Violation> = Vec::new();
+    // Bench targets get the unordered + wall_clock subset only (see
+    // `bench_path`): their float accounting is measurement output, not
+    // sim state, so the reduce/cast rules don't apply.
+    let bench = bench_path(path);
     let stripped = strip(src);
     let toks = tokenize(&stripped.code);
     let allows = parse_annotations(path, &stripped.comments, &mut violations);
@@ -670,6 +685,7 @@ pub fn lint_source(path: &str, src: &str) -> Vec<Violation> {
                                     if let Some(r) = toks.get(j + 1) {
                                         if r.kind == Kind::Ident
                                             && REDUCERS.contains(&r.text.as_str())
+                                            && !bench
                                             && !covered(Rule::FloatReduce, r.line)
                                         {
                                             push(
@@ -763,7 +779,7 @@ pub fn lint_source(path: &str, src: &str) -> Vec<Violation> {
 
     // Rule 4: truncating float→int casts.
     let mut i = 0;
-    while i + 1 < toks.len() {
+    while !bench && i + 1 < toks.len() {
         let is_cast = toks[i].kind == Kind::Ident
             && toks[i].text == "as"
             && toks[i + 1].kind == Kind::Ident
@@ -849,6 +865,7 @@ mod tests {
     const FIX_FLOAT_REDUCE: &str = include_str!("../fixtures/float_reduce.rs");
     const FIX_TRUNCATING_CAST: &str = include_str!("../fixtures/truncating_cast.rs");
     const FIX_FAULTS_THREAD_RNG: &str = include_str!("../fixtures/faults_thread_rng.rs");
+    const FIX_BENCH_WALL_CLOCK: &str = include_str!("../fixtures/bench_wall_clock.rs");
     const FIX_CLEAN: &str = include_str!("../fixtures/clean.rs");
 
     #[test]
@@ -957,6 +974,40 @@ mod tests {
             violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
         );
         assert!(!wall_clock_exempt("rust/src/net/faults.rs"));
+    }
+
+    #[test]
+    fn fixture_bench_gets_the_unordered_wall_clock_subset() {
+        // Under a bench path the env read and the HashMap are caught,
+        // but the float reduce and the truncating cast are not.
+        let vs = lint_source("rust/benches/perf_bad.rs", FIX_BENCH_WALL_CLOCK);
+        assert_eq!(
+            rules(&vs),
+            vec![Rule::WallClock, Rule::Unordered, Rule::Unordered],
+            "{vs:?}"
+        );
+        assert_eq!(vs[0].line, 8, "env::var span: {vs:?}");
+        // The same source inside the sim core trips all four rules.
+        let vs = lint_source("rust/src/experiments/perf_bad.rs", FIX_BENCH_WALL_CLOCK);
+        let got = rules(&vs);
+        assert!(got.contains(&Rule::FloatReduce), "{vs:?}");
+        assert!(got.contains(&Rule::TruncatingCast), "{vs:?}");
+    }
+
+    #[test]
+    fn repo_benches_are_clean() {
+        // The bench tree is inside the linted surface (CI runs
+        // `simlint rust/src rust/benches`) and currently lints clean.
+        let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../benches");
+        let (files, violations) = lint_tree(&root).unwrap();
+        assert!(files >= 4, "expected the bench targets, found {files} files");
+        assert!(
+            violations.is_empty(),
+            "the bench tree must lint clean:\n{}",
+            violations.iter().map(|v| v.to_string()).collect::<Vec<_>>().join("\n")
+        );
+        assert!(bench_path("rust/benches/perf_sim.rs"));
+        assert!(!bench_path("rust/src/experiments/bench_support.rs"));
     }
 
     #[test]
