@@ -7,7 +7,10 @@
 //!    Poisson arrivals with §3.2.3 admission control;
 //! 4. imperfect failure detection: the cost of SWIM detection lag
 //!    (suspicion timeout) under injected probe loss + a mid-job
-//!    partition, adaptive vs fixed-interval checkpointing.
+//!    partition, adaptive vs fixed-interval checkpointing;
+//! 5. reliability-scored placement: trust-sized `replicate:auto` vs flat
+//!    `replicate:K` server-offload bytes and runtime penalty under a
+//!    heavy-tail churn mixture (the `ext_reliability` table).
 //!
 //! `cargo bench --bench extensions` (add `-- --quick` for a smoke run).
 
@@ -17,6 +20,7 @@ use p2pcp::estimator::hybrid::HybridEstimator;
 use p2pcp::estimator::mle::MleEstimator;
 use p2pcp::estimator::RateEstimator;
 use p2pcp::experiments::bench_support::{emit_table, is_quick};
+use p2pcp::experiments::reliability::{self as reliability_exp, ReliabilityConfig};
 use p2pcp::planner::NativePlanner;
 use p2pcp::scenario::Scenario;
 use p2pcp::util::csv::Table;
@@ -194,4 +198,22 @@ fn main() {
         t.push_f64(&[susp, adaptive_wall, fixed_wall, dead as f64, fp as f64]);
     }
     emit_table("ext_detection_lag", &t);
+
+    // ---- 5. reliability-scored placement -------------------------------------
+    println!("\n-- trust-sized replication: replicate:auto vs flat replicate:K --");
+    println!("   (two-class churn mixture: 40% flaky MTBF 500 s, 60% stable MTBF 3 h)");
+    let cfg = if is_quick() {
+        ReliabilityConfig {
+            peer_counts: vec![96],
+            horizon: 2.0 * 3600.0,
+            ..ReliabilityConfig::default()
+        }
+    } else {
+        ReliabilityConfig::default()
+    };
+    let rows = reliability_exp::run_sweep(&cfg, 4);
+    for line in reliability_exp::summarize(&cfg, &rows) {
+        println!("{line}");
+    }
+    emit_table("ext_reliability", &reliability_exp::to_table(&cfg, &rows));
 }

@@ -23,8 +23,12 @@
 //! `--check <baseline.json>` compares the fresh run's `*_per_s` rates
 //! against a previously written doc with a relative tolerance
 //! (`--check-tol`, default 0.25) and prints `PERF-CHECK` warnings for
-//! regressions. It never fails the run — wall-clock rates are
-//! machine-dependent, so CI wires it as a soft step.
+//! regressions. A committed stub baseline (no `*_per_s` keys yet) is
+//! detected explicitly and announced as "stub baseline, comparison
+//! skipped". By default the check never fails the run — wall-clock rates
+//! are machine-dependent, so CI wires it as a soft step; pass
+//! `--check-strict` locally to exit non-zero on real regressions (the
+//! `--json` trajectory, if requested, is still written first).
 //!
 //! Iteration counts are env-pinnable for comparable CI runs:
 //! `P2PCP_PERF_REPEATS` (timed repeats per section, default 3 full /
@@ -36,7 +40,7 @@ use p2pcp::dataplane::{
     DataPlane, Endpoint, StorageSpec, TransferScheduler, DEFAULT_SERVER_BPS,
 };
 use p2pcp::experiments::bench_support::{
-    compare_perf_json, is_quick, report_throughput, report_timing, time_it,
+    compare_perf_json, is_quick, is_stub_baseline, report_throughput, report_timing, time_it,
 };
 use p2pcp::net::bandwidth::BandwidthModel;
 use p2pcp::net::overlay::Overlay;
@@ -376,14 +380,27 @@ fn main() {
         ),
     ]);
 
-    // Soft baseline comparison: print warnings, never fail the run. Runs
-    // before the `--json` write so `--check X --json X` compares against
-    // the *previous* trajectory, then refreshes it.
+    // Baseline comparison: print warnings (soft by default). Runs before
+    // the `--json` write so `--check X --json X` compares against the
+    // *previous* trajectory, then refreshes it. Under `--check-strict`
+    // real regressions fail the run — but only after the `--json` write,
+    // so the trajectory is never lost to an exit.
+    let strict = wall_clock::cli_flag("--check-strict");
+    let mut strict_regressions = 0usize;
     if let Some(path) = arg_value("--check") {
         let tol = arg_value("--check-tol").and_then(|t| t.parse::<f64>().ok()).unwrap_or(0.25);
         let baseline_path = anchor_path(&path);
         match std::fs::read_to_string(&baseline_path) {
             Ok(text) => match p2pcp::util::json::parse(&text) {
+                Ok(baseline) if is_stub_baseline(&baseline) => {
+                    // The committed placeholder: say so explicitly rather
+                    // than emitting a warning that reads like a failure.
+                    println!(
+                        "PERF-CHECK skip: {} is a stub baseline, comparison skipped \
+                         (record one with `cargo bench --bench perf_sim -- --json {path}`)",
+                        baseline_path.display(),
+                    );
+                }
                 Ok(baseline) => {
                     let warns = compare_perf_json(&doc, &baseline, tol);
                     if warns.is_empty() {
@@ -396,6 +413,7 @@ fn main() {
                     for w in &warns {
                         println!("PERF-CHECK warn: {w}");
                     }
+                    strict_regressions = warns.len();
                 }
                 Err(e) => println!(
                     "PERF-CHECK warn: baseline {} is not valid JSON: {e}",
@@ -418,5 +436,12 @@ fn main() {
                 std::process::exit(1);
             }
         }
+    }
+
+    if strict && strict_regressions > 0 {
+        eprintln!(
+            "PERF-CHECK strict: {strict_regressions} regression(s) beyond tolerance — failing"
+        );
+        std::process::exit(1);
     }
 }

@@ -5,6 +5,7 @@
 use crate::error::{Error, Result};
 use crate::net::detector::DetectorSpec;
 use crate::net::faults::FaultSpec;
+use crate::policy::reliability::ReliabilitySpec;
 use std::collections::BTreeMap;
 
 /// Churn specification (resolved to a `ChurnModel` by the coordinator).
@@ -91,6 +92,9 @@ pub struct SimConfig {
     pub detector: DetectorSpec,
     /// Injected faults on the control/data planes (default: none).
     pub faults: FaultSpec,
+    /// Per-peer reliability scoring (default: off — the seed behaviour,
+    /// digest-bit-identical).
+    pub reliability: ReliabilitySpec,
 }
 
 impl Default for SimConfig {
@@ -110,6 +114,7 @@ impl Default for SimConfig {
             max_sim_time: 60.0 * 24.0 * 3600.0,
             detector: DetectorSpec::default(),
             faults: FaultSpec::default(),
+            reliability: ReliabilitySpec::default(),
         }
     }
 }
@@ -139,6 +144,7 @@ impl SimConfig {
         }
         self.detector.validated()?;
         self.faults.validated()?;
+        self.reliability.validated()?;
         Ok(self)
     }
 
@@ -201,6 +207,7 @@ impl SimConfig {
                 "estimator.replan_period" => cfg.replan_period = parse_num(key, val)?,
                 "detector.key" => cfg.detector = DetectorSpec::parse(val)?,
                 "faults.key" => cfg.faults = FaultSpec::parse(val)?,
+                "reliability.key" => cfg.reliability = ReliabilitySpec::parse(val)?,
                 other => return Err(Error::Config(format!("unknown config key '{other}'"))),
             }
         }
@@ -313,6 +320,16 @@ mod tests {
         // Out-of-range keys are rejected at validation time.
         assert!(SimConfig::from_toml_lite("[faults]\nkey = \"loss:1.5\"\n").is_err());
         assert!(SimConfig::from_toml_lite("[detector]\nkey = \"swim:0:30:3\"\n").is_err());
+    }
+
+    #[test]
+    fn parses_reliability_key() {
+        let cfg = SimConfig::from_toml_lite("[reliability]\nkey = \"window:32:0.9\"\n").unwrap();
+        assert_eq!(cfg.reliability.key(), "window:32:0.9");
+        // Default stays the seed behaviour: scoring off.
+        assert_eq!(SimConfig::default().reliability, ReliabilitySpec::Off);
+        assert!(SimConfig::from_toml_lite("[reliability]\nkey = \"window:0:0.9\"\n").is_err());
+        assert!(SimConfig::from_toml_lite("[reliability]\nkey = \"window:16:1.5\"\n").is_err());
     }
 
     #[test]

@@ -395,6 +395,9 @@ impl ShardedWorld {
         let mut store = DataPlane::new(StorageSpec::default());
         store.reserve_peers(cfg.n_peers);
         store.sched.set_faults(TransferFaults::new(&cfg.faults, cfg.n_peers, cfg.seed));
+        // Reliability scoring is fed at the barrier (canonical record
+        // order), so the table is shard-count invariant by construction.
+        store.set_reliability(cfg.reliability);
         // Seed a static image population so the barrier repair sweeps
         // exercise the store and transfer scheduler under churn (capped:
         // the image count is a workload knob, not a per-peer cost).
@@ -570,6 +573,7 @@ impl ShardedWorld {
         );
         self.overlay.compact_churn(self.store.churn_cursor());
         self.metrics.set("dataplane.server_backlog", self.store.sched.server_backlog(tb_secs));
+        self.store.publish_reliability_metrics(&mut self.metrics);
         self.metrics.set("churn.online", self.overlay.online_count() as f64);
         self.metrics.sample_gauges(tb_secs);
         self.tracer.emit(
@@ -620,6 +624,11 @@ impl ShardedWorld {
                 // Oracle-mode estimator feed, in canonical record order.
                 self.estimator.observe(f64::from_bits(r.a));
                 *observations += 1;
+                if let Some((score, images)) =
+                    self.store.observe_reliability(p, f64::from_bits(r.a))
+                {
+                    self.emit_low_water(r.t, r.peer, score, images);
+                }
             }
             RecKind::Suspect => {
                 let Some(sw) = &mut self.swim else { return };
@@ -632,6 +641,9 @@ impl ShardedWorld {
                         Some(r.peer),
                         TracePayload::Suspect,
                     );
+                    if let Some((score, images)) = self.store.suspect_reliability(p) {
+                        self.emit_low_water(r.t, r.peer, score, images);
+                    }
                 }
             }
             RecKind::Crash => {
@@ -643,6 +655,9 @@ impl ShardedWorld {
                     Some(r.peer),
                     TracePayload::Crash { downtime_s: f64::from_bits(r.a) },
                 );
+                if let Some((score, images)) = self.store.suspect_reliability(p) {
+                    self.emit_low_water(r.t, r.peer, score, images);
+                }
             }
         }
     }
@@ -673,6 +688,22 @@ impl ShardedWorld {
                 lifetime_s: decl.lifetime,
             },
         );
+        if let Some((score, images)) = self.store.observe_reliability(peer as usize, decl.lifetime)
+        {
+            self.emit_low_water(tus, peer, score, images);
+        }
+    }
+
+    /// Trace a reliability low-water crossing (score dipped below the
+    /// re-replication threshold; `images` entries went on the dirty queue).
+    fn emit_low_water(&mut self, t_us: u64, peer: u32, score: f64, images: usize) {
+        self.tracer.emit(
+            SimTime::from_micros(t_us),
+            self.epoch,
+            Subsystem::DataPlane,
+            Some(peer),
+            TracePayload::ReliabilityLowWater { score, images: images as u32 },
+        );
     }
 
     /// Fold the run's full determinism surface — metrics registry, trace
@@ -682,6 +713,9 @@ impl ShardedWorld {
         d.record_u64("sharded.events", self.events_processed());
         d.record_usize("sharded.online", self.overlay.online_count());
         d.record_u64("sharded.epochs", self.epoch as u64);
+        if let Some(rel) = self.store.reliability() {
+            rel.fold_digest("reliability.table", &mut d);
+        }
         self.metrics.fold_digest(&mut d);
         self.tracer.fold_digest("trace", &mut d);
         d
@@ -738,6 +772,25 @@ mod tests {
         let (d4, m4) = run_digest(cfg, 4, 600.0);
         assert_eq!(d1, d4, "swim+faults digests diverged across shard counts");
         assert_eq!(m1, m4);
+    }
+
+    #[test]
+    fn reliability_substrate_is_shard_count_invariant() {
+        use crate::policy::reliability::ReliabilitySpec;
+        let mut cfg = substrate_cfg(19);
+        cfg.reliability = ReliabilitySpec::parse("window:16:0.9").unwrap();
+        cfg.faults = FaultSpec::parse("crash:900:120").unwrap();
+        let (d1, m1) = run_digest(cfg.clone(), 1, 900.0);
+        let (d2, m2) = run_digest(cfg.clone(), 2, 900.0);
+        let (d4, m4) = run_digest(cfg, 4, 900.0);
+        assert_eq!(d1, d2, "reliability digests diverged between 1 and 2 shards");
+        assert_eq!(d1, d4, "reliability digests diverged between 1 and 4 shards");
+        assert_eq!(m1, m2);
+        assert_eq!(m1, m4);
+        assert!(
+            m1.contains("reliability.scored_peers"),
+            "window spec must publish reliability gauges"
+        );
     }
 
     #[test]

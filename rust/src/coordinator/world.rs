@@ -172,6 +172,9 @@ impl World {
         }
         let mut store = DataPlane::new(storage);
         store.sched.set_faults(TransferFaults::new(&cfg.faults, cfg.n_peers, cfg.seed));
+        // Per-peer trust scores (`reliability: off` attaches nothing and
+        // every downstream touch point stays a single branch).
+        store.set_reliability(cfg.reliability);
         Ok(World {
             cfg,
             engine,
@@ -260,6 +263,7 @@ impl World {
         // straight from the estimator — no per-decide clone.
         let (v_eff, td_eff) = self.effective_overheads(&job);
         let true_rate = self.churn.rate(start);
+        let rel_factor = self.member_reliability_factor(&job.members);
         let mut decided = None;
         {
             let ctx = PolicyCtx {
@@ -273,6 +277,15 @@ impl World {
             if let Ok(d) = job.policy.decide(&ctx) {
                 job.interval = d.interval;
                 decided = Some(d.interval);
+            }
+        }
+        // Per-job trust scaling of the Eq. 1 interval: a reliable member
+        // set checkpoints less often, a flaky one more (no-op when the
+        // reliability axis is off or every member is unscored).
+        if let Some(f) = rel_factor {
+            job.interval = job.interval.map(|iv| iv * f);
+            if decided.is_some() {
+                decided = Some(job.interval);
             }
         }
         self.job = Some(job);
@@ -353,6 +366,17 @@ impl World {
             download_time(per_rank, &links)
         });
         (v, td)
+    }
+
+    /// Trust factor for the current member set: `clamp(2·s̄, 1/4, 4)`
+    /// where `s̄` is the members' mean effective reliability score. The
+    /// Eq. 1 interval is multiplied by it, so a fully-trusted crew
+    /// (s̄→1) checkpoints up to 2× less often and a distrusted one
+    /// (s̄→0) up to 4× more. `None` when the reliability axis is off;
+    /// an unscored crew sits at the neutral 0.5 → factor exactly 1.
+    fn member_reliability_factor(&self, members: &[PeerId]) -> Option<f64> {
+        let rel = self.store.reliability()?;
+        Some((2.0 * rel.mean_effective(members)).clamp(0.25, 4.0))
     }
 
     /// (Re)schedule the computing-phase timers: checkpoint due + job done.
@@ -508,6 +532,17 @@ impl World {
         for &(peer, gen) in &suspects {
             self.metrics.inc("swim.suspects");
             trace_emit!(self, Subsystem::Overlay, Some(peer as u32), TracePayload::Suspect);
+            // A suspicion distrusts the peer immediately — the score sinks
+            // (and may trigger preemptive re-replication) before the
+            // suspicion timer expires into a declaration.
+            if let Some((score, images)) = self.store.suspect_reliability(peer) {
+                trace_emit!(
+                    self,
+                    Subsystem::DataPlane,
+                    Some(peer as u32),
+                    TracePayload::ReliabilityLowWater { score, images: images as u32 }
+                );
+            }
             self.engine.schedule_in_secs(suspicion, EventKind::SwimExpire { peer, gen });
         }
         self.engine.schedule_in_secs(period, EventKind::SwimTick);
@@ -541,6 +576,16 @@ impl World {
                 lifetime_s: decl.lifetime,
             }
         );
+        // The declared lifetime also scores the peer (truncated sessions
+        // from false positives sink it, as a real deployment would).
+        if let Some((score, images)) = self.store.observe_reliability(peer, decl.lifetime) {
+            trace_emit!(
+                self,
+                Subsystem::DataPlane,
+                Some(peer as u32),
+                TracePayload::ReliabilityLowWater { score, images: images as u32 }
+            );
+        }
         // The coordinator believes its detector: a declared member —
         // false positive or not — triggers the rollback/replacement
         // machinery (the spurious-replan cost of imperfect detection).
@@ -599,6 +644,15 @@ impl World {
                 Some(p as u32),
                 TracePayload::Crash { downtime_s: crash.downtime }
             );
+            // An injected crash is a zero-quality session for the score.
+            if let Some((score, images)) = self.store.suspect_reliability(p) {
+                trace_emit!(
+                    self,
+                    Subsystem::DataPlane,
+                    Some(p as u32),
+                    TracePayload::ReliabilityLowWater { score, images: images as u32 }
+                );
+            }
             // The crashed peer's stored chunks survive: on rejoin the
             // data-plane churn journal revives its holder groups. Its
             // original session-end PeerFail stays queued and fires as
@@ -618,17 +672,36 @@ impl World {
             // are the only estimator source, so the stabilizer still
             // tracks neighbour liveness but its observations are dropped.
             let mut observed = 0u64;
+            // Low-water crossings surfaced by this tick's observations
+            // (collected so the trace emits outside the split borrow;
+            // stays empty — and allocation-free — with reliability off).
+            let mut crossings: Vec<(PeerId, f64, usize)> = Vec::new();
             {
                 let stab = &mut self.stab;
                 let overlay = &self.overlay;
                 let estimator = &mut self.estimator;
+                let store = &mut self.store;
                 let oracle = self.swim.is_none();
                 stab.tick_with(overlay, peer, now, |obs| {
                     if oracle {
                         estimator.observe(obs.lifetime);
                         observed += 1;
+                        // Same event stream scores the subject peer.
+                        if let Some((score, images)) =
+                            store.observe_reliability(obs.subject, obs.lifetime)
+                        {
+                            crossings.push((obs.subject, score, images));
+                        }
                     }
                 });
+            }
+            for &(subject, score, images) in &crossings {
+                trace_emit!(
+                    self,
+                    Subsystem::DataPlane,
+                    Some(subject as u32),
+                    TracePayload::ReliabilityLowWater { score, images: images as u32 }
+                );
             }
             if observed > 0 {
                 self.metrics.add("stabilize.observations", observed);
@@ -991,6 +1064,10 @@ impl World {
         };
         let true_rate = self.churn.rate(now);
         let k = self.cfg.k as f64;
+        let rel_factor = self
+            .job
+            .as_ref()
+            .and_then(|j| self.member_reliability_factor(&j.members));
         let (computing, decided) = {
             // Split borrows: the decision context borrows the estimator's
             // window while the policy lives in the (disjoint) job field.
@@ -1009,6 +1086,14 @@ impl World {
                 job.interval = d.interval;
                 job.outcome.replans += 1;
                 decided = Some(d.interval);
+            }
+            // Trust scaling (see run_job): the replanned interval is
+            // per-member-set, tracking the current crew's scores.
+            if let Some(f) = rel_factor {
+                job.interval = job.interval.map(|iv| iv * f);
+                if decided.is_some() {
+                    decided = Some(job.interval);
+                }
             }
             (job.phase == Phase::Computing, decided)
         };
@@ -1278,6 +1363,33 @@ mod tests {
         assert_eq!(w.metrics.counter("churn.failures"), crashes);
         // Fixed 120 s downtime: everyone is back online by warmup end.
         assert_eq!(w.online_count(), 128);
+    }
+
+    #[test]
+    fn reliability_scoring_publishes_metrics_and_off_stays_silent() {
+        use crate::policy::reliability::ReliabilitySpec;
+        let mut c = cfg(1800.0);
+        c.reliability = ReliabilitySpec::parse("window:16:0.9").unwrap();
+        let mut w = World::new(c).unwrap();
+        w.warmup(6.0 * 3600.0);
+        let program = Program::new(CommPattern::Ring, 8);
+        let o = w.run_job(program.clone(), mk_policy(&PolicySpec::Adaptive)).unwrap();
+        assert!(o.completed);
+        assert!(w.metrics.gauge("reliability.scored_peers").unwrap() > 0.0);
+        let mean = w.metrics.gauge("reliability.mean_score").unwrap();
+        assert!((0.0..=1.0).contains(&mean), "{mean}");
+        // MTBF 1800 s maps to quality 0.2 per observation: a scored crew
+        // is distrusted, so the Eq. 1 interval shrinks (factor < 1) and
+        // the job checkpoints at least as often as the unscored run.
+        let mut w2 = World::new(cfg(1800.0)).unwrap();
+        w2.warmup(6.0 * 3600.0);
+        let o2 = w2.run_job(program, mk_policy(&PolicySpec::Adaptive)).unwrap();
+        assert!(o2.completed);
+        assert!(o.checkpoints >= o2.checkpoints, "{} vs {}", o.checkpoints, o2.checkpoints);
+        assert!(
+            w2.metrics.gauge("reliability.scored_peers").is_none(),
+            "off axis must publish no reliability keys"
+        );
     }
 
     #[test]

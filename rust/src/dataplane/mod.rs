@@ -55,6 +55,12 @@ pub enum StorageSpec {
     /// Whole-chunk replication on the `replicas` online ring successors
     /// of the image key (the seed's scheme, degree now configurable).
     Replicate { replicas: usize },
+    /// Trust-sized replication: per-image degree in `min..=max`, chosen
+    /// from the candidate holders' reliability scores at put/repair time
+    /// (needs the `reliability` axis on; scores at the neutral prior size
+    /// to the midpoint). Chunks and placement behave like `Replicate`
+    /// with the resolved degree.
+    ReplicateAuto { min: usize, max: usize },
     /// Parity-group erasure coding: groups of `data` chunks get `parity`
     /// parity chunks; any `data` of the `data + parity` survive a group.
     /// Storage overhead is (data+parity)/data instead of `replicas`-fold.
@@ -74,6 +80,8 @@ impl StorageSpec {
         match self {
             StorageSpec::Server => 1.0,
             StorageSpec::Replicate { replicas } => *replicas as f64,
+            // Nominal (scores unknown): the neutral-prior midpoint.
+            StorageSpec::ReplicateAuto { min, max } => (min + max) as f64 / 2.0,
             StorageSpec::Erasure { data, parity } => (data + parity) as f64 / *data as f64,
         }
     }
@@ -90,6 +98,11 @@ impl StorageSpec {
             StorageSpec::Replicate { replicas } if replicas == 0 => Err(
                 crate::error::Error::Config("storage replicate: degree must be >= 1".into()),
             ),
+            StorageSpec::ReplicateAuto { min, max } if min == 0 || max < min => {
+                Err(crate::error::Error::Config(
+                    "storage replicate:auto: need 1 <= MIN <= MAX".into(),
+                ))
+            }
             StorageSpec::Erasure { data, parity } if data == 0 || parity == 0 => {
                 Err(crate::error::Error::Config(
                     "storage erasure: data and parity counts must be >= 1".into(),
@@ -110,6 +123,16 @@ mod tests {
         assert_eq!(StorageSpec::Replicate { replicas: 3 }.redundancy(), 3.0);
         let e = StorageSpec::Erasure { data: 4, parity: 2 }.redundancy();
         assert!((e - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auto_replication_spec_basics() {
+        let a = StorageSpec::ReplicateAuto { min: 2, max: 5 };
+        assert!(a.peer_hosted());
+        assert!((a.redundancy() - 3.5).abs() < 1e-12);
+        assert!(a.validated().is_ok());
+        assert!(StorageSpec::ReplicateAuto { min: 0, max: 5 }.validated().is_err());
+        assert!(StorageSpec::ReplicateAuto { min: 5, max: 2 }.validated().is_err());
     }
 
     #[test]

@@ -102,6 +102,16 @@ pub fn place_chunks(
                 holders: chunks.iter().map(|_| holders.clone()).collect(),
             })
         }
+        // Score-less fallback: the data plane resolves the trust-sized
+        // degree *before* placing (substituting `Replicate { replicas }`),
+        // so this arm only serves direct callers without a score table —
+        // it places the floor degree.
+        StorageSpec::ReplicateAuto { min, .. } => place_chunks(
+            overlay,
+            key,
+            chunks,
+            &StorageSpec::Replicate { replicas: (*min).max(1) },
+        ),
         StorageSpec::Erasure { data, parity } => {
             // Enough distinct peers that one parity group spreads across
             // distinct holders; fall back to wrap-around when the overlay

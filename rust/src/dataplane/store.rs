@@ -37,6 +37,7 @@ use super::StorageSpec;
 use crate::metrics::Metrics;
 use crate::net::bandwidth::LinkSpeed;
 use crate::net::overlay::{Overlay, PeerId};
+use crate::policy::reliability::{ReliabilitySpec, ReliabilityTable};
 use crate::storage::image::CheckpointImage;
 use std::collections::{BTreeMap, BTreeSet};
 
@@ -199,6 +200,15 @@ pub struct DataPlane {
     sync_cursor: u64,
     /// Hot-path scratch buffers.
     scratch: Scratch,
+    /// Per-peer reliability scores (`None` when the axis is off — every
+    /// reliability touch point is then a single branch, keeping the off
+    /// path byte-identical to the pre-axis tree).
+    rel: Option<ReliabilityTable>,
+    /// Images enqueued by low-water crossings (preemptive re-replication,
+    /// the second dirty-queue source next to churn).
+    preemptive_repairs: u64,
+    /// Low-water crossings observed (once per excursion, hysteresis).
+    low_water_events: u64,
     /// Transfer timing + per-endpoint byte counters.
     pub sched: TransferScheduler,
 }
@@ -220,6 +230,9 @@ impl DataPlane {
             sync_token: 0,
             sync_cursor: 0,
             scratch: Scratch::default(),
+            rel: None,
+            preemptive_repairs: 0,
+            low_water_events: 0,
             sched: TransferScheduler::new(server_bps),
         }
     }
@@ -238,6 +251,132 @@ impl DataPlane {
 
     pub fn image_count(&self) -> usize {
         self.images.len()
+    }
+
+    // ------------------------------------------------------ reliability
+
+    /// Attach (or detach, for `off`) the per-peer reliability scores.
+    pub fn set_reliability(&mut self, spec: ReliabilitySpec) {
+        self.rel = spec.table();
+        if let Some(rel) = &mut self.rel {
+            rel.reserve(self.peer_stored.len());
+        }
+    }
+
+    /// The score table, when the axis is on.
+    pub fn reliability(&self) -> Option<&ReliabilityTable> {
+        self.rel.as_ref()
+    }
+
+    /// Images enqueued for preemptive re-replication by low-water
+    /// crossings so far.
+    pub fn preemptive_repairs(&self) -> u64 {
+        self.preemptive_repairs
+    }
+
+    /// Low-water crossings observed so far (once per excursion).
+    pub fn low_water_events(&self) -> u64 {
+        self.low_water_events
+    }
+
+    /// Feed one observed session lifetime into the score table. Returns
+    /// `Some((effective_score, images_queued))` when the update crossed
+    /// the low-water mark (the preemptive-repair trigger), `None`
+    /// otherwise — including always when the axis is off.
+    pub fn observe_reliability(&mut self, peer: PeerId, lifetime: f64) -> Option<(f64, usize)> {
+        self.rel_update(peer, Some(lifetime))
+    }
+
+    /// Penalize a suspected (or crash-injected) peer: scored as a
+    /// zero-quality session. Same crossing contract as
+    /// [`DataPlane::observe_reliability`].
+    pub fn suspect_reliability(&mut self, peer: PeerId) -> Option<(f64, usize)> {
+        self.rel_update(peer, None)
+    }
+
+    /// Shared score-update path. On a low-water crossing, every image the
+    /// peer currently holds is enqueued for repair attention *before* any
+    /// detector declares it dead — the sweep then re-sizes those images
+    /// against the degraded holder set.
+    fn rel_update(&mut self, peer: PeerId, lifetime: Option<f64>) -> Option<(f64, usize)> {
+        let rel = self.rel.as_mut()?;
+        let crossed = match lifetime {
+            Some(l) => rel.observe(peer, l),
+            None => rel.penalize(peer),
+        };
+        if !crossed {
+            return None;
+        }
+        self.low_water_events += 1;
+        let score = self.rel.as_ref().expect("table just updated").effective(peer);
+        let mut queued = 0usize;
+        if self.spec.peer_hosted() {
+            if let Some(held) = self.holder_index.get(peer) {
+                for key in held.keys() {
+                    if self.dirty.insert(*key) {
+                        queued += 1;
+                    }
+                }
+            }
+        }
+        self.preemptive_repairs += queued as u64;
+        Some((score, queued))
+    }
+
+    /// Map a mean reliability score onto `min..=max`: the neutral prior
+    /// sizes near the midpoint, flaky holder sets push toward `max`,
+    /// proven holders toward `min`.
+    fn auto_degree(min: usize, max: usize, mean_score: f64) -> usize {
+        let span = max.saturating_sub(min) as f64;
+        let extra = ((1.0 - mean_score).clamp(0.0, 1.0) * span).round() as usize;
+        (min + extra).min(max)
+    }
+
+    /// Trust-resolved degree at put time: mean effective score over the
+    /// placement candidate set (neutral without a table — the axis-off
+    /// midpoint behaviour documented on [`StorageSpec::ReplicateAuto`]).
+    fn auto_put_degree(&mut self, overlay: &Overlay, key: u64, min: usize, max: usize) -> usize {
+        let mut cands = std::mem::take(&mut self.scratch.cands);
+        candidates_into(overlay, key, max.max(1), &mut cands);
+        let mean = match &self.rel {
+            Some(rel) => rel.mean_effective(&cands),
+            None => 0.5,
+        };
+        self.scratch.cands = cands;
+        Self::auto_degree(min, max, mean)
+    }
+
+    /// Trust-resolved degree at repair time: mean effective score over
+    /// the image's currently-online holders (neutral when none survive —
+    /// the sweep then rebuilds from candidates at the midpoint degree).
+    fn auto_repair_degree(
+        rel: Option<&ReliabilityTable>,
+        si: &StoredImage,
+        overlay: &Overlay,
+        min: usize,
+        max: usize,
+    ) -> usize {
+        let mean = match (rel, si.placement.holders.first()) {
+            (Some(rel), Some(holders)) => {
+                let mut sum = 0.0;
+                let mut n = 0usize;
+                for h in holders {
+                    if let Endpoint::Peer(p) = h {
+                        if overlay.is_online(*p) {
+                            sum += rel.effective(*p);
+                            n += 1;
+                        }
+                    }
+                }
+                if n == 0 {
+                    0.5
+                } else {
+                    sum / n as f64
+                }
+            }
+            _ => 0.5,
+        };
+        Self::auto_degree(min, max, mean)
     }
 
     // ------------------------------------------------------- accounting
@@ -292,6 +431,9 @@ impl DataPlane {
         }
         if self.holder_index.len() < n_peers {
             self.holder_index.resize_with(n_peers, BTreeMap::new);
+        }
+        if let Some(rel) = &mut self.rel {
+            rel.reserve(n_peers);
         }
         self.sched.reserve(n_peers);
     }
@@ -503,8 +645,16 @@ impl DataPlane {
         img: CheckpointImage,
     ) -> Option<f64> {
         self.sync_churn(overlay);
-        let chunks = chunk_image(&img, self.chunk_bytes, &self.spec);
-        let mut placement = place_chunks(overlay, img.key(), &chunks, &self.spec)?;
+        // Resolve the trust-sized degree against the candidate holders'
+        // scores before chunking/placing; every other spec passes through.
+        let spec_eff = match self.spec {
+            StorageSpec::ReplicateAuto { min, max } => StorageSpec::Replicate {
+                replicas: self.auto_put_degree(overlay, img.key(), min, max),
+            },
+            spec => spec,
+        };
+        let chunks = chunk_image(&img, self.chunk_bytes, &spec_eff);
+        let mut placement = place_chunks(overlay, img.key(), &chunks, &spec_eff)?;
         // Replacing an existing (job, seq): reclaim its copies first.
         self.drop_image(img.job, img.seq);
         let src = Endpoint::Peer(uploader);
@@ -537,7 +687,7 @@ impl DataPlane {
                 }
             }
         }
-        let live = LiveState::build(&self.spec, overlay, &chunks, &placement);
+        let live = LiveState::build(&spec_eff, overlay, &chunks, &placement);
         // A birth-under-replicated image (overlay smaller than the
         // replica degree, or copies lost to the fault plane) needs
         // periodic top-up attempts, exactly like the rescan gave it.
@@ -645,6 +795,13 @@ impl DataPlane {
                 let want = (*replicas).max(1) as u32;
                 live.online.iter().any(|&c| c > 0 && c < want)
             }
+            // The floor degree is the hard promise; the trust-resolved
+            // degree above it is re-examined on the next score/churn
+            // event anyway.
+            StorageSpec::ReplicateAuto { min, .. } => {
+                let want = (*min).max(1) as u32;
+                live.online.iter().any(|&c| c > 0 && c < want)
+            }
             _ => false,
         }
     }
@@ -691,10 +848,20 @@ impl DataPlane {
         // still has work outstanding, so it must stay on the dirty queue
         // even when the usual retry predicate would drop it.
         let mut fault_aborted = false;
+        // Replicate and trust-sized replicate share one top-up body; the
+        // auto spec just resolves its degree from the surviving holders'
+        // scores first.
+        let replicate_degree = match self.spec {
+            StorageSpec::Replicate { replicas } => Some(replicas.max(1)),
+            StorageSpec::ReplicateAuto { min, max } => {
+                Some(Self::auto_repair_degree(self.rel.as_ref(), &si, overlay, min, max))
+            }
+            _ => None,
+        };
         match self.spec {
             StorageSpec::Server => {}
-            StorageSpec::Replicate { replicas } => {
-                let replicas = replicas.max(1);
+            StorageSpec::Replicate { .. } | StorageSpec::ReplicateAuto { .. } => {
+                let replicas = replicate_degree.unwrap_or(1);
                 candidates_into(overlay, si.image.key(), replicas * 2 + 2, &mut scratch.cands);
                 for i in 0..si.chunks.len() {
                     let bytes = si.chunks[i].bytes;
@@ -963,6 +1130,22 @@ impl DataPlane {
         m.set("dataplane.transfer_aborts", c.transfer_aborts as f64);
         m.set("dataplane.stored_bytes", self.total_stored_bytes());
         m.set("dataplane.server_stored_bytes", self.server_stored_bytes());
+        m.set("dataplane.linkspeed_fallbacks", c.linkspeed_fallbacks as f64);
+        self.publish_reliability_metrics(m);
+    }
+
+    /// Reliability-score metrics. A strict no-op when the axis is off, so
+    /// `reliability:off` metrics JSON stays byte-identical to the
+    /// pre-axis tree (the off-pin determinism test relies on this).
+    pub fn publish_reliability_metrics(&self, m: &mut Metrics) {
+        let Some(rel) = &self.rel else {
+            return;
+        };
+        m.set("dataplane.preemptive_repairs", self.preemptive_repairs as f64);
+        m.set("reliability.low_water_events", self.low_water_events as f64);
+        m.set("reliability.scored_peers", rel.scored_peers() as f64);
+        m.set("reliability.low_water_peers", rel.low_water_peers() as f64);
+        m.set("reliability.mean_score", rel.mean_scored());
     }
 }
 
@@ -1136,6 +1319,86 @@ mod tests {
         // Seq 3 rots away: latest falls back to seq 2.
         dp.images.get_mut(&(1, 3)).unwrap().image.progress = 1e9;
         assert_eq!(dp.latest(&o, 1).unwrap().seq, 2);
+    }
+
+    #[test]
+    fn auto_degree_tracks_mean_score() {
+        // Flaky sets push to MAX, proven sets to MIN, neutral lands above
+        // the midpoint (round-half-up on the extra replicas).
+        assert_eq!(DataPlane::auto_degree(2, 5, 0.0), 5);
+        assert_eq!(DataPlane::auto_degree(2, 5, 0.5), 4);
+        assert_eq!(DataPlane::auto_degree(2, 5, 1.0), 2);
+        assert_eq!(DataPlane::auto_degree(3, 3, 0.0), 3, "degenerate range");
+        assert_eq!(DataPlane::auto_degree(2, 5, -7.0), 5, "score clamped");
+    }
+
+    #[test]
+    fn auto_put_sizes_replication_from_candidate_scores() {
+        let (o, links) = world(30);
+        let mut dp = DataPlane::new(StorageSpec::ReplicateAuto { min: 2, max: 5 });
+        dp.set_reliability(ReliabilitySpec::Window { window: 8, decay: 0.5 });
+        // Every peer penalized well below the low-water mark: the put
+        // must size to the MAX degree.
+        for p in 0..30 {
+            for _ in 0..8 {
+                dp.suspect_reliability(p);
+            }
+        }
+        dp.put(0.0, &o, &links, 0, CheckpointImage::new(1, 1, 0.0, 4e6)).unwrap();
+        assert_eq!(dp.live_holders(&o, 1, 1), 5, "flaky candidates get max degree");
+        audit_ok(&dp);
+    }
+
+    #[test]
+    fn reliable_holders_shrink_degree_and_low_water_queues_preemptive_repair() {
+        let (o, links) = world(30);
+        let mut dp = DataPlane::new(StorageSpec::ReplicateAuto { min: 2, max: 5 });
+        dp.set_reliability(ReliabilitySpec::Window { window: 8, decay: 0.5 });
+        for p in 0..30 {
+            for _ in 0..8 {
+                dp.observe_reliability(p, 10.0 * 7200.0);
+            }
+        }
+        dp.put(0.0, &o, &links, 0, CheckpointImage::new(1, 1, 0.0, 4e6)).unwrap();
+        assert_eq!(dp.live_holders(&o, 1, 1), 2, "trusted holders need only the floor");
+        assert_eq!(dp.dirty_len(), 0);
+        // One holder's score collapses: its image queues for preemptive
+        // re-replication before any churn event, exactly once.
+        let holder = (0..o.len()).find(|&p| dp.stored_bytes(p) > 0.0).unwrap();
+        let mut crossing = None;
+        for _ in 0..32 {
+            if let Some(c) = dp.suspect_reliability(holder) {
+                crossing = Some(c);
+                break;
+            }
+        }
+        let (score, queued) = crossing.expect("score must cross the low-water mark");
+        assert!(score < crate::policy::reliability::LOW_WATER, "{score}");
+        assert_eq!(queued, 1);
+        assert_eq!(dp.dirty_len(), 1);
+        assert_eq!(dp.preemptive_repairs(), 1);
+        assert_eq!(dp.low_water_events(), 1);
+        // The sweep tops the image up against the degraded holder set
+        // (degree recomputed from the surviving holders' scores).
+        let restored = dp.repair_sweep(1.0, &o, &links);
+        assert!(restored > 0, "preemptive repair must add copies");
+        assert!(dp.live_holders(&o, 1, 1) > 2);
+        audit_ok(&dp);
+    }
+
+    #[test]
+    fn reliability_off_feeds_are_inert() {
+        let (o, links) = world(20);
+        let mut dp = DataPlane::new(StorageSpec::Replicate { replicas: 3 });
+        dp.put(0.0, &o, &links, 0, CheckpointImage::new(1, 1, 0.0, 4e6)).unwrap();
+        assert!(dp.reliability().is_none());
+        for _ in 0..64 {
+            assert!(dp.suspect_reliability(0).is_none());
+            assert!(dp.observe_reliability(1, 5.0).is_none());
+        }
+        assert_eq!(dp.dirty_len(), 0, "off axis must never enqueue repairs");
+        assert_eq!(dp.low_water_events(), 0);
+        assert_eq!(dp.preemptive_repairs(), 0);
     }
 
     #[test]

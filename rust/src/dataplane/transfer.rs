@@ -43,6 +43,10 @@ pub struct IoCounters {
     pub transfer_retries: u64,
     /// Transfers that exhausted their retry budget and were abandoned.
     pub transfer_aborts: u64,
+    /// Transfers charged at the model-median fallback rate because the
+    /// endpoint had no sampled `LinkSpeed` (a misconfiguration signal —
+    /// surfaced in metrics JSON as `dataplane.linkspeed_fallbacks`).
+    pub linkspeed_fallbacks: u64,
 }
 
 impl IoCounters {
@@ -115,7 +119,7 @@ impl TransferScheduler {
         }
     }
 
-    fn src_rate(&self, src: Endpoint, links: &[LinkSpeed]) -> f64 {
+    fn src_rate(&mut self, src: Endpoint, links: &[LinkSpeed]) -> f64 {
         match src {
             Endpoint::Server => self.server_bps,
             Endpoint::Peer(p) => match links.get(p) {
@@ -125,21 +129,33 @@ impl TransferScheduler {
                     // populations are sized to the overlay); fall back to
                     // the model's median peer uplink rather than the old
                     // silent 1 B/s, which made the transfer look ~infinite.
-                    debug_assert!(false, "no LinkSpeed for source peer {p}");
-                    BandwidthModel::default().up_median
+                    let fallback = BandwidthModel::default().up_median;
+                    debug_assert!(
+                        false,
+                        "no LinkSpeed for source peer {p}; charging model median uplink \
+                         {fallback} B/s"
+                    );
+                    self.counters.linkspeed_fallbacks += 1;
+                    fallback
                 }
             },
         }
     }
 
-    fn dst_rate(&self, dst: Endpoint, links: &[LinkSpeed]) -> f64 {
+    fn dst_rate(&mut self, dst: Endpoint, links: &[LinkSpeed]) -> f64 {
         match dst {
             Endpoint::Server => self.server_bps,
             Endpoint::Peer(p) => match links.get(p) {
                 Some(l) => l.down_bps,
                 None => {
-                    debug_assert!(false, "no LinkSpeed for destination peer {p}");
-                    BandwidthModel::default().down_median
+                    let fallback = BandwidthModel::default().down_median;
+                    debug_assert!(
+                        false,
+                        "no LinkSpeed for destination peer {p}; charging model median \
+                         downlink {fallback} B/s"
+                    );
+                    self.counters.linkspeed_fallbacks += 1;
+                    fallback
                 }
             },
         }
@@ -302,6 +318,7 @@ mod tests {
             .transfer(0.0, Endpoint::Peer(9), Endpoint::Server, 125_000.0, &links(), false)
             .unwrap();
         assert!((t - 1.0).abs() < 1e-9, "{t}");
+        assert_eq!(s.counters.linkspeed_fallbacks, 1, "fallback must be metered");
     }
 
     #[test]

@@ -213,6 +213,39 @@ mod tests {
     }
 
     #[test]
+    fn reset_reuse_is_byte_identical_to_fresh() {
+        // Same discipline as the WindowEstimator scratch contract:
+        // reset() + N observes must be bit-for-bit a fresh estimator fed
+        // the same N observes — boundaries, weights, and rate included.
+        let mut rng = Pcg64::new(74, 0);
+        let mut reused = CategorizedEstimator::new(64);
+        for _ in 0..500 {
+            reused.observe(rng.exp(1.0 / 900.0));
+        }
+        reused.reset();
+        let mut fresh = CategorizedEstimator::new(64);
+        let mut replay = Pcg64::new(75, 0);
+        for _ in 0..300 {
+            let x = replay.exp(1.0 / 4000.0);
+            reused.observe(x);
+            fresh.observe(x);
+        }
+        assert_eq!(
+            reused.rate().map(f64::to_bits),
+            fresh.rate().map(f64::to_bits),
+            "pooled rate must be bit-identical"
+        );
+        assert_eq!(reused.boundaries(), fresh.boundaries());
+        assert_eq!(reused.counts, fresh.counts);
+        assert_eq!(reused.n_observed(), fresh.n_observed());
+        let (rw, fw) = (reused.weights(), fresh.weights());
+        assert_eq!(
+            rw.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            fw.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
     fn needs_data_before_answering() {
         let mut c = CategorizedEstimator::new(64);
         assert!(c.rate().is_none());

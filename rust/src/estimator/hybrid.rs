@@ -174,6 +174,33 @@ mod tests {
     }
 
     #[test]
+    fn reset_reuse_is_byte_identical_to_fresh() {
+        // reset() keeps the prior (configuration) and drops the evidence:
+        // a reused estimator must be bit-for-bit a fresh one afterwards.
+        let mut rng = Pcg64::new(65, 0);
+        let mut reused = HybridEstimator::from_history(1.0 / 7200.0, 16.0, 64);
+        for _ in 0..200 {
+            reused.observe(rng.exp(1.0 / 1200.0));
+        }
+        reused.reset();
+        let mut fresh = HybridEstimator::from_history(1.0 / 7200.0, 16.0, 64);
+        assert_eq!(reused.rate().map(f64::to_bits), fresh.rate().map(f64::to_bits));
+        let mut replay = Pcg64::new(66, 0);
+        for _ in 0..120 {
+            let x = replay.exp(1.0 / 3000.0);
+            reused.observe(x);
+            fresh.observe(x);
+        }
+        assert_eq!(
+            reused.rate().map(f64::to_bits),
+            fresh.rate().map(f64::to_bits),
+            "posterior must be bit-identical after reuse"
+        );
+        assert_eq!(reused.effective_n().to_bits(), fresh.effective_n().to_bits());
+        assert_eq!(reused.n_observed(), fresh.n_observed());
+    }
+
+    #[test]
     fn window_keeps_it_adaptive() {
         // Rate doubles: the windowed likelihood tracks it like the MLE.
         let mut rng = Pcg64::new(64, 0);

@@ -67,6 +67,9 @@ pub enum EstimatorSpec {
     /// Section 3.1.4 piggyback scheme: `fanout` local MLE views averaged
     /// through a [`gossip::GossipAggregator`] into a global estimate.
     Gossip { fanout: usize },
+    /// Tian–Dai \[22\] category-stratified MLE: per-tertile windows whose
+    /// pooled rate tracks mixed (heavy-tail) populations.
+    Categorized,
 }
 
 impl Default for EstimatorSpec {
@@ -220,6 +223,9 @@ pub fn build_window_estimator(spec: &EstimatorSpec, window: usize) -> Box<dyn Wi
         EstimatorSpec::Gossip { fanout } => {
             Box::new(RateWindow::new(gossip::GossipEstimator::new(*fanout, window)))
         }
+        EstimatorSpec::Categorized => {
+            Box::new(RateWindow::new(categorized::CategorizedEstimator::new(window)))
+        }
     }
 }
 
@@ -248,6 +254,7 @@ mod tests {
             EstimatorSpec::Count,
             EstimatorSpec::Hybrid { mean: 7200.0, confidence: 16.0 },
             EstimatorSpec::Gossip { fanout: 4 },
+            EstimatorSpec::Categorized,
         ] {
             let mut reused = build_window_estimator(&spec, 16);
             for i in 0..40 {
@@ -291,6 +298,7 @@ mod tests {
             EstimatorSpec::Count,
             EstimatorSpec::Hybrid { mean: 7200.0, confidence: 16.0 },
             EstimatorSpec::Gossip { fanout: 4 },
+            EstimatorSpec::Categorized,
         ] {
             let mut e = build_window_estimator(&spec, 32);
             for _ in 0..32 {

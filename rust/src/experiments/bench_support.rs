@@ -71,6 +71,15 @@ pub fn is_quick() -> bool {
     wall_clock::cli_flag("--quick") || wall_clock::env_flag("P2PCP_BENCH_QUICK")
 }
 
+/// Is this perf JSON a committed stub — a doc with no real `*_per_s`
+/// measurements? The repo ships a stub `BENCH_perf_sim.json` so the
+/// trajectory file has a stable path before the first full-tier run is
+/// committed; `perf_sim --check` detects it explicitly and announces that
+/// the comparison was skipped instead of warning vaguely.
+pub fn is_stub_baseline(j: &Json) -> bool {
+    count_rate_keys(j) == 0
+}
+
 /// Compare a freshly measured perf JSON doc against a committed baseline
 /// (`perf_sim --check BENCH_perf_sim.json`). Only throughput keys — numeric
 /// fields ending `_per_s` — present in *both* docs are compared; a
@@ -239,5 +248,14 @@ mod tests {
         let warns = compare_perf_json(&perf_doc(1.0, 1.0), &stub, 0.25);
         assert_eq!(warns.len(), 1);
         assert!(warns[0].contains("stub baseline"), "{}", warns[0]);
+    }
+
+    #[test]
+    fn stub_detection_matches_rate_key_presence() {
+        assert!(is_stub_baseline(&Json::obj(vec![(
+            "bench",
+            Json::Str("perf_sim".into())
+        )])));
+        assert!(!is_stub_baseline(&perf_doc(1.0, 1.0)));
     }
 }

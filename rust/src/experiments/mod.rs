@@ -7,12 +7,15 @@
 //!   analysis (Fig. 2(a)/(b)).
 //! * [`server_offload`] — the Fig. 1 motivation: server bytes/s under
 //!   `server` vs `replicate:*` vs `erasure:*` checkpoint storage.
+//! * [`reliability`] — trust-sized `replicate:auto` vs flat `replicate:K`
+//!   placement under heavy-tail churn (the `ext_reliability` table).
 //! * [`bench_support`] — timing + reporting helpers for the harness-less
 //!   benches (criterion is not in the offline crate cache).
 
 pub mod bench_support;
 pub mod fig2;
 pub mod relative_runtime;
+pub mod reliability;
 pub mod server_offload;
 
 pub use relative_runtime::{run_comparison, ComparisonConfig, ComparisonRow};

@@ -1,0 +1,492 @@
+//! The reliability-placement experiment (`ext_reliability`): trust-sized
+//! `replicate:auto` vs flat `replicate:K` under heavy-tail churn.
+//!
+//! The population is a deterministic two-class mixture — a flaky minority
+//! with short sessions and a stable majority — the regime where a flat
+//! replication degree is wrong in both directions at once: too little
+//! redundancy on flaky holder sets (images die, restores fall back to the
+//! work pool server) and too much on stable ones (wasted peer bytes).
+//! The sweep measures, per cell, server bytes/s, restore success, the
+//! server-fallback count (each one a full image re-upload the P2P layer
+//! failed to absorb), and a job-runtime penalty (lost recompute work plus
+//! restore latency) — the "job runtime" axis of the comparison.
+//!
+//! Determinism contract (same as [`super::server_offload`]): every cell is
+//! a pure function of `(config, cell, index)` seeded by
+//! `(seed + index, index)`, rows are assembled in canonical cell order, so
+//! the CSV is byte-identical for any `--threads` count.
+
+use crate::dataplane::{
+    DataPlane, Endpoint, StorageSpec, DEFAULT_CHUNK_BYTES, DEFAULT_SERVER_BPS,
+};
+use crate::net::bandwidth::BandwidthModel;
+use crate::net::overlay::Overlay;
+use crate::policy::reliability::ReliabilitySpec;
+use crate::scenario::registry;
+use crate::util::csv::Table;
+use crate::util::rng::Pcg64;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Sweep configuration: overlay sizes × placement strategies over one
+/// two-class churn mixture.
+#[derive(Debug, Clone)]
+pub struct ReliabilityConfig {
+    /// Overlay sizes to sweep.
+    pub peer_counts: Vec<usize>,
+    /// Checkpoint image size (bytes).
+    pub image_bytes: f64,
+    /// Flat baseline degree (`replicate:K`).
+    pub flat_replicas: usize,
+    /// Trust-sized degree bounds (`replicate:auto:MIN:MAX`).
+    pub auto_min: usize,
+    pub auto_max: usize,
+    /// Score axis for the auto cells (must be enabled).
+    pub reliability: ReliabilitySpec,
+    /// Peers per job (jobs = peers / k, disjoint member ranges).
+    pub k: usize,
+    /// Seconds between checkpoints of each job.
+    pub checkpoint_period: f64,
+    /// Simulated horizon (seconds).
+    pub horizon: f64,
+    /// Churn/bookkeeping step (seconds).
+    pub step: f64,
+    /// Fraction of peers in the flaky class (percent, 0..=100).
+    pub flaky_pct: usize,
+    /// Exponential session MTBF of the flaky class (seconds).
+    pub flaky_mtbf: f64,
+    /// Exponential session MTBF of the stable class (seconds).
+    pub stable_mtbf: f64,
+    /// Mean offline time before rejoin (seconds).
+    pub rejoin_mean: f64,
+    /// Work pool server NIC capacity (bytes/s).
+    pub server_bps: f64,
+    /// Base RNG seed (cell index is mixed in per cell).
+    pub seed: u64,
+}
+
+impl Default for ReliabilityConfig {
+    fn default() -> Self {
+        ReliabilityConfig {
+            peer_counts: vec![120, 240],
+            image_bytes: 8e6,
+            flat_replicas: 3,
+            auto_min: 2,
+            auto_max: 5,
+            reliability: ReliabilitySpec::Window { window: 8, decay: 0.5 },
+            k: 12,
+            checkpoint_period: 600.0,
+            horizon: 4.0 * 3600.0,
+            step: 60.0,
+            flaky_pct: 40,
+            flaky_mtbf: 500.0,
+            stable_mtbf: 10_800.0,
+            rejoin_mean: 600.0,
+            server_bps: DEFAULT_SERVER_BPS,
+            seed: 5,
+        }
+    }
+}
+
+/// Placement strategy under comparison.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// Flat `replicate:K`, reliability scoring off.
+    Flat,
+    /// `replicate:auto:MIN:MAX` driven by the reliability table.
+    Auto,
+}
+
+/// One cell of the sweep.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReliabilityCell {
+    pub peers: usize,
+    pub strategy: Strategy,
+}
+
+/// Per-cell measurements.
+#[derive(Debug, Clone)]
+pub struct ReliabilityRow {
+    pub cell: ReliabilityCell,
+    pub checkpoints: u64,
+    pub restores: u64,
+    pub restore_success_frac: f64,
+    /// Bytes/second that transited the work pool server (in + out).
+    pub server_bytes_per_s: f64,
+    /// Bytes/second carried by peer links (in + out).
+    pub peer_bytes_per_s: f64,
+    /// Repair-traffic bytes/second.
+    pub repair_bytes_per_s: f64,
+    /// Restores the P2P layer could not serve; each one re-pulled the
+    /// full image from the server (the offload-defeat signal).
+    pub server_fallbacks: u64,
+    /// Dirty-queue entries enqueued by low-water score crossings.
+    pub preemptive_repairs: u64,
+    /// Low-water crossings observed.
+    pub low_water_events: u64,
+    /// Mean live replication degree over the stored images at the end.
+    pub mean_replicas: f64,
+    /// Lost recompute work + restore/fallback latency, summed over the
+    /// run (the job-runtime penalty of member failures).
+    pub runtime_penalty_s: f64,
+}
+
+/// Materialize the sweep cells in canonical order (peers-major, flat
+/// before auto).
+pub fn cells(cfg: &ReliabilityConfig) -> Vec<ReliabilityCell> {
+    let mut out = Vec::new();
+    for &peers in &cfg.peer_counts {
+        for strategy in [Strategy::Flat, Strategy::Auto] {
+            out.push(ReliabilityCell { peers, strategy });
+        }
+    }
+    out
+}
+
+/// Is peer `p` in the flaky class? Deterministic hash split so the class
+/// assignment is identical for both strategies of a peer count.
+fn is_flaky(p: usize, pct: usize) -> bool {
+    (p.wrapping_mul(31).wrapping_add(7)) % 100 < pct
+}
+
+/// Simulate one cell. Pure function of `(cfg, cell, index)`.
+pub fn run_cell(cfg: &ReliabilityConfig, cell: &ReliabilityCell, index: usize) -> ReliabilityRow {
+    let mut rng = Pcg64::new(cfg.seed.wrapping_add(index as u64), index as u64);
+    let mut overlay = Overlay::new(cell.peers, &mut rng);
+    let links = BandwidthModel::default().sample_population(cell.peers, &mut rng);
+    let (storage, rel) = match cell.strategy {
+        Strategy::Flat => (
+            StorageSpec::Replicate { replicas: cfg.flat_replicas.max(1) },
+            ReliabilitySpec::Off,
+        ),
+        Strategy::Auto => (
+            StorageSpec::ReplicateAuto { min: cfg.auto_min, max: cfg.auto_max },
+            cfg.reliability,
+        ),
+    };
+    let mut dp = DataPlane::with_config(storage, DEFAULT_CHUNK_BYTES, cfg.server_bps);
+    dp.set_reliability(rel);
+    dp.reserve_peers(cell.peers);
+
+    let jobs = (cell.peers / cfg.k).max(1);
+    let mut seq = vec![0u64; jobs];
+    let mut last_ckpt = vec![0.0f64; jobs];
+    let mut checkpoints = 0u64;
+    let mut restores_attempted = 0u64;
+    let mut restores_ok = 0u64;
+    let mut server_fallbacks = 0u64;
+    let mut runtime_penalty = 0.0f64;
+
+    let steps = (cfg.horizon / cfg.step).ceil() as usize;
+    let period_steps = ((cfg.checkpoint_period / cfg.step).round() as usize).max(1);
+    for s in 1..=steps {
+        let t = s as f64 * cfg.step;
+        // Two-class memoryless churn; every departure feeds the observed
+        // lifetime to the reliability table (a no-op for the flat cells).
+        let mut departed: Vec<usize> = Vec::new();
+        for p in 0..cell.peers {
+            let mtbf = if is_flaky(p, cfg.flaky_pct) { cfg.flaky_mtbf } else { cfg.stable_mtbf };
+            if overlay.is_online(p) {
+                if rng.next_f64() < cfg.step / mtbf {
+                    let lifetime = overlay.depart(p, t);
+                    // The low-water crossing (if any) queues dirty images
+                    // inside the call; the sweep below services them.
+                    let _ = dp.observe_reliability(p, lifetime);
+                    departed.push(p);
+                }
+            } else if rng.next_f64() < cfg.step / cfg.rejoin_mean {
+                overlay.join(p, t);
+            }
+        }
+        // Maintenance: churn-driven repair plus (auto cells) the
+        // preemptive low-water re-replication queued above.
+        dp.repair_sweep(t, &overlay, &links);
+        overlay.compact_churn(dp.churn_cursor());
+        // A departed member forces its job to re-fetch the latest
+        // checkpoint and re-run the work since it was taken.
+        for &p in &departed {
+            let j = p / cfg.k;
+            if j >= jobs || seq[j] == 0 {
+                continue;
+            }
+            restores_attempted += 1;
+            runtime_penalty += t - last_ckpt[j];
+            let members = j * cfg.k..((j + 1) * cfg.k).min(cell.peers);
+            let Some(d) = members.clone().find(|&m| overlay.is_online(m)) else {
+                continue;
+            };
+            // Collapse the restore result to its completion time so the
+            // image borrow ends before the server-fallback path below.
+            let served = dp.restore(t, &overlay, &links, d, j).map(|(_, done)| done);
+            match served {
+                Some(done) => {
+                    restores_ok += 1;
+                    runtime_penalty += done - t;
+                }
+                None => {
+                    // The P2P copies are gone: pull the full image back
+                    // from the work pool server (the cost flat placement
+                    // pays for under-replicating flaky holder sets).
+                    server_fallbacks += 1;
+                    if let Some(done) = dp.sched.transfer(
+                        t,
+                        Endpoint::Server,
+                        Endpoint::Peer(d),
+                        cfg.image_bytes,
+                        &links,
+                        false,
+                    ) {
+                        runtime_penalty += done - t;
+                    }
+                }
+            }
+        }
+        // Checkpoint commits on the period boundary.
+        if s % period_steps == 0 {
+            for (j, seq_j) in seq.iter_mut().enumerate() {
+                let members = j * cfg.k..((j + 1) * cfg.k).min(cell.peers);
+                let Some(uploader) = members.clone().find(|&m| overlay.is_online(m)) else {
+                    continue;
+                };
+                *seq_j += 1;
+                let img =
+                    crate::storage::image::CheckpointImage::new(j, *seq_j, t, cfg.image_bytes);
+                if dp.put(t, &overlay, &links, uploader, img).is_some() {
+                    checkpoints += 1;
+                    last_ckpt[j] = t;
+                    dp.gc(j, seq_j.saturating_sub(1));
+                } else {
+                    *seq_j -= 1;
+                }
+            }
+        }
+    }
+
+    // Accounting sanity: the data-plane must be byte-conserving.
+    let (incremental, recomputed) = dp.audit();
+    assert!(
+        (incremental - recomputed).abs() <= 1e-6 * recomputed.max(1.0),
+        "byte-conservation violated in cell {index}: {incremental} vs {recomputed}"
+    );
+
+    let keys = dp.image_keys();
+    let mean_replicas = if keys.is_empty() {
+        0.0
+    } else {
+        keys.iter().map(|&(j, q)| dp.live_holders(&overlay, j, q) as f64).sum::<f64>()
+            / keys.len() as f64
+    };
+    let c = dp.counters();
+    ReliabilityRow {
+        cell: *cell,
+        checkpoints,
+        restores: restores_attempted,
+        restore_success_frac: restores_ok as f64 / restores_attempted.max(1) as f64,
+        server_bytes_per_s: c.server_bytes() / cfg.horizon,
+        peer_bytes_per_s: c.peer_bytes() / cfg.horizon,
+        repair_bytes_per_s: c.repair_bytes / cfg.horizon,
+        server_fallbacks,
+        preemptive_repairs: dp.preemptive_repairs(),
+        low_water_events: dp.low_water_events(),
+        mean_replicas,
+        runtime_penalty_s: runtime_penalty,
+    }
+}
+
+/// Run the sweep across `threads` workers; rows come back in canonical
+/// cell order for any thread count.
+pub fn run_sweep(cfg: &ReliabilityConfig, threads: usize) -> Vec<ReliabilityRow> {
+    let cells = cells(cfg);
+    if cells.is_empty() {
+        return Vec::new();
+    }
+    let workers = threads.max(1).min(cells.len());
+    if workers <= 1 {
+        return cells.iter().enumerate().map(|(i, c)| run_cell(cfg, c, i)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<ReliabilityRow>>> =
+        cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let row = run_cell(cfg, &cells[i], i);
+                *slots[i].lock().expect("reliability slot poisoned") = Some(row);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().expect("reliability slot poisoned").expect("cell never ran"))
+        .collect()
+}
+
+/// The storage key a cell's strategy resolves to (for reports).
+pub fn strategy_key(cfg: &ReliabilityConfig, strategy: Strategy) -> String {
+    match strategy {
+        Strategy::Flat => {
+            registry::storage_key(&StorageSpec::Replicate { replicas: cfg.flat_replicas.max(1) })
+        }
+        Strategy::Auto => registry::storage_key(&StorageSpec::ReplicateAuto {
+            min: cfg.auto_min,
+            max: cfg.auto_max,
+        }),
+    }
+}
+
+/// Render rows as the `ext_reliability.csv` table (row order == cell
+/// order).
+pub fn to_table(cfg: &ReliabilityConfig, rows: &[ReliabilityRow]) -> Table {
+    let mut t = Table::new(&[
+        "peers",
+        "storage",
+        "checkpoints",
+        "restores",
+        "restore_success_frac",
+        "server_bytes_per_s",
+        "peer_bytes_per_s",
+        "repair_bytes_per_s",
+        "server_fallbacks",
+        "preemptive_repairs",
+        "low_water_events",
+        "mean_replicas",
+        "runtime_penalty_s",
+    ]);
+    for r in rows {
+        t.push(vec![
+            r.cell.peers.to_string(),
+            strategy_key(cfg, r.cell.strategy),
+            r.checkpoints.to_string(),
+            r.restores.to_string(),
+            format!("{:.6}", r.restore_success_frac),
+            format!("{:.6}", r.server_bytes_per_s),
+            format!("{:.6}", r.peer_bytes_per_s),
+            format!("{:.6}", r.repair_bytes_per_s),
+            r.server_fallbacks.to_string(),
+            r.preemptive_repairs.to_string(),
+            r.low_water_events.to_string(),
+            format!("{:.6}", r.mean_replicas),
+            format!("{:.6}", r.runtime_penalty_s),
+        ]);
+    }
+    t
+}
+
+/// Human-readable summary: one line per auto row with its ratios against
+/// the flat baseline of the same peer count (rows come in flat/auto
+/// pairs per [`cells`]).
+pub fn summarize(cfg: &ReliabilityConfig, rows: &[ReliabilityRow]) -> Vec<String> {
+    let mut lines = Vec::new();
+    for pair in rows.chunks(2) {
+        let [flat, auto] = pair else { continue };
+        if flat.cell.strategy != Strategy::Flat || auto.cell.strategy != Strategy::Auto {
+            continue;
+        }
+        lines.push(format!(
+            "peers={:>4} {:<18} vs {:<12} server {:>9.0} B/s (x{:.2})  fallbacks {:>4} vs \
+             {:>4}  restore ok {:.3} vs {:.3}  penalty {:>8.0} s (x{:.2})  preemptive {:>4}",
+            auto.cell.peers,
+            strategy_key(cfg, Strategy::Auto),
+            strategy_key(cfg, Strategy::Flat),
+            auto.server_bytes_per_s,
+            auto.server_bytes_per_s / flat.server_bytes_per_s.max(1e-9),
+            auto.server_fallbacks,
+            flat.server_fallbacks,
+            auto.restore_success_frac,
+            flat.restore_success_frac,
+            auto.runtime_penalty_s,
+            auto.runtime_penalty_s / flat.runtime_penalty_s.max(1e-9),
+            auto.preemptive_repairs,
+        ));
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ReliabilityConfig {
+        ReliabilityConfig {
+            peer_counts: vec![96],
+            horizon: 2.0 * 3600.0,
+            ..ReliabilityConfig::default()
+        }
+    }
+
+    #[test]
+    fn canonical_cell_order() {
+        let cs = cells(&ReliabilityConfig::default());
+        assert_eq!(cs.len(), 4);
+        assert_eq!(cs[0], ReliabilityCell { peers: 120, strategy: Strategy::Flat });
+        assert_eq!(cs[1], ReliabilityCell { peers: 120, strategy: Strategy::Auto });
+        assert_eq!(cs[2].peers, 240);
+    }
+
+    #[test]
+    fn flaky_class_is_a_deterministic_minority() {
+        let n = (0..1000).filter(|&p| is_flaky(p, 40)).count();
+        assert!((300..=500).contains(&n), "flaky count {n}");
+        assert!(!is_flaky(0, 0));
+        assert!(is_flaky(0, 100));
+    }
+
+    #[test]
+    fn scoring_fires_only_on_auto_cells() {
+        let rows = run_sweep(&tiny(), 1);
+        assert_eq!(rows.len(), 2);
+        let (flat, auto) = (&rows[0], &rows[1]);
+        assert!(flat.checkpoints > 0 && auto.checkpoints > 0);
+        assert_eq!(flat.low_water_events, 0, "scoring must be off for flat cells");
+        assert_eq!(flat.preemptive_repairs, 0);
+        assert!(
+            auto.low_water_events > 0,
+            "flaky peers at mtbf {} must cross the low-water mark",
+            tiny().flaky_mtbf
+        );
+        assert!(auto.mean_replicas > 0.0);
+    }
+
+    #[test]
+    fn auto_placement_beats_flat_on_fallbacks() {
+        // The headline comparison: trust-sized redundancy should absorb
+        // more restores in the P2P layer than a flat degree under a
+        // heavy-tail mixture (fewer full-image server fallbacks).
+        let rows = run_sweep(&tiny(), 1);
+        let (flat, auto) = (&rows[0], &rows[1]);
+        assert!(flat.restores > 50, "churn too weak to compare: {}", flat.restores);
+        assert!(
+            auto.server_fallbacks <= flat.server_fallbacks,
+            "auto {} fallbacks vs flat {}",
+            auto.server_fallbacks,
+            flat.server_fallbacks
+        );
+        assert!(
+            auto.restore_success_frac + 1e-9 >= flat.restore_success_frac,
+            "auto {} restore success vs flat {}",
+            auto.restore_success_frac,
+            flat.restore_success_frac
+        );
+    }
+
+    #[test]
+    fn csv_is_thread_count_invariant() {
+        let cfg = tiny();
+        let a = to_table(&cfg, &run_sweep(&cfg, 1)).to_csv();
+        let b = to_table(&cfg, &run_sweep(&cfg, 3)).to_csv();
+        assert_eq!(a, b, "reliability sweep CSV diverged across thread counts");
+    }
+
+    #[test]
+    fn summary_pairs_auto_against_flat() {
+        let cfg = tiny();
+        let rows = run_sweep(&cfg, 2);
+        let lines = summarize(&cfg, &rows);
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("replicate:auto"));
+    }
+}

@@ -30,6 +30,11 @@
 //! p2pcp server-offload [--peers csv] [--image-mb csv] [--storages csv]
 //!                 [--k N] [--period S] [--horizon S] [--mtbf S]
 //!                 [--threads N] [--seed N] [--out file.csv]
+//! p2pcp reliability [--peers csv] [--image-mb MB] [--flat-replicas K]
+//!                 [--auto-min N] [--auto-max N] [--reliability KEY]
+//!                 [--flaky-pct P] [--flaky-mtbf S] [--stable-mtbf S]
+//!                 [--out file.csv] — trust-sized replicate:auto vs flat
+//!                 replicate:K, verified across 1/2/4 threads and shards
 //! ```
 //!
 //! Component keys (`p2pcp help` prints the full lists) come from
@@ -44,6 +49,7 @@ use p2pcp::dataplane::StorageSpec;
 use p2pcp::error::{Error, Result};
 use p2pcp::experiments::fig2;
 use p2pcp::experiments::relative_runtime::to_table;
+use p2pcp::experiments::reliability::{self as reliability_exp, ReliabilityConfig};
 use p2pcp::experiments::server_offload::{self, OffloadConfig};
 use p2pcp::model::optimal::optimal_lambda_checked;
 use p2pcp::planner::{NativePlanner, PlanRequest, Planner, XlaPlanner};
@@ -80,6 +86,7 @@ fn run(cmd: &str, args: &Args) -> Result<()> {
         "detection-lag" => cmd_detection_lag(args),
         "fleet" => cmd_fleet(args),
         "server-offload" => cmd_server_offload(args),
+        "reliability" => cmd_reliability(args),
         "help" | "--help" | "-h" => {
             print!("{}", help_text());
             Ok(())
@@ -112,6 +119,9 @@ COMMANDS:
   fleet      serve many concurrent jobs with shared batched planning
   server-offload  sweep peers x image size x storage strategy and report
              server vs peer bytes/s (the paper's Fig. 1 motivation)
+  reliability  compare trust-sized replicate:auto against flat replicate:K
+             under heavy-tail churn, byte-identical across 1/2/4 worker
+             threads and shard counts 1/2/4
   help       this text
 
 COMPONENT KEYS (shared by flags and config files):
@@ -123,6 +133,7 @@ COMPONENT KEYS (shared by flags and config files):
   --storage   {}
   --detector  {}
   --faults    {}
+  --reliability {}
 
 Run a command with wrong flags to see its allowed flag list.
 
@@ -138,6 +149,7 @@ Example — measure the cost of detection lag under probe loss:
         registry::storage_keys().join(" | "),
         registry::detector_keys().join(" | "),
         registry::faults_keys().join(" | "),
+        registry::reliability_keys().join(" | "),
     )
 }
 
@@ -166,6 +178,7 @@ fn scenario_from_args(args: &Args, default_peers: usize) -> Result<Scenario> {
         .storage_key(&args.get_str("storage", "replicate:3")?)
         .detector_key(&args.get_str("detector", "oracle")?)
         .faults_key(&args.get_str("faults", "none")?)
+        .reliability_key(&args.get_str("reliability", "off")?)
         .shards(args.get_usize("shards", 1)?)
         .policy_key(&policy_key_from_args(args)?);
     b = match args.get("churn")? {
@@ -186,8 +199,8 @@ fn scenario_from_args(args: &Args, default_peers: usize) -> Result<Scenario> {
 
 const SCENARIO_FLAGS: &[&str] = &[
     "churn", "mtbf", "double-time", "k", "runtime", "v", "td", "policy", "interval",
-    "estimator", "planner", "workload", "storage", "detector", "faults", "shards",
-    "seed", "peers",
+    "estimator", "planner", "workload", "storage", "detector", "faults", "reliability",
+    "shards", "seed", "peers",
 ];
 
 fn with_scenario_flags(extra: &[&str]) -> Vec<&str> {
@@ -557,6 +570,115 @@ fn cmd_server_offload(args: &Args) -> Result<()> {
     for line in server_offload::summarize(&rows, cfg.storages.len()) {
         println!("{line}");
     }
+    if let Some(out) = args.get("out")? {
+        table.write_to(std::path::Path::new(out))?;
+        println!("[written {out}]");
+    }
+    Ok(())
+}
+
+/// The reliability-placement comparison: the `ext_reliability` sweep
+/// (trust-sized `replicate:auto` vs flat `replicate:K` under a heavy-tail
+/// churn mixture) run at 1/2/4 worker threads with byte-identical CSVs
+/// required, plus a sharded-substrate leg with the scoring axis on that
+/// must digest-match across shard counts 1/2/4.
+fn cmd_reliability(args: &Args) -> Result<()> {
+    args.check_unknown(&[
+        "peers", "image-mb", "flat-replicas", "auto-min", "auto-max", "reliability", "k",
+        "period", "horizon", "flaky-pct", "flaky-mtbf", "stable-mtbf", "rejoin", "seed",
+        "out", "shard-peers", "shard-horizon",
+    ])?;
+    let mut cfg = ReliabilityConfig::default();
+    if let Some(csv) = args.get("peers")? {
+        cfg.peer_counts = parse_csv_usize("peers", csv)?;
+    }
+    cfg.image_bytes = args.get_f64("image-mb", cfg.image_bytes / 1e6)? * 1e6;
+    cfg.flat_replicas = args.get_usize("flat-replicas", cfg.flat_replicas)?;
+    cfg.auto_min = args.get_usize("auto-min", cfg.auto_min)?;
+    cfg.auto_max = args.get_usize("auto-max", cfg.auto_max)?;
+    if let Some(key) = args.get("reliability")? {
+        let spec = registry::parse_reliability(key)?;
+        if !spec.enabled() {
+            return Err(Error::Config(
+                "--reliability off has no auto cells to score; pass a window:W:DECAY key"
+                    .into(),
+            ));
+        }
+        cfg.reliability = spec;
+    }
+    cfg.k = args.get_usize("k", cfg.k)?;
+    cfg.checkpoint_period = args.get_f64("period", cfg.checkpoint_period)?;
+    cfg.horizon = args.get_f64("horizon", cfg.horizon)?;
+    cfg.flaky_pct = args.get_usize("flaky-pct", cfg.flaky_pct)?;
+    cfg.flaky_mtbf = args.get_f64("flaky-mtbf", cfg.flaky_mtbf)?;
+    cfg.stable_mtbf = args.get_f64("stable-mtbf", cfg.stable_mtbf)?;
+    cfg.rejoin_mean = args.get_f64("rejoin", cfg.rejoin_mean)?;
+    cfg.seed = args.get_u64("seed", cfg.seed)?;
+
+    // Leg 1: the sweep itself, proven thread-count invariant.
+    let rows = reliability_exp::run_sweep(&cfg, 1);
+    let table = reliability_exp::to_table(&cfg, &rows);
+    let reference_csv = table.to_csv();
+    for threads in [2usize, 4] {
+        let csv = reliability_exp::to_table(&cfg, &reliability_exp::run_sweep(&cfg, threads))
+            .to_csv();
+        if csv != reference_csv {
+            return Err(Error::Config(
+                "reliability sweep diverged across 1/2/4 worker threads — determinism bug"
+                    .into(),
+            ));
+        }
+    }
+    println!(
+        "determinism      : {} cells byte-identical across 1/2/4 threads",
+        rows.len()
+    );
+    print!("{}", table.to_pretty());
+    for line in reliability_exp::summarize(&cfg, &rows) {
+        println!("{line}");
+    }
+
+    // Leg 2: the sharded substrate with scoring on — the score table is
+    // fed at the barrier in canonical record order, so digest and metrics
+    // must not depend on the shard count.
+    let shard_peers = args.get_usize("shard-peers", 1000)?;
+    let shard_horizon = args.get_f64("shard-horizon", 1200.0)?;
+    let base = Scenario::builder()
+        .peers(shard_peers)
+        .k(8)
+        .mtbf(5400.0)
+        .seed(cfg.seed)
+        .reliability(cfg.reliability)
+        .faults_key("crash:3600:300")
+        .build()?;
+    let mut reference: Option<(u64, String)> = None;
+    for n in [1usize, 2, 4] {
+        let mut s = base.clone();
+        s.shards = n;
+        let mut w = s.build_sharded_world()?;
+        w.tracer = Tracer::full();
+        w.run(shard_horizon);
+        let digest = w.digest("reliability-sharded").value();
+        let metrics_json = w.metrics_json();
+        println!(
+            "shards {n:>2}: digest {digest:#018x}  online {:>6}  events {}",
+            w.online_count(),
+            w.events_processed()
+        );
+        match &reference {
+            None => reference = Some((digest, metrics_json)),
+            Some((d0, m0)) => {
+                if digest != *d0 || metrics_json != *m0 {
+                    return Err(Error::Config(format!(
+                        "reliability-scored sharded world diverged at shards:{n} — \
+                         determinism bug"
+                    )));
+                }
+            }
+        }
+    }
+    println!("determinism      : shard counts 1/2/4 byte-identical with scoring on");
+
     if let Some(out) = args.get("out")? {
         table.write_to(std::path::Path::new(out))?;
         println!("[written {out}]");

@@ -11,6 +11,12 @@
 //! * [`OraclePolicy`]   — adaptive with the *true* failure rate (upper
 //!   bound on what estimation quality can buy).
 //! * [`NeverPolicy`]    — no checkpoints (sanity lower bound).
+//!
+//! The sibling [`reliability`] module scores individual peers (BOINC-style
+//! trust); the coordinator uses it to turn the global Eq. 1 interval into
+//! a per-job, member-weighted one.
+
+pub mod reliability;
 
 use crate::error::Result;
 use crate::planner::{PlanRequest, Planner};

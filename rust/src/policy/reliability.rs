@@ -1,0 +1,380 @@
+//! Per-peer **reliability scoring** — the `reliability` scenario axis.
+//!
+//! The paper's adaptive scheme (Eq. 1) picks one global checkpoint
+//! interval from pooled lifetime statistics, but volunteer fleets are
+//! heavy-tailed (Anderson & Fedak): a single pooled rate over-checkpoints
+//! the stable majority and under-protects the flaky tail. BOINC's answer
+//! was per-host reliability tracking with redundancy proportional to
+//! trust; this module is that mechanism for the simulated stack.
+//!
+//! * [`ReliabilitySpec`] — the registry axis: `off` (the seed behaviour,
+//!   bit-exact) or `window:W:DECAY` (rolling exponentially-decayed score
+//!   shrunk toward the neutral prior until `W` observations arrived).
+//! * [`ReliabilityTable`] — SoA score columns, fed from exactly the
+//!   events the churn estimators already consume (stabilization/SWIM
+//!   lifetime observations, suspicions, crash injections). Updates are
+//!   integer-indexed column writes in canonical record order, so the
+//!   sharded world stays digest-invariant across shard counts.
+//!
+//! Scores drive three things downstream:
+//! * `replicate:auto:MIN:MAX` placement sizes per-image redundancy from
+//!   the holders' scores ([`crate::dataplane::store::DataPlane`]);
+//! * a **low-water crossing** preemptively enqueues everything a
+//!   newly-distrusted peer holds for re-replication — before any
+//!   detector declares it dead (a second dirty-queue source next to
+//!   churn-driven repair);
+//! * the coordinator scales the Eq. 1 interval per job by its members'
+//!   mean score (`T_eff = T · clamp(2·s̄, 1/4, 4)`), so reliable crews
+//!   checkpoint less often and flaky crews more.
+
+use crate::error::{Error, Result};
+use crate::util::digest::{canonical_f64_bits, DeterminismDigest};
+
+/// Score below which a peer is distrusted: its held images are enqueued
+/// for preemptive re-replication (once, with hysteresis).
+pub const LOW_WATER: f64 = 0.35;
+/// Score a distrusted peer must regain before another low-water crossing
+/// can fire (hysteresis band, prevents enqueue flapping at the mark).
+pub const HIGH_WATER: f64 = 0.45;
+/// Reference session length mapping a lifetime observation onto (0, 1):
+/// `q = L / (L + REF)` — the paper's 2 h MTBF scores exactly neutral 0.5.
+pub const REFERENCE_LIFETIME_S: f64 = 7200.0;
+
+/// The `reliability` scenario axis (registry keys `off`,
+/// `window:W:DECAY`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReliabilitySpec {
+    /// No scoring — the seed behaviour, byte-identical digests.
+    Off,
+    /// Rolling per-peer score: exponential decay `decay` per observation,
+    /// shrunk toward the neutral prior until `window` observations.
+    Window { window: u32, decay: f64 },
+}
+
+impl Default for ReliabilitySpec {
+    fn default() -> Self {
+        ReliabilitySpec::Off
+    }
+}
+
+impl ReliabilitySpec {
+    /// Is scoring active?
+    pub fn enabled(&self) -> bool {
+        !matches!(self, ReliabilitySpec::Off)
+    }
+
+    /// Canonical registry key (`off`, `window:32:0.9`).
+    pub fn key(&self) -> String {
+        match self {
+            ReliabilitySpec::Off => "off".into(),
+            ReliabilitySpec::Window { window, decay } => format!("window:{window}:{decay}"),
+        }
+    }
+
+    /// Parse a reliability key.
+    pub fn parse(key: &str) -> Result<Self> {
+        let fields: Vec<&str> = key.split(':').collect();
+        let bad = |part: &str| {
+            Error::Config(format!("reliability key `{key}`: `{part}` is not a number"))
+        };
+        let spec = match fields.as_slice() {
+            ["off"] => ReliabilitySpec::Off,
+            ["window", w, d] => ReliabilitySpec::Window {
+                window: w.parse().map_err(|_| bad(w))?,
+                decay: d.parse().map_err(|_| bad(d))?,
+            },
+            _ => {
+                return Err(Error::Config(format!(
+                    "unknown reliability key `{key}` — want off | window:W:DECAY"
+                )))
+            }
+        };
+        spec.validated()
+    }
+
+    /// Validate parameter ranges.
+    pub fn validated(self) -> Result<Self> {
+        if let ReliabilitySpec::Window { window, decay } = self {
+            if window == 0 {
+                return Err(Error::Config("reliability window: W must be >= 1".into()));
+            }
+            if !(decay > 0.0 && decay < 1.0) {
+                return Err(Error::Config(
+                    "reliability window: DECAY must be in (0, 1)".into(),
+                ));
+            }
+        }
+        Ok(self)
+    }
+
+    /// Materialize the score table (`None` when scoring is off — callers
+    /// hold an `Option<ReliabilityTable>` and the off path stays
+    /// branch-only).
+    pub fn table(&self) -> Option<ReliabilityTable> {
+        match *self {
+            ReliabilitySpec::Off => None,
+            ReliabilitySpec::Window { window, decay } => {
+                Some(ReliabilityTable::new(window, decay))
+            }
+        }
+    }
+}
+
+/// SoA per-peer score columns (grow-on-demand, like the sharded world's
+/// peer columns). Scores live in [0, 1]; 0.5 is the neutral prior.
+#[derive(Debug, Clone)]
+pub struct ReliabilityTable {
+    window: u32,
+    decay: f64,
+    /// Decayed score mixture per peer (neutral 0.5 before any evidence).
+    raw: Vec<f64>,
+    /// Observations consumed per peer (saturating at `window` for the
+    /// shrinkage weight; kept exact for metrics).
+    n_obs: Vec<u32>,
+    /// Hysteresis flag: peer is currently below the low-water mark.
+    below_low: Vec<bool>,
+}
+
+impl ReliabilityTable {
+    pub fn new(window: u32, decay: f64) -> Self {
+        ReliabilityTable {
+            window: window.max(1),
+            decay,
+            raw: Vec::new(),
+            n_obs: Vec::new(),
+            below_low: Vec::new(),
+        }
+    }
+
+    /// Pre-size the columns for a known population (values are the
+    /// neutral prior either way; only allocation timing changes).
+    pub fn reserve(&mut self, n_peers: usize) {
+        self.grow(n_peers.saturating_sub(1));
+    }
+
+    fn grow(&mut self, peer: usize) {
+        if peer >= self.raw.len() {
+            self.raw.resize(peer + 1, 0.5);
+            self.n_obs.resize(peer + 1, 0);
+            self.below_low.resize(peer + 1, false);
+        }
+    }
+
+    /// The shrunk score actually consumed downstream: raw evidence pulled
+    /// toward the neutral prior while fewer than `window` observations
+    /// exist, so one early bad session does not condemn a peer.
+    pub fn effective(&self, peer: usize) -> f64 {
+        match self.raw.get(peer) {
+            None => 0.5,
+            Some(&raw) => {
+                let n = self.n_obs[peer].min(self.window) as f64;
+                0.5 + n / self.window as f64 * (raw - 0.5)
+            }
+        }
+    }
+
+    /// Feed one completed-session observation. Returns `true` when this
+    /// update crossed the low-water mark (armed once per excursion —
+    /// hysteresis clears only above [`HIGH_WATER`]).
+    pub fn observe(&mut self, peer: usize, lifetime: f64) -> bool {
+        let q = lifetime.max(0.0) / (lifetime.max(0.0) + REFERENCE_LIFETIME_S);
+        self.update(peer, q)
+    }
+
+    /// Feed one distrust event (suspicion or injected crash): scored as a
+    /// zero-quality session.
+    pub fn penalize(&mut self, peer: usize) -> bool {
+        self.update(peer, 0.0)
+    }
+
+    fn update(&mut self, peer: usize, q: f64) -> bool {
+        self.grow(peer);
+        self.raw[peer] = self.decay * self.raw[peer] + (1.0 - self.decay) * q;
+        self.n_obs[peer] = self.n_obs[peer].saturating_add(1);
+        let eff = self.effective(peer);
+        if eff > HIGH_WATER {
+            self.below_low[peer] = false;
+            false
+        } else if eff < LOW_WATER && !self.below_low[peer] {
+            self.below_low[peer] = true;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Mean effective score over a member set (neutral 0.5 for an empty
+    /// set, so callers need no special case).
+    pub fn mean_effective(&self, members: &[usize]) -> f64 {
+        if members.is_empty() {
+            return 0.5;
+        }
+        let mut sum = 0.0;
+        for &m in members {
+            sum += self.effective(m);
+        }
+        sum / members.len() as f64
+    }
+
+    /// Peers with at least one observation.
+    pub fn scored_peers(&self) -> usize {
+        self.n_obs.iter().filter(|&&n| n > 0).count()
+    }
+
+    /// Peers currently held below the low-water mark.
+    pub fn low_water_peers(&self) -> usize {
+        self.below_low.iter().filter(|&&b| b).count()
+    }
+
+    /// Mean effective score over scored peers (0.5 when none scored yet).
+    pub fn mean_scored(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for p in 0..self.n_obs.len() {
+            if self.n_obs[p] > 0 {
+                sum += self.effective(p);
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.5
+        } else {
+            sum / n as f64
+        }
+    }
+
+    /// Fold the whole column state into a determinism digest as one
+    /// canonical record (FNV over canonical score bits + counts, index
+    /// order — a Vec walk, no unordered iteration).
+    pub fn fold_digest(&self, label: &str, d: &mut DeterminismDigest) {
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for p in 0..self.raw.len() {
+            h ^= canonical_f64_bits(self.raw[p]);
+            h = h.wrapping_mul(FNV_PRIME);
+            h ^= self.n_obs[p] as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+            h ^= self.below_low[p] as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        d.record_u64(label, h);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_round_trips() {
+        for key in ["off", "window:32:0.9", "window:8:0.75"] {
+            let spec = ReliabilitySpec::parse(key).unwrap();
+            assert_eq!(spec.key(), key);
+        }
+        assert_eq!(ReliabilitySpec::default(), ReliabilitySpec::Off);
+        assert!(!ReliabilitySpec::Off.enabled());
+        assert!(ReliabilitySpec::Window { window: 16, decay: 0.9 }.enabled());
+    }
+
+    #[test]
+    fn malformed_keys_are_rejected() {
+        for key in [
+            "window",
+            "window:16",
+            "window:0:0.9",
+            "window:16:0",
+            "window:16:1",
+            "window:16:1.5",
+            "window:abc:0.9",
+            "score:16:0.9",
+        ] {
+            assert!(ReliabilitySpec::parse(key).is_err(), "{key}");
+        }
+        let e = ReliabilitySpec::parse("bogus").unwrap_err().to_string();
+        assert!(e.contains("window:W:DECAY"), "{e}");
+    }
+
+    #[test]
+    fn off_spec_builds_no_table() {
+        assert!(ReliabilitySpec::Off.table().is_none());
+        assert!(ReliabilitySpec::Window { window: 8, decay: 0.9 }.table().is_some());
+    }
+
+    #[test]
+    fn unseen_peer_scores_neutral() {
+        let t = ReliabilityTable::new(16, 0.9);
+        assert_eq!(t.effective(0), 0.5);
+        assert_eq!(t.effective(123_456), 0.5);
+        assert_eq!(t.mean_effective(&[]), 0.5);
+        assert_eq!(t.scored_peers(), 0);
+    }
+
+    #[test]
+    fn long_sessions_raise_and_short_sessions_sink_the_score() {
+        let mut t = ReliabilityTable::new(8, 0.9);
+        for _ in 0..32 {
+            t.observe(0, 10.0 * REFERENCE_LIFETIME_S); // q ≈ 0.91
+            t.observe(1, REFERENCE_LIFETIME_S / 20.0); // q ≈ 0.048
+        }
+        assert!(t.effective(0) > 0.8, "{}", t.effective(0));
+        assert!(t.effective(1) < 0.2, "{}", t.effective(1));
+        // Reference lifetime scores exactly neutral.
+        let mut n = ReliabilityTable::new(8, 0.9);
+        for _ in 0..32 {
+            n.observe(2, REFERENCE_LIFETIME_S);
+        }
+        assert!((n.effective(2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shrinkage_keeps_early_evidence_near_neutral() {
+        let mut t = ReliabilityTable::new(16, 0.9);
+        t.penalize(0);
+        // One bad event out of a 16-wide window barely moves the
+        // effective score even though the raw score dropped.
+        assert!(t.effective(0) > 0.45, "{}", t.effective(0));
+        assert!(t.effective(0) < 0.5);
+    }
+
+    #[test]
+    fn low_water_crossing_fires_once_with_hysteresis() {
+        let mut t = ReliabilityTable::new(4, 0.5);
+        let mut crossings = 0;
+        for _ in 0..16 {
+            if t.penalize(0) {
+                crossings += 1;
+            }
+        }
+        assert_eq!(crossings, 1, "hysteresis must arm the crossing once");
+        assert_eq!(t.low_water_peers(), 1);
+        // Recover above the high-water mark, then sink again: re-arms.
+        for _ in 0..64 {
+            t.observe(0, 10.0 * REFERENCE_LIFETIME_S);
+        }
+        assert!(t.effective(0) > HIGH_WATER);
+        assert_eq!(t.low_water_peers(), 0);
+        for _ in 0..16 {
+            if t.penalize(0) {
+                crossings += 1;
+            }
+        }
+        assert_eq!(crossings, 2, "crossing must re-arm after recovery");
+    }
+
+    #[test]
+    fn digest_fold_is_state_sensitive() {
+        let mut a = ReliabilityTable::new(8, 0.9);
+        let mut b = ReliabilityTable::new(8, 0.9);
+        a.observe(3, 100.0);
+        b.observe(3, 100.0);
+        let mut da = DeterminismDigest::new("rel-a");
+        let mut db = DeterminismDigest::new("rel-b");
+        a.fold_digest("rel", &mut da);
+        b.fold_digest("rel", &mut db);
+        assert_eq!(da.value(), db.value());
+        b.observe(4, 100.0);
+        let mut db2 = DeterminismDigest::new("rel-b2");
+        b.fold_digest("rel", &mut db2);
+        assert_ne!(da.value(), db2.value());
+    }
+}

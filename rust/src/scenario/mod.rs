@@ -51,6 +51,7 @@ use crate::net::detector::DetectorSpec;
 use crate::net::faults::FaultSpec;
 use crate::net::overlay::Overlay;
 use crate::planner::{NativePlanner, Planner, XlaPlanner};
+use crate::policy::reliability::ReliabilitySpec;
 use crate::policy::{self, CheckpointPolicy};
 use crate::runtime::PjrtRuntime;
 use crate::util::rng::Pcg64;
@@ -134,6 +135,10 @@ pub struct Scenario {
     /// ([`crate::coordinator::ShardedWorld`]); `1` = the classic
     /// single-engine world partitioning. Digest-invariant by contract.
     pub shards: usize,
+    /// Per-peer reliability scoring (`off` = the seed behaviour;
+    /// `window:W:DECAY` feeds trust-driven placement and the per-peer
+    /// checkpoint interval).
+    pub reliability: ReliabilitySpec,
 }
 
 impl Default for Scenario {
@@ -160,6 +165,7 @@ impl Default for Scenario {
             detector: DetectorSpec::default(),
             faults: FaultSpec::default(),
             shards: 1,
+            reliability: ReliabilitySpec::default(),
         }
     }
 }
@@ -192,6 +198,9 @@ impl Scenario {
         if self.shards != 1 {
             label.push_str(&format!("|{}", registry::shards_key(self.shards)));
         }
+        if self.reliability != ReliabilitySpec::default() {
+            label.push_str(&format!("|rel:{}", self.reliability.key()));
+        }
         label
     }
 
@@ -212,6 +221,7 @@ impl Scenario {
             max_sim_time: self.max_sim_time,
             detector: self.detector,
             faults: self.faults,
+            reliability: self.reliability,
         }
     }
 
@@ -459,6 +469,12 @@ impl ScenarioBuilder {
         self
     }
 
+    /// Per-peer reliability scoring (off / rolling window).
+    pub fn reliability(mut self, spec: ReliabilitySpec) -> Self {
+        self.scenario.reliability = spec;
+        self
+    }
+
     // ------------------------------------------------ registry-keyed setters
 
     fn record<T>(mut self, parsed: Result<T>, apply: impl FnOnce(&mut Scenario, T)) -> Self {
@@ -520,6 +536,12 @@ impl ScenarioBuilder {
     /// Set the shard count from a registry key (`"shards:4"`).
     pub fn shards_key(self, key: &str) -> Self {
         self.record(registry::parse_shards(key), |s, v| s.shards = v)
+    }
+
+    /// Set reliability scoring from a registry key (`"off"`,
+    /// `"window:32:0.9"`).
+    pub fn reliability_key(self, key: &str) -> Self {
+        self.record(registry::parse_reliability(key), |s, v| s.reliability = v)
     }
 
     /// Validate and return the scenario.
@@ -638,6 +660,29 @@ mod tests {
         assert!(Scenario::builder().shards(0).build().is_err());
         assert!(Scenario::builder().peers(8).k(4).shards(9).build().is_err());
         assert!(Scenario::builder().shards_key("shards:0:9").build().is_err());
+    }
+
+    #[test]
+    fn reliability_axis_round_trips_through_builder() {
+        let s = Scenario::builder().reliability_key("window:32:0.9").build().unwrap();
+        assert_eq!(s.reliability, ReliabilitySpec::Window { window: 32, decay: 0.9 });
+        assert_eq!(registry::reliability_key(&s.reliability), "window:32:0.9");
+        assert_eq!(s.sim_config().reliability, s.reliability);
+        // Default (off) keeps existing labels byte-stable.
+        assert_eq!(Scenario::builder().build().unwrap().reliability, ReliabilitySpec::Off);
+        assert!(!Scenario::builder().build().unwrap().label().contains("rel:"));
+        assert!(s.label().ends_with("|rel:window:32:0.9"));
+        // Bad keys surface from build(), like every other axis.
+        assert!(Scenario::builder().reliability_key("window:0:0.9").build().is_err());
+        assert!(Scenario::builder().reliability_key("bogus").build().is_err());
+        // Trust-sized placement parses through the storage axis.
+        let s = Scenario::builder()
+            .storage_key("replicate:auto:2:5")
+            .reliability_key("window:16:0.9")
+            .build()
+            .unwrap();
+        assert_eq!(s.storage, StorageSpec::ReplicateAuto { min: 2, max: 5 });
+        assert!(Scenario::builder().storage_key("replicate:auto:0:5").build().is_err());
     }
 
     #[test]

@@ -11,10 +11,11 @@
 //! | estimator | `mle`, `ewma:ALPHA`, `count`, `hybrid:MEAN:CONFIDENCE`, `gossip:FANOUT` |
 //! | planner   | `native`, `xla`                                               |
 //! | workload  | `pipeline`, `ring`, `stencil1d`, `allreduce`, `master_worker` |
-//! | storage   | `server`, `replicate:K`, `erasure:K:M`                        |
+//! | storage   | `server`, `replicate:K`, `replicate:auto:MIN:MAX`, `erasure:K:M` |
 //! | detector  | `oracle`, `swim:PERIOD:SUSPICION:K`                           |
 //! | faults    | `none`, `loss:P`, `delay:MEAN`, `partition:START:DUR:FRAC`, `crash:MTBF:DOWN` (composable with `+`) |
 //! | shards    | `shards:N` (deterministic sharded-world partition count)      |
+//! | reliability | `off`, `window:W:DECAY` (per-peer trust scoring)            |
 
 use super::PlannerSpec;
 use crate::config::{ChurnSpec, PolicySpec};
@@ -24,6 +25,7 @@ use crate::estimator::EstimatorSpec;
 use crate::mpi::program::CommPattern;
 use crate::net::detector::DetectorSpec;
 use crate::net::faults::FaultSpec;
+use crate::policy::reliability::ReliabilitySpec;
 
 /// Format a number the way keys are written: shortest round-trip form
 /// (`7200`, `0.1`, `72000`).
@@ -57,6 +59,7 @@ fn arity_err(family: &str, key: &str, want: &str) -> Error {
             "detector" => detector_keys().join(", "),
             "faults" => faults_keys().join(", "),
             "shards" => shards_keys().join(", "),
+            "reliability" => reliability_keys().join(", "),
             _ => String::new(),
         }
     ))
@@ -159,6 +162,7 @@ pub fn estimator_keys() -> Vec<String> {
         "count".into(),
         "hybrid:7200:16".into(),
         "gossip:4".into(),
+        "categorized".into(),
     ]
 }
 
@@ -171,6 +175,7 @@ pub fn estimator_key(spec: &EstimatorSpec) -> String {
             format!("hybrid:{}:{}", num(*mean), num(*confidence))
         }
         EstimatorSpec::Gossip { fanout } => format!("gossip:{fanout}"),
+        EstimatorSpec::Categorized => "categorized".into(),
     }
 }
 
@@ -179,6 +184,7 @@ pub fn parse_estimator(key: &str) -> Result<EstimatorSpec> {
     match (name, args.as_slice()) {
         ("mle", []) => Ok(EstimatorSpec::Mle),
         ("count", []) => Ok(EstimatorSpec::Count),
+        ("categorized", []) => Ok(EstimatorSpec::Categorized),
         ("ewma", [alpha]) => {
             let alpha = parse_num("estimator", key, alpha)?;
             if !(alpha > 0.0 && alpha <= 1.0) {
@@ -210,7 +216,7 @@ pub fn parse_estimator(key: &str) -> Result<EstimatorSpec> {
         _ => Err(arity_err(
             "estimator",
             key,
-            "mle | ewma:ALPHA | count | hybrid:MEAN:CONF | gossip:FANOUT",
+            "mle | ewma:ALPHA | count | hybrid:MEAN:CONF | gossip:FANOUT | categorized",
         )),
     }
 }
@@ -239,13 +245,19 @@ pub fn parse_planner(key: &str) -> Result<PlannerSpec> {
 // ---------------------------------------------------------------- storage
 
 pub fn storage_keys() -> Vec<String> {
-    vec!["server".into(), "replicate:3".into(), "erasure:4:2".into()]
+    vec![
+        "server".into(),
+        "replicate:3".into(),
+        "replicate:auto:2:5".into(),
+        "erasure:4:2".into(),
+    ]
 }
 
 pub fn storage_key(spec: &StorageSpec) -> String {
     match spec {
         StorageSpec::Server => "server".into(),
         StorageSpec::Replicate { replicas } => format!("replicate:{replicas}"),
+        StorageSpec::ReplicateAuto { min, max } => format!("replicate:auto:{min}:{max}"),
         StorageSpec::Erasure { data, parity } => format!("erasure:{data}:{parity}"),
     }
 }
@@ -263,12 +275,20 @@ pub fn parse_storage(key: &str) -> Result<StorageSpec> {
         ("replicate", [r]) => {
             StorageSpec::Replicate { replicas: parse_count("storage", key, r)? }
         }
+        ("replicate", ["auto", min, max]) => StorageSpec::ReplicateAuto {
+            min: parse_count("storage", key, min)?,
+            max: parse_count("storage", key, max)?,
+        },
         ("erasure", [k, m]) => StorageSpec::Erasure {
             data: parse_count("storage", key, k)?,
             parity: parse_count("storage", key, m)?,
         },
         _ => {
-            return Err(arity_err("storage", key, "server | replicate:K | erasure:K:M"));
+            return Err(arity_err(
+                "storage",
+                key,
+                "server | replicate:K | replicate:auto:MIN:MAX | erasure:K:M",
+            ));
         }
     };
     spec.validated()
@@ -341,6 +361,23 @@ pub fn parse_shards(key: &str) -> Result<usize> {
     }
 }
 
+// ------------------------------------------------------------ reliability
+
+/// Representative reliability keys (the spec's grammar lives in
+/// [`crate::policy::reliability`]; thin registry veneer like the
+/// detector's).
+pub fn reliability_keys() -> Vec<String> {
+    vec!["off".into(), "window:32:0.9".into()]
+}
+
+pub fn reliability_key(spec: &ReliabilitySpec) -> String {
+    spec.key()
+}
+
+pub fn parse_reliability(key: &str) -> Result<ReliabilitySpec> {
+    ReliabilitySpec::parse(key)
+}
+
 // --------------------------------------------------------------- workload
 
 pub fn workload_keys() -> Vec<String> {
@@ -400,6 +437,13 @@ mod tests {
         for k in shards_keys() {
             assert_eq!(shards_key(parse_shards(&k).unwrap()), k, "shards {k}");
         }
+        for k in reliability_keys() {
+            assert_eq!(
+                reliability_key(&parse_reliability(&k).unwrap()),
+                k,
+                "reliability {k}"
+            );
+        }
     }
 
     #[test]
@@ -434,6 +478,21 @@ mod tests {
         assert_eq!(
             parse_faults("loss:0.1+crash:3600:60").unwrap().key(),
             "loss:0.1+crash:3600:60"
+        );
+        assert_eq!(
+            parse_storage("replicate:auto:2:5").unwrap(),
+            StorageSpec::ReplicateAuto { min: 2, max: 5 }
+        );
+        assert!(parse_storage("replicate:auto:0:5").is_err());
+        assert!(parse_storage("replicate:auto:5:2").is_err());
+        assert!(parse_storage("replicate:auto:2").is_err());
+        let e = parse_reliability("window:16").unwrap_err().to_string();
+        assert!(e.contains("window:W:DECAY"), "{e}");
+        assert!(parse_reliability("window:0:0.9").is_err());
+        assert!(parse_reliability("window:16:1.5").is_err());
+        assert_eq!(
+            parse_reliability("window:16:0.8").unwrap(),
+            ReliabilitySpec::Window { window: 16, decay: 0.8 }
         );
         let e = parse_shards("shards").unwrap_err().to_string();
         assert!(e.contains("shards:N"), "{e}");

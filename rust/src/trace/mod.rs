@@ -162,6 +162,9 @@ pub enum TracePayload {
     /// A sharded world crossed a stabilization barrier: `records` merged
     /// cross-shard records were applied, leaving `online` peers.
     ShardBarrier { records: u32, online: u32 },
+    /// A peer's reliability score crossed the low-water mark: `images` of
+    /// its held checkpoints were enqueued for preemptive re-replication.
+    ReliabilityLowWater { score: f64, images: u32 },
 }
 
 impl TracePayload {
@@ -188,6 +191,7 @@ impl TracePayload {
             TracePayload::TransferRetry { .. } => "transfer_retry",
             TracePayload::TransferAbort => "transfer_abort",
             TracePayload::ShardBarrier { .. } => "shard_barrier",
+            TracePayload::ReliabilityLowWater { .. } => "reliability_low_water",
         }
     }
 
@@ -253,6 +257,10 @@ impl TracePayload {
             TracePayload::ShardBarrier { records, online } => {
                 f("records", FieldVal::U64(records as u64));
                 f("online", FieldVal::U64(online as u64));
+            }
+            TracePayload::ReliabilityLowWater { score, images } => {
+                f("score", FieldVal::F64(score));
+                f("images", FieldVal::U64(images as u64));
             }
         }
     }

@@ -20,6 +20,8 @@ use p2pcp::net::faults::{FaultSpec, TransferFaults};
 use p2pcp::net::overlay::Overlay;
 use p2pcp::planner::NativePlanner;
 use p2pcp::policy;
+use p2pcp::policy::reliability::ReliabilitySpec;
+use p2pcp::scenario::Scenario;
 use p2pcp::storage::image::CheckpointImage;
 use p2pcp::trace::Tracer;
 use p2pcp::util::digest::DeterminismDigest;
@@ -546,4 +548,95 @@ fn sharded_world_seeds_diverge() {
     let (a, _, _) = sharded_run("shards-seed-1", 1, 2);
     let (b, _, _) = sharded_run("shards-seed-2", 2, 2);
     assert_ne!(a.value(), b.value(), "distinct seeds produced identical sharded streams");
+}
+
+// ------------------------------------------------------------------
+// G. Reliability axis + pluggable estimators: `reliability:off` must
+//    reproduce the pre-axis world bit-exactly (the same within-tree pin
+//    discipline as the oracle-detector test above), a scored world must
+//    satisfy the dual-run identity, and the categorized / hybrid
+//    estimators get the same churny 1k-peer digest coverage as the
+//    default MLE.
+// ------------------------------------------------------------------
+
+#[test]
+fn explicit_reliability_off_reproduces_the_default_world_bit_exactly() {
+    // `reliability: off` parsed from its registry key must be
+    // byte-identical (outcome, metrics, full trace stream) to a world
+    // that never heard of the axis — the off path publishes no metrics,
+    // consumes no RNG draws, and folds nothing into the digest.
+    let base = traced_cfg(42);
+    let mut explicit = traced_cfg(42);
+    explicit.reliability = ReliabilitySpec::parse("off").unwrap();
+    let (a, _) = traced_world_digest("rel-default", base, Tracer::full(), true);
+    let (b, _) = traced_world_digest("rel-explicit-off", explicit, Tracer::full(), true);
+    assert!(!a.is_empty());
+    a.assert_matches(&b);
+}
+
+#[test]
+fn reliability_scored_world_dual_run_is_byte_identical() {
+    let mut cfg = traced_cfg(42);
+    cfg.reliability = ReliabilitySpec::parse("window:32:0.9").unwrap();
+    let (a, _) = traced_world_digest("rel-run1", cfg.clone(), Tracer::full(), true);
+    let (b, _) = traced_world_digest("rel-run2", cfg, Tracer::full(), true);
+    a.assert_matches(&b);
+    // The axis must actually move the stream (scores feed per-peer
+    // checkpoint intervals and publish `reliability.*` gauges) — else
+    // the dual-run identity above is vacuous.
+    let (off, _) = traced_world_digest("rel-off", traced_cfg(42), Tracer::full(), true);
+    assert_ne!(
+        a.value(),
+        off.value(),
+        "a window-scored world must diverge from the unscored baseline"
+    );
+}
+
+/// Churny 1k-peer scenario under a pluggable estimator key, digest over
+/// the job outcome + full metrics registry.
+fn estimator_world_digest(name: &str, estimator_key: &str, seed: u64) -> DeterminismDigest {
+    let s = Scenario::builder()
+        .peers(1000)
+        .mtbf(3600.0)
+        .k(16)
+        .runtime(900.0)
+        .seed(seed)
+        .estimator_key(estimator_key)
+        .build()
+        .expect("valid scenario");
+    let mut w = s.build_world().expect("world");
+    w.warmup(900.0);
+    let outcome = w.run_job(s.program(), s.build_policy().expect("policy")).expect("job");
+    let mut d = DeterminismDigest::new(name);
+    outcome.fold_digest("job", &mut d);
+    w.metrics.fold_digest(&mut d);
+    d
+}
+
+#[test]
+fn categorized_estimator_churny_world_dual_run_is_byte_identical() {
+    let a = estimator_world_digest("cat-run1", "categorized", 42);
+    let b = estimator_world_digest("cat-run2", "categorized", 42);
+    assert!(!a.is_empty());
+    a.assert_matches(&b);
+    let mle = estimator_world_digest("cat-vs-mle", "mle", 42);
+    assert_ne!(
+        a.value(),
+        mle.value(),
+        "the categorized estimator must steer decisions away from plain MLE"
+    );
+}
+
+#[test]
+fn hybrid_estimator_churny_world_dual_run_is_byte_identical() {
+    let a = estimator_world_digest("hyb-run1", "hybrid:7200:16", 42);
+    let b = estimator_world_digest("hyb-run2", "hybrid:7200:16", 42);
+    assert!(!a.is_empty());
+    a.assert_matches(&b);
+    let mle = estimator_world_digest("hyb-vs-mle", "mle", 42);
+    assert_ne!(
+        a.value(),
+        mle.value(),
+        "the hybrid estimator must steer decisions away from plain MLE"
+    );
 }
